@@ -1,0 +1,58 @@
+//! Bubble-ratio explorer: sweep pipeline depth and micro-batch count
+//! for one model/method and print the resulting bubble-ratio matrix —
+//! handy for building intuition about where bubbles come from.
+//!
+//!     cargo run --release --example bubble_explorer [gemma|deepseek|nemotron|llama2]
+
+use adaptis::baselines::{build, Method};
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::generator::{generate, GenOptions};
+use adaptis::model::build_model;
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+
+fn main() {
+    let fam = match std::env::args().nth(1).as_deref() {
+        Some("deepseek") => Family::DeepSeek,
+        Some("nemotron") => Family::NemotronH,
+        Some("llama2") => Family::Llama2,
+        _ => Family::Gemma,
+    };
+    let cfg = ModelCfg::table5(fam, Size::Small);
+    println!("bubble ratios (%) for {}\n", cfg.label());
+    for method in [Some(Method::S1F1B), Some(Method::ZB), Some(Method::Mist), None] {
+        let name = method.map(|m| m.name()).unwrap_or("AdaPtis");
+        println!("--- {name} ---");
+        print!("{:>6}", "P\\nmb");
+        for nmb in [4usize, 8, 16, 32, 64] {
+            print!("{nmb:>8}");
+        }
+        println!();
+        for p in [2usize, 4, 8] {
+            print!("{p:>6}");
+            for nmb in [4usize, 8, 16, 32, 64] {
+                let par = ParallelCfg { p, t: 2, d: 1, e: 1, nmb, mbs: 1, seq: 4096 };
+                let prof =
+                    ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+                let report = match method {
+                    Some(m) => {
+                        let pl = build(m, &prof, p, nmb);
+                        simulate(&prof, &pl.partition, &pl.placement, &pl.schedule, false)
+                            .ok()
+                    }
+                    None => {
+                        let mut opts = GenOptions::new(p, nmb);
+                        opts.max_iters = 12;
+                        Some(generate(&prof, &opts).report)
+                    }
+                };
+                match report {
+                    Some(r) => print!("{:>7.1}%", 100.0 * r.bubble_ratio()),
+                    None => print!("{:>8}", "-"),
+                }
+            }
+            println!();
+        }
+        println!();
+    }
+}

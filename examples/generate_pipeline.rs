@@ -1,0 +1,48 @@
+//! Watch the Pipeline Generator co-optimize, phase by phase, across all
+//! three heterogeneous model families — prints the tuning log (the
+//! Fig 3 storyline) and the resulting timelines.
+//!
+//!     cargo run --release --example generate_pipeline
+
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::generator::{generate, GenOptions};
+use adaptis::model::build_model;
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+use adaptis::util::fmt_time;
+use adaptis::util::trace::ascii_timeline;
+
+fn main() {
+    let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 8, mbs: 1, seq: 4096 };
+    for fam in [Family::Gemma, Family::DeepSeek, Family::NemotronH] {
+        let cfg = ModelCfg::table5(fam, Size::Small);
+        let spec = build_model(&cfg);
+        let profile = ProfiledData::analytical(&spec, &HardwareCfg::default(), &par);
+        println!("\n================ {} ================", cfg.label());
+        let res = generate(&profile, &GenOptions::new(par.p, par.nmb));
+        for e in &res.log {
+            println!(
+                "iter {:>3} [{:>9}] {:<30} -> {}",
+                e.iter,
+                e.phase,
+                e.action,
+                fmt_time(e.total)
+            );
+        }
+        println!(
+            "converged after {} iters / {} evals in {}",
+            res.iters,
+            res.evals,
+            fmt_time(res.elapsed_s)
+        );
+        let r = simulate(
+            &profile,
+            &res.pipeline.partition,
+            &res.pipeline.placement,
+            &res.pipeline.schedule,
+            true,
+        )
+        .unwrap();
+        print!("{}", ascii_timeline(&r.events, par.p, 110));
+    }
+}

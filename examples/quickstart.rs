@@ -1,0 +1,72 @@
+//! Quickstart: co-optimize a pipeline for a heterogeneous model and
+//! compare it against the static baselines — all under the performance
+//! model (no artifacts needed).
+//!
+//!     cargo run --release --example quickstart
+
+use adaptis::baselines::{build, Method};
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::generator::{generate, GenOptions};
+use adaptis::model::build_model;
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+use adaptis::util::trace::ascii_timeline;
+use adaptis::util::{fmt_si, fmt_time};
+
+fn main() {
+    // 1. Pick a heterogeneous model (Gemma: 256K vocabulary) and a
+    //    training configuration (paper Fig 1 setting).
+    let cfg = ModelCfg::table5(Family::Gemma, Size::Small);
+    let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 16, mbs: 1, seq: 4096 };
+    let spec = build_model(&cfg);
+    println!("model: {} — {} fine-grained layers", cfg.label(), spec.n_layers());
+
+    // 2. Profile it (H800-calibrated analytical costs).
+    let profile = ProfiledData::analytical(&spec, &HardwareCfg::default(), &par);
+
+    // 3. Evaluate the static baselines.
+    println!("\n{:<10} {:>12} {:>14} {:>10}", "method", "step time", "tokens/s", "bubble");
+    let tokens = (par.nmb * par.tokens()) as f64;
+    let mut s1f1b_total = 0.0;
+    for m in Method::paper_baselines() {
+        let pl = build(m, &profile, par.p, par.nmb);
+        let r = simulate(&profile, &pl.partition, &pl.placement, &pl.schedule, false)
+            .expect("baseline must simulate");
+        if m == Method::S1F1B {
+            s1f1b_total = r.total;
+        }
+        println!(
+            "{:<10} {:>12} {:>14} {:>9.1}%",
+            m.name(),
+            fmt_time(r.total),
+            fmt_si(r.throughput(tokens)),
+            100.0 * r.bubble_ratio()
+        );
+    }
+
+    // 4. Run the AdaPtis Pipeline Generator (co-optimizes partition,
+    //    placement and scheduling).
+    let res = generate(&profile, &GenOptions::new(par.p, par.nmb));
+    println!(
+        "{:<10} {:>12} {:>14} {:>9.1}%   <- co-optimized ({:.2}x vs S-1F1B)",
+        "AdaPtis",
+        fmt_time(res.report.total),
+        fmt_si(res.report.throughput(tokens)),
+        100.0 * res.report.bubble_ratio(),
+        s1f1b_total / res.report.total
+    );
+
+    // 5. Show the pipeline timeline.
+    let r = simulate(
+        &profile,
+        &res.pipeline.partition,
+        &res.pipeline.placement,
+        &res.pipeline.schedule,
+        true,
+    )
+    .unwrap();
+    println!("\nAdaPtis timeline (F=forward, B=input-grad, w=param-grad):");
+    print!("{}", ascii_timeline(&r.events, par.p, 110));
+    println!("\npartition bounds: {:?}", res.pipeline.partition.bounds);
+    println!("placement:        {:?}", res.pipeline.placement.device_of);
+}

@@ -1,0 +1,263 @@
+"""AOT driver: lower every (layer kind, op) to HLO text artifacts.
+
+Interchange is HLO **text**, not serialized HloModuleProto — jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Outputs, per dims tag (see :mod:`compile.dims`)::
+
+    artifacts/<tag>/<kind>_<op>.hlo.txt
+    artifacts/<tag>/meta.json      # the rust runtime's calling convention
+
+Run ``python -m compile.aot --tags micro,fidelity`` from ``python/``.
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers, model
+from .dims import REGISTRY, ModelDims, to_dict
+from .layers import LAYER_KINDS, param_specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(name, shape, dtype, role):
+    return {
+        "name": name,
+        "shape": list(shape),
+        "dtype": "i32" if dtype == jnp.int32 else "f32",
+        "role": role,
+    }
+
+
+def build_ops(kind: str, d: ModelDims):
+    """Return {op: (fn, in_specs, in_sigs, out_sigs)} for one layer kind.
+
+    ``fn`` takes flat positional tensors in the order given by in_sigs.
+    """
+    specs = param_specs(kind, d)
+    np_ = len(specs)
+    mb, t, h, v = d.microbatch, d.seq, d.hidden, d.vocab
+    act = (mb, t, h)
+    ids = (mb, t)
+    p_specs = [_spec(s) for _, s in specs]
+    p_sigs = [_sig(n, s, jnp.float32, "param") for n, s in specs]
+    g_sigs = [_sig("g_" + n, s, jnp.float32, "grad") for n, s in specs]
+
+    ops = {}
+
+    def flat_params(args):
+        return list(args[:np_])
+
+    if kind == "embed":
+
+        def fwd(*args):
+            return (layers.embed_fwd(flat_params(args), args[np_], d),)
+
+        ops["fwd"] = (
+            fwd,
+            p_specs + [_spec(ids, jnp.int32)],
+            p_sigs + [_sig("ids", ids, jnp.int32, "ids")],
+            [_sig("y", act, jnp.float32, "act")],
+        )
+
+        def bwdw(*args):
+            return tuple(
+                model.embed_bwdw(flat_params(args), args[np_], args[np_ + 1], d)
+            )
+
+        ops["bwdw"] = (
+            bwdw,
+            p_specs + [_spec(ids, jnp.int32), _spec(act)],
+            p_sigs
+            + [_sig("ids", ids, jnp.int32, "ids"), _sig("gy", act, jnp.float32, "gy")],
+            g_sigs,
+        )
+
+    elif kind == "head":
+
+        def fwd(*args):
+            return (
+                layers.head_fwd(flat_params(args), args[np_], args[np_ + 1], d),
+            )
+
+        ops["fwd"] = (
+            fwd,
+            p_specs + [_spec(act), _spec(ids, jnp.int32)],
+            p_sigs
+            + [
+                _sig("x", act, jnp.float32, "act"),
+                _sig("targets", ids, jnp.int32, "targets"),
+            ],
+            [_sig("loss", (), jnp.float32, "loss")],
+        )
+
+        def fwdbwd(*args):
+            loss, gx, gp = model.head_fwdbwd(
+                flat_params(args), args[np_], args[np_ + 1], d
+            )
+            return (loss, gx) + tuple(gp)
+
+        ops["fwdbwd"] = (
+            fwdbwd,
+            p_specs + [_spec(act), _spec(ids, jnp.int32)],
+            p_sigs
+            + [
+                _sig("x", act, jnp.float32, "act"),
+                _sig("targets", ids, jnp.int32, "targets"),
+            ],
+            [
+                _sig("loss", (), jnp.float32, "loss"),
+                _sig("gx", act, jnp.float32, "gx"),
+            ]
+            + g_sigs,
+        )
+
+    else:  # hidden layers: sa, mla, mamba, ffn, moe
+
+        def fwd(*args):
+            return (layers.FWD_FNS[kind](flat_params(args), args[np_], d),)
+
+        ops["fwd"] = (
+            fwd,
+            p_specs + [_spec(act)],
+            p_sigs + [_sig("x", act, jnp.float32, "act")],
+            [_sig("y", act, jnp.float32, "act")],
+        )
+
+        def bwd(*args):
+            gx, gp = model.hidden_bwd(
+                kind, flat_params(args), args[np_], args[np_ + 1], d
+            )
+            return (gx,) + tuple(gp)
+
+        bwd_in_specs = p_specs + [_spec(act), _spec(act)]
+        bwd_in_sigs = p_sigs + [
+            _sig("x", act, jnp.float32, "act"),
+            _sig("gy", act, jnp.float32, "gy"),
+        ]
+        ops["bwd"] = (
+            bwd,
+            bwd_in_specs,
+            bwd_in_sigs,
+            [_sig("gx", act, jnp.float32, "gx")] + g_sigs,
+        )
+
+        def bwdx(*args):
+            gx, _ = model.hidden_bwd(
+                kind, flat_params(args), args[np_], args[np_ + 1], d
+            )
+            return (gx,)
+
+        ops["bwdx"] = (
+            bwdx,
+            bwd_in_specs,
+            bwd_in_sigs,
+            [_sig("gx", act, jnp.float32, "gx")],
+        )
+
+        def bwdw(*args):
+            _, gp = model.hidden_bwd(
+                kind, flat_params(args), args[np_], args[np_ + 1], d
+            )
+            return tuple(gp)
+
+        ops["bwdw"] = (bwdw, bwd_in_specs, bwd_in_sigs, g_sigs)
+
+    # SGD step for every kind: (*params, *grads, lr) -> (*params',)
+    def sgd(*args):
+        p = list(args[:np_])
+        g = list(args[np_ : 2 * np_])
+        lr = args[2 * np_]
+        return tuple(model.sgd_update(p, g, lr))
+
+    ops["sgd"] = (
+        sgd,
+        p_specs + p_specs + [_spec(())],
+        p_sigs
+        + [_sig("g_" + n, s, jnp.float32, "grad") for n, s in specs]
+        + [_sig("lr", (), jnp.float32, "lr")],
+        [_sig(n, s, jnp.float32, "param") for n, s in specs],
+    )
+
+    return ops
+
+
+def lower_tag(tag: str, out_root: str, kinds=None, force=False, verbose=True):
+    d = REGISTRY[tag]
+    kinds = kinds or LAYER_KINDS
+    out_dir = os.path.join(out_root, tag)
+    os.makedirs(out_dir, exist_ok=True)
+    meta = {
+        "tag": tag,
+        "dims": to_dict(d),
+        "kinds": {},
+        "param_counts": {k: layers.num_params(k, d) for k in kinds},
+    }
+    for kind in kinds:
+        ops_meta = {}
+        for op, (fn, in_specs, in_sigs, out_sigs) in build_ops(kind, d).items():
+            fname = f"{kind}_{op}.hlo.txt"
+            fpath = os.path.join(out_dir, fname)
+            if force or not os.path.exists(fpath):
+                # keep_unused: the artifact signature must match meta.json
+                # even when an input is dead (e.g. embed_bwdw never reads
+                # the embedding table values).
+                lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+                text = to_hlo_text(lowered)
+                with open(fpath, "w") as f:
+                    f.write(text)
+                if verbose:
+                    print(f"  [{tag}] {fname}: {len(text)} chars")
+            ops_meta[op] = {"file": fname, "inputs": in_sigs, "outputs": out_sigs}
+        meta["kinds"][kind] = {
+            "params": [[n, list(s)] for n, s in param_specs(kind, d)],
+            "ops": ops_meta,
+        }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    if verbose:
+        print(f"  [{tag}] meta.json written")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root dir")
+    ap.add_argument(
+        "--tags",
+        default="micro,fidelity,e2e100m",
+        help="comma-separated dims tags to lower",
+    )
+    ap.add_argument("--kinds", default="", help="subset of layer kinds")
+    ap.add_argument("--force", action="store_true", help="re-lower even if present")
+    args = ap.parse_args()
+    kinds = [k for k in args.kinds.split(",") if k] or None
+    for tag in args.tags.split(","):
+        if tag not in REGISTRY:
+            sys.exit(f"unknown tag {tag!r}; have {sorted(REGISTRY)}")
+        print(f"lowering tag {tag} …")
+        lower_tag(tag, args.out, kinds=kinds, force=args.force)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

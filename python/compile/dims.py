@@ -1,0 +1,109 @@
+"""Model dimension registry shared by L1 kernels, L2 stage graphs and aot.py.
+
+A *tag* pins every static shape the AOT path needs (XLA artifacts are
+shape-specialised).  The rust coordinator picks a tag, loads
+``artifacts/<tag>/meta.json`` and drives the per-layer executables.
+
+Layer kinds mirror the rust taxonomy in ``rust/src/model/layers.rs``:
+``embed, sa, mla, mamba, ffn, moe, head``.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Static shapes for one AOT artifact family."""
+
+    tag: str
+    vocab: int          # V
+    hidden: int         # H (model width)
+    ffn_hidden: int     # FFN inner width
+    heads: int          # attention heads
+    head_dim: int       # per-head dim (heads * head_dim == hidden)
+    kv_latent: int      # MLA compressed KV dim
+    ssm_state: int      # Mamba per-channel state size
+    experts: int        # MoE expert count (top-1 routing)
+    moe_hidden: int     # per-expert FFN inner width
+    seq: int            # sequence length (tokens per sample)
+    microbatch: int     # samples per micro-batch
+
+    @property
+    def tokens(self) -> int:
+        return self.seq * self.microbatch
+
+    def validate(self) -> None:
+        assert self.heads * self.head_dim == self.hidden, (
+            f"{self.tag}: heads*head_dim {self.heads}x{self.head_dim} != hidden {self.hidden}"
+        )
+        assert self.kv_latent <= self.hidden
+        assert self.experts >= 1
+
+
+def _mk(tag, **kw) -> ModelDims:
+    d = ModelDims(tag=tag, **kw)
+    d.validate()
+    return d
+
+
+#: Registry of artifact families.
+#: - ``micro``   tiny shapes for rust integration tests (< 1 s to lower+run)
+#: - ``fidelity``small-but-real shapes for Fig 11/12 RealCluster runs
+#: - ``e2e100m`` ~100 M-param heterogeneous model for the end-to-end
+#:               training example (embedding-heavy, Gemma-style)
+REGISTRY: Dict[str, ModelDims] = {
+    d.tag: d
+    for d in [
+        _mk(
+            "micro",
+            vocab=512,
+            hidden=32,
+            ffn_hidden=64,
+            heads=2,
+            head_dim=16,
+            kv_latent=16,
+            ssm_state=8,
+            experts=2,
+            moe_hidden=48,
+            seq=16,
+            microbatch=2,
+        ),
+        _mk(
+            "fidelity",
+            vocab=2048,
+            hidden=128,
+            ffn_hidden=384,
+            heads=4,
+            head_dim=32,
+            kv_latent=48,
+            ssm_state=16,
+            experts=4,
+            moe_hidden=192,
+            seq=64,
+            microbatch=2,
+        ),
+        _mk(
+            "e2e100m",
+            vocab=98304,       # large vocab: the Gemma-style heterogeneity
+            hidden=384,
+            ffn_hidden=1536,
+            heads=6,
+            head_dim=64,
+            kv_latent=128,
+            ssm_state=16,
+            experts=4,
+            moe_hidden=768,
+            seq=64,
+            microbatch=2,
+        ),
+    ]
+}
+
+
+def get(tag: str) -> ModelDims:
+    return REGISTRY[tag]
+
+
+def to_dict(d: ModelDims) -> dict:
+    return asdict(d)

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (interpret=True — CPU PJRT cannot run Mosaic).
+
+Public names are the autodiff-wrapped kernels from :mod:`ad` (forward =
+Pallas, backward = oracle VJP).  Raw Pallas entry points live in their
+modules (``ffn.fused_ffn`` etc.) for the kernel-vs-ref tests.  Oracles
+are in :mod:`ref`.
+"""
+
+from .ad import fused_ffn, flash_attention, ssm_scan, moe_gate
+
+__all__ = ["fused_ffn", "flash_attention", "ssm_scan", "moe_gate"]

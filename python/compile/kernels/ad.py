@@ -1,0 +1,92 @@
+"""Autodiff wrappers for the L1 Pallas kernels.
+
+``pallas_call`` has no reverse-mode rule, so each kernel is wrapped in a
+``jax.custom_vjp`` whose forward runs the Pallas kernel and whose
+backward is the VJP of the pure-jnp oracle in :mod:`ref`.  Kernel ≡ ref
+is asserted by the test suite, so the pullback is exact (up to float
+reassociation).  This keeps the Pallas kernels on the forward hot path
+of every artifact while backward graphs lower to XLA-fused jnp.
+"""
+
+import jax
+
+from . import ref
+from .ffn import fused_ffn as _ffn_pallas
+from .attention import flash_attention as _attn_pallas
+from .mamba import ssm_scan as _ssm_pallas
+from .moe import moe_gate as _gate_pallas
+
+
+@jax.custom_vjp
+def fused_ffn(x, w1, b1, w2, b2):
+    return _ffn_pallas(x, w1, b1, w2, b2)
+
+
+def _ffn_fwd(x, w1, b1, w2, b2):
+    return _ffn_pallas(x, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _ffn_bwd(res, g):
+    _, vjp = jax.vjp(ref.ffn_ref, *res)
+    return vjp(g)
+
+
+fused_ffn.defvjp(_ffn_fwd, _ffn_bwd)
+
+
+@jax.custom_vjp
+def _flash_attention_causal(q, k, v):
+    return _attn_pallas(q, k, v, causal=True)
+
+
+def _attn_fwd(q, k, v):
+    return _attn_pallas(q, k, v, causal=True), (q, k, v)
+
+
+def _attn_bwd(res, g):
+    _, vjp = jax.vjp(lambda q, k, v: ref.attention_ref(q, k, v, True), *res)
+    return vjp(g)
+
+
+_flash_attention_causal.defvjp(_attn_fwd, _attn_bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    if not causal:
+        # Non-causal path is only used by tests; run the raw kernel.
+        return _attn_pallas(q, k, v, causal=False)
+    return _flash_attention_causal(q, k, v)
+
+
+@jax.custom_vjp
+def ssm_scan(x, dt, a, b, c, d):
+    return _ssm_pallas(x, dt, a, b, c, d)
+
+
+def _ssm_fwd(x, dt, a, b, c, d):
+    return _ssm_pallas(x, dt, a, b, c, d), (x, dt, a, b, c, d)
+
+
+def _ssm_bwd(res, g):
+    _, vjp = jax.vjp(ref.ssm_scan_ref, *res)
+    return vjp(g)
+
+
+ssm_scan.defvjp(_ssm_fwd, _ssm_bwd)
+
+
+@jax.custom_vjp
+def moe_gate(logits):
+    return _gate_pallas(logits)
+
+
+def _gate_fwd(logits):
+    return _gate_pallas(logits), (logits,)
+
+
+def _gate_bwd(res, g):
+    _, vjp = jax.vjp(ref.moe_gate_ref, *res)
+    return vjp(g)
+
+
+moe_gate.defvjp(_gate_fwd, _gate_bwd)

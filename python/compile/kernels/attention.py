@@ -1,0 +1,92 @@
+"""Flash-attention-style Pallas kernel with streaming (online) softmax.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): instead of the CUDA
+pattern (one threadblock per query tile, K/V staged through shared
+memory with warp-level reductions), the grid is
+``(batch·heads, query-tiles)`` and an inner ``fori_loop`` streams K/V
+tiles through VMEM, carrying the running row-max ``m`` and normaliser
+``l`` — the classic online-softmax recurrence.  Causal masking skips
+fully-masked K tiles by clamping the loop bound, so the work per query
+tile is O(t_q · t_kv_visible) like the CUDA original.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq, causal):
+    iq = pl.program_id(1)
+    q = q_ref[...]  # [block_q, d]
+    d = q.shape[-1]
+    scale = 1.0 / (d**0.5)
+    q = q * scale
+
+    m = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    if causal:
+        # K tiles strictly after the last query of this tile are all-masked.
+        n_kv = (iq * block_q + block_q + block_k - 1) // block_k
+    else:
+        n_kv = seq // block_k
+
+    def body(ik, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], ik * block_k, block_k, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], ik * block_k, block_k, axis=0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        if causal:
+            k_pos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m, l, acc))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k")
+)
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 64, block_k: int = 64):
+    """Attention over ``q,k,v: [BH, T, D]`` (batch·heads flattened).
+
+    Returns ``[BH, T, D]``.  T must be divisible by the (clamped) block
+    sizes.
+    """
+    bh, t, d = q.shape
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+    assert t % bq == 0 and t % bk == 0, f"seq {t} not divisible by blocks {bq},{bk}"
+    grid = (bh, t // bq)
+    kernel = functools.partial(
+        _attn_kernel, block_q=bq, block_k=bk, seq=t, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,52 @@
+"""Fused FFN Pallas kernel: ``y = gelu(x @ w1 + b1) @ w2 + b2``.
+
+TPU mapping of the paper's CUDA-era hot spot (DESIGN.md
+§Hardware-Adaptation): the grid tiles the token dimension so each block
+streams one ``(block_t, H)`` activation tile HBM→VMEM while both weight
+matrices stay VMEM-resident (w1+w2 = 2·H·F·4 B ≤ a few MB for the shapes
+we AOT).  The two matmuls and the GELU fuse into one VMEM round-trip —
+what the CUDA version got from threadblock tiling + shared memory.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = h + b1_ref[...]
+    h = jax.nn.gelu(h)
+    y = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def fused_ffn(x, w1, b1, w2, b2, block_t: int = 128):
+    """Apply the fused FFN over ``x: [T, H]``; returns ``[T, H]``.
+
+    ``block_t`` tiles the token dim; T must be divisible by block_t or
+    smaller than it (single block).
+    """
+    t, h = x.shape
+    f = w1.shape[1]
+    bt = min(block_t, t)
+    assert t % bt == 0, f"tokens {t} not divisible by block {bt}"
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,69 @@
+"""Selective-SSM (Mamba-style) scan as a Pallas kernel.
+
+Recurrence per channel ``c`` with diagonal state transition::
+
+    h_t = exp(dt_t[c] * A[c, :]) * h_{t-1} + dt_t[c] * x_t[c] * B_t[:]
+    y_t[c] = <h_t, C_t[:]> + D[c] * x_t[c]
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA original keeps
+the per-channel state in registers with one thread per channel; here the
+grid tiles the channel dim and a ``fori_loop`` walks time, carrying the
+``(block_c, N)`` state tile in VMEM — the state never touches HBM, which
+is the whole point of the selective-scan kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref, *, seq):
+    a = a_ref[...]  # [bc, n]  (negative log-spaced decay)
+    dsk = d_ref[...]  # [bc]
+    bc, n = a.shape
+
+    def body(t, h):
+        xt = jax.lax.dynamic_slice_in_dim(x_ref[...], t, 1, axis=0)[0]  # [bc]
+        dtt = jax.lax.dynamic_slice_in_dim(dt_ref[...], t, 1, axis=0)[0]  # [bc]
+        bt = jax.lax.dynamic_slice_in_dim(b_ref[...], t, 1, axis=0)[0]  # [n]
+        ct = jax.lax.dynamic_slice_in_dim(c_ref[...], t, 1, axis=0)[0]  # [n]
+        decay = jnp.exp(dtt[:, None] * a)  # [bc, n]
+        h = decay * h + (dtt * xt)[:, None] * bt[None, :]
+        yt = (h * ct[None, :]).sum(axis=-1) + dsk * xt  # [bc]
+        o_ref[t, :] = yt.astype(o_ref.dtype)
+        return h
+
+    h0 = jnp.zeros((bc, n), dtype=jnp.float32)
+    jax.lax.fori_loop(0, seq, body, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def ssm_scan(x, dt, a, b, c, d, block_c: int = 64):
+    """Run the selective scan.
+
+    Shapes: ``x, dt: [T, C]``; ``a: [C, N]``; ``b, c: [T, N]``; ``d: [C]``.
+    Returns ``y: [T, C]``.
+    """
+    t, ch = x.shape
+    n = a.shape[1]
+    bc = min(block_c, ch)
+    assert ch % bc == 0, f"channels {ch} not divisible by block {bc}"
+    grid = (ch // bc,)
+    kernel = functools.partial(_ssm_kernel, seq=t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, bc), lambda i: (0, i)),
+            pl.BlockSpec((t, bc), lambda i: (0, i)),
+            pl.BlockSpec((bc, n), lambda i: (i, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((bc,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t, bc), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, ch), x.dtype),
+        interpret=True,
+    )(x, dt, a, b, c, d)

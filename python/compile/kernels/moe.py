@@ -1,0 +1,50 @@
+"""MoE top-1 gating Pallas kernel.
+
+Computes, per token, the softmax over expert logits and a one-hot
+combine weight for the argmax expert::
+
+    g = softmax(logits)                       # [T, E]
+    w[t, e] = g[t, e] * 1[e == argmax g[t]]   # [T, E]
+
+The combine weights drive the dense dispatch-by-matmul in the L2 MoE
+block (capacity = all tokens, no dropping — static shapes for AOT; the
+rust cost model accounts only top-1 FLOPs, see DESIGN.md substitutions).
+
+The kernel is a single VMEM-resident block per token tile: logits are
+[T, E] with tiny E, so one pass computes max/softmax/argmax fused.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(logits_ref, o_ref):
+    s = logits_ref[...]  # [bt, e]
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    g = p / p.sum(axis=-1, keepdims=True)
+    top = g.max(axis=-1, keepdims=True)
+    onehot = (g == top).astype(g.dtype)
+    # Ties: keep the first max only (match jnp.argmax semantics).
+    first = jnp.cumsum(onehot, axis=-1)
+    onehot = onehot * (first == 1.0)
+    o_ref[...] = g * onehot
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def moe_gate(logits, block_t: int = 256):
+    """Top-1 combine weights for ``logits: [T, E]`` → ``[T, E]``."""
+    t, e = logits.shape
+    bt = min(block_t, t)
+    assert t % bt == 0
+    return pl.pallas_call(
+        _gate_kernel,
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, e), logits.dtype),
+        interpret=True,
+    )(logits)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+asserts allclose between each kernel and its oracle across a hypothesis
+sweep of shapes.  They are also used directly by the L2 blocks when a
+shape falls outside a kernel's tiling constraints.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """gelu(x @ w1 + b1) @ w2 + b2."""
+    return jax.nn.gelu(x @ w1 + b1) @ w2 + b2
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Plain softmax attention over [BH, T, D]."""
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q, k) / (d**0.5)
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v)
+
+
+def ssm_scan_ref(x, dt, a, b, c, d):
+    """Reference selective scan via lax.scan over time.
+
+    Shapes: x, dt: [T, C]; a: [C, N]; b, c: [T, N]; d: [C] -> y: [T, C].
+    """
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt[:, None] * a)
+        h = decay * h + (dtt * xt)[:, None] * bt[None, :]
+        yt = (h * ct[None, :]).sum(-1) + d * xt
+        return h, yt
+
+    ch, n = a.shape
+    h0 = jnp.zeros((ch, n), dtype=jnp.float32)
+    _, y = jax.lax.scan(step, h0, (x, dt, b, c))
+    return y
+
+
+def moe_gate_ref(logits):
+    """Top-1 combine weights: softmax prob on the argmax expert."""
+    g = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(g, axis=-1)
+    onehot = jax.nn.one_hot(idx, logits.shape[-1], dtype=g.dtype)
+    return g * onehot

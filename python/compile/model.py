@@ -1,0 +1,157 @@
+"""Layer-2 model composition: stages, backward ops, and the AOT op set.
+
+The rust executor works at *layer* granularity: one HLO executable per
+(layer kind, op).  A pipeline stage is a list of layers, executed by
+chaining the per-layer executables — so the same artifact set serves
+every model partition the Pipeline Generator can produce.
+
+Ops per kind (the artifact calling convention, mirrored in meta.json):
+
+=========== ================================================= ==========
+op          signature                                         emitted for
+=========== ================================================= ==========
+fwd         (*params, x)            -> (y,)                   all hidden
+fwd (embed) (*params, ids)          -> (y,)                   embed
+fwd (head)  (*params, x, targets)   -> (loss,)                head
+bwd         (*params, x, gy)        -> (gx, *gparams)         hidden
+bwdx        (*params, x, gy)        -> (gx,)                  hidden
+bwdw        (*params, x, gy)        -> (*gparams,)            hidden
+bwdw(embed) (*params, ids, gy)      -> (*gparams,)            embed
+fwdbwd(head)(*params, x, targets)   -> (loss, gx, *gparams)   head
+sgd         (*params, *grads, lr)   -> (*params',)            all
+=========== ================================================= ==========
+
+Backward ops *recompute the forward internally* (activation
+rematerialisation), so only the layer input needs to be stashed between
+F and B/W — the paper treats recomputation as orthogonal (§5.1); here it
+doubles as the mechanism that makes the ZB-style B/W split expressible
+with self-contained artifacts.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dims import ModelDims
+from . import layers
+from .layers import FWD_FNS, Params, init_params, param_specs
+
+
+# ---------------------------------------------------------------------------
+# Per-layer backward ops (closed over kind + dims).
+# ---------------------------------------------------------------------------
+
+def hidden_bwd(kind: str, params: Params, x, gy, d: ModelDims):
+    """(gx, *gparams) for a hidden layer, recomputing fwd inside."""
+    fwd = FWD_FNS[kind]
+    _, vjp = jax.vjp(lambda p, xx: fwd(p, xx, d), params, x)
+    gparams, gx = vjp(gy)
+    return gx, gparams
+
+
+def embed_bwdw(params: Params, ids, gy, d: ModelDims):
+    _, vjp = jax.vjp(lambda p: layers.embed_fwd(p, ids, d), params)
+    (gparams,) = vjp(gy)
+    return gparams
+
+
+def head_fwdbwd(params: Params, x, targets, d: ModelDims):
+    """(loss, gx, *gparams) with the xent loss seeded at 1.0."""
+    loss, vjp = jax.vjp(
+        lambda p, xx: layers.head_fwd(p, xx, targets, d), params, x
+    )
+    gparams, gx = vjp(jnp.float32(1.0))
+    return loss, gx, gparams
+
+
+def sgd_update(params: Params, grads: Params, lr):
+    return [p - lr * g for p, g in zip(params, grads)]
+
+
+# ---------------------------------------------------------------------------
+# Stage / model composition (python-side oracle; rust chains artifacts).
+# ---------------------------------------------------------------------------
+
+class Model:
+    """A heterogeneous model as an ordered list of layer kinds.
+
+    ``kinds[0]`` must be ``embed`` and ``kinds[-1]`` must be ``head``.
+    """
+
+    def __init__(self, kinds: List[str], d: ModelDims, key):
+        assert kinds[0] == "embed" and kinds[-1] == "head", kinds
+        self.kinds = kinds
+        self.dims = d
+        keys = jax.random.split(key, len(kinds))
+        self.params: List[Params] = [
+            init_params(k, d, kk) for k, kk in zip(kinds, keys)
+        ]
+
+    def forward(self, ids, targets):
+        """Full-model loss (the monolithic oracle for stage chaining)."""
+        return model_loss(self.kinds, self.params, ids, targets, self.dims)
+
+    def num_params(self) -> int:
+        return sum(layers.num_params(k, self.dims) for k in self.kinds)
+
+
+def model_loss(kinds, params_list, ids, targets, d: ModelDims):
+    x = layers.embed_fwd(params_list[0], ids, d)
+    for kind, p in zip(kinds[1:-1], params_list[1:-1]):
+        x = FWD_FNS[kind](p, x, d)
+    return layers.head_fwd(params_list[-1], x, targets, d)
+
+
+def chain_stages(kinds, params_list, ids, targets, d: ModelDims):
+    """Same loss computed through the per-layer fwd/bwd ops the rust
+    executor uses — asserts the chained path ≡ monolithic autodiff in
+    tests.  Returns (loss, grads per layer)."""
+    # Forward, stashing layer inputs.
+    acts = []
+    x = ids
+    acts.append(x)
+    x = layers.embed_fwd(params_list[0], x, d)
+    for kind, p in zip(kinds[1:-1], params_list[1:-1]):
+        acts.append(x)
+        x = FWD_FNS[kind](p, x, d)
+    acts.append(x)  # head input
+    loss, gx, ghead = head_fwdbwd(params_list[-1], x, targets, d)
+    grads = [None] * len(kinds)
+    grads[-1] = ghead
+    # Backward through hidden layers.
+    for i in range(len(kinds) - 2, 0, -1):
+        gx, gp = hidden_bwd(kinds[i], params_list[i], acts[i], gx, d)
+        grads[i] = gp
+    grads[0] = embed_bwdw(params_list[0], acts[0], gx, d)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus with learnable structure (shared with the rust trainer
+# via the same generator constants — see rust/src/trainer/data.rs).
+# ---------------------------------------------------------------------------
+
+def synthetic_batch(key, d: ModelDims, nmb: int = 1):
+    """Zipf-ish unigram + first-order Markov structure over the vocab.
+
+    Returns (ids, targets): [nmb, MB, T] int32 each; targets are the
+    next-token shift of ids.
+    """
+    mb, t, v = d.microbatch, d.seq, d.vocab
+    k1, k2 = jax.random.split(key)
+    base = jax.random.categorical(
+        k1, _zipf_logits(v), shape=(nmb, mb, t + 1)
+    )
+    # Markov structure: with p=0.5 the next token is (prev*7+3) % v.
+    coin = jax.random.bernoulli(k2, 0.5, (nmb, mb, t))
+    nxt = (base[..., :-1] * 7 + 3) % v
+    seq = jnp.concatenate(
+        [base[..., :1], jnp.where(coin, nxt, base[..., 1:])], axis=-1
+    )
+    return seq[..., :-1].astype(jnp.int32), seq[..., 1:].astype(jnp.int32)
+
+
+def _zipf_logits(v: int):
+    ranks = jnp.arange(1, v + 1, dtype=jnp.float32)
+    return -jnp.log(ranks)

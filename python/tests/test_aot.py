@@ -1,0 +1,72 @@
+"""AOT path tests: artifact signatures are consistent with meta.json,
+HLO text parses as HLO (smoke), and lowering is deterministic/idempotent."""
+
+import json
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot
+from compile.dims import REGISTRY, get
+from compile.layers import LAYER_KINDS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_build_ops_signature_arity():
+    d = get("micro")
+    for kind in LAYER_KINDS:
+        ops = aot.build_ops(kind, d)
+        assert "fwd" in ops and "sgd" in ops
+        for op, (fn, in_specs, in_sigs, out_sigs) in ops.items():
+            assert len(in_specs) == len(in_sigs), (kind, op)
+            # The callable must trace with the declared specs.
+            out = jax.eval_shape(fn, *in_specs)
+            assert len(out) == len(out_sigs), (kind, op)
+            for o, sig in zip(out, out_sigs):
+                assert list(o.shape) == sig["shape"], (kind, op, sig["name"])
+
+
+def test_registry_tags_are_valid():
+    for tag, d in REGISTRY.items():
+        d.validate()
+        assert d.seq % 8 == 0 or d.seq < 8, tag
+
+
+@pytest.mark.slow
+def test_lower_tag_writes_consistent_meta():
+    d_tmp = tempfile.mkdtemp()
+    aot.lower_tag("micro", d_tmp, kinds=["ffn", "embed"], verbose=False)
+    meta_path = os.path.join(d_tmp, "micro", "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    assert meta["dims"]["vocab"] == 512
+    for kind in ["ffn", "embed"]:
+        for op, rec in meta["kinds"][kind]["ops"].items():
+            path = os.path.join(d_tmp, "micro", rec["file"])
+            assert os.path.exists(path), (kind, op)
+            text = open(path).read()
+            assert text.startswith("HloModule"), (kind, op)
+            # Parameter count in HLO matches the declared inputs
+            # (keep_unused=True guarantees no DCE of dead args).
+            n_params = text.count("\n  %param") + text.count(" parameter(")
+            assert text.count(" parameter(") >= len(rec["inputs"]), (kind, op)
+
+
+def test_repo_artifacts_match_current_specs():
+    """If artifacts/ has been built, its meta must agree with the
+    current param_specs (guards against stale artifacts)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "micro")
+    meta_path = os.path.join(root, "meta.json")
+    if not os.path.exists(meta_path):
+        pytest.skip("run `make artifacts` first")
+    from compile.layers import param_specs
+
+    with open(meta_path) as f:
+        meta = json.load(f)
+    d = get("micro")
+    for kind in LAYER_KINDS:
+        want = [[n, list(s)] for n, s in param_specs(kind, d)]
+        assert meta["kinds"][kind]["params"] == want, kind

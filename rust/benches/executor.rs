@@ -1,0 +1,45 @@
+//! Executor passes: lowering, deadlock check/repair, overlap hoisting,
+//! and the timed SimCluster run — instruction throughput of the L3
+//! coordination layer.
+
+use adaptis::cluster::sim::run_timed;
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::executor::lower::{check_rendezvous, lower, LowerOptions};
+use adaptis::model::build_model;
+use adaptis::partition::uniform;
+use adaptis::placement::sequential;
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::builders::zb_h1;
+use adaptis::util::bench::{bench, report_rate};
+
+fn main() {
+    println!("== executor ==");
+    for (p, nmb) in [(4, 16), (8, 64), (16, 256)] {
+        let cfg = ModelCfg::table5(Family::DeepSeek, Size::Small);
+        let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+        let prof =
+            ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let part = uniform(prof.n_layers(), p);
+        let plac = sequential(p);
+        let mut sch = zb_h1(p, nmb);
+        sch.overlap_aware = true;
+
+        let t = bench(&format!("lower+repair P={p} nmb={nmb}"), 10, 0.5, || {
+            let prog = lower(&sch, &plac, LowerOptions::default());
+            std::hint::black_box(prog.total_instrs());
+        });
+        let prog = lower(&sch, &plac, LowerOptions::default());
+        report_rate("instructions lowered", t, prog.total_instrs() as f64, "instr");
+
+        let t = bench(&format!("check_rendezvous P={p} nmb={nmb}"), 10, 0.5, || {
+            check_rendezvous(&prog).unwrap();
+        });
+        report_rate("instructions checked", t, prog.total_instrs() as f64, "instr");
+
+        let t = bench(&format!("sim run_timed P={p} nmb={nmb}"), 10, 0.5, || {
+            let r = run_timed(&prof, &part, &prog, false).unwrap();
+            std::hint::black_box(r.makespan);
+        });
+        report_rate("instructions executed", t, prog.total_instrs() as f64, "instr");
+    }
+}

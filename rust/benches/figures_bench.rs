@@ -1,0 +1,23 @@
+//! End-to-end figure regeneration timings: one bench per paper
+//! table/figure (fast mode) — proves every experiment harness runs and
+//! bounds its cost.  Fig 11/12 need `make artifacts` and are skipped
+//! with a notice otherwise.
+
+use adaptis::figures::{run_figure, Ctx, ALL};
+use adaptis::util::bench::bench;
+
+fn main() {
+    println!("== figure harnesses (fast mode) ==");
+    let ctx = Ctx { fast: true, ..Ctx::default() };
+    for &id in ALL {
+        match run_figure(id, &ctx) {
+            Ok(_) => {
+                bench(&format!("figures {id}"), 1, 0.0, || {
+                    let s = run_figure(id, &ctx).unwrap();
+                    std::hint::black_box(s.len());
+                });
+            }
+            Err(e) => println!("bench figures {id:<38} skipped: {e}"),
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Pipeline Generator end-to-end timing — the measured side of Fig 13
+//! (generation must stay within seconds at paper-scale instances) plus
+//! the greedy list-scheduler construction rate.
+
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::generator::{generate, GenOptions};
+use adaptis::model::build_model;
+use adaptis::partition::uniform;
+use adaptis::placement::sequential;
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::greedy::{greedy_schedule, SchedKnobs};
+use adaptis::util::bench::{bench, report_rate};
+
+fn main() {
+    println!("== greedy list scheduler ==");
+    for (size, p, nmb) in [(Size::Small, 4, 16), (Size::Medium, 8, 64), (Size::Large, 16, 256)]
+    {
+        let cfg = ModelCfg::table5(Family::NemotronH, size);
+        let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+        let prof =
+            ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let part = uniform(prof.n_layers(), p);
+        let plac = sequential(p);
+        let label = format!("greedy_schedule {} P={p} nmb={nmb}", size.name());
+        let t = bench(&label, 10, 0.5, || {
+            let s = greedy_schedule(&prof, &part, &plac, nmb, SchedKnobs::default());
+            std::hint::black_box(s.total_slots());
+        });
+        report_rate("slots built", t, (3 * p * nmb) as f64, "slots");
+    }
+
+    println!("== pipeline generation (Fig 13 measured) ==");
+    for (size, p, nmb) in [(Size::Small, 4, 64), (Size::Medium, 8, 128), (Size::Large, 16, 256)]
+    {
+        let cfg = ModelCfg::table5(Family::NemotronH, size);
+        let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+        let prof =
+            ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let mut opts = GenOptions::new(p, nmb);
+        opts.max_iters = 32;
+        let label = format!("generate {} P={p} nmb={nmb}", size.name());
+        bench(&label, 1, 0.0, || {
+            let g = generate(&prof, &opts);
+            std::hint::black_box((g.evals, g.report.total));
+        });
+    }
+}

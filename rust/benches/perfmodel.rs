@@ -1,0 +1,35 @@
+//! Performance-model hot path: slot-events simulated per second across
+//! problem sizes.  The Pipeline Generator evaluates thousands of
+//! candidates per run, so this is the L3 roofline that bounds Fig 13.
+
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::model::build_model;
+use adaptis::partition::uniform;
+use adaptis::placement::sequential;
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::builders::{one_f_one_b, zb_h1};
+use adaptis::util::bench::{bench, report_rate};
+
+fn main() {
+    println!("== perfmodel ==");
+    for (size, p, nmb) in [(Size::Small, 4, 16), (Size::Medium, 8, 64), (Size::Large, 16, 256)]
+    {
+        let cfg = ModelCfg::table5(Family::NemotronH, size);
+        let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+        let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let part = uniform(prof.n_layers(), p);
+        let plac = sequential(p);
+        for (name, sch) in
+            [("1f1b", one_f_one_b(p, nmb)), ("zb-h1", zb_h1(p, nmb))]
+        {
+            let slots = sch.total_slots() as f64;
+            let label = format!("simulate {} P={p} nmb={nmb} ({name})", size.name());
+            let t = bench(&label, 20, 0.5, || {
+                let r = simulate(&prof, &part, &plac, &sch, false).unwrap();
+                std::hint::black_box(r.total);
+            });
+            report_rate("slot events", t, slots, "slots");
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! RealCluster training-step benchmark (needs `make artifacts`):
+//! per-step wall time and tokens/s for each method on the micro tag —
+//! the end-to-end L3+runtime hot path.
+
+use std::sync::Arc;
+
+use adaptis::baselines::Method;
+use adaptis::runtime::ArtifactStore;
+use adaptis::trainer::{demo_model, train, TrainMethod, TrainOptions};
+use adaptis::util::fmt_si;
+use adaptis::util::stats::mean;
+
+fn main() {
+    println!("== real training step (micro artifacts) ==");
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/micro");
+    let store = match ArtifactStore::open(dir) {
+        Ok(s) => Arc::new(s),
+        Err(_) => {
+            println!("skipped: run `make artifacts` first");
+            return;
+        }
+    };
+    let kinds = demo_model("micro");
+    for method in [
+        TrainMethod::Baseline(Method::GPipe),
+        TrainMethod::Baseline(Method::S1F1B),
+        TrainMethod::Baseline(Method::ZB),
+        TrainMethod::AdaPtis,
+    ] {
+        let opts = TrainOptions {
+            p: 2,
+            nmb: 4,
+            steps: 8,
+            lr: 0.1,
+            seed: 0,
+            method: method.clone(),
+            collect_trace: false,
+            live_log: false,
+        };
+        let r = train(store.clone(), &kinds, &opts).unwrap();
+        // First step pays executable compile; report steady state.
+        let steady = mean(&r.step_times[2..]);
+        println!(
+            "bench train_step {:<28} {:>10.2} ms/step  {:>10} tokens/s",
+            method.name(),
+            steady * 1e3,
+            fmt_si(r.tokens_per_step as f64 / steady)
+        );
+    }
+}

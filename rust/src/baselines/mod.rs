@@ -1,0 +1,196 @@
+//! Named baseline pipelines (paper §5.1): complete (partition,
+//! placement, schedule) triples for S-1F1B, GPipe, I-1F1B, ZB-H1 and
+//! the Mist-style balanced-partition method — reimplemented as pure
+//! coordination policies (DESIGN.md §Substitutions).
+
+use crate::partition::{balanced, uniform, Partition};
+use crate::placement::{interleaved, sequential, wave, Placement};
+use crate::profile::ProfiledData;
+use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
+use crate::schedule::{builders, Schedule};
+
+/// A fully specified pipeline: the object the performance model
+/// simulates and the executor runs.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    pub name: String,
+    pub partition: Partition,
+    pub placement: Placement,
+    pub schedule: Schedule,
+}
+
+/// Baseline method identifiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    GPipe,
+    S1F1B,
+    I1F1B,
+    ZB,
+    Mist,
+    /// Hanayo-style wave placement (§2.3) with a 1F1B-like schedule.
+    Hanayo,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::GPipe => "GPipe",
+            Method::S1F1B => "S-1F1B",
+            Method::I1F1B => "I-1F1B",
+            Method::ZB => "ZB",
+            Method::Mist => "Mist",
+            Method::Hanayo => "Hanayo",
+        }
+    }
+
+    pub fn all() -> [Method; 6] {
+        [
+            Method::GPipe,
+            Method::S1F1B,
+            Method::I1F1B,
+            Method::ZB,
+            Method::Mist,
+            Method::Hanayo,
+        ]
+    }
+
+    /// The four paper baselines (Fig 1 / Fig 8 comparison set).
+    pub fn paper_baselines() -> [Method; 4] {
+        [Method::S1F1B, Method::I1F1B, Method::ZB, Method::Mist]
+    }
+}
+
+/// Number of virtual-stage chunks I-1F1B uses (paper default style:
+/// small fixed v; Megatron requires layers divisible across chunks).
+pub const I1F1B_CHUNKS: usize = 2;
+
+/// Build a baseline pipeline for `method` over `n_layers` layers on
+/// `p` devices with `nmb` micro-batches.
+pub fn build(
+    method: Method,
+    profile: &ProfiledData,
+    p: usize,
+    nmb: usize,
+) -> Pipeline {
+    let n_layers = profile.n_layers();
+    match method {
+        Method::GPipe => Pipeline {
+            name: method.name().into(),
+            partition: uniform(n_layers, p),
+            placement: sequential(p),
+            schedule: builders::gpipe(p, nmb),
+        },
+        Method::S1F1B => Pipeline {
+            name: method.name().into(),
+            partition: uniform(n_layers, p),
+            placement: sequential(p),
+            schedule: builders::one_f_one_b(p, nmb),
+        },
+        Method::I1F1B => {
+            // Interleaved placement with v chunks; falls back to S-1F1B
+            // when nmb isn't divisible by p (the Megatron constraint).
+            let v = I1F1B_CHUNKS;
+            if nmb % p != 0 || n_layers < p * v {
+                let mut pl = build(Method::S1F1B, profile, p, nmb);
+                pl.name = method.name().into();
+                return pl;
+            }
+            Pipeline {
+                name: method.name().into(),
+                partition: uniform(n_layers, p * v),
+                placement: interleaved(p, v),
+                schedule: builders::interleaved_1f1b(p, v, nmb),
+            }
+        }
+        Method::ZB => Pipeline {
+            name: method.name().into(),
+            partition: uniform(n_layers, p),
+            placement: sequential(p),
+            schedule: builders::zb_h1(p, nmb),
+        },
+        Method::Mist => Pipeline {
+            // Mist: compute-balanced partition (memory-parallelism
+            // co-opt reduced to its partition contribution), S-1F1B
+            // placement + schedule (paper Table 2: partition-only).
+            name: method.name().into(),
+            partition: balanced(profile, p),
+            placement: sequential(p),
+            schedule: builders::one_f_one_b(p, nmb),
+        },
+        Method::Hanayo => {
+            // Wave placement with 2 waves; the schedule is the greedy
+            // 1F1B-equivalent (fused backward, no W delay, no overlap
+            // tuning) built for the wave dependency structure.
+            let v = 2;
+            if n_layers < p * v {
+                let mut pl = build(Method::S1F1B, profile, p, nmb);
+                pl.name = method.name().into();
+                return pl;
+            }
+            let partition = uniform(n_layers, p * v);
+            let placement = wave(p, v);
+            let schedule = greedy_schedule(
+                profile,
+                &partition,
+                &placement,
+                nmb,
+                SchedKnobs {
+                    split_bw: false,
+                    w_fill: false,
+                    mem_cap_factor: 1.0,
+                    overlap_aware: false,
+                },
+            );
+            Pipeline { name: method.name().into(), partition, placement, schedule }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::perfmodel::simulate;
+
+    fn profile(fam: Family, p: usize, nmb: usize) -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(fam, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(p, 2, nmb, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn all_baselines_simulate() {
+        let prof = profile(Family::Gemma, 4, 8);
+        for m in Method::all() {
+            let pl = build(m, &prof, 4, 8);
+            pl.schedule
+                .validate(&pl.placement)
+                .unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+            let r = simulate(&prof, &pl.partition, &pl.placement, &pl.schedule, false)
+                .unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+            assert!(r.total > 0.0);
+        }
+    }
+
+    #[test]
+    fn mist_beats_s1f1b_on_gemma() {
+        // Balanced partition must help on the vocab-heavy model.
+        let prof = profile(Family::Gemma, 4, 16);
+        let s = build(Method::S1F1B, &prof, 4, 16);
+        let m = build(Method::Mist, &prof, 4, 16);
+        let rs = simulate(&prof, &s.partition, &s.placement, &s.schedule, false).unwrap();
+        let rm = simulate(&prof, &m.partition, &m.placement, &m.schedule, false).unwrap();
+        assert!(rm.total < rs.total, "mist {:.4} !< s1f1b {:.4}", rm.total, rs.total);
+    }
+
+    #[test]
+    fn i1f1b_falls_back_when_indivisible() {
+        let prof = profile(Family::Gemma, 4, 6);
+        let pl = build(Method::I1F1B, &prof, 4, 6);
+        assert_eq!(pl.placement.n_stages(), 4); // fell back to sequential
+    }
+}

@@ -1,0 +1,10 @@
+//! Cluster backends for executing lowered [`crate::executor::Program`]s:
+//!
+//! - [`sim`]: discrete-event simulator with rendezvous send semantics —
+//!   instruction-level timing (validates the executor's comm passes and
+//!   quantifies overlap/deadlock-repair effects);
+//! - [`real`]: the message fabric for the thread-per-device RealCluster
+//!   (used by [`crate::trainer`] to run actual PJRT compute).
+
+pub mod real;
+pub mod sim;

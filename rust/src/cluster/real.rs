@@ -1,0 +1,167 @@
+//! Message fabric for the RealCluster: one OS thread per pipeline
+//! device, mpsc channels as P2P links, tagged messages with per-device
+//! mailboxes so out-of-order arrivals (hoisted receives, W-filled
+//! schedules) never block the transport.
+//!
+//! The driver (trainer main thread) participates as pseudo-device
+//! `p` — it injects micro-batch inputs/targets and collects losses.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::runtime::Tensor;
+use crate::schedule::OpKind;
+
+/// Logical channel id: (micro-batch, producer stage, consumer stage,
+/// kind).  Driver I/O uses reserved stage ids (see [`Tag`]).
+pub type ChannelKey = (u32, u32, u32, OpKind);
+
+/// Message tag distinguishing payload streams.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tag {
+    /// Pipeline activation / gradient traffic.
+    Chan(ChannelKey),
+    /// Driver → first-stage device: token ids for `mb`.
+    Ids(u32),
+    /// Driver → head device: target ids for `mb`.
+    Targets(u32),
+    /// Head device → driver: scalar loss for `mb`.
+    Loss(u32),
+    /// Driver → device: control (step barrier release).
+    Step(u64),
+    /// Device → driver: step finished (device id in payload shape[0]).
+    Done(u64),
+}
+
+/// A tagged tensor message.
+pub struct Msg {
+    pub tag: Tag,
+    pub tensor: Tensor,
+}
+
+/// Per-endpoint mailbox: a receiver plus a buffer for out-of-order
+/// messages.
+pub struct Mailbox {
+    rx: Receiver<Msg>,
+    buf: HashMap<Tag, Vec<Tensor>>,
+}
+
+impl Mailbox {
+    /// Blocking receive of a specific tag.
+    pub fn recv(&mut self, tag: Tag) -> Tensor {
+        if let Some(v) = self.buf.get_mut(&tag) {
+            if let Some(t) = v.pop() {
+                return t;
+            }
+        }
+        loop {
+            let m = self.rx.recv().expect("fabric closed while waiting");
+            if m.tag == tag {
+                return m.tensor;
+            }
+            self.buf.entry(m.tag).or_default().push(m.tensor);
+        }
+    }
+
+    /// Non-blocking check whether a tag is available (buffered or
+    /// immediately drainable).
+    pub fn try_recv(&mut self, tag: Tag) -> Option<Tensor> {
+        if let Some(v) = self.buf.get_mut(&tag) {
+            if let Some(t) = v.pop() {
+                return Some(t);
+            }
+        }
+        while let Ok(m) = self.rx.try_recv() {
+            if m.tag == tag {
+                return Some(m.tensor);
+            }
+            self.buf.entry(m.tag).or_default().push(m.tensor);
+        }
+        None
+    }
+}
+
+/// The full fabric: `p` device endpoints + 1 driver endpoint.
+pub struct Fabric {
+    /// senders[i] = handle for sending *to* endpoint i.
+    pub senders: Vec<Sender<Msg>>,
+}
+
+impl Fabric {
+    /// Build a fabric with `p` devices (+driver).  Returns the fabric
+    /// (clonable senders) and the per-endpoint mailboxes in id order
+    /// (devices 0..p, driver at index p).
+    pub fn new(p: usize) -> (Fabric, Vec<Mailbox>) {
+        let mut senders = Vec::with_capacity(p + 1);
+        let mut boxes = Vec::with_capacity(p + 1);
+        for _ in 0..=p {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            boxes.push(Mailbox { rx, buf: HashMap::new() });
+        }
+        (Fabric { senders }, boxes)
+    }
+
+    pub fn send(&self, to: usize, tag: Tag, tensor: Tensor) {
+        self.senders[to]
+            .send(Msg { tag, tensor })
+            .expect("fabric endpoint dropped");
+    }
+
+    pub fn clone_senders(&self) -> Fabric {
+        Fabric { senders: self.senders.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_order_delivery() {
+        let (fab, mut boxes) = Fabric::new(1);
+        let key_a = Tag::Chan((0, 0, 1, OpKind::F));
+        let key_b = Tag::Chan((1, 0, 1, OpKind::F));
+        fab.send(0, key_b, Tensor::ones(&[2]));
+        fab.send(0, key_a, Tensor::zeros(&[2]));
+        // Ask for A first even though B arrived first.
+        let a = boxes[0].recv(key_a);
+        assert_eq!(a.f32s(), &[0.0, 0.0]);
+        let b = boxes[0].recv(key_b);
+        assert_eq!(b.f32s(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn cross_thread_roundtrip() {
+        let (fab, mut boxes) = Fabric::new(2);
+        let driver_box = boxes.pop().unwrap();
+        let mut b1 = boxes.pop().unwrap();
+        let mut b0 = boxes.pop().unwrap();
+        let f2 = fab.clone_senders();
+        let h0 = std::thread::spawn(move || {
+            let x = b0.recv(Tag::Ids(0));
+            f2.send(1, Tag::Chan((0, 0, 1, OpKind::F)), x);
+        });
+        let f3 = fab.clone_senders();
+        let h1 = std::thread::spawn(move || {
+            let x = b1.recv(Tag::Chan((0, 0, 1, OpKind::F)));
+            f3.send(2, Tag::Loss(0), x);
+        });
+        fab.send(0, Tag::Ids(0), Tensor::iota(&[4], 1.0));
+        let mut driver_box = driver_box;
+        let out = driver_box.recv(Tag::Loss(0));
+        assert_eq!(out.f32s(), &[0.0, 1.0, 2.0, 3.0]);
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_buffers() {
+        let (fab, mut boxes) = Fabric::new(1);
+        assert!(boxes[0].try_recv(Tag::Step(1)).is_none());
+        fab.send(0, Tag::Done(7), Tensor::zeros(&[1]));
+        fab.send(0, Tag::Step(1), Tensor::zeros(&[1]));
+        assert!(boxes[0].try_recv(Tag::Step(1)).is_some());
+        assert!(boxes[0].try_recv(Tag::Done(7)).is_some());
+    }
+}

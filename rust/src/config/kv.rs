@@ -1,0 +1,92 @@
+//! `key=value` config-file / CLI-override parsing.
+//!
+//! Grammar: one `key = value` per line; `#` comments; sections are just
+//! dotted keys (`hw.link_bw = 25e9`).  This is all the launcher needs —
+//! a deliberate TOML subset.
+
+use std::collections::BTreeMap;
+
+/// Parse a kv config document into a flat map.
+pub fn parse_kv(src: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key=value, got {raw:?}", lineno + 1))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        out.insert(key.to_string(), v.trim().trim_matches('"').to_string());
+    }
+    Ok(out)
+}
+
+/// Typed accessors over the parsed map.
+pub struct KvCfg(pub BTreeMap<String, String>);
+
+impl KvCfg {
+    pub fn from_str(src: &str) -> Result<Self, String> {
+        parse_kv(src).map(KvCfg)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.0.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.0
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.0.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.0
+            .get(key)
+            .map(|s| matches!(s.as_str(), "1" | "true" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let cfg = KvCfg::from_str(
+            "model = gemma   # family\nhw.link_bw = 25e9\np=8\nsplit = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.str_or("model", "?"), "gemma");
+        assert_eq!(cfg.f64_or("hw.link_bw", 0.0), 25e9);
+        assert_eq!(cfg.usize_or("p", 0), 8);
+        assert!(cfg.bool_or("split", false));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_kv("just words\n").is_err());
+        assert!(parse_kv("= novalue\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let m = parse_kv("# full comment\n\n a = 1 \n").unwrap();
+        assert_eq!(m.get("a").unwrap(), "1");
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,255 @@
+//! Configuration system: model families (paper Table 5), parallelism,
+//! hardware, and training settings.
+//!
+//! Everything is constructible in code (library use) or from the tiny
+//! key=value config format via [`parse_kv`] (launcher use) — the
+//! vendored crate set has no serde, and a full TOML parser buys nothing
+//! here.
+
+pub mod kv;
+
+pub use kv::parse_kv;
+
+/// Model family — the heterogeneity axes of the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Homogeneous baseline (Fig 1): SA+FFN blocks, small vocab.
+    Llama2,
+    /// Huge-vocabulary SA+FFN (Fig 1, §5): head-heavy.
+    Gemma,
+    /// MLA attention, dense FFN first quarter then MoE (Fig 1, §5).
+    DeepSeek,
+    /// Mamba+SA hybrid with FFN (Fig 1, §5).
+    NemotronH,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Llama2 => "LLaMA-2",
+            Family::Gemma => "Gemma",
+            Family::DeepSeek => "DeepSeek",
+            Family::NemotronH => "Nemotron-H",
+        }
+    }
+}
+
+/// Paper Table 5 size tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Size {
+    Small,
+    Medium,
+    Large,
+}
+
+impl Size {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Size::Small => "Small",
+            Size::Medium => "Medium",
+            Size::Large => "Large",
+        }
+    }
+}
+
+/// Full model hyper-parameters (one row of Table 5 + derived dims).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub family: Family,
+    pub size: Size,
+    /// Number of *blocks* (the paper's "L"); the flat layer list the
+    /// partitioner sees has ~2L+2 fine-grained layers.
+    pub blocks: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub ffn_hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// MLA compressed-KV dim (DeepSeek only).
+    pub kv_latent: usize,
+    /// Mamba per-channel state size (Nemotron-H only).
+    pub ssm_state: usize,
+    /// MoE expert count (DeepSeek only; 1 = dense).
+    pub experts: usize,
+    pub moe_hidden: usize,
+    /// Experts activated per token.
+    pub topk: usize,
+}
+
+impl ModelCfg {
+    /// Paper Table 5 rows (+ the LLaMA-2 config from Fig 1).
+    pub fn table5(family: Family, size: Size) -> ModelCfg {
+        use Family::*;
+        use Size::*;
+        let (blocks, vocab) = match (family, size) {
+            (Gemma, Small) => (32, 256 << 10),
+            (Gemma, Medium) => (64, 512 << 10),
+            (Gemma, Large) => (128, 1024 << 10),
+            (DeepSeek, Small) => (16, 128 << 10),
+            (DeepSeek, Medium) => (32, 256 << 10),
+            (DeepSeek, Large) => (64, 512 << 10),
+            (NemotronH, Small) => (28, 128 << 10),
+            (NemotronH, Medium) => (56, 256 << 10),
+            (NemotronH, Large) => (112, 512 << 10),
+            (Llama2, Small) => (32, 32 << 10),
+            (Llama2, Medium) => (64, 32 << 10),
+            (Llama2, Large) => (80, 32 << 10),
+        };
+        let hidden = match family {
+            Gemma => 1536,
+            DeepSeek => 2048,
+            NemotronH => 1024,
+            Llama2 => 4096,
+        };
+        let heads = hidden / 128;
+        ModelCfg {
+            family,
+            size,
+            blocks,
+            vocab,
+            hidden,
+            ffn_hidden: 4 * hidden,
+            heads,
+            head_dim: 128,
+            kv_latent: hidden / 4,
+            ssm_state: 16,
+            experts: if family == DeepSeek { 8 } else { 1 },
+            moe_hidden: hidden, // fine-grained experts (DeepSeek-style)
+            topk: 2,
+        }
+    }
+
+    /// All nine Table 5 configs in paper order.
+    pub fn all_table5() -> Vec<ModelCfg> {
+        use Family::*;
+        use Size::*;
+        [Gemma, DeepSeek, NemotronH]
+            .iter()
+            .flat_map(|&f| {
+                [Small, Medium, Large].iter().map(move |&s| ModelCfg::table5(f, s))
+            })
+            .collect()
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} ({})", self.family.name(), self.size.name())
+    }
+}
+
+/// Parallelism + batching settings (paper Table 1 symbols).
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelCfg {
+    /// Pipeline parallel size — number of pipeline devices.
+    pub p: usize,
+    /// Tensor parallel size (divides per-layer compute & weights).
+    pub t: usize,
+    /// Data parallel size.
+    pub d: usize,
+    /// Expert parallel size.
+    pub e: usize,
+    /// Number of micro-batches per step (per pipeline).
+    pub nmb: usize,
+    /// Micro-batch size (sequences).
+    pub mbs: usize,
+    /// Sequence length.
+    pub seq: usize,
+}
+
+impl ParallelCfg {
+    pub fn new(p: usize, t: usize, nmb: usize, mbs: usize, seq: usize) -> Self {
+        ParallelCfg { p, t, d: 1, e: 1, nmb, mbs, seq }
+    }
+
+    /// Tokens per micro-batch.
+    pub fn tokens(&self) -> usize {
+        self.mbs * self.seq
+    }
+
+    /// Global batch size in sequences (across DP replicas).
+    pub fn gbs(&self) -> usize {
+        self.nmb * self.mbs * self.d
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.p * self.t * self.d
+    }
+}
+
+/// Hardware model — defaults calibrated to the paper's H800 testbed.
+#[derive(Clone, Copy, Debug)]
+pub struct HardwareCfg {
+    /// Peak dense matmul throughput (flop/s), bf16 tensor core.
+    pub flops_peak: f64,
+    /// Achievable fraction of peak for large matmuls.
+    pub eff_matmul: f64,
+    /// Achievable fraction of peak for attention/scan (memory-irregular).
+    pub eff_attn: f64,
+    /// HBM bandwidth (B/s).
+    pub mem_bw: f64,
+    /// Pipeline P2P link bandwidth (B/s) — inter-node InfiniBand.
+    pub link_bw: f64,
+    /// Intra-node NVLink bandwidth for TP collectives (B/s).
+    pub tp_link_bw: f64,
+    /// P2P latency per message (s).
+    pub link_latency: f64,
+    /// Fixed per-op launch/dispatch overhead (s).
+    pub op_overhead: f64,
+    /// Device memory capacity (bytes).
+    pub mem_capacity: f64,
+}
+
+impl Default for HardwareCfg {
+    fn default() -> Self {
+        HardwareCfg {
+            flops_peak: 989e12, // H800 bf16 tensor
+            eff_matmul: 0.42,
+            eff_attn: 0.18,
+            mem_bw: 3.35e12,
+            link_bw: 25e9,    // IB per-GPU effective
+            tp_link_bw: 200e9, // NVLink effective
+            link_latency: 8e-6,
+            op_overhead: 18e-6,
+            mem_capacity: 80e9,
+        }
+    }
+}
+
+/// Training-run settings for the real trainer.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    /// Artifact dims tag (see python/compile/dims.py).
+    pub tag: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { tag: "micro".into(), steps: 20, lr: 0.1, seed: 0, log_every: 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_matches_paper() {
+        let g = ModelCfg::table5(Family::Gemma, Size::Small);
+        assert_eq!((g.blocks, g.vocab, g.hidden), (32, 262144, 1536));
+        let d = ModelCfg::table5(Family::DeepSeek, Size::Large);
+        assert_eq!((d.blocks, d.vocab, d.hidden), (64, 524288, 2048));
+        let n = ModelCfg::table5(Family::NemotronH, Size::Medium);
+        assert_eq!((n.blocks, n.vocab, n.hidden), (56, 262144, 1024));
+    }
+
+    #[test]
+    fn parallel_derived() {
+        let pc = ParallelCfg { p: 4, t: 2, d: 2, e: 1, nmb: 16, mbs: 1, seq: 4096 };
+        assert_eq!(pc.tokens(), 4096);
+        assert_eq!(pc.gbs(), 32);
+        assert_eq!(pc.gpus(), 16);
+    }
+}

@@ -1,0 +1,112 @@
+//! Design-choice ablations (DESIGN.md §7) — beyond the paper's own
+//! figures, these quantify the executor/generator mechanisms this repo
+//! implements:
+//!
+//! - overlap-aware scheduling + receive hoisting on/off;
+//! - deadlock-repair pass (validity, not speed — repaired programs must
+//!   execute; unrepaired ones stall);
+//! - ZB-style B/W split vs fused backward;
+//! - placement granularity (virtual-stage chunks v = 1, 2, 4);
+//! - bottleneck-phase tuning vs exhaustive per-iteration move search.
+
+use std::fmt::Write as _;
+
+use super::Ctx;
+use crate::cluster::sim::run_timed;
+use crate::config::{Family, ModelCfg, ParallelCfg, Size};
+use crate::executor::lower::{check_rendezvous, lower, LowerOptions};
+use crate::generator::{generate, GenOptions};
+use crate::metrics::Table;
+use crate::model::build_model;
+use crate::partition::uniform;
+use crate::placement::{interleaved, sequential};
+use crate::perfmodel::simulate;
+use crate::profile::ProfiledData;
+use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
+
+pub fn ablations(ctx: &Ctx) -> String {
+    let mut out = String::from("## Ablations (design choices, DESIGN.md §7)\n\n");
+    let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 16, mbs: 1, seq: 4096 };
+    let cfg = ModelCfg::table5(Family::NemotronH, Size::Small);
+    let prof = ProfiledData::analytical(&build_model(&cfg), &ctx.hw, &par);
+    let part = uniform(prof.n_layers(), 4);
+    let plac = sequential(4);
+
+    // --- overlap-aware scheduling + hoisting --------------------------------
+    let mut t = Table::new(&["configuration", "makespan (ms)", "vs best"]);
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for (name, overlap, window) in [
+        ("serial comm, no hoist", false, 0usize),
+        ("overlap-aware, no hoist", true, 0),
+        ("overlap-aware, hoist w=3", true, 3),
+        ("overlap-aware, hoist w=16", true, 16),
+    ] {
+        let knobs = SchedKnobs { overlap_aware: overlap, ..SchedKnobs::default() };
+        let sch = greedy_schedule(&prof, &part, &plac, par.nmb, knobs);
+        let prog = lower(&sch, &plac, LowerOptions { repair_deadlocks: true, hoist_window: window });
+        let r = run_timed(&prof, &part, &prog, false).unwrap();
+        rows.push((name.to_string(), r.makespan));
+    }
+    let best = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    for (name, ms) in rows {
+        t.row(vec![name, format!("{:.2}", ms * 1e3), format!("{:+.1}%", 100.0 * (ms / best - 1.0))]);
+    }
+    let _ = write!(out, "### Communication overlap & receive hoisting\n\n{}\n", t.render());
+
+    // --- B/W split vs fused backward ---------------------------------------
+    let mut t = Table::new(&["backward", "makespan (ms)", "peak mem (GB)"]);
+    for (name, split) in [("fused B+W", false), ("split B/W (ZB)", true)] {
+        let knobs = SchedKnobs { split_bw: split, ..SchedKnobs::default() };
+        let sch = greedy_schedule(&prof, &part, &plac, par.nmb, knobs);
+        let r = simulate(&prof, &part, &plac, &sch, false).unwrap();
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", r.total * 1e3),
+            format!("{:.1}", r.m_d.iter().cloned().fold(0.0, f64::max) / 1e9),
+        ]);
+    }
+    let _ = write!(out, "### Backward splitting\n\n{}\n", t.render());
+
+    // --- placement granularity ----------------------------------------------
+    let mut t = Table::new(&["virtual stages/device", "makespan (ms)", "bubble"]);
+    for v in [1usize, 2, 4] {
+        let plac_v = if v == 1 { sequential(4) } else { interleaved(4, v) };
+        let part_v = crate::partition::balanced(&prof, plac_v.n_stages());
+        let sch = greedy_schedule(&prof, &part_v, &plac_v, par.nmb, SchedKnobs::default());
+        let r = simulate(&prof, &part_v, &plac_v, &sch, false).unwrap();
+        t.row(vec![
+            v.to_string(),
+            format!("{:.2}", r.total * 1e3),
+            format!("{:.1}%", 100.0 * r.bubble_ratio()),
+        ]);
+    }
+    let _ = write!(out, "### Placement granularity (grouped permutation depth)\n\n{}\n", t.render());
+
+    // --- deadlock repair -----------------------------------------------------
+    let sch = greedy_schedule(&prof, &part, &plac, par.nmb, SchedKnobs::default());
+    let unrepaired =
+        lower(&sch, &plac, LowerOptions { repair_deadlocks: false, hoist_window: 16 });
+    let repaired = lower(&sch, &plac, LowerOptions::default());
+    let _ = write!(
+        out,
+        "### Deadlock repair\n\nunrepaired program executes: {}; repaired: {}\n\n",
+        check_rendezvous(&unrepaired).is_ok(),
+        check_rendezvous(&repaired).is_ok()
+    );
+
+    // --- generator budget ----------------------------------------------------
+    let mut t = Table::new(&["max iters", "step time (ms)", "gen time", "evals"]);
+    for iters in [1usize, 4, 16, 64] {
+        let mut opts = GenOptions::new(par.p, par.nmb);
+        opts.max_iters = iters;
+        let g = generate(&prof, &opts);
+        t.row(vec![
+            iters.to_string(),
+            format!("{:.2}", g.report.total * 1e3),
+            crate::util::fmt_time(g.elapsed_s),
+            g.evals.to_string(),
+        ]);
+    }
+    let _ = write!(out, "### Generator tuning budget\n\n{}", t.render());
+    out
+}

@@ -1,0 +1,82 @@
+//! One harness per paper table/figure (DESIGN.md §5 experiment index).
+//!
+//! Each harness regenerates the rows/series of its figure from this
+//! repo's implementations and returns a markdown report; the CLI
+//! (`adaptis figures <id>`) prints it and optionally writes JSON +
+//! chrome traces to an output directory.
+
+pub mod ablations;
+pub mod analytic;
+pub mod fidelity;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::HardwareCfg;
+
+/// Harness context.
+#[derive(Clone, Debug)]
+pub struct Ctx {
+    pub hw: HardwareCfg,
+    /// Reduced sweeps for CI / smoke runs.
+    pub fast: bool,
+    /// Where to drop machine-readable outputs (traces, JSON).
+    pub out_dir: Option<PathBuf>,
+    /// Artifact root for the RealCluster figures (fig11/fig12).
+    pub artifacts: PathBuf,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx {
+            hw: HardwareCfg::default(),
+            fast: false,
+            out_dir: None,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+/// All figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig3", "fig4", "table5", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "fig14", "fig15", "ablations",
+];
+
+/// Run one harness by id ("all" runs everything).
+pub fn run_figure(id: &str, ctx: &Ctx) -> Result<String> {
+    match id {
+        "fig1" => Ok(analytic::fig1(ctx)),
+        "fig3" => Ok(analytic::fig3(ctx)),
+        "fig4" => Ok(analytic::fig4(ctx)),
+        "table5" => Ok(analytic::table5(ctx)),
+        "fig8" => Ok(analytic::fig8(ctx)),
+        "fig9" => Ok(analytic::fig9(ctx)),
+        "fig10" => Ok(analytic::fig10(ctx)),
+        "fig11" => fidelity::fig11(ctx),
+        "fig12" => fidelity::fig12(ctx),
+        "fig13" => Ok(analytic::fig13(ctx)),
+        "fig14" => Ok(analytic::fig14(ctx)),
+        "fig15" => Ok(analytic::fig15(ctx)),
+        "ablations" => Ok(ablations::ablations(ctx)),
+        "all" => {
+            let mut out = String::new();
+            for f in ALL {
+                out.push_str(&run_figure(f, ctx)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        _ => Err(anyhow!("unknown figure {id:?}; known: {ALL:?} or 'all'")),
+    }
+}
+
+/// Write a side artifact if an output dir was requested.
+pub fn write_artifact(ctx: &Ctx, name: &str, contents: &str) -> Result<()> {
+    if let Some(dir) = &ctx.out_dir {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(name), contents)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,555 @@
+//! Pipeline Generator (paper §4.3): co-optimizes model partition,
+//! model placement and workload scheduling, guided by the Pipeline
+//! Performance Model.
+//!
+//! Search structure (Fig 6):
+//! 1. **Seed selection** — evaluate a small grid of representative
+//!    baselines (partition ∈ {uniform/S-1F1B, balanced/Mist} ×
+//!    placement ∈ {sequential, interleaved, wave} × scheduling knobs ∈
+//!    {1F1B-like, ZB-like}) and keep the best.
+//! 2. **Bottleneck-phase tuning** — per iteration, try the tuning move
+//!    of each enabled phase (most-blamed phase first), keep the best
+//!    improving move, roll back the rest.  Moves:
+//!    - *partition*: single-boundary layer shifts, steered toward
+//!      moving work from the lowest-bubble device to the highest
+//!      (§4.3 Model Partition Tuning);
+//!    - *placement*: grouped permutation — refine every stage into
+//!      finer sub-stages spread round-robin across devices (more
+//!      effective stages, §4.3 Model Placement Tuning) plus pairwise
+//!      stage-device swaps;
+//!    - *scheduling*: knob search over B/W split, W-fill, overlap
+//!      awareness and the memory-cap factor (§4.3 Workload Scheduling
+//!      Tuning; the OOM-repair path lowers `mem_cap_factor`).
+//! 3. Stop when no phase improves (or `max_iters`).
+//!
+//! The phase-by-phase loop with rollback avoids the combinatorial
+//! explosion of joint search (Fig 4) while still escaping the
+//! single-phase local optima the paper shows for partially adaptive
+//! methods (Fig 10).
+
+pub mod searchspace;
+
+use std::time::Instant;
+
+use crate::baselines::Pipeline;
+use crate::partition::{balanced, uniform, Partition};
+use crate::placement::{interleaved, sequential, wave, Placement};
+use crate::perfmodel::{simulate, PerfReport};
+use crate::profile::ProfiledData;
+use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
+
+/// Which phases the generator may tune (Fig 10 ablation masks).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseMask {
+    pub partition: bool,
+    pub placement: bool,
+    pub schedule: bool,
+}
+
+impl PhaseMask {
+    pub fn all() -> Self {
+        PhaseMask { partition: true, placement: true, schedule: true }
+    }
+
+    pub fn none() -> Self {
+        PhaseMask { partition: false, placement: false, schedule: false }
+    }
+}
+
+/// Generator options.
+#[derive(Clone, Debug)]
+pub struct GenOptions {
+    pub nmb: usize,
+    pub p: usize,
+    pub max_iters: usize,
+    pub phases: PhaseMask,
+    /// Restrict seeds to the plain S-1F1B start (used by the Fig 10
+    /// ablation so single-phase runs start from the static pipeline).
+    pub seed_s1f1b_only: bool,
+    /// Maximum virtual stages per device explored by placement moves.
+    pub max_chunks: usize,
+}
+
+impl GenOptions {
+    pub fn new(p: usize, nmb: usize) -> Self {
+        GenOptions {
+            nmb,
+            p,
+            max_iters: 64,
+            phases: PhaseMask::all(),
+            seed_s1f1b_only: false,
+            max_chunks: 4,
+        }
+    }
+}
+
+/// One entry of the tuning log (drives the Fig 3 storyline).
+#[derive(Clone, Debug)]
+pub struct GenLogEntry {
+    pub iter: usize,
+    pub phase: &'static str,
+    pub action: String,
+    pub total: f64,
+}
+
+/// Generator output.
+pub struct GenResult {
+    pub pipeline: Pipeline,
+    pub report: PerfReport,
+    pub knobs: SchedKnobs,
+    pub iters: usize,
+    pub evals: usize,
+    pub elapsed_s: f64,
+    pub log: Vec<GenLogEntry>,
+}
+
+/// Candidate = (partition, placement, knobs); schedules are derived.
+#[derive(Clone)]
+struct Cand {
+    part: Partition,
+    plac: Placement,
+    knobs: SchedKnobs,
+}
+
+struct Evaluator<'a> {
+    profile: &'a ProfiledData,
+    nmb: usize,
+    evals: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    /// Build the schedule and simulate; returns (score, report).
+    /// OOM candidates score +inf (constraint Eq. 2).
+    fn eval(&mut self, c: &Cand) -> (f64, Option<PerfReport>) {
+        self.evals += 1;
+        let sch = greedy_schedule(self.profile, &c.part, &c.plac, self.nmb, c.knobs);
+        match simulate(self.profile, &c.part, &c.plac, &sch, false) {
+            Ok(r) if !r.oom => (r.total, Some(r)),
+            Ok(r) => (f64::INFINITY, Some(r)),
+            Err(_) => (f64::INFINITY, None),
+        }
+    }
+}
+
+/// Run the Pipeline Generator.
+pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
+    let t0 = Instant::now();
+    let n_layers = profile.n_layers();
+    let p = opts.p;
+    let mut ev = Evaluator { profile, nmb: opts.nmb, evals: 0 };
+    let mut log = Vec::new();
+
+    // ---- Seed selection --------------------------------------------------
+    let knobs_1f1b = SchedKnobs {
+        split_bw: false,
+        w_fill: false,
+        mem_cap_factor: 1.0,
+        overlap_aware: false,
+    };
+    let knobs_zb = SchedKnobs {
+        split_bw: true,
+        w_fill: true,
+        mem_cap_factor: 1.0,
+        overlap_aware: false,
+    };
+    let mut seeds: Vec<Cand> = Vec::new();
+    if opts.seed_s1f1b_only {
+        seeds.push(Cand {
+            part: uniform(n_layers, p),
+            plac: sequential(p),
+            knobs: knobs_1f1b,
+        });
+    } else {
+        let parts: Vec<Partition> = vec![uniform(n_layers, p), balanced(profile, p)];
+        for part_seed in &parts {
+            for plac in [sequential(p), interleaved(p, 2), wave(p, 2)] {
+                let s_n = plac.n_stages();
+                let part = if s_n == part_seed.n_stages() {
+                    part_seed.clone()
+                } else {
+                    let refined = refine_partition(profile, part_seed, s_n / p);
+                    if refined.n_stages() == s_n {
+                        refined
+                    } else {
+                        // A 1-layer stage could not split; re-balance
+                        // globally for the finer stage count.
+                        balanced(profile, s_n)
+                    }
+                };
+                for knobs in [knobs_1f1b, knobs_zb] {
+                    seeds.push(Cand { part: part.clone(), plac: plac.clone(), knobs });
+                }
+            }
+        }
+    }
+
+    let mut best: Option<(f64, Cand)> = None;
+    for c in seeds {
+        let (score, _) = ev.eval(&c);
+        if best.as_ref().map_or(true, |(b, _)| score < *b) {
+            best = Some((score, c));
+        }
+    }
+    let (mut best_score, mut cur) = best.unwrap();
+    log.push(GenLogEntry {
+        iter: 0,
+        phase: "seed",
+        action: format!(
+            "S={} v={} split={} seed selected",
+            cur.part.n_stages(),
+            cur.plac.n_stages() / p,
+            cur.knobs.split_bw
+        ),
+        total: best_score,
+    });
+
+    // ---- Bottleneck-phase tuning loop ------------------------------------
+    let mut iter = 0;
+    while iter < opts.max_iters {
+        iter += 1;
+        let mut improved = false;
+
+        // Phase order: blame the phase with the strongest signal first.
+        for phase in phase_order(&mut ev, &cur, opts) {
+            let moves: Vec<(String, Cand)> = match phase {
+                "partition" => partition_moves(&mut ev, profile, &cur),
+                "placement" => placement_moves(profile, &cur, opts),
+                "schedule" => schedule_moves(&cur),
+                _ => unreachable!(),
+            };
+            let mut best_move: Option<(f64, String, Cand)> = None;
+            for (desc, cand) in moves {
+                let (score, _) = ev.eval(&cand);
+                if score < best_score - 1e-12
+                    && best_move.as_ref().map_or(true, |(b, _, _)| score < *b)
+                {
+                    best_move = Some((score, desc, cand));
+                }
+            }
+            if let Some((score, desc, cand)) = best_move {
+                best_score = score;
+                cur = cand;
+                log.push(GenLogEntry { iter, phase, action: desc, total: score });
+                improved = true;
+                break; // re-assess bottleneck from the new pipeline
+            }
+            // else: roll back (nothing kept) and try the next phase.
+        }
+
+        if !improved {
+            break;
+        }
+    }
+
+    // Final artifacts.
+    let schedule = greedy_schedule(profile, &cur.part, &cur.plac, opts.nmb, cur.knobs);
+    let report = simulate(profile, &cur.part, &cur.plac, &schedule, false)
+        .expect("final pipeline must simulate");
+    GenResult {
+        pipeline: Pipeline {
+            name: "AdaPtis".into(),
+            partition: cur.part,
+            placement: cur.plac,
+            schedule,
+        },
+        report,
+        knobs: cur.knobs,
+        iters: iter,
+        evals: ev.evals,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        log,
+    }
+}
+
+/// Decide phase attempt order from bottleneck signals (paper: "identify
+/// the bottleneck phase … and tune it accordingly").
+fn phase_order(ev: &mut Evaluator, cur: &Cand, opts: &GenOptions) -> Vec<&'static str> {
+    let (_, report) = ev.eval(cur);
+    let mut order: Vec<(&'static str, f64)> = Vec::new();
+    if let Some(r) = report {
+        let max_busy = r.busy_d.iter().cloned().fold(0.0, f64::max);
+        let min_busy = r.busy_d.iter().cloned().fold(f64::INFINITY, f64::min);
+        let imbalance = (max_busy - min_busy) / r.total.max(1e-12);
+        let bubble = r.bubble_ratio();
+        if opts.phases.partition {
+            order.push(("partition", imbalance));
+        }
+        if opts.phases.placement {
+            // Placement helps when bubbles persist despite balance —
+            // blame it by the residual bubble.
+            order.push(("placement", (bubble - imbalance).max(0.0)));
+        }
+        if opts.phases.schedule {
+            order.push(("schedule", bubble * 0.5));
+        }
+    }
+    order.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    order.into_iter().map(|(n, _)| n).collect()
+}
+
+/// Partition tuning moves: all single-boundary shifts, plus a steered
+/// multi-shift that moves one layer from the lowest-bubble device
+/// toward the highest-bubble device (§4.3).
+fn partition_moves(
+    ev: &mut Evaluator,
+    profile: &ProfiledData,
+    cur: &Cand,
+) -> Vec<(String, Cand)> {
+    let mut out = Vec::new();
+    let s_n = cur.part.n_stages();
+    for b in 0..s_n - 1 {
+        for dir in [true, false] {
+            let mut part = cur.part.clone();
+            if part.shift_boundary(b, dir) {
+                out.push((
+                    format!("shift boundary {b} {}", if dir { "←" } else { "→" }),
+                    Cand { part, plac: cur.plac.clone(), knobs: cur.knobs },
+                ));
+            }
+        }
+    }
+    // Steered flow: overloaded (low-bubble) device donates a layer to
+    // the starved (high-bubble) device through the chain of boundaries.
+    if let (_, Some(r)) = ev.eval(cur) {
+        let donor = argmin(&r.bubble_d);
+        let recv = argmax(&r.bubble_d);
+        if donor != recv {
+            let sd = cur.plac.stages_of(donor);
+            let sr = cur.plac.stages_of(recv);
+            if let (Some(&a), Some(&b)) = (sd.first(), sr.first()) {
+                let (lo, hi, dir) = if a < b { (a, b, false) } else { (b, a, true) };
+                let mut part = cur.part.clone();
+                let mut ok = true;
+                for k in lo..hi {
+                    ok &= part.shift_boundary(k, dir);
+                }
+                if ok && part.is_valid() {
+                    out.push((
+                        format!("flow layer dev{donor}→dev{recv}"),
+                        Cand { part, plac: cur.plac.clone(), knobs: cur.knobs },
+                    ));
+                }
+            }
+        }
+        let _ = profile;
+    }
+    out
+}
+
+/// Placement tuning moves: grouped permutations (finer interleaving /
+/// wave layouts) and pairwise stage swaps.
+fn placement_moves(
+    profile: &ProfiledData,
+    cur: &Cand,
+    opts: &GenOptions,
+) -> Vec<(String, Cand)> {
+    let p = cur.plac.p;
+    let n_layers = profile.n_layers();
+    let mut out = Vec::new();
+    for v in 1..=opts.max_chunks {
+        if p * v > n_layers {
+            break;
+        }
+        for (name, plac) in [("interleave", interleaved(p, v)), ("wave", wave(p, v))] {
+            if plac.device_of == cur.plac.device_of {
+                continue;
+            }
+            let part = repartition_for(profile, p * v);
+            out.push((format!("{name} v={v}"), Cand { part, plac, knobs: cur.knobs }));
+            if v == 1 {
+                break; // wave(p,1) == interleaved(p,1) == sequential
+            }
+        }
+    }
+    // Pairwise device swaps between consecutive stages.
+    let s_n = cur.plac.n_stages();
+    for s in 0..s_n.saturating_sub(1) {
+        if cur.plac.device_of[s] != cur.plac.device_of[s + 1] {
+            let mut plac = cur.plac.clone();
+            plac.swap_stages(s, s + 1);
+            if plac.is_valid() {
+                out.push((
+                    format!("swap stages {s},{}", s + 1),
+                    Cand { part: cur.part.clone(), plac, knobs: cur.knobs },
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Scheduling tuning moves: knob grid around the current setting.
+fn schedule_moves(cur: &Cand) -> Vec<(String, Cand)> {
+    let k0 = cur.knobs;
+    let variants = [
+        ("split B/W", SchedKnobs { split_bw: !k0.split_bw, ..k0 }),
+        ("toggle W-fill", SchedKnobs { w_fill: !k0.w_fill, ..k0 }),
+        ("toggle overlap", SchedKnobs { overlap_aware: !k0.overlap_aware, ..k0 }),
+        ("tighten memory", SchedKnobs { mem_cap_factor: k0.mem_cap_factor * 0.75, ..k0 }),
+        (
+            "relax memory",
+            SchedKnobs { mem_cap_factor: (k0.mem_cap_factor * 1.25).min(1.0), ..k0 },
+        ),
+        (
+            "zb-full",
+            SchedKnobs {
+                split_bw: true,
+                w_fill: true,
+                overlap_aware: true,
+                mem_cap_factor: k0.mem_cap_factor,
+            },
+        ),
+    ];
+    variants
+        .into_iter()
+        .map(|(name, knobs)| {
+            (
+                name.to_string(),
+                Cand { part: cur.part.clone(), plac: cur.plac.clone(), knobs },
+            )
+        })
+        .collect()
+}
+
+/// Split each stage of `part` into `g` compute-balanced sub-stages.
+fn refine_partition(profile: &ProfiledData, part: &Partition, g: usize) -> Partition {
+    if g <= 1 {
+        return part.clone();
+    }
+    let mut sizes = Vec::new();
+    for s in 0..part.n_stages() {
+        let range = part.stage_range(s);
+        let sub = balanced_range(profile, range.clone(), g.min(range.len()));
+        sizes.extend(sub);
+    }
+    Partition::from_sizes(&sizes)
+}
+
+/// Re-balance the whole model into `s_n` stages (used when a placement
+/// move changes the stage count).
+fn repartition_for(profile: &ProfiledData, s_n: usize) -> Partition {
+    balanced(profile, s_n)
+}
+
+/// Balance `range` into `g` contiguous chunks by fused compute weight.
+fn balanced_range(
+    profile: &ProfiledData,
+    range: std::ops::Range<usize>,
+    g: usize,
+) -> Vec<usize> {
+    let n = range.len();
+    assert!(g >= 1 && g <= n);
+    let w: Vec<f64> = range
+        .clone()
+        .map(|l| {
+            let c = &profile.layers[l];
+            c.f + c.b + c.w
+        })
+        .collect();
+    let mut prefix = vec![0.0; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + w[i];
+    }
+    let total = prefix[n];
+    // Cut after the layer where the prefix first reaches i/g of the
+    // total, keeping each chunk non-empty and leaving room for the rest.
+    let mut cuts = vec![0usize];
+    for i in 1..g {
+        let target = total * i as f64 / g as f64;
+        let lo = cuts[i - 1] + 1; // ≥1 layer per chunk
+        let hi = n - (g - i); // leave ≥1 layer per remaining chunk
+        let mut c = lo;
+        while c < hi && prefix[c] < target {
+            c += 1;
+        }
+        cuts.push(c.clamp(lo, hi));
+    }
+    cuts.push(n);
+    cuts.windows(2).map(|wd| wd[1] - wd[0]).collect()
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{build, Method};
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+
+    fn profile(fam: Family, p: usize, nmb: usize) -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(fam, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(p, 2, nmb, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn beats_all_baselines_on_heterogeneous_models() {
+        for fam in [Family::Gemma, Family::DeepSeek, Family::NemotronH] {
+            let prof = profile(fam, 4, 16);
+            let res = generate(&prof, &GenOptions::new(4, 16));
+            res.pipeline.schedule.validate(&res.pipeline.placement).unwrap();
+            for m in Method::paper_baselines() {
+                let b = build(m, &prof, 4, 16);
+                let rb = simulate(&prof, &b.partition, &b.placement, &b.schedule, false)
+                    .unwrap();
+                assert!(
+                    res.report.total <= rb.total * 1.001,
+                    "{fam:?}: AdaPtis {:.4} !<= {} {:.4}",
+                    res.report.total,
+                    m.name(),
+                    rb.total
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn respects_phase_masks() {
+        let prof = profile(Family::Gemma, 4, 8);
+        let mut opts = GenOptions::new(4, 8);
+        opts.phases = PhaseMask { partition: false, placement: false, schedule: true };
+        opts.seed_s1f1b_only = true;
+        let res = generate(&prof, &opts);
+        // Partition must remain the uniform seed.
+        assert_eq!(res.pipeline.partition, uniform(prof.n_layers(), 4));
+        assert_eq!(res.pipeline.placement, sequential(4));
+    }
+
+    #[test]
+    fn log_is_monotone_improving() {
+        let prof = profile(Family::NemotronH, 4, 16);
+        let res = generate(&prof, &GenOptions::new(4, 16));
+        for w in res.log.windows(2) {
+            assert!(w[1].total <= w[0].total + 1e-12);
+        }
+        assert!(res.evals > 0 && res.elapsed_s >= 0.0);
+    }
+
+    #[test]
+    fn refine_partition_preserves_layers() {
+        let prof = profile(Family::Gemma, 4, 8);
+        let part = uniform(prof.n_layers(), 4);
+        let fine = refine_partition(&prof, &part, 2);
+        assert_eq!(fine.n_layers(), part.n_layers());
+        assert_eq!(fine.n_stages(), 8);
+        assert!(fine.is_valid());
+    }
+}

@@ -1,0 +1,71 @@
+//! Search-space size accounting (paper Fig 4): how many distinct model
+//! partitions, model placements and workload schedules exist — the
+//! combinatorial explosion motivating phase-by-phase tuning.
+//!
+//! All counts are returned as log10 (the raw numbers overflow u128
+//! quickly, and the paper plots them on a log axis anyway).
+
+/// log10 of C(n, k).
+pub fn log10_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    let k = k.min(n - k);
+    let mut acc = 0.0f64;
+    for i in 0..k {
+        acc += ((n - i) as f64).log10() - ((i + 1) as f64).log10();
+    }
+    acc
+}
+
+/// log10 of n!.
+pub fn log10_factorial(n: u64) -> f64 {
+    (1..=n).map(|i| (i as f64).log10()).sum()
+}
+
+/// Number of model partitions: choose S-1 cut points among L-1 gaps.
+pub fn log10_partitions(layers: u64, stages: u64) -> f64 {
+    log10_choose(layers - 1, stages - 1)
+}
+
+/// Number of model placements: surjections of S stages onto P devices
+/// ≈ P^S (upper bound the paper plots); exact would subtract
+/// non-covering maps — negligible on a log axis for S ≫ P.
+pub fn log10_placements(stages: u64, devices: u64) -> f64 {
+    stages as f64 * (devices as f64).log10()
+}
+
+/// Number of workload schedules: per device, interleavings of its
+/// F/B/W slots.  Lower bound: multinomial orderings of nmb·3 ops per
+/// device across P devices ≈ ((3·nmb)!)^P — we report per-device
+/// log10((3 nmb)!) · P.
+pub fn log10_schedules(nmb: u64, devices: u64) -> f64 {
+    log10_factorial(3 * nmb) * devices as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_matches_small_cases() {
+        assert!((log10_choose(5, 2) - (10f64).log10()).abs() < 1e-12);
+        assert!((log10_choose(10, 0) - 0.0).abs() < 1e-12);
+        assert_eq!(log10_choose(3, 5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn factorial_matches() {
+        assert!((log10_factorial(5) - 120f64.log10()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn growth_is_explosive() {
+        // Fig 4's qualitative claim: schedules ≫ placements ≫ partitions.
+        let parts = log10_partitions(66, 8);
+        let places = log10_placements(16, 8);
+        let scheds = log10_schedules(64, 8);
+        assert!(parts < places && places < scheds);
+        assert!(scheds > 100.0); // astronomically large
+    }
+}

@@ -1,0 +1,44 @@
+//! # AdaPtis — adaptive pipeline parallelism for heterogeneous LLMs
+//!
+//! Rust + JAX + Pallas reproduction of *AdaPtis: Reducing Pipeline
+//! Bubbles with Adaptive Pipeline Parallelism on Heterogeneous Models*
+//! (cs.DC 2025).  See DESIGN.md for the architecture and the paper →
+//! repo substitution table.
+//!
+//! The crate is the Layer-3 coordinator: it owns model partition,
+//! model placement and workload scheduling (the paper's three phases),
+//! the Pipeline Performance Model, the Pipeline Generator and the
+//! unified Pipeline Executor.  Compute executes via AOT-compiled XLA
+//! artifacts (Layer 2 JAX graphs embedding Layer-1 Pallas kernels)
+//! loaded through the PJRT C API — python never runs at training time.
+//!
+//! Quick tour:
+//! - [`config`]: model families (paper Table 5), parallelism, hardware;
+//! - [`model`]: layer taxonomy + analytical cost model;
+//! - [`profile`]: profiled per-layer data (analytical or measured);
+//! - [`partition`], [`placement`], [`schedule`]: the three phases;
+//! - [`perfmodel`]: Algorithm 1 — the Pipeline Performance Model;
+//! - [`generator`]: §4.3 co-optimization loop;
+//! - [`executor`]: §4.4 instruction lowering + comm passes;
+//! - [`cluster`]: simulated + real (threads & PJRT) clusters;
+//! - [`runtime`]: PJRT artifact loading/execution;
+//! - [`trainer`]: end-to-end pipeline training;
+//! - [`figures`]: one harness per paper table/figure.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod executor;
+pub mod figures;
+pub mod generator;
+pub mod ilp;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod perfmodel;
+pub mod placement;
+pub mod profile;
+pub mod runtime;
+pub mod schedule;
+pub mod trainer;
+pub mod util;

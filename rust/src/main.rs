@@ -1,0 +1,328 @@
+//! AdaPtis launcher — the Layer-3 command-line entry point.
+//!
+//! Subcommands:
+//!   figures <id|all> [--fast] [--out DIR] [--artifacts DIR]
+//!       regenerate a paper table/figure (see DESIGN.md §5)
+//!   generate --model <fam> --size <sz> --p N --nmb N [--t N] [--seq N]
+//!       run the Pipeline Generator and print the co-optimized pipeline
+//!   simulate --method <m> --model <fam> --size <sz> --p N --nmb N
+//!       evaluate one named pipeline under the performance model
+//!   train --tag <micro|fidelity|e2e100m> --p N --nmb N --steps N
+//!         [--method <m|adaptis>] [--lr F] [--trace FILE]
+//!       real pipeline training over PJRT artifacts (RealCluster)
+//!
+//! Flags are `--key value` pairs; defaults are printed in --help.
+
+use std::collections::BTreeMap;
+
+use adaptis::baselines::{self, Method};
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::figures::{run_figure, Ctx};
+use adaptis::generator::{generate, GenOptions};
+use adaptis::model::build_model;
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+use adaptis::runtime::ArtifactStore;
+use adaptis::trainer::{self, train, TrainMethod, TrainOptions};
+use adaptis::util::trace::{ascii_timeline, to_chrome_trace};
+use adaptis::util::{fmt_si, fmt_time};
+
+const HELP: &str = "\
+AdaPtis — adaptive pipeline parallelism for heterogeneous LLMs
+
+USAGE: adaptis <subcommand> [--key value]...
+
+SUBCOMMANDS
+  figures <id|all>   regenerate paper figures/tables (fig1 fig3 fig4
+                     table5 fig8 fig9 fig10 fig11 fig12 fig13 fig14 fig15)
+                     flags: --fast --out DIR --artifacts DIR
+  generate           co-optimize a pipeline and print it
+                     flags: --model gemma|deepseek|nemotron|llama2
+                            --size small|medium|large --p N --nmb N
+                            --t N --seq N --iters N
+  simulate           evaluate a named method under the performance model
+                     flags: same as generate plus --method gpipe|s1f1b|
+                            i1f1b|zb|mist|adaptis  --trace FILE
+  train              real pipeline training over PJRT artifacts
+                     flags: --tag micro|fidelity|e2e100m --p N --nmb N
+                            --steps N --lr F --seed N
+                            --method s1f1b|...|adaptis --trace FILE
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "-h" {
+        print!("{HELP}");
+        return;
+    }
+    let sub = args[0].clone();
+    let (positional, flags) = parse_flags(&args[1..]);
+    let r = match sub.as_str() {
+        "figures" => cmd_figures(&positional, &flags),
+        "generate" => cmd_generate(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "train" => cmd_train(&flags),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+        } else {
+            pos.push(args[i].clone());
+        }
+        i += 1;
+    }
+    (pos, flags)
+}
+
+fn flag<'a>(flags: &'a BTreeMap<String, String>, k: &str, default: &'a str) -> &'a str {
+    flags.get(k).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn flag_usize(flags: &BTreeMap<String, String>, k: &str, default: usize) -> usize {
+    flags.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn parse_family(s: &str) -> anyhow::Result<Family> {
+    Ok(match s.to_lowercase().as_str() {
+        "gemma" => Family::Gemma,
+        "deepseek" => Family::DeepSeek,
+        "nemotron" | "nemotron-h" | "nemotronh" => Family::NemotronH,
+        "llama2" | "llama-2" | "llama" => Family::Llama2,
+        _ => anyhow::bail!("unknown model family {s:?}"),
+    })
+}
+
+fn parse_size(s: &str) -> anyhow::Result<Size> {
+    Ok(match s.to_lowercase().as_str() {
+        "small" | "s" => Size::Small,
+        "medium" | "m" => Size::Medium,
+        "large" | "l" => Size::Large,
+        _ => anyhow::bail!("unknown size {s:?}"),
+    })
+}
+
+fn parse_method(s: &str) -> anyhow::Result<Option<Method>> {
+    Ok(match s.to_lowercase().as_str() {
+        "gpipe" => Some(Method::GPipe),
+        "s1f1b" | "s-1f1b" | "1f1b" => Some(Method::S1F1B),
+        "i1f1b" | "i-1f1b" => Some(Method::I1F1B),
+        "zb" | "zb-h1" => Some(Method::ZB),
+        "mist" => Some(Method::Mist),
+        "hanayo" => Some(Method::Hanayo),
+        "adaptis" => None,
+        _ => anyhow::bail!("unknown method {s:?}"),
+    })
+}
+
+fn setup(
+    flags: &BTreeMap<String, String>,
+) -> anyhow::Result<(ModelCfg, ParallelCfg, ProfiledData)> {
+    let family = parse_family(flag(flags, "model", "gemma"))?;
+    let size = parse_size(flag(flags, "size", "small"))?;
+    let cfg = ModelCfg::table5(family, size);
+    let par = ParallelCfg {
+        p: flag_usize(flags, "p", 4),
+        t: flag_usize(flags, "t", 2),
+        d: flag_usize(flags, "d", 1),
+        e: 1,
+        nmb: flag_usize(flags, "nmb", 16),
+        mbs: 1,
+        seq: flag_usize(flags, "seq", 4096),
+    };
+    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+    Ok((cfg, par, prof))
+}
+
+fn cmd_figures(
+    positional: &[String],
+    flags: &BTreeMap<String, String>,
+) -> anyhow::Result<()> {
+    let id = positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let ctx = Ctx {
+        hw: HardwareCfg::default(),
+        fast: flags.contains_key("fast"),
+        out_dir: flags.get("out").map(std::path::PathBuf::from),
+        artifacts: std::path::PathBuf::from(flag(flags, "artifacts", "artifacts")),
+    };
+    let report = run_figure(id, &ctx)?;
+    println!("{report}");
+    if let Some(dir) = &ctx.out_dir {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{id}.md")), &report)?;
+        eprintln!("wrote {}/{id}.md", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let (cfg, par, prof) = setup(flags)?;
+    let mut opts = GenOptions::new(par.p, par.nmb);
+    opts.max_iters = flag_usize(flags, "iters", 48);
+    let res = generate(&prof, &opts);
+    println!(
+        "model: {} | layers: {} | P={} T={} nmb={} seq={}",
+        cfg.label(),
+        prof.n_layers(),
+        par.p,
+        par.t,
+        par.nmb,
+        par.seq
+    );
+    println!("— tuning log —");
+    for e in &res.log {
+        println!(
+            "  iter {:>3} [{:>9}] {:<28} -> {}",
+            e.iter,
+            e.phase,
+            e.action,
+            fmt_time(e.total)
+        );
+    }
+    println!("— result —");
+    println!("  stages: {:?}", res.pipeline.partition.bounds);
+    println!("  placement: {:?}", res.pipeline.placement.device_of);
+    println!(
+        "  knobs: split_bw={} w_fill={} overlap={} mem_cap={:.2}",
+        res.knobs.split_bw,
+        res.knobs.w_fill,
+        res.knobs.overlap_aware,
+        res.knobs.mem_cap_factor
+    );
+    println!(
+        "  step time {} | bubble ratio {:.1}% | gen {} ({} evals, {} iters)",
+        fmt_time(res.report.total),
+        100.0 * res.report.bubble_ratio(),
+        fmt_time(res.elapsed_s),
+        res.evals,
+        res.iters
+    );
+    let r = simulate(
+        &prof,
+        &res.pipeline.partition,
+        &res.pipeline.placement,
+        &res.pipeline.schedule,
+        true,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{}", ascii_timeline(&r.events, par.p, 120));
+    Ok(())
+}
+
+fn cmd_simulate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let (cfg, par, prof) = setup(flags)?;
+    let method = parse_method(flag(flags, "method", "s1f1b"))?;
+    let (name, report, pipeline) = match method {
+        Some(m) => {
+            let pl = baselines::build(m, &prof, par.p, par.nmb);
+            let r = simulate(&prof, &pl.partition, &pl.placement, &pl.schedule, true)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            (m.name().to_string(), r, pl)
+        }
+        None => {
+            let res = generate(&prof, &GenOptions::new(par.p, par.nmb));
+            let r = simulate(
+                &prof,
+                &res.pipeline.partition,
+                &res.pipeline.placement,
+                &res.pipeline.schedule,
+                true,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            ("AdaPtis".to_string(), r, res.pipeline)
+        }
+    };
+    println!(
+        "{name} on {} | P={} nmb={} seq={}",
+        cfg.label(),
+        par.p,
+        par.nmb,
+        par.seq
+    );
+    println!(
+        "step {} | bubble {:.1}% | peak mem {} | tput {} tok/s{}",
+        fmt_time(report.total),
+        100.0 * report.bubble_ratio(),
+        fmt_si(report.m_d.iter().cloned().fold(0.0, f64::max)),
+        fmt_si(report.throughput((par.nmb * par.tokens()) as f64)),
+        if report.oom { "  [OOM!]" } else { "" }
+    );
+    println!("partition: {:?}", pipeline.partition.bounds);
+    println!("{}", ascii_timeline(&report.events, par.p, 120));
+    if let Some(path) = flags.get("trace") {
+        std::fs::write(path, to_chrome_trace(&report.events))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let tag = flag(flags, "tag", "micro");
+    let dir = std::path::Path::new(flag(flags, "artifacts", "artifacts")).join(tag);
+    let store = std::sync::Arc::new(ArtifactStore::open(&dir)?);
+    let kinds = trainer::demo_model(tag);
+    let method = match parse_method(flag(flags, "method", "adaptis"))? {
+        Some(m) => TrainMethod::Baseline(m),
+        None => TrainMethod::AdaPtis,
+    };
+    let opts = TrainOptions {
+        p: flag_usize(flags, "p", 2),
+        nmb: flag_usize(flags, "nmb", 4),
+        steps: flag_usize(flags, "steps", 20),
+        lr: flags.get("lr").and_then(|s| s.parse().ok()).unwrap_or(0.1),
+        seed: flag_usize(flags, "seed", 0) as u64,
+        method,
+        collect_trace: flags.contains_key("trace"),
+        live_log: true,
+    };
+    let n_params: usize = kinds
+        .iter()
+        .map(|k| store.meta.param_counts.get(k.name()).copied().unwrap_or(0))
+        .sum();
+    println!(
+        "training {} ({} layers, {} params) on tag {tag} | P={} nmb={} steps={}",
+        opts.method.name(),
+        kinds.len(),
+        fmt_si(n_params as f64),
+        opts.p,
+        opts.nmb,
+        opts.steps
+    );
+    let r = train(store, &kinds, &opts)?;
+    println!("pipeline: {}", r.pipeline_name);
+    println!("partition: {:?}", r.pipeline.partition.bounds);
+    for (i, (loss, t)) in r.losses.iter().zip(&r.step_times).enumerate() {
+        println!("step {i:>4}  loss {loss:.4}  ({})", fmt_time(*t));
+    }
+    println!(
+        "throughput: {} tokens/s ({} tokens/step)",
+        fmt_si(r.tokens_per_s()),
+        r.tokens_per_step
+    );
+    if let Some(path) = flags.get("trace") {
+        if path != "true" {
+            std::fs::write(path, to_chrome_trace(&r.trace))?;
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}

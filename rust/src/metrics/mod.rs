@@ -1,0 +1,138 @@
+//! Experiment metrics: throughput accounting (with data-parallel
+//! gradient synchronisation), bubble ratios, scaling efficiency, and a
+//! tiny fixed-width table formatter shared by the figure harnesses.
+
+use crate::config::{HardwareCfg, ParallelCfg};
+use crate::perfmodel::PerfReport;
+
+/// Tokens/second of the whole cluster for one simulated pipeline step:
+/// `d` data-parallel replicas each process `nmb·tokens` per step, and
+/// every step pays a gradient all-reduce over the largest per-device
+/// parameter shard (ring over the DP group, IB bandwidth).
+pub fn cluster_throughput(report: &PerfReport, par: &ParallelCfg, hw: &HardwareCfg) -> f64 {
+    let tokens = (par.nmb * par.tokens() * par.d) as f64;
+    tokens / step_time(report, par, hw)
+}
+
+/// Step wall time: pipeline makespan + DP all-reduce of gradients.
+pub fn step_time(report: &PerfReport, par: &ParallelCfg, hw: &HardwareCfg) -> f64 {
+    report.total + dp_sync_time(report, par, hw)
+}
+
+/// Ring all-reduce of the largest per-device gradient shard across the
+/// DP group: `2(d−1)/d · bytes / bw`.
+pub fn dp_sync_time(report: &PerfReport, par: &ParallelCfg, hw: &HardwareCfg) -> f64 {
+    if par.d <= 1 {
+        return 0.0;
+    }
+    // static_d = params+grads+opt = 4× params; grads = 1× params.
+    let max_grad_bytes =
+        report.static_d.iter().cloned().fold(0.0, f64::max) / 4.0;
+    2.0 * (par.d as f64 - 1.0) / par.d as f64 * max_grad_bytes / hw.link_bw
+}
+
+/// Scaling efficiency vs a reference point (paper §5.7):
+/// `(tput / tput_ref)` expressed in percent.
+pub fn scaling_pct(tput: f64, tput_ref: f64) -> f64 {
+    100.0 * tput / tput_ref.max(1e-12)
+}
+
+/// Fixed-width markdown-ish table builder for figure harness output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for c in 0..ncol {
+            w[c] = self.header[c].chars().count();
+            for r in &self.rows {
+                w[c] = w[c].max(r[c].chars().count());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push(' ');
+                s.push_str(cell);
+                for _ in cell.chars().count()..w[c] {
+                    s.push(' ');
+                }
+                s.push_str(" |");
+            }
+            s
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        let sep: Vec<String> = w.iter().map(|&n| "-".repeat(n)).collect();
+        out.push_str(&line(&sep));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_report(total: f64, static_d: Vec<f64>) -> PerfReport {
+        let p = static_d.len();
+        PerfReport {
+            total,
+            t_d: vec![total; p],
+            busy_d: vec![total; p],
+            bubble_d: vec![0.0; p],
+            overlap_d: vec![0.0; p],
+            comm_block_d: vec![0.0; p],
+            m_d: static_d.clone(),
+            static_d,
+            oom: false,
+            events: vec![],
+        }
+    }
+
+    #[test]
+    fn dp_sync_zero_for_single_replica() {
+        let r = fake_report(1.0, vec![4e9, 4e9]);
+        let par = ParallelCfg::new(2, 1, 4, 1, 1024);
+        assert_eq!(dp_sync_time(&r, &par, &HardwareCfg::default()), 0.0);
+    }
+
+    #[test]
+    fn throughput_scales_sublinearly_with_dp() {
+        let hw = HardwareCfg::default();
+        let r = fake_report(1.0, vec![40e9, 40e9]);
+        let mut par = ParallelCfg::new(2, 1, 4, 1, 1024);
+        let t1 = cluster_throughput(&r, &par, &hw);
+        par.d = 8;
+        let t8 = cluster_throughput(&r, &par, &hw);
+        assert!(t8 > 4.0 * t1, "dp should still help: {t1} -> {t8}");
+        assert!(t8 < 8.0 * t1, "but sub-linearly (allreduce cost)");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "long-header"]);
+        t.row(vec!["x".into(), "1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+}

@@ -1,0 +1,163 @@
+//! Layer taxonomy and per-family model builders.
+//!
+//! A model is a *flat* list of fine-grained layers — the unit of model
+//! partition, and exactly the granularity of the AOT artifacts (one
+//! HLO executable per `LayerKind` × op), so every partition the
+//! Pipeline Generator emits is executable from one artifact set.
+
+use crate::config::{Family, ModelCfg};
+
+/// Fine-grained layer kinds (mirrors python/compile/layers.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LayerKind {
+    Embed,
+    Sa,
+    Mla,
+    Mamba,
+    Ffn,
+    Moe,
+    Head,
+}
+
+impl LayerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Embed => "embed",
+            LayerKind::Sa => "sa",
+            LayerKind::Mla => "mla",
+            LayerKind::Mamba => "mamba",
+            LayerKind::Ffn => "ffn",
+            LayerKind::Moe => "moe",
+            LayerKind::Head => "head",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<LayerKind> {
+        Some(match s {
+            "embed" => LayerKind::Embed,
+            "sa" => LayerKind::Sa,
+            "mla" => LayerKind::Mla,
+            "mamba" => LayerKind::Mamba,
+            "ffn" => LayerKind::Ffn,
+            "moe" => LayerKind::Moe,
+            "head" => LayerKind::Head,
+            _ => return None,
+        })
+    }
+
+    /// Whether this layer takes/produces hidden activations on both
+    /// sides (false only for Embed input and Head output).
+    pub fn is_hidden(&self) -> bool {
+        !matches!(self, LayerKind::Embed | LayerKind::Head)
+    }
+}
+
+/// A concrete model: hyper-parameters + flat layer list.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub cfg: ModelCfg,
+    pub layers: Vec<LayerKind>,
+}
+
+impl ModelSpec {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn label(&self) -> String {
+        self.cfg.label()
+    }
+}
+
+/// Expand a `ModelCfg` into the flat layer list.
+///
+/// Family block patterns (one "block" = the paper's layer unit):
+/// - LLaMA-2 / Gemma: `[sa, ffn]` — Gemma differs only by vocab scale.
+/// - DeepSeek: first quarter `[mla, ffn]` (dense), rest `[mla, moe]`
+///   (the paper: "dense FFNs in the first k layers … sparse MoE later").
+/// - Nemotron-H: Mamba-dominant hybrid — every 4th block is
+///   `[sa, ffn]`, the others `[mamba, ffn]` (the published model is
+///   ~92% Mamba with periodic attention).
+pub fn build_model(cfg: &ModelCfg) -> ModelSpec {
+    let mut layers = vec![LayerKind::Embed];
+    for b in 0..cfg.blocks {
+        match cfg.family {
+            Family::Llama2 | Family::Gemma => {
+                layers.push(LayerKind::Sa);
+                layers.push(LayerKind::Ffn);
+            }
+            Family::DeepSeek => {
+                layers.push(LayerKind::Mla);
+                if b < cfg.blocks / 4 {
+                    layers.push(LayerKind::Ffn);
+                } else {
+                    layers.push(LayerKind::Moe);
+                }
+            }
+            Family::NemotronH => {
+                if b % 4 == 3 {
+                    layers.push(LayerKind::Sa);
+                } else {
+                    layers.push(LayerKind::Mamba);
+                }
+                layers.push(LayerKind::Ffn);
+            }
+        }
+    }
+    layers.push(LayerKind::Head);
+    ModelSpec { cfg: cfg.clone(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, ModelCfg, Size};
+
+    #[test]
+    fn gemma_structure() {
+        let m = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        assert_eq!(m.layers[0], LayerKind::Embed);
+        assert_eq!(*m.layers.last().unwrap(), LayerKind::Head);
+        assert_eq!(m.n_layers(), 2 + 2 * 32);
+        assert!(m.layers[1..m.n_layers() - 1]
+            .iter()
+            .all(|l| matches!(l, LayerKind::Sa | LayerKind::Ffn)));
+    }
+
+    #[test]
+    fn deepseek_dense_then_moe() {
+        let m = build_model(&ModelCfg::table5(Family::DeepSeek, Size::Small));
+        let n_moe = m.layers.iter().filter(|&&l| l == LayerKind::Moe).count();
+        let n_ffn = m.layers.iter().filter(|&&l| l == LayerKind::Ffn).count();
+        assert_eq!(n_ffn, 4); // 16 blocks / 4
+        assert_eq!(n_moe, 12);
+        // Dense blocks strictly before MoE blocks.
+        let first_moe = m.layers.iter().position(|&l| l == LayerKind::Moe).unwrap();
+        let last_ffn = m.layers.iter().rposition(|&l| l == LayerKind::Ffn).unwrap();
+        assert!(last_ffn < first_moe);
+    }
+
+    #[test]
+    fn nemotron_hybrid() {
+        let m = build_model(&ModelCfg::table5(Family::NemotronH, Size::Small));
+        let n_sa = m.layers.iter().filter(|&&l| l == LayerKind::Sa).count();
+        let n_mamba = m.layers.iter().filter(|&&l| l == LayerKind::Mamba).count();
+        assert_eq!(n_sa, 7); // every 4th of 28
+        assert_eq!(n_mamba, 21);
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [
+            LayerKind::Embed,
+            LayerKind::Sa,
+            LayerKind::Mla,
+            LayerKind::Mamba,
+            LayerKind::Ffn,
+            LayerKind::Moe,
+            LayerKind::Head,
+        ] {
+            assert_eq!(LayerKind::from_name(k.name()), Some(k));
+        }
+    }
+}

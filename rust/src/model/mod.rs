@@ -1,0 +1,8 @@
+//! Model structure: the fine-grained layer taxonomy, per-family model
+//! builders (Table 5), and the analytical per-layer cost model.
+
+pub mod cost;
+pub mod layers;
+
+pub use cost::{CostModel, LayerCost};
+pub use layers::{build_model, LayerKind, ModelSpec};

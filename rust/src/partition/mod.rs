@@ -1,0 +1,204 @@
+//! Model partition: splitting the flat layer list into contiguous
+//! pipeline stages (paper §2.2), plus the partition policies used as
+//! Pipeline Generator seeds and the tuning move (§4.3 "Model Partition
+//! Tuning").
+
+use crate::profile::ProfiledData;
+
+/// A partition of `n_layers` into `S` contiguous stages, stored as
+/// stage start offsets: stage `s` covers `bounds[s]..bounds[s+1]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub bounds: Vec<usize>,
+}
+
+impl Partition {
+    pub fn from_sizes(sizes: &[usize]) -> Partition {
+        let mut bounds = vec![0];
+        for &s in sizes {
+            assert!(s > 0, "empty stage");
+            bounds.push(bounds.last().unwrap() + s);
+        }
+        Partition { bounds }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn n_layers(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    pub fn stage_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    pub fn stage_len(&self, s: usize) -> usize {
+        self.bounds[s + 1] - self.bounds[s]
+    }
+
+    /// Which stage owns layer `l`.
+    pub fn stage_of(&self, l: usize) -> usize {
+        match self.bounds.binary_search(&l) {
+            Ok(i) => i.min(self.n_stages() - 1),
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Move one layer across the boundary between stages `s` and `s+1`.
+    /// `toward_earlier`: shift boundary right→left (stage s gives its
+    /// last layer to s+1) when false, or s+1 gives its first layer to s
+    /// when true.  Returns false (no-op) if a stage would become empty.
+    pub fn shift_boundary(&mut self, s: usize, toward_earlier: bool) -> bool {
+        assert!(s + 1 < self.bounds.len() - 0 && s + 1 <= self.n_stages());
+        let b = self.bounds[s + 1];
+        if toward_earlier {
+            // s absorbs first layer of s+1.
+            if self.stage_len(s + 1) <= 1 {
+                return false;
+            }
+            self.bounds[s + 1] = b + 1;
+        } else {
+            // s+1 absorbs last layer of s.
+            if self.stage_len(s) <= 1 {
+                return false;
+            }
+            self.bounds[s + 1] = b - 1;
+        }
+        true
+    }
+
+    /// Validity: monotone bounds, no empty stage, covers all layers.
+    pub fn is_valid(&self) -> bool {
+        self.bounds.len() >= 2
+            && self.bounds[0] == 0
+            && self.bounds.windows(2).all(|w| w[0] < w[1])
+    }
+}
+
+/// Uniform layer split (the S-1F1B / Megatron default, §2.2): each
+/// stage gets `⌈n/S⌉` or `⌊n/S⌋` layers, remainder spread from the
+/// front.
+pub fn uniform(n_layers: usize, n_stages: usize) -> Partition {
+    assert!(n_stages >= 1 && n_layers >= n_stages);
+    let base = n_layers / n_stages;
+    let rem = n_layers % n_stages;
+    let sizes: Vec<usize> =
+        (0..n_stages).map(|s| base + usize::from(s < rem)).collect();
+    Partition::from_sizes(&sizes)
+}
+
+/// Compute-balanced partition (the Mist-style seed, §2.2): dynamic
+/// programming that minimises the maximum per-stage fused compute
+/// (F+B+W).  O(S · n²) — exact, not a heuristic.
+pub fn balanced(profile: &ProfiledData, n_stages: usize) -> Partition {
+    let n = profile.n_layers();
+    assert!(n >= n_stages);
+    let w: Vec<f64> = profile.layers.iter().map(|l| l.f + l.b + l.w).collect();
+    let mut prefix = vec![0.0; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + w[i];
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // layers a..b
+    // dp[s][i] = min over partitions of first i layers into s stages of
+    // the max stage weight.
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; n + 1]; n_stages + 1];
+    let mut cut = vec![vec![0usize; n + 1]; n_stages + 1];
+    dp[0][0] = 0.0;
+    for s in 1..=n_stages {
+        for i in s..=n {
+            // last stage covers j..i
+            for j in (s - 1)..i {
+                let cand = dp[s - 1][j].max(seg(j, i));
+                if cand < dp[s][i] {
+                    dp[s][i] = cand;
+                    cut[s][i] = j;
+                }
+            }
+        }
+    }
+    // Recover bounds.
+    let mut bounds = vec![n];
+    let mut i = n;
+    for s in (1..=n_stages).rev() {
+        i = cut[s][i];
+        bounds.push(i);
+    }
+    bounds.reverse();
+    assert_eq!(bounds[0], 0);
+    Partition { bounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::profile::ProfiledData;
+
+    fn gemma_profile() -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 16, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn uniform_covers() {
+        let p = uniform(10, 4);
+        assert!(p.is_valid());
+        assert_eq!(p.n_stages(), 4);
+        assert_eq!(p.n_layers(), 10);
+        let sizes: Vec<usize> = (0..4).map(|s| p.stage_len(s)).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn stage_of_consistent() {
+        let p = uniform(66, 4);
+        for l in 0..66 {
+            let s = p.stage_of(l);
+            assert!(p.stage_range(s).contains(&l), "layer {l} stage {s}");
+        }
+    }
+
+    #[test]
+    fn balanced_beats_uniform_on_gemma() {
+        // The head is worth many blocks: the balanced split must give the
+        // last stage far fewer layers and achieve lower max stage cost.
+        let prof = gemma_profile();
+        let uni = uniform(prof.n_layers(), 4);
+        let bal = balanced(&prof, 4);
+        let maxcost = |p: &Partition| {
+            (0..p.n_stages())
+                .map(|s| {
+                    let c = prof.stage_cost(p.stage_range(s));
+                    c.f + c.b + c.w
+                })
+                .fold(0.0f64, f64::max)
+        };
+        assert!(bal.is_valid());
+        assert!(
+            maxcost(&bal) < 0.8 * maxcost(&uni),
+            "balanced {:.3e} should beat uniform {:.3e}",
+            maxcost(&bal),
+            maxcost(&uni)
+        );
+        assert!(bal.stage_len(3) < uni.stage_len(3));
+    }
+
+    #[test]
+    fn shift_boundary_moves_one_layer() {
+        let mut p = uniform(8, 4);
+        assert!(p.shift_boundary(1, true));
+        assert_eq!(p.stage_len(1), 3);
+        assert_eq!(p.stage_len(2), 1);
+        // Shrinking an 1-layer stage must refuse.
+        assert!(!p.shift_boundary(2, false));
+        assert!(p.is_valid());
+    }
+}

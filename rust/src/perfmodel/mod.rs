@@ -1,0 +1,396 @@
+//! Pipeline Performance Model (paper §4.2, Algorithm 1).
+//!
+//! Event-driven simulation of a [`Schedule`] over a (partition,
+//! placement) with profiled per-layer costs:
+//!
+//! - **Step 1** layer-level aggregation: [`ProfiledData::stage_cost`];
+//! - **Step 2** stage→device aggregation: here, via the placement;
+//! - **Step 3** runtime & memory estimation: the simulation below
+//!   yields `T_d = C_d + BubbleTime(d) − OverlapTime(d)` (identity:
+//!   we measure busy/bubble/overlap directly), `M_d`, and, optionally,
+//!   per-op trace events (Fig 11's simulated traces).
+//!
+//! Deadlock (a schedule whose cross-device waits cycle) is detected and
+//! reported rather than hanging — the Pipeline Generator relies on this
+//! to prune invalid candidates.
+
+use crate::partition::Partition;
+use crate::placement::Placement;
+use crate::profile::ProfiledData;
+use crate::schedule::{OpKind, Schedule, Slot};
+use crate::util::trace::TraceEvent;
+
+/// Simulation result (Algorithm 1 outputs).
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    /// Step makespan (s): `max_d T_d` — the generator's objective.
+    pub total: f64,
+    /// Per-device last-activity end time.
+    pub t_d: Vec<f64>,
+    /// Per-device pure compute time (C_d).
+    pub busy_d: Vec<f64>,
+    /// Per-device idle time within the makespan (BubbleTime(d)).
+    pub bubble_d: Vec<f64>,
+    /// Per-device comm hidden under compute (OverlapTime(d)).
+    pub overlap_d: Vec<f64>,
+    /// Per-device time blocked on un-overlapped receives.
+    pub comm_block_d: Vec<f64>,
+    /// Per-device memory high-water mark (bytes): static + peak stash.
+    pub m_d: Vec<f64>,
+    /// Per-device static memory (params+grads+optimizer).
+    pub static_d: Vec<f64>,
+    /// Devices that exceeded capacity.
+    pub oom: bool,
+    /// Trace events (only when requested).
+    pub events: Vec<TraceEvent>,
+}
+
+impl PerfReport {
+    /// Mean bubble ratio: Σ_d bubble / (P · makespan)  (Fig 1 metric).
+    pub fn bubble_ratio(&self) -> f64 {
+        let p = self.t_d.len() as f64;
+        self.bubble_d.iter().sum::<f64>() / (p * self.total.max(1e-12))
+    }
+
+    /// Training throughput in tokens/s for `tokens_per_step`.
+    pub fn throughput(&self, tokens_per_step: f64) -> f64 {
+        tokens_per_step / self.total.max(1e-12)
+    }
+}
+
+/// Simulation error: the schedule deadlocks.
+#[derive(Debug)]
+pub struct Deadlock {
+    pub device: usize,
+    pub at_slot: usize,
+    pub slot: Slot,
+}
+
+impl std::fmt::Display for Deadlock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "deadlock: device {} blocked at slot index {} ({:?})",
+            self.device, self.at_slot, self.slot
+        )
+    }
+}
+
+impl std::error::Error for Deadlock {}
+
+/// Simulate a schedule; see module docs.
+pub fn simulate(
+    profile: &ProfiledData,
+    partition: &Partition,
+    placement: &Placement,
+    schedule: &Schedule,
+    collect_trace: bool,
+) -> Result<PerfReport, Deadlock> {
+    let s_n = partition.n_stages();
+    let p = schedule.p;
+    let nmb = schedule.nmb;
+    debug_assert_eq!(placement.n_stages(), s_n);
+
+    // Stage costs (Alg. 1 Steps 1–2).
+    struct St {
+        f: f64,
+        b: f64,
+        w: f64,
+        act: f64,
+        comm_f_in: f64, // p2p time for F input (from stage-1)
+        comm_b_in: f64, // p2p time for B input (from stage+1)
+    }
+    let costs: Vec<_> =
+        (0..s_n).map(|s| profile.stage_cost(partition.stage_range(s))).collect();
+    let stages: Vec<St> = (0..s_n)
+        .map(|s| {
+            let comm_f_in = if s > 0 && placement.device_of[s - 1] != placement.device_of[s]
+            {
+                profile.p2p(costs[s - 1].comm_bytes)
+            } else {
+                0.0
+            };
+            let comm_b_in = if s + 1 < s_n
+                && placement.device_of[s + 1] != placement.device_of[s]
+            {
+                // Gradient w.r.t. this stage's output: same size as the
+                // forward boundary message.
+                profile.p2p(costs[s].comm_bytes)
+            } else {
+                0.0
+            };
+            St {
+                f: costs[s].f,
+                b: if schedule.split_bw { costs[s].b } else { costs[s].b + costs[s].w },
+                w: costs[s].w,
+                act: costs[s].mem_act,
+                comm_f_in,
+                comm_b_in,
+            }
+        })
+        .collect();
+
+    let static_d: Vec<f64> = (0..p)
+        .map(|d| {
+            (0..s_n)
+                .filter(|&s| placement.device_of[s] == d)
+                .map(|s| costs[s].mem_static)
+                .sum()
+        })
+        .collect();
+
+    // Simulation state.
+    let mut end_f = vec![f64::NAN; s_n * nmb];
+    let mut end_b = vec![f64::NAN; s_n * nmb];
+    let idx = |s: usize, mb: usize| s * nmb + mb;
+    let mut ptr = vec![0usize; p];
+    let mut clock = vec![0.0f64; p];
+    let mut busy = vec![0.0f64; p];
+    let mut comm_block = vec![0.0f64; p];
+    let mut overlap = vec![0.0f64; p];
+    let mut stash = vec![0.0f64; p];
+    let mut peak_stash = vec![0.0f64; p];
+    let mut events = Vec::new();
+    let total_slots: usize = schedule.per_device.iter().map(|v| v.len()).sum();
+    let mut done = 0usize;
+
+    while done < total_slots {
+        // Pick, among devices whose next slot is dependency-ready, the
+        // one that can start earliest (event-driven order).
+        let mut best: Option<(f64, f64, usize)> = None; // (start, comm, device)
+        for d in 0..p {
+            if ptr[d] >= schedule.per_device[d].len() {
+                continue;
+            }
+            let sl = schedule.per_device[d][ptr[d]];
+            let s = sl.stage as usize;
+            let mb = sl.mb as usize;
+            let (dep, comm) = match sl.op {
+                OpKind::F => {
+                    if s == 0 {
+                        (0.0, 0.0)
+                    } else {
+                        (end_f[idx(s - 1, mb)], stages[s].comm_f_in)
+                    }
+                }
+                OpKind::B => {
+                    if s == s_n - 1 {
+                        (end_f[idx(s, mb)], 0.0)
+                    } else {
+                        (end_b[idx(s + 1, mb)], stages[s].comm_b_in)
+                    }
+                }
+                OpKind::W => (end_b[idx(s, mb)], 0.0),
+            };
+            if dep.is_nan() {
+                continue; // blocked on a cross-device dependency
+            }
+            let start = if comm == 0.0 {
+                clock[d].max(dep)
+            } else if schedule.overlap_aware {
+                clock[d].max(dep + comm)
+            } else {
+                clock[d].max(dep) + comm
+            };
+            if best.map_or(true, |(bs, _, _)| start < bs) {
+                best = Some((start, comm, d));
+            }
+        }
+
+        let (start, comm, d) = match best {
+            Some(x) => x,
+            None => {
+                // All remaining devices blocked: deadlock.
+                let d = (0..p).find(|&d| ptr[d] < schedule.per_device[d].len()).unwrap();
+                return Err(Deadlock {
+                    device: d,
+                    at_slot: ptr[d],
+                    slot: schedule.per_device[d][ptr[d]],
+                });
+            }
+        };
+
+        let sl = schedule.per_device[d][ptr[d]];
+        let s = sl.stage as usize;
+        let mb = sl.mb as usize;
+        let dur = match sl.op {
+            OpKind::F => stages[s].f,
+            OpKind::B => stages[s].b,
+            OpKind::W => stages[s].w,
+        };
+        // Comm accounting.
+        if comm > 0.0 {
+            if schedule.overlap_aware {
+                // Hidden fraction: transfer window [start-comm, start]
+                // vs device busy-until clock[d].
+                let hidden = (clock[d] - (start - comm)).clamp(0.0, comm);
+                overlap[d] += hidden;
+                if collect_trace {
+                    events.push(TraceEvent {
+                        name: format!("recv{}@s{}", mb, s),
+                        cat: "comm".into(),
+                        ts_us: (start - comm) * 1e6,
+                        dur_us: comm * 1e6,
+                        pid: d,
+                        tid: 1,
+                    });
+                }
+            } else {
+                comm_block[d] += comm;
+                if collect_trace {
+                    events.push(TraceEvent {
+                        name: format!("recv{}@s{}", mb, s),
+                        cat: "comm".into(),
+                        ts_us: (start - comm) * 1e6,
+                        dur_us: comm * 1e6,
+                        pid: d,
+                        tid: 0,
+                    });
+                }
+            }
+        }
+        let end = start + dur;
+        clock[d] = end;
+        busy[d] += dur;
+        match sl.op {
+            OpKind::F => {
+                end_f[idx(s, mb)] = end;
+                stash[d] += stages[s].act;
+                peak_stash[d] = peak_stash[d].max(stash[d]);
+            }
+            OpKind::B => {
+                end_b[idx(s, mb)] = end;
+                if !schedule.split_bw {
+                    stash[d] -= stages[s].act;
+                }
+            }
+            OpKind::W => {
+                stash[d] -= stages[s].act;
+            }
+        }
+        if collect_trace {
+            events.push(TraceEvent {
+                name: format!("{}{}@s{}", sl.op.name(), mb, s),
+                cat: sl.op.name().into(),
+                ts_us: start * 1e6,
+                dur_us: dur * 1e6,
+                pid: d,
+                tid: 0,
+            });
+        }
+        ptr[d] += 1;
+        done += 1;
+    }
+
+    let total = clock.iter().cloned().fold(0.0, f64::max);
+    let m_d: Vec<f64> =
+        (0..p).map(|d| static_d[d] + peak_stash[d]).collect();
+    let oom = m_d.iter().any(|&m| m > profile.mem_capacity);
+    let bubble_d: Vec<f64> =
+        (0..p).map(|d| (total - busy[d] - comm_block[d]).max(0.0)).collect();
+    Ok(PerfReport {
+        total,
+        t_d: clock,
+        busy_d: busy,
+        bubble_d,
+        overlap_d: overlap,
+        comm_block_d: comm_block,
+        m_d,
+        static_d,
+        oom,
+        events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::partition::uniform;
+    use crate::placement::sequential;
+    use crate::schedule::builders::{gpipe, one_f_one_b, zb_h1};
+
+    fn setup(fam: Family, p: usize, nmb: usize) -> (ProfiledData, Partition, Placement) {
+        let spec = build_model(&ModelCfg::table5(fam, Size::Small));
+        let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+        let prof = ProfiledData::analytical(&spec, &HardwareCfg::default(), &par);
+        let part = uniform(prof.n_layers(), p);
+        (prof, part, sequential(p))
+    }
+
+    #[test]
+    fn gpipe_bubble_exceeds_1f1b_memory() {
+        // GPipe and 1F1B have the same bubble but GPipe stashes all nmb
+        // activations: its memory must be higher.
+        let (prof, part, pl) = setup(Family::Llama2, 4, 8);
+        let g = simulate(&prof, &part, &pl, &gpipe(4, 8), false).unwrap();
+        let o = simulate(&prof, &part, &pl, &one_f_one_b(4, 8), false).unwrap();
+        assert!(g.m_d[0] > o.m_d[0], "gpipe {} !> 1f1b {}", g.m_d[0], o.m_d[0]);
+    }
+
+    #[test]
+    fn more_microbatches_reduce_bubble_ratio() {
+        let (prof, part, pl) = setup(Family::Llama2, 4, 4);
+        let r4 = simulate(&prof, &part, &pl, &one_f_one_b(4, 4), false).unwrap();
+        let r32 = simulate(&prof, &part, &pl, &one_f_one_b(4, 32), false).unwrap();
+        assert!(r32.bubble_ratio() < r4.bubble_ratio());
+    }
+
+    #[test]
+    fn zb_beats_1f1b_on_homogeneous() {
+        let (prof, part, pl) = setup(Family::Llama2, 4, 8);
+        let zb = simulate(&prof, &part, &pl, &zb_h1(4, 8), false).unwrap();
+        let ofob = simulate(&prof, &part, &pl, &one_f_one_b(4, 8), false).unwrap();
+        assert!(
+            zb.total < ofob.total,
+            "zb {:.4} !< 1f1b {:.4}",
+            zb.total,
+            ofob.total
+        );
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path() {
+        let (prof, part, pl) = setup(Family::Gemma, 4, 8);
+        let r = simulate(&prof, &part, &pl, &one_f_one_b(4, 8), false).unwrap();
+        // Lower bound: the busiest device's compute.
+        let max_busy = r.busy_d.iter().cloned().fold(0.0, f64::max);
+        assert!(r.total >= max_busy);
+        // Identity T_d = C_d + bubble + comm_block (within fp tolerance).
+        for d in 0..4 {
+            let lhs = r.total;
+            let rhs = r.busy_d[d] + r.bubble_d[d] + r.comm_block_d[d];
+            assert!((lhs - rhs).abs() / lhs < 1e-9, "dev {d}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn trace_events_collected() {
+        let (prof, part, pl) = setup(Family::Llama2, 2, 2);
+        let r = simulate(&prof, &part, &pl, &one_f_one_b(2, 2), true).unwrap();
+        // 2 devices × (2F + 2B) compute events + comm events.
+        let computes = r.events.iter().filter(|e| e.cat != "comm").count();
+        assert_eq!(computes, 8);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        use crate::schedule::{OpKind, Schedule, Slot};
+        let (prof, part, pl) = setup(Family::Llama2, 2, 1);
+        // Device 0 waits for B(0,0)'s dep B(0,1) before running F(0,0):
+        // cross-device cycle with device 1 needing F(0,0) first.
+        let bad = Schedule {
+            p: 2,
+            nmb: 1,
+            n_stages: 2,
+            split_bw: false,
+            overlap_aware: false,
+            per_device: vec![
+                vec![Slot::new(OpKind::B, 0, 0), Slot::new(OpKind::F, 0, 0)],
+                vec![Slot::new(OpKind::F, 0, 1), Slot::new(OpKind::B, 0, 1)],
+            ],
+        };
+        assert!(simulate(&prof, &part, &pl, &bad, false).is_err());
+    }
+}

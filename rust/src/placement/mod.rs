@@ -1,0 +1,103 @@
+//! Model placement: mapping pipeline stages onto devices (paper §2.3),
+//! with the three seed policies (sequential / interleaved / wave) and
+//! the grouped-permutation tuning move (§4.3 "Model Placement Tuning").
+
+/// Stage → device mapping over `p` pipeline devices.  Multiple stages
+/// per device = virtual pipeline stages (I-1F1B / Hanayo style).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub p: usize,
+    /// `device_of[s]` = device executing stage `s`.
+    pub device_of: Vec<usize>,
+}
+
+impl Placement {
+    pub fn n_stages(&self) -> usize {
+        self.device_of.len()
+    }
+
+    /// Stages hosted by device `d`, in stage order (Alg. 1 `Stages(d)`).
+    pub fn stages_of(&self, d: usize) -> Vec<usize> {
+        (0..self.n_stages()).filter(|&s| self.device_of[s] == d).collect()
+    }
+
+    /// Every device must host ≥ 1 stage; device ids in range.
+    pub fn is_valid(&self) -> bool {
+        self.device_of.iter().all(|&d| d < self.p)
+            && (0..self.p).all(|d| self.device_of.contains(&d))
+    }
+
+    /// Swap the devices of two stages (a placement tuning move).
+    pub fn swap_stages(&mut self, a: usize, b: usize) {
+        self.device_of.swap(a, b);
+    }
+}
+
+/// Sequential: stage `s` on device `s` (requires S == P) — the S-1F1B /
+/// DAPPLE / ZB default.
+pub fn sequential(p: usize) -> Placement {
+    Placement { p, device_of: (0..p).collect() }
+}
+
+/// Interleaved (I-1F1B virtual pipeline stages): `v·p` stages laid out
+/// round-robin — stage `s` on device `s % p`.  Device 0 gets stages
+/// {0, p, 2p, …}: each device hosts `v` *virtual* stages.
+pub fn interleaved(p: usize, v: usize) -> Placement {
+    Placement { p, device_of: (0..p * v).map(|s| s % p).collect() }
+}
+
+/// Wave (Hanayo): like interleaved but alternate rounds reverse
+/// direction — stages flow 0,1,…,p-1,p-1,…,1,0,0,1,… producing the
+/// "wave" pattern; `v` waves ⇒ `v·p` stages.
+pub fn wave(p: usize, v: usize) -> Placement {
+    let device_of = (0..p * v)
+        .map(|s| {
+            let round = s / p;
+            let off = s % p;
+            if round % 2 == 0 {
+                off
+            } else {
+                p - 1 - off
+            }
+        })
+        .collect();
+    Placement { p, device_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_identity() {
+        let pl = sequential(4);
+        assert!(pl.is_valid());
+        assert_eq!(pl.device_of, vec![0, 1, 2, 3]);
+        assert_eq!(pl.stages_of(2), vec![2]);
+    }
+
+    #[test]
+    fn interleaved_round_robin() {
+        let pl = interleaved(4, 2);
+        assert!(pl.is_valid());
+        assert_eq!(pl.n_stages(), 8);
+        assert_eq!(pl.stages_of(0), vec![0, 4]);
+        assert_eq!(pl.stages_of(3), vec![3, 7]);
+    }
+
+    #[test]
+    fn wave_reverses_alternate_rounds() {
+        let pl = wave(4, 2);
+        assert_eq!(pl.device_of, vec![0, 1, 2, 3, 3, 2, 1, 0]);
+        assert_eq!(pl.stages_of(0), vec![0, 7]);
+        assert!(pl.is_valid());
+    }
+
+    #[test]
+    fn swap_move() {
+        let mut pl = interleaved(2, 2);
+        pl.swap_stages(0, 1);
+        assert_eq!(pl.device_of, vec![1, 0, 0, 1]);
+        assert!(pl.is_valid());
+    }
+}

@@ -1,0 +1,116 @@
+//! Profiled data — the opaque per-layer numbers the Pipeline
+//! Performance Model consumes (paper Fig 5 "Profiled data" input).
+//!
+//! Two backends:
+//! - [`ProfiledData::analytical`]: H800-calibrated roofline estimates
+//!   from [`crate::model::CostModel`] (paper-scale experiments);
+//! - [`ProfiledData::from_measured`]: wall-clock per-layer timings
+//!   measured by running the AOT artifacts on the PJRT CPU client
+//!   (RealCluster fidelity experiments, Fig 11/12).
+
+use crate::config::{HardwareCfg, ParallelCfg};
+use crate::model::{CostModel, LayerCost, ModelSpec};
+
+#[derive(Clone, Debug)]
+pub struct ProfiledData {
+    /// Per-layer costs, indexed by flat layer id.
+    pub layers: Vec<LayerCost>,
+    /// P2P link parameters for stage-boundary messages.
+    pub link_latency: f64,
+    pub link_bw: f64,
+    /// Per-device memory capacity (bytes).
+    pub mem_capacity: f64,
+}
+
+impl ProfiledData {
+    /// Analytical backend (see module docs).
+    pub fn analytical(spec: &ModelSpec, hw: &HardwareCfg, par: &ParallelCfg) -> Self {
+        let cm = CostModel::new(*hw, *par);
+        ProfiledData {
+            layers: cm.model_costs(spec),
+            link_latency: hw.link_latency,
+            link_bw: hw.link_bw,
+            mem_capacity: hw.mem_capacity,
+        }
+    }
+
+    /// Measured backend: caller supplies wall-clock per-layer F/B/W
+    /// seconds and message sizes from a calibration run.
+    pub fn from_measured(
+        layers: Vec<LayerCost>,
+        link_latency: f64,
+        link_bw: f64,
+        mem_capacity: f64,
+    ) -> Self {
+        ProfiledData { layers, link_latency, link_bw, mem_capacity }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// P2P transfer time for an activation message of `bytes`.
+    pub fn p2p(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            0.0
+        } else {
+            self.link_latency + bytes / self.link_bw
+        }
+    }
+
+    /// Aggregate F/B/W times over a contiguous layer range (a stage) —
+    /// Algorithm 1 Step 1 (layer-level cost aggregation).
+    pub fn stage_cost(&self, range: std::ops::Range<usize>) -> LayerCost {
+        let mut acc = LayerCost::default();
+        for l in &self.layers[range.clone()] {
+            acc.f += l.f;
+            acc.b += l.b;
+            acc.w += l.w;
+            acc.mem_static += l.mem_static;
+            acc.mem_act += l.mem_act;
+        }
+        // Message size leaving the stage = last layer's output.
+        if let Some(last) = self.layers[range].last() {
+            acc.comm_bytes = last.comm_bytes;
+        }
+        acc
+    }
+
+    /// Total fused compute per micro-batch (lower bound on step time ×
+    /// nmb / P — used for bubble-ratio denominators).
+    pub fn total_compute(&self) -> f64 {
+        self.layers.iter().map(|l| l.f + l.b + l.w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+
+    fn pd() -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 16, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn stage_cost_sums() {
+        let p = pd();
+        let all = p.stage_cost(0..p.n_layers());
+        let split: f64 = p.stage_cost(0..3).f + p.stage_cost(3..p.n_layers()).f;
+        assert!((all.f - split).abs() < 1e-12);
+        assert!((p.total_compute() - (all.f + all.b + all.w)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p2p_monotone() {
+        let p = pd();
+        assert!(p.p2p(1e6) > p.p2p(1e3));
+        assert_eq!(p.p2p(0.0), 0.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Parsed form of `artifacts/<tag>/meta.json` — the calling convention
+//! contract between `python/compile/aot.py` and the rust runtime.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Element dtype of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One input/output slot of an executable.
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    /// "param" | "act" | "ids" | "targets" | "gy" | "gx" | "grad" |
+    /// "loss" | "lr".
+    pub role: String,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Signature of one executable (kind × op).
+#[derive(Clone, Debug)]
+pub struct OpSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Static dims of the artifact family (mirrors python dims.ModelDims).
+#[derive(Clone, Debug)]
+pub struct Dims {
+    pub tag: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub ffn_hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub kv_latent: usize,
+    pub ssm_state: usize,
+    pub experts: usize,
+    pub moe_hidden: usize,
+    pub seq: usize,
+    pub microbatch: usize,
+}
+
+/// Whole-family metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub dims: Dims,
+    /// kind -> op -> signature.
+    pub kinds: BTreeMap<String, BTreeMap<String, OpSig>>,
+    /// kind -> ordered (param name, shape).
+    pub params: BTreeMap<String, Vec<(String, Vec<usize>)>>,
+    /// kind -> parameter count.
+    pub param_counts: BTreeMap<String, usize>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta, String> {
+        let v = Json::parse(text)?;
+        let dims_o = v.get("dims").ok_or("missing dims")?;
+        let gd = |k: &str| -> Result<usize, String> {
+            dims_o.get(k).and_then(Json::as_usize).ok_or(format!("dims.{k} missing"))
+        };
+        let dims = Dims {
+            tag: dims_o
+                .get("tag")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            vocab: gd("vocab")?,
+            hidden: gd("hidden")?,
+            ffn_hidden: gd("ffn_hidden")?,
+            heads: gd("heads")?,
+            head_dim: gd("head_dim")?,
+            kv_latent: gd("kv_latent")?,
+            ssm_state: gd("ssm_state")?,
+            experts: gd("experts")?,
+            moe_hidden: gd("moe_hidden")?,
+            seq: gd("seq")?,
+            microbatch: gd("microbatch")?,
+        };
+        let mut kinds = BTreeMap::new();
+        let mut params = BTreeMap::new();
+        let kv = v.get("kinds").and_then(Json::as_obj).ok_or("missing kinds")?;
+        for (kind, ko) in kv {
+            let mut ops = BTreeMap::new();
+            let ops_o = ko.get("ops").and_then(Json::as_obj).ok_or("missing ops")?;
+            for (op, oo) in ops_o {
+                ops.insert(op.clone(), parse_op(oo)?);
+            }
+            kinds.insert(kind.clone(), ops);
+            let ps = ko.get("params").and_then(Json::as_arr).ok_or("missing params")?;
+            let plist = ps
+                .iter()
+                .map(|e| {
+                    let name = e.at(&["0"]).and_then(Json::as_str).ok_or("param name")?;
+                    let shape = e
+                        .at(&["1"])
+                        .and_then(Json::as_arr)
+                        .ok_or("param shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect();
+                    Ok((name.to_string(), shape))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            params.insert(kind.clone(), plist);
+        }
+        let mut param_counts = BTreeMap::new();
+        if let Some(pc) = v.get("param_counts").and_then(Json::as_obj) {
+            for (k, n) in pc {
+                param_counts.insert(k.clone(), n.as_usize().unwrap_or(0));
+            }
+        }
+        Ok(ArtifactMeta { dims, kinds, params, param_counts })
+    }
+
+    pub fn op(&self, kind: &str, op: &str) -> Option<&OpSig> {
+        self.kinds.get(kind)?.get(op)
+    }
+
+    pub fn ops_of(&self, kind: &str) -> Option<&BTreeMap<String, OpSig>> {
+        self.kinds.get(kind)
+    }
+
+    /// Ordered parameter specs of a layer kind.
+    pub fn params_of(&self, kind: &str) -> &[(String, Vec<usize>)] {
+        self.params.get(kind).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+fn parse_op(o: &Json) -> Result<OpSig, String> {
+    let file =
+        o.get("file").and_then(Json::as_str).ok_or("op.file missing")?.to_string();
+    let sigs = |key: &str| -> Result<Vec<TensorSig>, String> {
+        o.get(key)
+            .and_then(Json::as_arr)
+            .ok_or(format!("op.{key} missing"))?
+            .iter()
+            .map(parse_sig)
+            .collect()
+    };
+    Ok(OpSig { file, inputs: sigs("inputs")?, outputs: sigs("outputs")? })
+}
+
+fn parse_sig(o: &Json) -> Result<TensorSig, String> {
+    Ok(TensorSig {
+        name: o.get("name").and_then(Json::as_str).ok_or("sig.name")?.to_string(),
+        shape: o
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("sig.shape")?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect(),
+        dtype: match o.get("dtype").and_then(Json::as_str) {
+            Some("i32") => Dtype::I32,
+            _ => Dtype::F32,
+        },
+        role: o.get("role").and_then(Json::as_str).unwrap_or("act").to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "tag": "t", "dims": {"tag":"t","vocab":512,"hidden":32,"ffn_hidden":64,
+        "heads":2,"head_dim":16,"kv_latent":16,"ssm_state":8,"experts":2,
+        "moe_hidden":48,"seq":16,"microbatch":2},
+      "param_counts": {"ffn": 100},
+      "kinds": {"ffn": {"params": [["ln_g",[32]],["w1",[32,64]]],
+        "ops": {"fwd": {"file":"ffn_fwd.hlo.txt",
+          "inputs":[{"name":"ln_g","shape":[32],"dtype":"f32","role":"param"},
+                    {"name":"x","shape":[2,16,32],"dtype":"f32","role":"act"}],
+          "outputs":[{"name":"y","shape":[2,16,32],"dtype":"f32","role":"act"}]}}}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.dims.vocab, 512);
+        assert_eq!(m.dims.microbatch, 2);
+        let op = m.op("ffn", "fwd").unwrap();
+        assert_eq!(op.inputs.len(), 2);
+        assert_eq!(op.inputs[1].shape, vec![2, 16, 32]);
+        assert_eq!(op.inputs[1].dtype, Dtype::F32);
+        assert_eq!(m.params_of("ffn").len(), 2);
+        assert_eq!(m.param_counts["ffn"], 100);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(ArtifactMeta::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT runtime: load the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! Interchange is HLO **text** (see aot.py: jax ≥ 0.5 emits protos with
+//! 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids).  Every executable returns a root tuple — outputs are
+//! decomposed to host tensors after each call (CPU PJRT device memory
+//! *is* host memory, so this costs one memcpy per output).
+//!
+//! One executable exists per (layer kind, op); a pipeline stage is run
+//! by chaining layer executables — which is exactly what lets one
+//! artifact set serve every model partition the generator emits.
+
+pub mod meta;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use meta::{ArtifactMeta, OpSig, TensorSig};
+pub use tensor::Tensor;
+
+/// Loaded artifact family: PJRT client + lazily compiled executables.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    pub meta: ArtifactMeta,
+    client: xla::PjRtClient,
+    // op key "kind_op" -> compiled executable (lazy).
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The PJRT CPU client is thread-safe (TFRT CPU client); the xla crate
+// just doesn't mark its wrappers Send/Sync.  We only share the store
+// behind &self across executor threads.
+unsafe impl Send for ArtifactStore {}
+unsafe impl Sync for ArtifactStore {}
+
+impl ArtifactStore {
+    /// Open `artifacts/<tag>` and parse its meta.json.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let meta = ArtifactMeta::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", meta_path.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactStore { dir, meta, client, exes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch cached) the executable for `kind`/`op`.
+    pub fn executable(
+        &self,
+        kind: &str,
+        op: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{kind}_{op}");
+        if let Some(e) = self.exes.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let sig = self
+            .meta
+            .op(kind, op)
+            .ok_or_else(|| anyhow!("no artifact for {kind}/{op}"))?;
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.exes.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every op of the given kinds (avoids first-use lag on
+    /// the training hot path).
+    pub fn warmup(&self, kinds: &[&str]) -> Result<()> {
+        for kind in kinds {
+            let ops: Vec<String> = self
+                .meta
+                .ops_of(kind)
+                .ok_or_else(|| anyhow!("unknown kind {kind}"))?
+                .keys()
+                .cloned()
+                .collect();
+            for op in ops {
+                self.executable(kind, &op)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute `kind/op` on host tensors (by reference — parameters are
+    /// large and must not be cloned per call), returning the decomposed
+    /// output tuple as host tensors.
+    pub fn run_refs(&self, kind: &str, op: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.executable(kind, op)?;
+        let sig = self.meta.op(kind, op).unwrap();
+        if inputs.len() != sig.inputs.len() {
+            return Err(anyhow!(
+                "{kind}/{op}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&sig.inputs)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&lits)?;
+        let root = out[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        parts
+            .into_iter()
+            .zip(&sig.outputs)
+            .map(|(l, s)| Tensor::from_literal(&l, s))
+            .collect()
+    }
+
+    /// Owned-slice convenience wrapper around [`Self::run_refs`].
+    pub fn run(&self, kind: &str, op: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(kind, op, &refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn micro_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/micro"));
+        d.join("meta.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn roundtrip_ffn_fwd() {
+        let Some(dir) = micro_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let store = ArtifactStore::open(dir).unwrap();
+        let d = &store.meta.dims;
+        let sig = store.meta.op("ffn", "fwd").unwrap().clone();
+        // Zero params except ln gain=1 ⇒ output == input (residual).
+        let mut inputs = Vec::new();
+        for ts in &sig.inputs {
+            let t = match ts.name.as_str() {
+                "ln_g" => Tensor::ones(&ts.shape),
+                "x" => Tensor::iota(&ts.shape, 0.01),
+                _ => Tensor::zeros_like_sig(ts),
+            };
+            inputs.push(t);
+        }
+        let out = store.run("ffn", "fwd", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let x = &inputs[sig.inputs.len() - 1];
+        let y = &out[0];
+        assert_eq!(y.shape, vec![d.microbatch, d.seq, d.hidden]);
+        // gelu(0@w1+0)@w2+0 = 0 ⇒ y == x.
+        for (a, b) in x.f32s().iter().zip(y.f32s()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn head_fwdbwd_shapes() {
+        let Some(dir) = micro_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let store = ArtifactStore::open(dir).unwrap();
+        let sig = store.meta.op("head", "fwdbwd").unwrap().clone();
+        let inputs: Vec<Tensor> = sig
+            .inputs
+            .iter()
+            .map(|ts| match ts.name.as_str() {
+                "ln_g" => Tensor::ones(&ts.shape),
+                "wout" => Tensor::iota(&ts.shape, 1e-4),
+                "x" => Tensor::iota(&ts.shape, 0.01),
+                _ => Tensor::zeros_like_sig(ts),
+            })
+            .collect();
+        let out = store.run("head", "fwdbwd", &inputs).unwrap();
+        assert_eq!(out.len(), sig.outputs.len());
+        let loss = out[0].f32s()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    }
+}

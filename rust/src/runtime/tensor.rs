@@ -1,0 +1,175 @@
+//! Host tensor: the executor/trainer-side value passed between layer
+//! executables and across pipeline P2P channels.
+
+use anyhow::{anyhow, Result};
+
+use super::meta::{Dtype, TensorSig};
+
+/// Host data buffer.
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor (row-major).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![1.0; shape.iter().product()])
+    }
+
+    /// 0, step, 2·step, … — handy deterministic test data.
+    pub fn iota(shape: &[usize], step: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::f32(shape, (0..n).map(|i| i as f32 * step).collect())
+    }
+
+    pub fn zeros_like_sig(sig: &TensorSig) -> Tensor {
+        match sig.dtype {
+            Dtype::F32 => Tensor::f32(&sig.shape, vec![0.0; sig.numel()]),
+            Dtype::I32 => Tensor::i32(&sig.shape, vec![0; sig.numel()]),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("tensor is f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        assert_eq!(self.numel(), 1);
+        self.f32s()[0]
+    }
+
+    /// `self += other` (f32, elementwise) — gradient accumulation.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        let o = other.f32s();
+        for (a, b) in self.f32s_mut().iter_mut().zip(o) {
+            *a += b;
+        }
+    }
+
+    /// `self -= lr * g` — the host-side SGD fallback.
+    pub fn sgd_step(&mut self, g: &Tensor, lr: f32) {
+        assert_eq!(self.shape, g.shape);
+        let gs = g.f32s();
+        for (p, gi) in self.f32s_mut().iter_mut().zip(gs) {
+            *p -= lr * gi;
+        }
+    }
+
+    /// Upload to an XLA literal matching `sig` (shape/dtype checked).
+    pub fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal> {
+        if self.shape != sig.shape {
+            return Err(anyhow!(
+                "{}: shape {:?} != artifact {:?}",
+                sig.name,
+                self.shape,
+                sig.shape
+            ));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (&self.data, sig.dtype) {
+            (Data::F32(v), Dtype::F32) => xla::Literal::vec1(v),
+            (Data::I32(v), Dtype::I32) => xla::Literal::vec1(v),
+            _ => return Err(anyhow!("{}: dtype mismatch", sig.name)),
+        };
+        if dims.is_empty() {
+            // reshape(&[]) yields the scalar literal.
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Download from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> Result<Tensor> {
+        let data = match sig.dtype {
+            Dtype::F32 => Data::F32(lit.to_vec::<f32>()?),
+            Dtype::I32 => Data::I32(lit.to_vec::<i32>()?),
+        };
+        let t = Tensor { shape: sig.shape.clone(), data };
+        if t.numel()
+            != match &t.data {
+                Data::F32(v) => v.len(),
+                Data::I32(v) => v.len(),
+            }
+        {
+            return Err(anyhow!("{}: element count mismatch", sig.name));
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_sgd() {
+        let mut g = Tensor::zeros(&[2, 2]);
+        g.add_assign(&Tensor::ones(&[2, 2]));
+        g.add_assign(&Tensor::ones(&[2, 2]));
+        assert_eq!(g.f32s(), &[2.0; 4]);
+        let mut p = Tensor::ones(&[2, 2]);
+        p.sgd_step(&g, 0.25);
+        assert_eq!(p.f32s(), &[0.5; 4]);
+    }
+
+    #[test]
+    fn iota_steps() {
+        let t = Tensor::iota(&[3], 0.5);
+        assert_eq!(t.f32s(), &[0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dtype_guard() {
+        Tensor::i32(&[1], vec![1]).f32s();
+    }
+}

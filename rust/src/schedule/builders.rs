@@ -1,0 +1,225 @@
+//! Fixed schedule builders — the baselines from the paper's evaluation
+//! (§5.1): GPipe, S-1F1B, interleaved I-1F1B, and ZB-H1.  These also
+//! seed the Pipeline Generator's search (§4.3).
+
+use super::{OpKind, Schedule, Slot};
+
+/// GPipe: all forwards, then all backwards (fused B+W).
+/// Sequential placement, S == P.
+pub fn gpipe(p: usize, nmb: usize) -> Schedule {
+    let per_device = (0..p)
+        .map(|d| {
+            let mut v: Vec<Slot> =
+                (0..nmb).map(|mb| Slot::new(OpKind::F, mb, d)).collect();
+            v.extend((0..nmb).map(|mb| Slot::new(OpKind::B, mb, d)));
+            v
+        })
+        .collect();
+    Schedule {
+        p,
+        nmb,
+        n_stages: p,
+        split_bw: false,
+        overlap_aware: false,
+        per_device,
+    }
+}
+
+/// S-1F1B (Megatron / DAPPLE): warmup `P-1-rank` forwards, then strict
+/// 1F1B steady state, then drain.  Fused backward, sequential
+/// placement, S == P.
+pub fn one_f_one_b(p: usize, nmb: usize) -> Schedule {
+    let per_device = (0..p)
+        .map(|rank| {
+            let warmup = (p - 1 - rank).min(nmb);
+            let mut v = Vec::with_capacity(2 * nmb);
+            for mb in 0..warmup {
+                v.push(Slot::new(OpKind::F, mb, rank));
+            }
+            let mut fi = warmup;
+            for bi in 0..nmb {
+                if fi < nmb {
+                    v.push(Slot::new(OpKind::F, fi, rank));
+                    fi += 1;
+                }
+                v.push(Slot::new(OpKind::B, bi, rank));
+            }
+            v
+        })
+        .collect();
+    Schedule {
+        p,
+        nmb,
+        n_stages: p,
+        split_bw: false,
+        overlap_aware: false,
+        per_device,
+    }
+}
+
+/// I-1F1B (Megatron interleaved virtual-pipeline schedule) over an
+/// interleaved placement with `v` chunks per device.  Requires
+/// `nmb % p == 0` (the Megatron constraint); panics otherwise.
+///
+/// Virtual micro-batch `k` on device `rank` maps to:
+/// `chunk = (k % (p·v)) / p`, `mb = (k / (p·v))·p + k % p`, and the
+/// stage is `chunk·p + rank`.  Backwards walk chunks in reverse.
+pub fn interleaved_1f1b(p: usize, v: usize, nmb: usize) -> Schedule {
+    assert!(nmb % p == 0, "interleaved 1F1B requires nmb % p == 0");
+    let total = nmb * v;
+    let f_slot = |rank: usize, k: usize| {
+        let within = k % (p * v);
+        let chunk = within / p;
+        let mb = (k / (p * v)) * p + within % p;
+        Slot::new(OpKind::F, mb, chunk * p + rank)
+    };
+    let b_slot = |rank: usize, k: usize| {
+        let within = k % (p * v);
+        let chunk = v - 1 - within / p;
+        let mb = (k / (p * v)) * p + within % p;
+        Slot::new(OpKind::B, mb, chunk * p + rank)
+    };
+    let per_device = (0..p)
+        .map(|rank| {
+            let mut warmup = (p - rank - 1) * 2 + (v - 1) * p;
+            if nmb == p {
+                warmup = total;
+            }
+            let warmup = warmup.min(total);
+            let mut sched = Vec::with_capacity(2 * total);
+            for k in 0..warmup {
+                sched.push(f_slot(rank, k));
+            }
+            for k in warmup..total {
+                sched.push(f_slot(rank, k));
+                sched.push(b_slot(rank, k - warmup));
+            }
+            for k in (total - warmup)..total {
+                sched.push(b_slot(rank, k));
+            }
+            sched
+        })
+        .collect();
+    Schedule {
+        p,
+        nmb,
+        n_stages: p * v,
+        split_bw: false,
+        overlap_aware: false,
+        per_device,
+    }
+}
+
+/// ZB-H1 (Qi et al. 2024): 1F1B with the backward split into B and W;
+/// W is delayed to fill the drain bubble while keeping 1F1B-level
+/// activation memory (the in-flight rule below).  Sequential
+/// placement, S == P.
+pub fn zb_h1(p: usize, nmb: usize) -> Schedule {
+    let per_device = (0..p)
+        .map(|rank| {
+            let warmup = (p - rank).min(nmb);
+            let mut v = Vec::with_capacity(3 * nmb);
+            for mb in 0..warmup {
+                v.push(Slot::new(OpKind::F, mb, rank));
+            }
+            let mut fi = warmup;
+            let mut pending_w: std::collections::VecDeque<usize> =
+                std::collections::VecDeque::new();
+            for bi in 0..nmb {
+                v.push(Slot::new(OpKind::B, bi, rank));
+                pending_w.push_back(bi);
+                if fi < nmb {
+                    v.push(Slot::new(OpKind::F, fi, rank));
+                    fi += 1;
+                    // Steady state: keep in-flight stashes ≤ warmup by
+                    // retiring the oldest W before admitting more F's.
+                    if fi - (bi + 1 - pending_w.len()) - pending_w.len() >= warmup {
+                        if let Some(w) = pending_w.pop_front() {
+                            v.push(Slot::new(OpKind::W, w, rank));
+                        }
+                    }
+                } else {
+                    // Drain: one W between consecutive B's fills the
+                    // bubble ZB-H1 targets.
+                    if let Some(w) = pending_w.pop_front() {
+                        v.push(Slot::new(OpKind::W, w, rank));
+                    }
+                }
+            }
+            for w in pending_w {
+                v.push(Slot::new(OpKind::W, w, rank));
+            }
+            v
+        })
+        .collect();
+    Schedule {
+        p,
+        nmb,
+        n_stages: p,
+        split_bw: true,
+        overlap_aware: false,
+        per_device,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{interleaved, sequential};
+
+    #[test]
+    fn gpipe_valid() {
+        let sch = gpipe(4, 8);
+        assert!(sch.validate(&sequential(4)).is_ok());
+        assert_eq!(sch.total_slots(), 4 * 16);
+    }
+
+    #[test]
+    fn one_f_one_b_valid() {
+        for p in [1, 2, 4, 8] {
+            for nmb in [1, 2, 4, 16, 17] {
+                let sch = one_f_one_b(p, nmb);
+                sch.validate(&sequential(p))
+                    .unwrap_or_else(|e| panic!("p={p} nmb={nmb}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_warmup_depth() {
+        let sch = one_f_one_b(4, 8);
+        // Device 0 has 3 warmup F's before its first B.
+        let first_b = sch.per_device[0]
+            .iter()
+            .position(|s| s.op == OpKind::B)
+            .unwrap();
+        assert_eq!(first_b, 4); // 3 warmup + 1 steady F
+        // Last device alternates immediately.
+        assert_eq!(sch.per_device[3][0].op, OpKind::F);
+        assert_eq!(sch.per_device[3][1].op, OpKind::B);
+    }
+
+    #[test]
+    fn interleaved_valid() {
+        for (p, v, nmb) in [(2, 2, 4), (4, 2, 8), (4, 4, 8), (2, 3, 2)] {
+            let sch = interleaved_1f1b(p, v, nmb);
+            sch.validate(&interleaved(p, v))
+                .unwrap_or_else(|e| panic!("p={p} v={v} nmb={nmb}: {e}"));
+        }
+    }
+
+    #[test]
+    fn zb_h1_valid_and_split() {
+        for p in [2, 4, 8] {
+            for nmb in [2, 4, 16, 19] {
+                let sch = zb_h1(p, nmb);
+                assert!(sch.split_bw);
+                sch.validate(&sequential(p))
+                    .unwrap_or_else(|e| panic!("p={p} nmb={nmb}: {e}"));
+                // W count equals B count.
+                let ws = sch.per_device.iter().flatten().filter(|s| s.op == OpKind::W);
+                assert_eq!(ws.count(), p * nmb);
+            }
+        }
+    }
+}

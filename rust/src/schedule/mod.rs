@@ -1,0 +1,192 @@
+//! Workload scheduling (paper §2.4): the schedule IR — per-device
+//! ordered lists of F/B/W slots — plus structural validity checking.
+//!
+//! Sub-modules: [`builders`] (GPipe, S-1F1B, I-1F1B, ZB-H1 seeds) and
+//! [`greedy`] (the adaptive event-driven list scheduler that AdaPtis
+//! workload-scheduling tuning drives).
+
+pub mod builders;
+pub mod greedy;
+
+use crate::placement::Placement;
+
+/// Computation kinds (paper Table 1): forward, input-grad backward,
+/// param-grad backward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    F,
+    B,
+    W,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::F => "F",
+            OpKind::B => "B",
+            OpKind::W => "W",
+        }
+    }
+}
+
+/// One scheduled computation: op of micro-batch `mb` at stage `stage`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Slot {
+    pub op: OpKind,
+    pub mb: u32,
+    pub stage: u32,
+}
+
+impl Slot {
+    pub fn new(op: OpKind, mb: usize, stage: usize) -> Slot {
+        Slot { op, mb: mb as u32, stage: stage as u32 }
+    }
+}
+
+/// A complete workload schedule for one training step.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Pipeline devices.
+    pub p: usize,
+    /// Micro-batches per step.
+    pub nmb: usize,
+    /// Total stages (= placement.n_stages()).
+    pub n_stages: usize,
+    /// If false, `B` slots carry the fused B+W cost and no `W` slots
+    /// exist (classic 1F1B); if true, B and W are scheduled separately
+    /// (ZB-style backward splitting).
+    pub split_bw: bool,
+    /// Executor hint: hoist receives for comm/compute overlap (§4.4).
+    pub overlap_aware: bool,
+    /// Per-device slot order.
+    pub per_device: Vec<Vec<Slot>>,
+}
+
+impl Schedule {
+    pub fn total_slots(&self) -> usize {
+        self.per_device.iter().map(|v| v.len()).sum()
+    }
+
+    /// Structural validity w.r.t. a placement:
+    /// 1. every required (op, mb, stage) appears exactly once, on the
+    ///    owning device;
+    /// 2. same-device dependency edges are order-respecting:
+    ///    F(mb,s-1) < F(mb,s), B(mb,s+1) < B(mb,s) when colocated,
+    ///    F(mb,s) < B(mb,s) < W(mb,s).
+    /// Cross-device readiness is runtime behaviour — deadlock-freedom
+    /// of the whole schedule is checked by simulation (perfmodel).
+    pub fn validate(&self, placement: &Placement) -> Result<(), String> {
+        if placement.n_stages() != self.n_stages {
+            return Err(format!(
+                "placement has {} stages, schedule {}",
+                placement.n_stages(),
+                self.n_stages
+            ));
+        }
+        let s_last = self.n_stages - 1;
+        // Position lookup: (op, mb, stage) -> (device, index).
+        let mut pos = std::collections::HashMap::new();
+        for (d, slots) in self.per_device.iter().enumerate() {
+            for (i, sl) in slots.iter().enumerate() {
+                if sl.stage as usize > s_last || sl.mb as usize >= self.nmb {
+                    return Err(format!("slot {sl:?} out of range on dev {d}"));
+                }
+                if placement.device_of[sl.stage as usize] != d {
+                    return Err(format!(
+                        "slot {sl:?} on dev {d} but stage {} owned by dev {}",
+                        sl.stage, placement.device_of[sl.stage as usize]
+                    ));
+                }
+                if pos.insert(*sl, (d, i)).is_some() {
+                    return Err(format!("duplicate slot {sl:?}"));
+                }
+            }
+        }
+        // Completeness.
+        for mb in 0..self.nmb {
+            for s in 0..=s_last {
+                for op in [OpKind::F, OpKind::B] {
+                    if !pos.contains_key(&Slot::new(op, mb, s)) {
+                        return Err(format!("missing {op:?}(mb={mb}, s={s})"));
+                    }
+                }
+                let w = Slot::new(OpKind::W, mb, s);
+                match (self.split_bw, pos.contains_key(&w)) {
+                    (true, false) => return Err(format!("missing W(mb={mb}, s={s})")),
+                    (false, true) => return Err(format!("unexpected W slot {w:?}")),
+                    _ => {}
+                }
+            }
+        }
+        // Same-device ordering.
+        let order_ok = |a: Slot, b: Slot| -> bool {
+            match (pos.get(&a), pos.get(&b)) {
+                (Some((da, ia)), Some((db, ib))) if da == db => ia < ib,
+                _ => true,
+            }
+        };
+        for mb in 0..self.nmb {
+            for s in 0..=s_last {
+                let f = Slot::new(OpKind::F, mb, s);
+                let b = Slot::new(OpKind::B, mb, s);
+                if !order_ok(f, b) {
+                    return Err(format!("B before F (mb={mb}, s={s})"));
+                }
+                if self.split_bw && !order_ok(b, Slot::new(OpKind::W, mb, s)) {
+                    return Err(format!("W before B (mb={mb}, s={s})"));
+                }
+                if s > 0 && !order_ok(Slot::new(OpKind::F, mb, s - 1), f) {
+                    return Err(format!("F order violated (mb={mb}, s={s})"));
+                }
+                if s < s_last && !order_ok(Slot::new(OpKind::B, mb, s + 1), b) {
+                    return Err(format!("B order violated (mb={mb}, s={s})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builders::one_f_one_b;
+    use super::*;
+    use crate::placement::sequential;
+
+    #[test]
+    fn validate_catches_missing() {
+        let pl = sequential(2);
+        let mut sch = one_f_one_b(2, 4);
+        assert!(sch.validate(&pl).is_ok());
+        sch.per_device[0].pop();
+        assert!(sch.validate(&pl).is_err());
+    }
+
+    #[test]
+    fn validate_catches_misplaced() {
+        let pl = sequential(2);
+        let mut sch = one_f_one_b(2, 2);
+        // Move a stage-1 slot onto device 0.
+        let sl = sch.per_device[1][0];
+        sch.per_device[1].remove(0);
+        sch.per_device[0].push(sl);
+        assert!(sch.validate(&pl).is_err());
+    }
+
+    #[test]
+    fn validate_catches_order_violation() {
+        let pl = sequential(1);
+        let sch = Schedule {
+            p: 1,
+            nmb: 1,
+            n_stages: 1,
+            split_bw: false,
+            overlap_aware: false,
+            per_device: vec![vec![
+                Slot::new(OpKind::B, 0, 0),
+                Slot::new(OpKind::F, 0, 0),
+            ]],
+        };
+        assert!(sch.validate(&pl).is_err());
+    }
+}

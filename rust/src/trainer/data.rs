@@ -1,0 +1,92 @@
+//! Synthetic training corpus with learnable structure — the rust twin
+//! of `python/compile/model.py::synthetic_batch`: Zipf-ish unigram
+//! distribution plus first-order Markov structure (with p=0.5 the next
+//! token is `(prev*7 + 3) % V`), so the loss visibly decreases once the
+//! model picks up the transition rule.
+
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+/// Generates (ids, targets) micro-batches of shape `[mb, seq]` (i32).
+pub struct CorpusGen {
+    rng: Rng,
+    vocab: usize,
+    mb: usize,
+    seq: usize,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64, vocab: usize, mb: usize, seq: usize) -> Self {
+        CorpusGen { rng: Rng::new(seed), vocab, mb, seq }
+    }
+
+    /// Zipf-ish token: floor of a bounded Pareto sample, biased to low
+    /// ranks (exact tail shape is irrelevant — we need a skewed,
+    /// learnable unigram distribution).
+    fn base_token(&mut self) -> usize {
+        let u = self.rng.f64().max(1e-12);
+        let x = ((self.vocab as f64 + 1.0).powf(u) - 1.0).max(0.0);
+        (x as usize).min(self.vocab - 1)
+    }
+
+    /// One micro-batch: (ids, targets), each `[mb, seq]`.
+    pub fn next_batch(&mut self) -> (Tensor, Tensor) {
+        let n = self.mb * self.seq;
+        let mut ids = Vec::with_capacity(n);
+        let mut tgt = Vec::with_capacity(n);
+        for _ in 0..self.mb {
+            let mut prev = self.base_token();
+            for _ in 0..self.seq {
+                ids.push(prev as i32);
+                let next = if self.rng.f64() < 0.5 {
+                    (prev * 7 + 3) % self.vocab
+                } else {
+                    self.base_token()
+                };
+                tgt.push(next as i32);
+                prev = next;
+            }
+        }
+        (
+            Tensor::i32(&[self.mb, self.seq], ids),
+            Tensor::i32(&[self.mb, self.seq], tgt),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut g = CorpusGen::new(1, 512, 2, 16);
+        let (ids, tgt) = g.next_batch();
+        assert_eq!(ids.shape, vec![2, 16]);
+        assert_eq!(tgt.shape, vec![2, 16]);
+        assert!(ids.i32s().iter().all(|&t| (0..512).contains(&t)));
+        assert!(tgt.i32s().iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn markov_structure_present() {
+        // Roughly half the transitions must follow the rule.
+        let mut g = CorpusGen::new(2, 512, 4, 64);
+        let (ids, tgt) = g.next_batch();
+        let (i, t) = (ids.i32s(), tgt.i32s());
+        let hits = i
+            .iter()
+            .zip(t)
+            .filter(|&(&a, &b)| (a as usize * 7 + 3) % 512 == b as usize)
+            .count();
+        let frac = hits as f64 / i.len() as f64;
+        assert!(frac > 0.3 && frac < 0.7, "markov fraction {frac}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (a, _) = CorpusGen::new(7, 128, 1, 8).next_batch();
+        let (b, _) = CorpusGen::new(7, 128, 1, 8).next_batch();
+        assert_eq!(a.i32s(), b.i32s());
+    }
+}

@@ -1,0 +1,462 @@
+//! Device worker: one OS thread of the RealCluster.  Executes its
+//! per-device instruction list against the PJRT artifacts, owning the
+//! parameters/gradients of its layers and the activation stashes the
+//! rematerialised backward needs.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::real::{Fabric, Mailbox, Tag};
+use crate::executor::Instr;
+use crate::runtime::{ArtifactStore, Tensor};
+use crate::schedule::OpKind;
+use crate::util::rng::Rng;
+
+/// Static configuration handed to each worker thread.
+#[derive(Clone)]
+pub struct WorkerCfg {
+    pub id: usize,
+    /// Global layer kinds (flat model), by layer index.
+    pub kinds: Vec<&'static str>,
+    /// Partition bounds (stage s = layers bounds[s]..bounds[s+1]).
+    pub bounds: Vec<usize>,
+    /// Stage → device.
+    pub device_of: Vec<usize>,
+    /// This device's lowered instruction list.
+    pub program: Vec<Instr>,
+    pub steps: usize,
+    pub nmb: usize,
+    pub lr: f32,
+    pub split_bw: bool,
+    pub seed: u64,
+    /// Collect wall-clock compute events (Fig 11 real traces).
+    pub collect_timing: bool,
+}
+
+/// Timing record: (op code 0/1/2, mb, stage, start µs, dur µs).
+pub type TimingRow = [f32; 5];
+
+struct LayerState {
+    #[allow(dead_code)]
+    kind: &'static str,
+    params: Vec<Tensor>,
+    grads: Vec<Tensor>,
+}
+
+/// Deterministic parameter init (matches the python scheme in spirit:
+/// gains 1, biases 0, S4D a_log, He-scaled matrices).
+pub fn init_layer_params(
+    store: &ArtifactStore,
+    kind: &str,
+    layer_idx: usize,
+    seed: u64,
+) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed ^ (layer_idx as u64).wrapping_mul(0x9E37_79B9));
+    store
+        .meta
+        .params_of(kind)
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = match name.as_str() {
+                "ln_g" | "dskip" => vec![1.0; n],
+                "b1" | "b2" | "bdt" => vec![0.0; n],
+                "wdt" => vec![0.5; n],
+                "a_log" => {
+                    let cols = *shape.last().unwrap();
+                    (0..n).map(|i| (((i % cols) + 1) as f32).ln()).collect()
+                }
+                _ => {
+                    let fan_in =
+                        if shape.len() >= 2 { shape[shape.len() - 2] } else { shape[0] };
+                    let scale = 1.0 / (fan_in as f32).sqrt();
+                    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+                }
+            };
+            Tensor::f32(shape, data)
+        })
+        .collect()
+}
+
+pub struct Worker {
+    cfg: WorkerCfg,
+    store: Arc<ArtifactStore>,
+    fabric: Fabric,
+    mailbox: Mailbox,
+    epoch: Instant,
+    layers: HashMap<usize, LayerState>,
+    /// (mb, layer) → stashed forward input.
+    x_stash: HashMap<(u32, usize), Tensor>,
+    /// (mb, layer) → stashed upstream gradient (split-B/W mode).
+    gy_stash: HashMap<(u32, usize), Tensor>,
+    /// (mb, stage) → activation from a colocated previous stage.
+    local_act: HashMap<(u32, u32), Tensor>,
+    /// (mb, stage) → gradient from a colocated next stage.
+    local_gy: HashMap<(u32, u32), Tensor>,
+    /// (mb, stage, kind) → tensor awaiting its Send instruction.
+    outbox: HashMap<(u32, u32, OpKind), Tensor>,
+    /// (mb) → targets (head device only).
+    targets: HashMap<u32, Tensor>,
+    timing: Vec<TimingRow>,
+    driver: usize,
+}
+
+impl Worker {
+    pub fn new(
+        cfg: WorkerCfg,
+        store: Arc<ArtifactStore>,
+        fabric: Fabric,
+        mailbox: Mailbox,
+        epoch: Instant,
+    ) -> Worker {
+        let mut layers = HashMap::new();
+        for s in 0..cfg.device_of.len() {
+            if cfg.device_of[s] != cfg.id {
+                continue;
+            }
+            for l in cfg.bounds[s]..cfg.bounds[s + 1] {
+                let kind = cfg.kinds[l];
+                let params = init_layer_params(&store, kind, l, cfg.seed);
+                let grads = params
+                    .iter()
+                    .map(|p| Tensor::zeros(&p.shape))
+                    .collect();
+                layers.insert(l, LayerState { kind, params, grads });
+            }
+        }
+        Worker {
+            driver: fabric.senders.len() - 1,
+            cfg,
+            store,
+            fabric,
+            mailbox,
+            epoch,
+            layers,
+            x_stash: HashMap::new(),
+            gy_stash: HashMap::new(),
+            local_act: HashMap::new(),
+            local_gy: HashMap::new(),
+            outbox: HashMap::new(),
+            targets: HashMap::new(),
+            timing: Vec::new(),
+        }
+    }
+
+    fn stage_layers(&self, stage: u32) -> std::ops::Range<usize> {
+        self.cfg.bounds[stage as usize]..self.cfg.bounds[stage as usize + 1]
+    }
+
+    fn is_first_stage(&self, stage: u32) -> bool {
+        stage == 0
+    }
+
+    fn is_last_stage(&self, stage: u32) -> bool {
+        stage as usize + 1 == self.cfg.device_of.len()
+    }
+
+    fn colocated(&self, a: u32, b: u32) -> bool {
+        self.cfg.device_of[a as usize] == self.cfg.device_of[b as usize]
+    }
+
+    /// Run the full training loop; returns per-step mean losses are the
+    /// driver's business — the worker just executes.
+    pub fn run(mut self) -> Result<()> {
+        for step in 0..self.cfg.steps as u64 {
+            // Barrier: wait for the driver's release.
+            self.mailbox.recv(Tag::Step(step));
+            self.timing.clear();
+            let program = std::mem::take(&mut self.cfg.program);
+            for ins in &program {
+                self.exec(ins)?;
+            }
+            self.cfg.program = program;
+            self.apply_sgd();
+            self.check_clean_state(step)?;
+            // Report completion (+timing payload).
+            let payload = self.timing_tensor();
+            self.fabric.send(self.driver, Tag::Done(step), payload);
+        }
+        Ok(())
+    }
+
+    fn timing_tensor(&self) -> Tensor {
+        let n = self.timing.len();
+        let mut data = Vec::with_capacity(n * 5);
+        for row in &self.timing {
+            data.extend_from_slice(row);
+        }
+        Tensor::f32(&[n, 5], data)
+    }
+
+    fn exec(&mut self, ins: &Instr) -> Result<()> {
+        match *ins {
+            Instr::RecvF { .. } | Instr::RecvB { .. } => Ok(()), // transport is eager
+            Instr::WaitF { mb, stage } => {
+                let t = self.mailbox.recv(Tag::Chan((mb, stage - 1, stage, OpKind::F)));
+                self.local_act.insert((mb, stage), t);
+                Ok(())
+            }
+            Instr::WaitB { mb, stage } => {
+                let t = self.mailbox.recv(Tag::Chan((mb, stage + 1, stage, OpKind::B)));
+                self.local_gy.insert((mb, stage), t);
+                Ok(())
+            }
+            Instr::SendF { mb, stage, to_stage } => {
+                let t = self
+                    .outbox
+                    .remove(&(mb, stage, OpKind::F))
+                    .ok_or_else(|| anyhow!("SendF before compute (mb={mb} s={stage})"))?;
+                let to_dev = self.cfg.device_of[to_stage as usize];
+                self.fabric.send(to_dev, Tag::Chan((mb, stage, to_stage, OpKind::F)), t);
+                Ok(())
+            }
+            Instr::SendB { mb, stage, to_stage } => {
+                let t = self
+                    .outbox
+                    .remove(&(mb, stage, OpKind::B))
+                    .ok_or_else(|| anyhow!("SendB before compute (mb={mb} s={stage})"))?;
+                let to_dev = self.cfg.device_of[to_stage as usize];
+                self.fabric.send(to_dev, Tag::Chan((mb, stage, to_stage, OpKind::B)), t);
+                Ok(())
+            }
+            Instr::Compute { op, mb, stage } => {
+                let t0 = self.epoch.elapsed().as_secs_f64();
+                match op {
+                    OpKind::F => self.compute_f(mb, stage)?,
+                    OpKind::B => self.compute_b(mb, stage)?,
+                    OpKind::W => self.compute_w(mb, stage)?,
+                }
+                if self.cfg.collect_timing {
+                    let t1 = self.epoch.elapsed().as_secs_f64();
+                    let code = match op {
+                        OpKind::F => 0.0,
+                        OpKind::B => 1.0,
+                        OpKind::W => 2.0,
+                    };
+                    self.timing.push([
+                        code,
+                        mb as f32,
+                        stage as f32,
+                        (t0 * 1e6) as f32,
+                        ((t1 - t0) * 1e6) as f32,
+                    ]);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn compute_f(&mut self, mb: u32, stage: u32) -> Result<()> {
+        // Fetch stage input.
+        let mut x = if self.is_first_stage(stage) {
+            self.mailbox.recv(Tag::Ids(mb))
+        } else if self.colocated(stage - 1, stage) {
+            self.local_act
+                .remove(&(mb, stage))
+                .ok_or_else(|| anyhow!("F: missing colocated act (mb={mb} s={stage})"))?
+        } else {
+            self.local_act
+                .remove(&(mb, stage))
+                .ok_or_else(|| anyhow!("F: missing received act (mb={mb} s={stage})"))?
+        };
+        for l in self.stage_layers(stage) {
+            let kind = self.cfg.kinds[l];
+            if kind == "head" {
+                let targets = self.mailbox.recv(Tag::Targets(mb));
+                let st = self.layers.get(&l).unwrap();
+                let mut inputs: Vec<&Tensor> = st.params.iter().collect();
+                inputs.push(&x);
+                inputs.push(&targets);
+                let mut out = self.store.run_refs("head", "fwd", &inputs)?;
+                self.fabric.send(self.driver, Tag::Loss(mb), out.pop().unwrap());
+                self.targets.insert(mb, targets);
+                self.x_stash.insert((mb, l), x);
+                return Ok(()); // head is terminal
+            }
+            let st = self.layers.get(&l).unwrap();
+            let mut inputs: Vec<&Tensor> = st.params.iter().collect();
+            inputs.push(&x);
+            let mut out = self.store.run_refs(kind, "fwd", &inputs)?;
+            let y = out.pop().unwrap();
+            self.x_stash.insert((mb, l), x);
+            x = y;
+        }
+        // Ship the stage output.
+        if self.colocated(stage, stage + 1) {
+            self.local_act.insert((mb, stage + 1), x);
+        } else {
+            self.outbox.insert((mb, stage, OpKind::F), x);
+        }
+        Ok(())
+    }
+
+    fn compute_b(&mut self, mb: u32, stage: u32) -> Result<()> {
+        // Upstream gradient for the stage's last layer.
+        let mut gy: Option<Tensor> = if self.is_last_stage(stage) {
+            None // seeded by head fwdbwd below
+        } else if self.colocated(stage, stage + 1) {
+            Some(
+                self.local_gy
+                    .remove(&(mb, stage))
+                    .ok_or_else(|| anyhow!("B: missing colocated gy (mb={mb} s={stage})"))?,
+            )
+        } else {
+            Some(
+                self.local_gy
+                    .remove(&(mb, stage))
+                    .ok_or_else(|| anyhow!("B: missing received gy (mb={mb} s={stage})"))?,
+            )
+        };
+        let layers: Vec<usize> = self.stage_layers(stage).rev().collect();
+        for l in layers {
+            let kind = self.cfg.kinds[l];
+            match kind {
+                "head" => {
+                    let x = self
+                        .x_stash
+                        .remove(&(mb, l))
+                        .ok_or_else(|| anyhow!("B: head stash missing"))?;
+                    let targets = self.targets.remove(&mb).unwrap();
+                    let st = self.layers.get(&l).unwrap();
+                    let mut inputs: Vec<&Tensor> = st.params.iter().collect();
+                    inputs.push(&x);
+                    inputs.push(&targets);
+                    // (loss, gx, *gparams) — the head takes its param
+                    // grads here even in split mode (it has no separate
+                    // bwdx artifact), so W for the head layer is a no-op.
+                    let mut out = self.store.run_refs("head", "fwdbwd", &inputs)?;
+                    let gparams = out.split_off(2);
+                    let gx = out.pop().unwrap();
+                    self.accumulate(l, &gparams);
+                    gy = Some(gx);
+                }
+                "embed" => {
+                    // Terminal: embed has no gx.  In split mode the
+                    // scatter-add (its whole backward) is the W op.
+                    let g = gy.take().ok_or_else(|| anyhow!("B: embed without gy"))?;
+                    if self.cfg.split_bw {
+                        self.gy_stash.insert((mb, l), g);
+                    } else {
+                        let ids = self.x_stash.remove(&(mb, l)).unwrap();
+                        let st = self.layers.get(&l).unwrap();
+                        let mut inputs: Vec<&Tensor> = st.params.iter().collect();
+                        inputs.push(&ids);
+                        inputs.push(&g);
+                        let out = self.store.run_refs("embed", "bwdw", &inputs)?;
+                        self.accumulate(l, &out);
+                    }
+                    return Ok(());
+                }
+                _ => {
+                    let g = gy.take().ok_or_else(|| anyhow!("B: missing gy at {l}"))?;
+                    let st = self.layers.get(&l).unwrap();
+                    if self.cfg.split_bw {
+                        let x = self
+                            .x_stash
+                            .get(&(mb, l))
+                            .ok_or_else(|| anyhow!("B: stash missing at {l}"))?;
+                        let mut inputs: Vec<&Tensor> = st.params.iter().collect();
+                        inputs.push(x);
+                        inputs.push(&g);
+                        let mut out = self.store.run_refs(kind, "bwdx", &inputs)?;
+                        gy = Some(out.pop().unwrap());
+                        self.gy_stash.insert((mb, l), g);
+                    } else {
+                        let x = self
+                            .x_stash
+                            .remove(&(mb, l))
+                            .ok_or_else(|| anyhow!("B: stash missing at {l}"))?;
+                        let mut inputs: Vec<&Tensor> = st.params.iter().collect();
+                        inputs.push(&x);
+                        inputs.push(&g);
+                        let mut out = self.store.run_refs(kind, "bwd", &inputs)?;
+                        let gparams = out.split_off(1);
+                        gy = Some(out.pop().unwrap());
+                        self.accumulate(l, &gparams);
+                    }
+                }
+            }
+        }
+        // Ship gx to the previous stage.
+        if !self.is_first_stage(stage) {
+            let gx = gy.ok_or_else(|| anyhow!("B: no gx produced"))?;
+            if self.colocated(stage - 1, stage) {
+                self.local_gy.insert((mb, stage - 1), gx);
+            } else {
+                self.outbox.insert((mb, stage, OpKind::B), gx);
+            }
+        }
+        Ok(())
+    }
+
+    fn compute_w(&mut self, mb: u32, stage: u32) -> Result<()> {
+        if !self.cfg.split_bw {
+            return Err(anyhow!("W op in fused-backward program"));
+        }
+        let layers: Vec<usize> = self.stage_layers(stage).rev().collect();
+        for l in layers {
+            let kind = self.cfg.kinds[l];
+            if kind == "head" {
+                continue; // gparams were taken at B (see compute_b)
+            }
+            let x = self
+                .x_stash
+                .remove(&(mb, l))
+                .ok_or_else(|| anyhow!("W: x stash missing at layer {l}"))?;
+            let g = self
+                .gy_stash
+                .remove(&(mb, l))
+                .ok_or_else(|| anyhow!("W: gy stash missing at layer {l}"))?;
+            let st = self.layers.get(&l).unwrap();
+            let mut inputs: Vec<&Tensor> = st.params.iter().collect();
+            inputs.push(&x);
+            inputs.push(&g);
+            let out = self.store.run_refs(kind, "bwdw", &inputs)?;
+            self.accumulate(l, &out);
+        }
+        Ok(())
+    }
+
+    fn accumulate(&mut self, l: usize, gparams: &[Tensor]) {
+        let st = self.layers.get_mut(&l).unwrap();
+        assert_eq!(st.grads.len(), gparams.len(), "layer {l} grad arity");
+        for (g, d) in st.grads.iter_mut().zip(gparams) {
+            g.add_assign(d);
+        }
+    }
+
+    fn apply_sgd(&mut self) {
+        let scale = self.cfg.lr / self.cfg.nmb as f32;
+        for st in self.layers.values_mut() {
+            for (p, g) in st.params.iter_mut().zip(&mut st.grads) {
+                p.sgd_step(g, scale);
+                for v in g.f32s_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// All stashes must drain every step — catches schedule/executor
+    /// bookkeeping bugs immediately.
+    fn check_clean_state(&self, step: u64) -> Result<()> {
+        if !self.x_stash.is_empty()
+            || !self.gy_stash.is_empty()
+            || !self.outbox.is_empty()
+            || !self.targets.is_empty()
+        {
+            return Err(anyhow!(
+                "device {} step {step}: leaked state (x={} gy={} out={} tgt={})",
+                self.cfg.id,
+                self.x_stash.len(),
+                self.gy_stash.len(),
+                self.outbox.len(),
+                self.targets.len()
+            ));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,41 @@
+//! Minimal benchmark harness (no criterion in the vendored crate set):
+//! warms up, runs timed iterations, reports mean ± σ and throughput.
+//! Used by the `cargo bench` targets (`harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, std_dev};
+
+/// Run `f` repeatedly for at least `min_iters` iterations and ~`budget`
+/// seconds, print a criterion-style line, and return mean seconds/iter.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, budget_s: f64, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_iters || start.elapsed().as_secs_f64() < budget_s {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    let m = mean(&times);
+    let sd = std_dev(&times);
+    println!(
+        "bench {name:<44} {:>12}/iter  (±{:>10}, n={})",
+        crate::util::fmt_time(m),
+        crate::util::fmt_time(sd),
+        times.len()
+    );
+    m
+}
+
+/// Report a derived throughput metric alongside a bench.
+pub fn report_rate(name: &str, per_iter_s: f64, units_per_iter: f64, unit: &str) {
+    println!(
+        "      {name:<44} {:>12} {unit}/s",
+        crate::util::fmt_si(units_per_iter / per_iter_s)
+    );
+}

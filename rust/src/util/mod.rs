@@ -1,0 +1,57 @@
+//! Small self-contained utilities (the vendored crate set has no serde /
+//! rand / clap, so these are hand-rolled).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod trace;
+
+/// Format a duration in seconds with adaptive units.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+/// Format a large count with SI suffixes (1.2M, 3.4G …).
+pub fn fmt_si(x: f64) -> String {
+    let (v, suf) = if x >= 1e12 {
+        (x / 1e12, "T")
+    } else if x >= 1e9 {
+        (x / 1e9, "G")
+    } else if x >= 1e6 {
+        (x / 1e6, "M")
+    } else if x >= 1e3 {
+        (x / 1e3, "K")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2}{suf}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.00 s");
+        assert_eq!(fmt_time(0.002), "2.00 ms");
+        assert_eq!(fmt_time(2e-6), "2.0 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn fmt_si_units() {
+        assert_eq!(fmt_si(1234.0), "1.23K");
+        assert_eq!(fmt_si(1.5e9), "1.50G");
+        assert_eq!(fmt_si(3.0), "3.00");
+    }
+}

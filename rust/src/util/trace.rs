@@ -1,0 +1,103 @@
+//! Chrome-trace (chrome://tracing / Perfetto) export for pipeline
+//! timelines — the Fig 11 "real vs simulated trace" artifact.
+
+use std::fmt::Write as _;
+
+/// One complete-event ("X") trace entry.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event name, e.g. "F3@s2" (op + micro-batch @ stage).
+    pub name: String,
+    /// Category: "F" | "B" | "W" | "comm" | "bubble".
+    pub cat: String,
+    /// Start time in microseconds.
+    pub ts_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+    /// Process id — we use the device id.
+    pub pid: usize,
+    /// Thread id — 0 compute, 1 comm lane.
+    pub tid: usize,
+}
+
+/// Serialize to the Chrome trace JSON-array format.
+pub fn to_chrome_trace(events: &[TraceEvent]) -> String {
+    let mut out = String::from("[\n");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let _ = write!(
+            out,
+            r#" {{"name":"{}","cat":"{}","ph":"X","ts":{:.3},"dur":{:.3},"pid":{},"tid":{}}}"#,
+            e.name, e.cat, e.ts_us, e.dur_us, e.pid, e.tid
+        );
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Render an ASCII timeline (one row per device) — the quick-look
+/// version of Fig 11 for terminals and EXPERIMENTS.md.
+pub fn ascii_timeline(events: &[TraceEvent], devices: usize, width: usize) -> String {
+    let t_end = events
+        .iter()
+        .map(|e| e.ts_us + e.dur_us)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut rows = vec![vec![' '; width]; devices];
+    for e in events {
+        if e.tid != 0 || e.pid >= devices {
+            continue;
+        }
+        let c = match e.cat.as_str() {
+            "F" => 'F',
+            "B" => 'B',
+            "W" => 'w',
+            _ => continue,
+        };
+        let a = ((e.ts_us / t_end) * width as f64) as usize;
+        let b = (((e.ts_us + e.dur_us) / t_end) * width as f64).ceil() as usize;
+        for x in a..b.min(width) {
+            rows[e.pid][x] = c;
+        }
+    }
+    let mut out = String::new();
+    for (d, row) in rows.iter().enumerate() {
+        let _ = writeln!(out, "dev{d:>2} |{}|", row.iter().collect::<String>());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, cat: &str, ts: f64, dur: f64, pid: usize) -> TraceEvent {
+        TraceEvent {
+            name: name.into(),
+            cat: cat.into(),
+            ts_us: ts,
+            dur_us: dur,
+            pid,
+            tid: 0,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let evs = vec![ev("F0", "F", 0.0, 5.0, 0), ev("B0", "B", 5.0, 9.0, 1)];
+        let s = to_chrome_trace(&evs);
+        let v = crate::util::json::Json::parse(&s).unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn ascii_rows_per_device() {
+        let evs = vec![ev("F0", "F", 0.0, 10.0, 0), ev("B0", "B", 10.0, 10.0, 1)];
+        let s = ascii_timeline(&evs, 2, 20);
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.contains('F'));
+        assert!(s.contains('B'));
+    }
+}

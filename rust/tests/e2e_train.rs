@@ -1,0 +1,134 @@
+//! End-to-end RealCluster integration tests against the `micro`
+//! artifacts (skipped with a notice if `make artifacts` hasn't run).
+
+use std::sync::Arc;
+
+use adaptis::baselines::Method;
+use adaptis::runtime::ArtifactStore;
+use adaptis::trainer::{calibrate, demo_model, train, TrainMethod, TrainOptions};
+
+fn open_micro() -> Option<Arc<ArtifactStore>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/micro");
+    match ArtifactStore::open(dir) {
+        Ok(s) => Some(Arc::new(s)),
+        Err(_) => {
+            eprintln!("skipping e2e test: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn adaptis_pipeline_trains_and_matches_baseline_losses() {
+    let Some(store) = open_micro() else { return };
+    let kinds = demo_model("micro");
+    let mk = |method: TrainMethod| TrainOptions {
+        p: 2,
+        nmb: 4,
+        steps: 5,
+        lr: 0.2,
+        seed: 3,
+        method,
+        collect_trace: false,
+        live_log: false,
+    };
+    let ada = train(store.clone(), &kinds, &mk(TrainMethod::AdaPtis)).unwrap();
+    let base =
+        train(store, &kinds, &mk(TrainMethod::Baseline(Method::S1F1B))).unwrap();
+    // Same math, different schedule: losses must agree step by step.
+    for (i, (a, b)) in ada.losses.iter().zip(&base.losses).enumerate() {
+        assert!((a - b).abs() < 1e-3, "step {i}: adaptis {a} vs s1f1b {b}");
+    }
+    assert!(ada.losses.last().unwrap() < &ada.losses[0]);
+}
+
+#[test]
+fn interleaved_virtual_stages_train_correctly() {
+    // I-1F1B places 2 virtual stages per device — exercises colocated
+    // stage chaining in the worker.
+    let Some(store) = open_micro() else { return };
+    let kinds = demo_model("micro");
+    let opts = TrainOptions {
+        p: 2,
+        nmb: 4,
+        steps: 4,
+        lr: 0.2,
+        seed: 5,
+        method: TrainMethod::Baseline(Method::I1F1B),
+        collect_trace: false,
+        live_log: false,
+    };
+    let r = train(store.clone(), &kinds, &opts).unwrap();
+    let ref_opts = TrainOptions {
+        method: TrainMethod::Baseline(Method::GPipe),
+        ..opts
+    };
+    let rr = train(store, &kinds, &ref_opts).unwrap();
+    for (i, (a, b)) in r.losses.iter().zip(&rr.losses).enumerate() {
+        assert!((a - b).abs() < 1e-3, "step {i}: i1f1b {a} vs gpipe {b}");
+    }
+}
+
+#[test]
+fn trace_collection_produces_compute_events() {
+    let Some(store) = open_micro() else { return };
+    let kinds = demo_model("micro");
+    let opts = TrainOptions {
+        p: 2,
+        nmb: 2,
+        steps: 2,
+        lr: 0.1,
+        seed: 0,
+        method: TrainMethod::Baseline(Method::S1F1B),
+        collect_trace: true,
+        live_log: false,
+    };
+    let r = train(store, &kinds, &opts).unwrap();
+    // Final step: 2 devices × 2 mb × (F+B) = 8 compute events minimum.
+    assert!(r.trace.len() >= 8, "trace has {} events", r.trace.len());
+    assert!(r.trace.iter().any(|e| e.cat == "F"));
+    assert!(r.trace.iter().any(|e| e.cat == "B"));
+}
+
+#[test]
+fn calibration_orders_layer_costs_sensibly() {
+    let Some(store) = open_micro() else { return };
+    let kinds = demo_model("micro");
+    let prof = calibrate(&store, &kinds, 2).unwrap();
+    assert_eq!(prof.n_layers(), kinds.len());
+    for (k, c) in kinds.iter().zip(&prof.layers) {
+        assert!(c.f > 0.0, "{k:?} fwd time");
+        assert!(c.f < 1.0, "{k:?} fwd time absurd: {}", c.f);
+    }
+    // The vocab head must be the most expensive forward (512-way
+    // softmax vs tiny hidden layers) — heterogeneity is visible even
+    // at micro scale.
+    let head = prof.layers.last().unwrap().f + prof.layers.last().unwrap().b;
+    let ffn_idx = kinds
+        .iter()
+        .position(|k| k.name() == "ffn")
+        .unwrap();
+    let ffn = prof.layers[ffn_idx].f;
+    assert!(head > ffn, "head {head} !> ffn {ffn}");
+}
+
+#[test]
+fn four_way_pipeline_with_single_layer_stages() {
+    // P=4 over 7 layers: some stages get a single layer; exercises
+    // short stages + head/embed boundary stages.
+    let Some(store) = open_micro() else { return };
+    let kinds = demo_model("micro");
+    let opts = TrainOptions {
+        p: 4,
+        nmb: 4,
+        steps: 3,
+        lr: 0.2,
+        seed: 1,
+        method: TrainMethod::Baseline(Method::ZB),
+        collect_trace: false,
+        live_log: false,
+    };
+    let r = train(store, &kinds, &opts).unwrap();
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    assert!(r.losses.last().unwrap() < &r.losses[0]);
+}

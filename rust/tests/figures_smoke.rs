@@ -1,0 +1,77 @@
+//! Smoke tests for the figure harnesses (fast mode): every analytic
+//! harness must run and contain its key claims' structure.
+
+use adaptis::figures::{run_figure, Ctx};
+
+fn ctx() -> Ctx {
+    Ctx { fast: true, ..Ctx::default() }
+}
+
+#[test]
+fn fig4_and_table5_render() {
+    let s = run_figure("fig4", &ctx()).unwrap();
+    assert!(s.contains("schedules"));
+    let t = run_figure("table5", &ctx()).unwrap();
+    assert!(t.contains("DeepSeek") && t.contains("512K"));
+}
+
+#[test]
+fn fig9_adaptis_wins_every_seqlen() {
+    let s = run_figure("fig9", &ctx()).unwrap();
+    let speedups: Vec<f64> = s
+        .lines()
+        .filter(|l| l.starts_with('|') && l.contains('x'))
+        .filter_map(|l| {
+            l.rsplit('|')
+                .nth(1)
+                .and_then(|c| c.trim().trim_end_matches('x').parse().ok())
+        })
+        .collect();
+    assert!(!speedups.is_empty(), "{s}");
+    assert!(speedups.iter().all(|&x| x >= 1.0), "{speedups:?}\n{s}");
+}
+
+#[test]
+fn fig10_coopt_beats_single_phases() {
+    let s = run_figure("fig10", &ctx()).unwrap();
+    for line in s.lines().filter(|l| l.starts_with('|') && l.contains('x')) {
+        let cells: Vec<f64> = line
+            .split('|')
+            .filter_map(|c| c.trim().trim_end_matches('x').parse().ok())
+            .collect();
+        if cells.len() == 4 {
+            let coopt = cells[3];
+            for single in &cells[..3] {
+                assert!(
+                    coopt >= single - 1e-9,
+                    "co-opt {coopt} must dominate single {single}\n{s}"
+                );
+            }
+            assert!(coopt > 1.05, "co-opt should clearly beat S-1F1B\n{s}");
+        }
+    }
+}
+
+#[test]
+fn fig13_exact_explodes_adaptis_fast() {
+    let s = run_figure("fig13", &ctx()).unwrap();
+    assert!(s.contains("AdaPtis time"), "{s}");
+    // AdaPtis generation finishes in seconds even in fast mode.
+    assert!(s.contains(" s ("), "{s}");
+}
+
+#[test]
+fn fig14_scaling_increases_throughput() {
+    let s = run_figure("fig14", &ctx()).unwrap();
+    let scalings: Vec<f64> = s
+        .lines()
+        .filter(|l| l.starts_with('|') && l.contains('%'))
+        .filter_map(|l| {
+            l.rsplit('|')
+                .nth(1)
+                .and_then(|c| c.trim().trim_end_matches('%').parse().ok())
+        })
+        .collect();
+    assert!(scalings.len() >= 2, "{s}");
+    assert!(scalings.last().unwrap() > &150.0, "{scalings:?}");
+}

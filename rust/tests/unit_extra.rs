@@ -1,0 +1,145 @@
+//! Additional cross-module behaviour tests (edge cases not covered by
+//! the per-module unit tests).
+
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::ilp;
+use adaptis::model::build_model;
+use adaptis::partition::{balanced, uniform};
+use adaptis::placement::sequential;
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::greedy::{greedy_schedule, SchedKnobs};
+
+fn profile(fam: Family, p: usize, nmb: usize, seq: usize) -> ProfiledData {
+    let spec = build_model(&ModelCfg::table5(fam, Size::Small));
+    ProfiledData::analytical(
+        &spec,
+        &HardwareCfg::default(),
+        &ParallelCfg::new(p, 2, nmb, 1, seq),
+    )
+}
+
+#[test]
+fn mem_cap_factor_bounds_peak_memory() {
+    // Tightening the scheduler's memory knob must not increase the
+    // simulated peak, and a loose knob admits more in-flight work.
+    let prof = profile(Family::Gemma, 4, 32, 4096);
+    let part = uniform(prof.n_layers(), 4);
+    let plac = sequential(4);
+    let peak = |factor: f64| {
+        let knobs = SchedKnobs { mem_cap_factor: factor, ..SchedKnobs::default() };
+        let sch = greedy_schedule(&prof, &part, &plac, 32, knobs);
+        let r = simulate(&prof, &part, &plac, &sch, false).unwrap();
+        r.m_d.iter().cloned().fold(0.0, f64::max)
+    };
+    let tight = peak(0.05);
+    let loose = peak(1.0);
+    assert!(tight <= loose * 1.001, "tight {tight} !<= loose {loose}");
+}
+
+#[test]
+fn oom_flag_raised_when_capacity_shrinks() {
+    let mut prof = profile(Family::Gemma, 4, 8, 4096);
+    let part = uniform(prof.n_layers(), 4);
+    let plac = sequential(4);
+    let sch = greedy_schedule(&prof, &part, &plac, 8, SchedKnobs::default());
+    let ok = simulate(&prof, &part, &plac, &sch, false).unwrap();
+    assert!(!ok.oom);
+    // Capacity below the static weights alone ⇒ OOM must be flagged.
+    prof.mem_capacity = ok.static_d.iter().cloned().fold(0.0, f64::max) * 0.5;
+    let sch2 = greedy_schedule(&prof, &part, &plac, 8, SchedKnobs::default());
+    let bad = simulate(&prof, &part, &plac, &sch2, false).unwrap();
+    assert!(bad.oom);
+}
+
+#[test]
+fn overlap_time_accounted_when_enabled() {
+    let prof = profile(Family::Llama2, 4, 16, 4096);
+    let part = uniform(prof.n_layers(), 4);
+    let plac = sequential(4);
+    let mut sch = greedy_schedule(&prof, &part, &plac, 16, SchedKnobs::default());
+    sch.overlap_aware = true;
+    let r = simulate(&prof, &part, &plac, &sch, false).unwrap();
+    let hidden: f64 = r.overlap_d.iter().sum();
+    assert!(hidden > 0.0, "some comm must hide under compute");
+    sch.overlap_aware = false;
+    let r2 = simulate(&prof, &part, &plac, &sch, false).unwrap();
+    assert_eq!(r2.overlap_d.iter().sum::<f64>(), 0.0);
+    assert!(r2.comm_block_d.iter().sum::<f64>() > 0.0);
+}
+
+#[test]
+fn balanced_partition_handles_extremes() {
+    let prof = profile(Family::Gemma, 4, 8, 1024);
+    let n = prof.n_layers();
+    // One stage per layer.
+    let p1 = balanced(&prof, n);
+    assert_eq!(p1.n_stages(), n);
+    assert!((0..n).all(|s| p1.stage_len(s) == 1));
+    // Single stage.
+    let p2 = balanced(&prof, 1);
+    assert_eq!(p2.n_stages(), 1);
+    assert_eq!(p2.stage_len(0), n);
+}
+
+#[test]
+fn exact_full_finds_partition_at_least_as_good_as_uniform() {
+    // Tiny instance: 4 layers, 2 stages, 2 micro-batches.
+    let spec = build_model(&ModelCfg {
+        blocks: 1,
+        ..ModelCfg::table5(Family::Gemma, Size::Small)
+    });
+    let par = ParallelCfg::new(2, 2, 2, 1, 1024);
+    let prof = ProfiledData::analytical(&spec, &HardwareCfg::default(), &par);
+    let full = ilp::exact_full(&prof, 2, 2, 20.0);
+    assert!(full.complete);
+    let (part, plac) = ilp::default_setup(&prof, 2);
+    let sched_only = ilp::exact_schedule(&prof, &part, &plac, 2, 20.0);
+    assert!(
+        full.best <= sched_only.best + 1e-12,
+        "joint search {} !<= schedule-only {}",
+        full.best,
+        sched_only.best
+    );
+}
+
+#[test]
+fn throughput_decreases_with_sequence_length_per_token_cost() {
+    // Longer sequences: more tokens per step but attention grows
+    // super-linearly ⇒ tokens/s must not *increase* linearly forever.
+    let plac = sequential(4);
+    let mut last_eff = f64::INFINITY;
+    for seq in [1024usize, 8192, 32768] {
+        let prof = profile(Family::Llama2, 4, 16, seq);
+        let part = uniform(prof.n_layers(), 4);
+        let sch = greedy_schedule(&prof, &part, &plac, 16, SchedKnobs::default());
+        let r = simulate(&prof, &part, &plac, &sch, false).unwrap();
+        let tput = r.throughput((16 * seq) as f64);
+        let eff = tput / seq as f64; // per-token efficiency proxy
+        assert!(eff < last_eff, "seq {seq}: eff {eff} !< {last_eff}");
+        last_eff = eff;
+    }
+}
+
+#[test]
+fn fig1_configuration_reproduces_heterogeneity_ordering() {
+    // The core motivation (Fig 1): under identical (L, P, T, nmb),
+    // S-1F1B bubbles grow when vocab explodes or layers mix.
+    let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 16, mbs: 1, seq: 4096 };
+    let ratio = |fam: Family| {
+        let mut cfg = ModelCfg::table5(fam, Size::Small);
+        cfg.blocks = 32;
+        let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let part = uniform(prof.n_layers(), 4);
+        let plac = sequential(4);
+        let sch = adaptis::schedule::builders::one_f_one_b(4, 16);
+        simulate(&prof, &part, &plac, &sch, false).unwrap().bubble_ratio()
+    };
+    let llama = ratio(Family::Llama2);
+    for fam in [Family::Gemma, Family::DeepSeek, Family::NemotronH] {
+        assert!(
+            ratio(fam) > llama,
+            "{fam:?} must bubble more than LLaMA-2 ({llama})"
+        );
+    }
+}
