@@ -29,17 +29,17 @@ fn main() {
             std::hint::black_box(prog.total_instrs());
         });
         let prog = lower(&sch, &plac, LowerOptions::default());
-        report_rate("instructions lowered", t, prog.total_instrs() as f64, "instr");
+        report_rate("instructions lowered", t.median, prog.total_instrs() as f64, "instr");
 
         let t = bench(&format!("check_rendezvous P={p} nmb={nmb}"), 10, 0.5, || {
             check_rendezvous(&prog).unwrap();
         });
-        report_rate("instructions checked", t, prog.total_instrs() as f64, "instr");
+        report_rate("instructions checked", t.median, prog.total_instrs() as f64, "instr");
 
         let t = bench(&format!("sim run_timed P={p} nmb={nmb}"), 10, 0.5, || {
             let r = run_timed(&prof, &part, &prog, false).unwrap();
             std::hint::black_box(r.makespan);
         });
-        report_rate("instructions executed", t, prog.total_instrs() as f64, "instr");
+        report_rate("instructions executed", t.median, prog.total_instrs() as f64, "instr");
     }
 }

@@ -1,9 +1,15 @@
 //! Pipeline Generator end-to-end timing — the measured side of Fig 13
 //! (generation must stay within seconds at paper-scale instances) plus
 //! the greedy list-scheduler construction rate.
+//!
+//! `generate()` is benchmarked under both evaluation engines — the
+//! fused/parallel fast path and the retained schedule-then-resimulate
+//! reference path.  Both run the identical search (same pipelines, same
+//! eval counts — asserted here), so the wall-clock ratio is a pure
+//! hot-path speedup.  `--smoke` shrinks the sweep for CI.
 
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
-use adaptis::generator::{generate, GenOptions};
+use adaptis::generator::{generate, EvalEngine, GenOptions};
 use adaptis::model::build_model;
 use adaptis::partition::uniform;
 use adaptis::placement::sequential;
@@ -12,9 +18,15 @@ use adaptis::schedule::greedy::{greedy_schedule, SchedKnobs};
 use adaptis::util::bench::{bench, report_rate};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sched_sizes: &[(Size, usize, usize)] = if smoke {
+        &[(Size::Small, 4, 16)]
+    } else {
+        &[(Size::Small, 4, 16), (Size::Medium, 8, 64), (Size::Large, 16, 256)]
+    };
+
     println!("== greedy list scheduler ==");
-    for (size, p, nmb) in [(Size::Small, 4, 16), (Size::Medium, 8, 64), (Size::Large, 16, 256)]
-    {
+    for &(size, p, nmb) in sched_sizes {
         let cfg = ModelCfg::table5(Family::NemotronH, size);
         let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
         let prof =
@@ -22,26 +34,51 @@ fn main() {
         let part = uniform(prof.n_layers(), p);
         let plac = sequential(p);
         let label = format!("greedy_schedule {} P={p} nmb={nmb}", size.name());
-        let t = bench(&label, 10, 0.5, || {
+        let t = bench(&label, 10, if smoke { 0.05 } else { 0.5 }, || {
             let s = greedy_schedule(&prof, &part, &plac, nmb, SchedKnobs::default());
             std::hint::black_box(s.total_slots());
         });
-        report_rate("slots built", t, (3 * p * nmb) as f64, "slots");
+        report_rate("slots built", t.median, (3 * p * nmb) as f64, "slots");
     }
 
-    println!("== pipeline generation (Fig 13 measured) ==");
-    for (size, p, nmb) in [(Size::Small, 4, 64), (Size::Medium, 8, 128), (Size::Large, 16, 256)]
-    {
+    println!("== pipeline generation (Fig 13 measured; fast vs reference engine) ==");
+    let gen_sizes: &[(Size, usize, usize)] = if smoke {
+        &[(Size::Small, 4, 64)]
+    } else {
+        &[(Size::Small, 4, 64), (Size::Medium, 8, 128), (Size::Large, 16, 256)]
+    };
+    for &(size, p, nmb) in gen_sizes {
         let cfg = ModelCfg::table5(Family::NemotronH, size);
         let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
         let prof =
             ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
         let mut opts = GenOptions::new(p, nmb);
         opts.max_iters = 32;
-        let label = format!("generate {} P={p} nmb={nmb}", size.name());
-        bench(&label, 1, 0.0, || {
+        let mut ref_opts = opts.clone();
+        ref_opts.engine = EvalEngine::Reference;
+
+        // Identical search under both engines: same result, same evals.
+        let fast = generate(&prof, &opts);
+        let refr = generate(&prof, &ref_opts);
+        assert_eq!(fast.evals, refr.evals, "engines must do equal work");
+        assert_eq!(fast.report.total, refr.report.total, "engines must agree");
+
+        let label = format!("generate[fast] {} P={p} nmb={nmb}", size.name());
+        let t_fast = bench(&label, 1, 0.0, || {
             let g = generate(&prof, &opts);
             std::hint::black_box((g.evals, g.report.total));
         });
+        let label = format!("generate[ref]  {} P={p} nmb={nmb}", size.name());
+        let t_ref = bench(&label, 1, 0.0, || {
+            let g = generate(&prof, &ref_opts);
+            std::hint::black_box((g.evals, g.report.total));
+        });
+        report_rate("candidate evals (fast)", t_fast.median, fast.evals as f64, "evals");
+        report_rate("candidate evals (ref) ", t_ref.median, refr.evals as f64, "evals");
+        println!(
+            "      end-to-end speedup at {} evals                {:.2}x",
+            fast.evals,
+            t_ref.median / t_fast.median
+        );
     }
 }

@@ -1,35 +1,123 @@
 //! Performance-model hot path: slot-events simulated per second across
 //! problem sizes.  The Pipeline Generator evaluates thousands of
 //! candidates per run, so this is the L3 roofline that bounds Fig 13.
+//!
+//! Compares three paths over identical inputs:
+//! - `reference`: the retained O(slots · P) scan loop
+//!   (`simulate_reference`), the pre-optimization baseline;
+//! - `fast`: the O(slots · log P) event-driven engine with a reused
+//!   `SimArena` and prebuilt `StageTable` (the generator's replay path);
+//! - `fused`: schedule construction + Algorithm-1 accounting in one
+//!   pass (`fused_eval`), the generator's per-candidate eval.
+//!
+//! Emits machine-readable `BENCH_perfmodel.json` (slots/s per config,
+//! medians) so the perf trajectory is tracked from PR 1 onward.
+//! `--smoke` runs the Small config only with a tiny budget (CI).
 
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
 use adaptis::model::build_model;
 use adaptis::partition::uniform;
 use adaptis::placement::sequential;
-use adaptis::perfmodel::simulate;
+use adaptis::perfmodel::{
+    fused_score, simulate_in, simulate_reference, SimArena, StageTable,
+};
 use adaptis::profile::ProfiledData;
 use adaptis::schedule::builders::{one_f_one_b, zb_h1};
+use adaptis::schedule::greedy::SchedKnobs;
 use adaptis::util::bench::{bench, report_rate};
+use adaptis::util::json::{arr, num, obj, s, Json};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (iters, budget) = if smoke { (5, 0.05) } else { (20, 0.5) };
+    let sizes: &[(Size, usize, usize)] = if smoke {
+        &[(Size::Small, 4, 16)]
+    } else {
+        &[(Size::Small, 4, 16), (Size::Medium, 8, 64), (Size::Large, 16, 256)]
+    };
+
     println!("== perfmodel ==");
-    for (size, p, nmb) in [(Size::Small, 4, 16), (Size::Medium, 8, 64), (Size::Large, 16, 256)]
-    {
+    let mut cfg_rows: Vec<Json> = Vec::new();
+    let mut fused_rows: Vec<Json> = Vec::new();
+    for &(size, p, nmb) in sizes {
         let cfg = ModelCfg::table5(Family::NemotronH, size);
         let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
         let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
         let part = uniform(prof.n_layers(), p);
         let plac = sequential(p);
+        let table = StageTable::build(&prof, &part, &plac);
+        let mut arena = SimArena::new();
+
         for (name, sch) in
             [("1f1b", one_f_one_b(p, nmb)), ("zb-h1", zb_h1(p, nmb))]
         {
             let slots = sch.total_slots() as f64;
-            let label = format!("simulate {} P={p} nmb={nmb} ({name})", size.name());
-            let t = bench(&label, 20, 0.5, || {
-                let r = simulate(&prof, &part, &plac, &sch, false).unwrap();
+
+            let label = format!("reference {} P={p} nmb={nmb} ({name})", size.name());
+            let t_ref = bench(&label, iters, budget, || {
+                let r = simulate_reference(&prof, &part, &plac, &sch, false).unwrap();
                 std::hint::black_box(r.total);
             });
-            report_rate("slot events", t, slots, "slots");
+            report_rate("slot events (reference)", t_ref.median, slots, "slots");
+
+            let label = format!("fast      {} P={p} nmb={nmb} ({name})", size.name());
+            let t_fast = bench(&label, iters, budget, || {
+                let r =
+                    simulate_in(&mut arena, &table, prof.mem_capacity, &sch, false).unwrap();
+                std::hint::black_box(r.total);
+            });
+            report_rate("slot events (fast)", t_fast.median, slots, "slots");
+
+            let speedup = t_ref.median / t_fast.median;
+            println!("      speedup (median reference/fast)               {speedup:.2}x");
+            cfg_rows.push(obj(vec![
+                ("size", s(size.name())),
+                ("p", num(p as f64)),
+                ("nmb", num(nmb as f64)),
+                ("schedule", s(name)),
+                ("slots", num(slots)),
+                ("reference_s_per_iter", num(t_ref.median)),
+                ("reference_slots_per_s", num(slots / t_ref.median)),
+                ("fast_s_per_iter", num(t_fast.median)),
+                ("fast_slots_per_s", num(slots / t_fast.median)),
+                ("speedup", num(speedup)),
+                ("reference_p95_s", num(t_ref.p95)),
+                ("fast_p95_s", num(t_fast.p95)),
+            ]));
         }
+
+        // Fused schedule+simulate: the generator's per-candidate cost.
+        let knobs = SchedKnobs::default();
+        let ops = (table.n_stages * nmb * 3) as f64;
+        let label = format!("fused eval {} P={p} nmb={nmb}", size.name());
+        let t_fused = bench(&label, iters, budget, || {
+            let score = fused_score(&table, prof.mem_capacity, nmb, knobs, &mut arena);
+            std::hint::black_box(score);
+        });
+        report_rate("slot ops (fused build+sim)", t_fused.median, ops, "slots");
+        report_rate("candidate evals", t_fused.median, 1.0, "evals");
+        fused_rows.push(obj(vec![
+            ("size", s(size.name())),
+            ("p", num(p as f64)),
+            ("nmb", num(nmb as f64)),
+            ("ops", num(ops)),
+            ("s_per_eval", num(t_fused.median)),
+            ("evals_per_s", num(1.0 / t_fused.median)),
+            ("slot_ops_per_s", num(ops / t_fused.median)),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("bench", s("perfmodel")),
+        ("smoke", Json::Bool(smoke)),
+        ("configs", arr(cfg_rows)),
+        ("fused", arr(fused_rows)),
+    ]);
+    // Anchor to the package dir so the artifact lands at
+    // rust/BENCH_perfmodel.json regardless of the invoking CWD.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_perfmodel.json");
+    match std::fs::write(path, out.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -415,7 +415,12 @@ pub fn fig13(ctx: &Ctx) -> String {
             crate::util::fmt_si(nodes as f64),
             measured,
             extrapolated,
-            format!("{:.2} s ({} evals)", g.elapsed_s, g.evals),
+            format!(
+                "{:.2} s ({} evals, {:.0} evals/s)",
+                g.elapsed_s,
+                g.evals,
+                g.evals as f64 / g.elapsed_s.max(1e-9)
+            ),
         ]);
     }
     let _ = write!(out, "{}", t.render());

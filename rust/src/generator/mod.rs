@@ -26,6 +26,20 @@
 //! explosion of joint search (Fig 4) while still escaping the
 //! single-phase local optima the paper shows for partially adaptive
 //! methods (Fig 10).
+//!
+//! **Evaluation hot path** (DESIGN.md §Hot path): every candidate is a
+//! [`Prepared`] bundle of (partition, placement, knobs) plus its
+//! [`StageTable`] — built incrementally for single-boundary partition
+//! moves, cloned for knob-only moves.  Scoring goes through the fused
+//! schedule+simulate pass ([`crate::perfmodel::fused_eval`]) on
+//! per-thread [`SimArena`]s, and move batches are scored concurrently
+//! with `std::thread::scope`; selection is by `(score, index)` so
+//! results are bit-identical to the serial order.  Set
+//! [`GenOptions::engine`] to [`EvalEngine::Reference`] to route every
+//! eval through the unfused two-pass path (materialise the schedule,
+//! re-simulate with the O(slots·P) reference kernel, single-threaded) —
+//! the two engines produce identical pipelines at identical eval
+//! counts, which is what `benches/generator.rs` compares.
 
 pub mod searchspace;
 
@@ -34,7 +48,9 @@ use std::time::Instant;
 use crate::baselines::Pipeline;
 use crate::partition::{balanced, uniform, Partition};
 use crate::placement::{interleaved, sequential, wave, Placement};
-use crate::perfmodel::{simulate, PerfReport};
+use crate::perfmodel::{
+    fused_eval, fused_score, simulate, simulate_reference, PerfReport, SimArena, StageTable,
+};
 use crate::profile::ProfiledData;
 use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
 
@@ -56,6 +72,17 @@ impl PhaseMask {
     }
 }
 
+/// How candidate evaluations are executed (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalEngine {
+    /// Fused schedule+simulate, reusable arenas, parallel move batches.
+    Fast,
+    /// Materialise each schedule and re-simulate with the reference
+    /// kernel, serially — the pre-optimization behaviour, retained for
+    /// differential tests and bench baselines.
+    Reference,
+}
+
 /// Generator options.
 #[derive(Clone, Debug)]
 pub struct GenOptions {
@@ -68,6 +95,8 @@ pub struct GenOptions {
     pub seed_s1f1b_only: bool,
     /// Maximum virtual stages per device explored by placement moves.
     pub max_chunks: usize,
+    /// Candidate-evaluation engine (identical results either way).
+    pub engine: EvalEngine,
 }
 
 impl GenOptions {
@@ -79,6 +108,7 @@ impl GenOptions {
             phases: PhaseMask::all(),
             seed_s1f1b_only: false,
             max_chunks: 4,
+            engine: EvalEngine::Fast,
         }
     }
 }
@@ -111,22 +141,124 @@ struct Cand {
     knobs: SchedKnobs,
 }
 
+/// A candidate bundled with its stage-cost table, ready to score.
+struct Prepared {
+    desc: String,
+    cand: Cand,
+    table: StageTable,
+}
+
+impl Prepared {
+    fn fresh(profile: &ProfiledData, desc: String, cand: Cand) -> Prepared {
+        let table = StageTable::build(profile, &cand.part, &cand.plac);
+        Prepared { desc, cand, table }
+    }
+}
+
+/// Score one candidate: step makespan, +inf on OOM / deadlock (Eq. 2).
+fn eval_candidate(
+    profile: &ProfiledData,
+    nmb: usize,
+    engine: EvalEngine,
+    prep: &Prepared,
+    arena: &mut SimArena,
+) -> f64 {
+    match engine {
+        EvalEngine::Fast => {
+            fused_score(&prep.table, profile.mem_capacity, nmb, prep.cand.knobs, arena)
+        }
+        EvalEngine::Reference => {
+            let sch =
+                greedy_schedule(profile, &prep.cand.part, &prep.cand.plac, nmb, prep.cand.knobs);
+            match simulate_reference(profile, &prep.cand.part, &prep.cand.plac, &sch, false)
+            {
+                Ok(r) if !r.oom => r.total,
+                Ok(_) => f64::INFINITY,
+                Err(_) => f64::INFINITY,
+            }
+        }
+    }
+}
+
 struct Evaluator<'a> {
     profile: &'a ProfiledData,
     nmb: usize,
+    engine: EvalEngine,
     evals: usize,
+    arena: SimArena,
 }
 
 impl<'a> Evaluator<'a> {
-    /// Build the schedule and simulate; returns (score, report).
-    /// OOM candidates score +inf (constraint Eq. 2).
-    fn eval(&mut self, c: &Cand) -> (f64, Option<PerfReport>) {
+    fn new(profile: &'a ProfiledData, nmb: usize, engine: EvalEngine) -> Self {
+        Evaluator { profile, nmb, engine, evals: 0, arena: SimArena::new() }
+    }
+
+    /// Score a whole move batch.  With the fast engine, candidates are
+    /// split across scoped threads (each with its own arena); output
+    /// order is the input order, so downstream `(score, index)`
+    /// selection is deterministic and identical to a serial run.
+    fn scores(&mut self, batch: &[Prepared]) -> Vec<f64> {
+        self.evals += batch.len();
+        let n = batch.len();
+        // Thread spawn/join costs tens of µs; only fan out when the
+        // batch carries enough simulated ops to amortise it, else the
+        // serial loop (reused arena) wins.  Same results either way.
+        let work_per_eval =
+            batch.first().map_or(0, |prep| prep.table.n_stages * self.nmb);
+        let threads = match self.engine {
+            EvalEngine::Reference => 1,
+            EvalEngine::Fast if n < 4 || work_per_eval < 256 => 1,
+            EvalEngine::Fast => std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1)
+                .min(n),
+        };
+        if threads <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for prep in batch {
+                out.push(eval_candidate(
+                    self.profile,
+                    self.nmb,
+                    self.engine,
+                    prep,
+                    &mut self.arena,
+                ));
+            }
+            return out;
+        }
+        let mut out = vec![f64::INFINITY; n];
+        let chunk = (n + threads - 1) / threads;
+        let (profile, nmb, engine) = (self.profile, self.nmb, self.engine);
+        std::thread::scope(|sc| {
+            for (bch, och) in batch.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                sc.spawn(move || {
+                    let mut arena = SimArena::new();
+                    for (prep, o) in bch.iter().zip(och.iter_mut()) {
+                        *o = eval_candidate(profile, nmb, engine, prep, &mut arena);
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// Full report for the current pipeline (bottleneck attribution).
+    fn report(&mut self, cand: &Cand, table: &StageTable) -> Option<PerfReport> {
         self.evals += 1;
-        let sch = greedy_schedule(self.profile, &c.part, &c.plac, self.nmb, c.knobs);
-        match simulate(self.profile, &c.part, &c.plac, &sch, false) {
-            Ok(r) if !r.oom => (r.total, Some(r)),
-            Ok(r) => (f64::INFINITY, Some(r)),
-            Err(_) => (f64::INFINITY, None),
+        match self.engine {
+            EvalEngine::Fast => Some(fused_eval(
+                table,
+                self.profile.mem_capacity,
+                self.nmb,
+                cand.knobs,
+                &mut self.arena,
+                None,
+            )),
+            EvalEngine::Reference => {
+                let sch =
+                    greedy_schedule(self.profile, &cand.part, &cand.plac, self.nmb, cand.knobs);
+                simulate_reference(self.profile, &cand.part, &cand.plac, &sch, false).ok()
+            }
         }
     }
 }
@@ -136,7 +268,7 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     let t0 = Instant::now();
     let n_layers = profile.n_layers();
     let p = opts.p;
-    let mut ev = Evaluator { profile, nmb: opts.nmb, evals: 0 };
+    let mut ev = Evaluator::new(profile, opts.nmb, opts.engine);
     let mut log = Vec::new();
 
     // ---- Seed selection --------------------------------------------------
@@ -152,13 +284,13 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         mem_cap_factor: 1.0,
         overlap_aware: false,
     };
-    let mut seeds: Vec<Cand> = Vec::new();
+    let mut seeds: Vec<Prepared> = Vec::new();
     if opts.seed_s1f1b_only {
-        seeds.push(Cand {
-            part: uniform(n_layers, p),
-            plac: sequential(p),
-            knobs: knobs_1f1b,
-        });
+        seeds.push(Prepared::fresh(
+            profile,
+            "S-1F1B seed".into(),
+            Cand { part: uniform(n_layers, p), plac: sequential(p), knobs: knobs_1f1b },
+        ));
     } else {
         let parts: Vec<Partition> = vec![uniform(n_layers, p), balanced(profile, p)];
         for part_seed in &parts {
@@ -177,20 +309,27 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
                     }
                 };
                 for knobs in [knobs_1f1b, knobs_zb] {
-                    seeds.push(Cand { part: part.clone(), plac: plac.clone(), knobs });
+                    seeds.push(Prepared::fresh(
+                        profile,
+                        "seed".into(),
+                        Cand { part: part.clone(), plac: plac.clone(), knobs },
+                    ));
                 }
             }
         }
     }
 
-    let mut best: Option<(f64, Cand)> = None;
-    for c in seeds {
-        let (score, _) = ev.eval(&c);
-        if best.as_ref().map_or(true, |(b, _)| score < *b) {
-            best = Some((score, c));
+    let seed_scores = ev.scores(&seeds);
+    let mut best_i = 0usize;
+    for (i, &sc) in seed_scores.iter().enumerate() {
+        if sc < seed_scores[best_i] {
+            best_i = i;
         }
     }
-    let (mut best_score, mut cur) = best.unwrap();
+    let mut best_score = seed_scores[best_i];
+    let chosen = seeds.swap_remove(best_i);
+    let mut cur = chosen.cand;
+    let mut cur_table = chosen.table;
     log.push(GenLogEntry {
         iter: 0,
         phase: "seed",
@@ -204,32 +343,38 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     });
 
     // ---- Bottleneck-phase tuning loop ------------------------------------
+    let mut cur_report = ev.report(&cur, &cur_table);
     let mut iter = 0;
     while iter < opts.max_iters {
         iter += 1;
         let mut improved = false;
 
         // Phase order: blame the phase with the strongest signal first.
-        for phase in phase_order(&mut ev, &cur, opts) {
-            let moves: Vec<(String, Cand)> = match phase {
-                "partition" => partition_moves(&mut ev, profile, &cur),
+        for phase in phase_order(cur_report.as_ref(), opts) {
+            let mut moves: Vec<Prepared> = match phase {
+                "partition" => {
+                    partition_moves(profile, &cur, &cur_table, cur_report.as_ref())
+                }
                 "placement" => placement_moves(profile, &cur, opts),
-                "schedule" => schedule_moves(&cur),
+                "schedule" => schedule_moves(&cur, &cur_table),
                 _ => unreachable!(),
             };
-            let mut best_move: Option<(f64, String, Cand)> = None;
-            for (desc, cand) in moves {
-                let (score, _) = ev.eval(&cand);
+            let scores = ev.scores(&moves);
+            let mut best_move: Option<(f64, usize)> = None;
+            for (i, &score) in scores.iter().enumerate() {
                 if score < best_score - 1e-12
-                    && best_move.as_ref().map_or(true, |(b, _, _)| score < *b)
+                    && best_move.map_or(true, |(b, _)| score < b)
                 {
-                    best_move = Some((score, desc, cand));
+                    best_move = Some((score, i));
                 }
             }
-            if let Some((score, desc, cand)) = best_move {
+            if let Some((score, i)) = best_move {
+                let prep = moves.swap_remove(i);
                 best_score = score;
-                cur = cand;
-                log.push(GenLogEntry { iter, phase, action: desc, total: score });
+                cur = prep.cand;
+                cur_table = prep.table;
+                log.push(GenLogEntry { iter, phase, action: prep.desc, total: score });
+                cur_report = ev.report(&cur, &cur_table);
                 improved = true;
                 break; // re-assess bottleneck from the new pipeline
             }
@@ -263,8 +408,7 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
 
 /// Decide phase attempt order from bottleneck signals (paper: "identify
 /// the bottleneck phase … and tune it accordingly").
-fn phase_order(ev: &mut Evaluator, cur: &Cand, opts: &GenOptions) -> Vec<&'static str> {
-    let (_, report) = ev.eval(cur);
+fn phase_order(report: Option<&PerfReport>, opts: &GenOptions) -> Vec<&'static str> {
     let mut order: Vec<(&'static str, f64)> = Vec::new();
     if let Some(r) = report {
         let max_busy = r.busy_d.iter().cloned().fold(0.0, f64::max);
@@ -287,30 +431,35 @@ fn phase_order(ev: &mut Evaluator, cur: &Cand, opts: &GenOptions) -> Vec<&'stati
     order.into_iter().map(|(n, _)| n).collect()
 }
 
-/// Partition tuning moves: all single-boundary shifts, plus a steered
-/// multi-shift that moves one layer from the lowest-bubble device
-/// toward the highest-bubble device (§4.3).
+/// Partition tuning moves: all single-boundary shifts (stage tables
+/// re-derived incrementally — only the two affected stages), plus a
+/// steered multi-shift that moves one layer from the lowest-bubble
+/// device toward the highest-bubble device (§4.3).
 fn partition_moves(
-    ev: &mut Evaluator,
     profile: &ProfiledData,
     cur: &Cand,
-) -> Vec<(String, Cand)> {
+    cur_table: &StageTable,
+    report: Option<&PerfReport>,
+) -> Vec<Prepared> {
     let mut out = Vec::new();
     let s_n = cur.part.n_stages();
     for b in 0..s_n - 1 {
         for dir in [true, false] {
             let mut part = cur.part.clone();
             if part.shift_boundary(b, dir) {
-                out.push((
-                    format!("shift boundary {b} {}", if dir { "←" } else { "→" }),
-                    Cand { part, plac: cur.plac.clone(), knobs: cur.knobs },
-                ));
+                let mut table = cur_table.clone();
+                table.update_boundary(profile, &part, b);
+                out.push(Prepared {
+                    desc: format!("shift boundary {b} {}", if dir { "←" } else { "→" }),
+                    cand: Cand { part, plac: cur.plac.clone(), knobs: cur.knobs },
+                    table,
+                });
             }
         }
     }
     // Steered flow: overloaded (low-bubble) device donates a layer to
     // the starved (high-bubble) device through the chain of boundaries.
-    if let (_, Some(r)) = ev.eval(cur) {
+    if let Some(r) = report {
         let donor = argmin(&r.bubble_d);
         let recv = argmax(&r.bubble_d);
         if donor != recv {
@@ -324,14 +473,14 @@ fn partition_moves(
                     ok &= part.shift_boundary(k, dir);
                 }
                 if ok && part.is_valid() {
-                    out.push((
+                    out.push(Prepared::fresh(
+                        profile,
                         format!("flow layer dev{donor}→dev{recv}"),
                         Cand { part, plac: cur.plac.clone(), knobs: cur.knobs },
                     ));
                 }
             }
         }
-        let _ = profile;
     }
     out
 }
@@ -342,7 +491,7 @@ fn placement_moves(
     profile: &ProfiledData,
     cur: &Cand,
     opts: &GenOptions,
-) -> Vec<(String, Cand)> {
+) -> Vec<Prepared> {
     let p = cur.plac.p;
     let n_layers = profile.n_layers();
     let mut out = Vec::new();
@@ -355,7 +504,11 @@ fn placement_moves(
                 continue;
             }
             let part = repartition_for(profile, p * v);
-            out.push((format!("{name} v={v}"), Cand { part, plac, knobs: cur.knobs }));
+            out.push(Prepared::fresh(
+                profile,
+                format!("{name} v={v}"),
+                Cand { part, plac, knobs: cur.knobs },
+            ));
             if v == 1 {
                 break; // wave(p,1) == interleaved(p,1) == sequential
             }
@@ -368,7 +521,8 @@ fn placement_moves(
             let mut plac = cur.plac.clone();
             plac.swap_stages(s, s + 1);
             if plac.is_valid() {
-                out.push((
+                out.push(Prepared::fresh(
+                    profile,
                     format!("swap stages {s},{}", s + 1),
                     Cand { part: cur.part.clone(), plac, knobs: cur.knobs },
                 ));
@@ -378,8 +532,9 @@ fn placement_moves(
     out
 }
 
-/// Scheduling tuning moves: knob grid around the current setting.
-fn schedule_moves(cur: &Cand) -> Vec<(String, Cand)> {
+/// Scheduling tuning moves: knob grid around the current setting.  The
+/// stage table is knob-independent, so the current one is reused.
+fn schedule_moves(cur: &Cand, cur_table: &StageTable) -> Vec<Prepared> {
     let k0 = cur.knobs;
     let variants = [
         ("split B/W", SchedKnobs { split_bw: !k0.split_bw, ..k0 }),
@@ -402,11 +557,10 @@ fn schedule_moves(cur: &Cand) -> Vec<(String, Cand)> {
     ];
     variants
         .into_iter()
-        .map(|(name, knobs)| {
-            (
-                name.to_string(),
-                Cand { part: cur.part.clone(), plac: cur.plac.clone(), knobs },
-            )
+        .map(|(name, knobs)| Prepared {
+            desc: name.to_string(),
+            cand: Cand { part: cur.part.clone(), plac: cur.plac.clone(), knobs },
+            table: cur_table.clone(),
         })
         .collect()
 }
@@ -551,5 +705,27 @@ mod tests {
         assert_eq!(fine.n_layers(), part.n_layers());
         assert_eq!(fine.n_stages(), 8);
         assert!(fine.is_valid());
+    }
+
+    #[test]
+    fn fast_and_reference_engines_agree() {
+        // The fast engine (fused evals, parallel batches, incremental
+        // stage tables) must reproduce the reference engine's search
+        // bit-for-bit: same pipeline, same score, same eval count.
+        for fam in [Family::Gemma, Family::NemotronH] {
+            let prof = profile(fam, 4, 8);
+            let mut fast_opts = GenOptions::new(4, 8);
+            fast_opts.max_iters = 16;
+            let mut ref_opts = fast_opts.clone();
+            ref_opts.engine = EvalEngine::Reference;
+            let a = generate(&prof, &fast_opts);
+            let b = generate(&prof, &ref_opts);
+            assert_eq!(a.report.total, b.report.total, "{fam:?}");
+            assert_eq!(a.pipeline.partition, b.pipeline.partition, "{fam:?}");
+            assert_eq!(a.pipeline.placement, b.pipeline.placement, "{fam:?}");
+            assert_eq!(a.evals, b.evals, "{fam:?}");
+            assert_eq!(a.iters, b.iters, "{fam:?}");
+            assert_eq!(a.log.len(), b.log.len(), "{fam:?}");
+        }
     }
 }

@@ -17,8 +17,11 @@
 //! - [`model`]: layer taxonomy + analytical cost model;
 //! - [`profile`]: profiled per-layer data (analytical or measured);
 //! - [`partition`], [`placement`], [`schedule`]: the three phases;
-//! - [`perfmodel`]: Algorithm 1 — the Pipeline Performance Model;
-//! - [`generator`]: §4.3 co-optimization loop;
+//! - [`perfmodel`]: Algorithm 1 — the Pipeline Performance Model
+//!   (O(slots·log P) event-driven kernel, fused schedule+simulate
+//!   evaluation, and the retained reference oracle — DESIGN.md §3);
+//! - [`generator`]: §4.3 co-optimization loop (zero-alloc, parallel
+//!   candidate search over the fused evaluator);
 //! - [`executor`]: §4.4 instruction lowering + comm passes;
 //! - [`cluster`]: simulated + real (threads & PJRT) clusters;
 //! - [`runtime`]: PJRT artifact loading/execution;

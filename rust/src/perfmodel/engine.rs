@@ -1,0 +1,376 @@
+//! Event-driven simulation kernel — the fast path behind
+//! [`crate::perfmodel::simulate`].
+//!
+//! The retained reference loop (`simulate_reference`) re-scans all `P`
+//! devices per executed slot: O(slots · P) candidate scans.  This
+//! engine maintains per-device readiness incrementally:
+//!
+//! - each device has at most one pending slot; when its dependency is
+//!   resolved the slot's start time is final (a device's clock only
+//!   moves when *it* executes, and dependency end-times never change
+//!   once written), so it sits in a binary heap keyed `(start, device)`;
+//! - a device whose dependency is unresolved parks on the producer
+//!   cell's waiter list (intrusive, allocation-free) and is re-queued
+//!   the moment the producing op completes;
+//! - deadlock = the heap drains with slots outstanding.
+//!
+//! Total: O(slots · log P) heap operations.  All state lives in a
+//! caller-owned [`SimArena`] so repeated evaluations (the Pipeline
+//! Generator issues thousands) allocate nothing after warm-up.
+//! Identical arithmetic to the reference loop ⇒ bit-identical
+//! [`PerfReport`]s (enforced by `tests/perfmodel_differential.rs`).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::stagetable::StageTable;
+use super::{Deadlock, PerfReport};
+use crate::schedule::{OpKind, Schedule, Slot};
+use crate::util::trace::TraceEvent;
+
+const NONE: u32 = u32::MAX;
+
+/// Heap entry: device `d`'s single pending slot, ready at `start` after
+/// an un-overlapped receive of `comm` seconds.  The slot is carried as
+/// payload so the execution step needs no extra schedule lookup.
+#[derive(Clone, Copy, Debug)]
+struct Ev {
+    start: f64,
+    comm: f64,
+    d: u32,
+    slot: Slot,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reversed so the max-heap pops the (start, device) minimum —
+        // ties resolve to the lower device id, matching the reference
+        // scan order (deterministic, reproducible reports).
+        o.start.total_cmp(&self.start).then_with(|| o.d.cmp(&self.d))
+    }
+}
+
+/// Reusable simulation state.  Create once, pass to every call of
+/// [`simulate_in`] / [`crate::perfmodel::fused::fused_eval`]; buffers
+/// are resized (never shrunk) so steady-state evaluations are
+/// allocation-free.
+#[derive(Default)]
+pub struct SimArena {
+    // (stage, micro-batch) completion times.
+    pub(crate) end_f: Vec<f64>,
+    pub(crate) end_b: Vec<f64>,
+    // Per-device cursors and accounting.
+    pub(crate) ptr: Vec<usize>,
+    pub(crate) clock: Vec<f64>,
+    pub(crate) busy: Vec<f64>,
+    pub(crate) comm_block: Vec<f64>,
+    pub(crate) overlap: Vec<f64>,
+    pub(crate) stash: Vec<f64>,
+    pub(crate) peak_stash: Vec<f64>,
+    // Intrusive waiter lists: head per (stage, mb) cell, next per device.
+    waiter_f: Vec<u32>,
+    waiter_b: Vec<u32>,
+    waiter_next: Vec<u32>,
+    heap: BinaryHeap<Ev>,
+    // Fused-path scheduler cursors (see perfmodel::fused).
+    pub(crate) next_f: Vec<usize>,
+    pub(crate) next_b: Vec<usize>,
+    pub(crate) next_w: Vec<usize>,
+    pub(crate) budget: Vec<f64>,
+}
+
+fn refill<T: Copy>(v: &mut Vec<T>, n: usize, x: T) {
+    v.clear();
+    v.resize(n, x);
+}
+
+impl SimArena {
+    pub fn new() -> SimArena {
+        SimArena::default()
+    }
+
+    pub(crate) fn reset_common(&mut self, s_n: usize, nmb: usize, p: usize) {
+        let cells = s_n * nmb;
+        refill(&mut self.end_f, cells, f64::NAN);
+        refill(&mut self.end_b, cells, f64::NAN);
+        refill(&mut self.clock, p, 0.0);
+        refill(&mut self.busy, p, 0.0);
+        refill(&mut self.comm_block, p, 0.0);
+        refill(&mut self.overlap, p, 0.0);
+        refill(&mut self.stash, p, 0.0);
+        refill(&mut self.peak_stash, p, 0.0);
+    }
+
+    fn reset_sim(&mut self, s_n: usize, nmb: usize, p: usize) {
+        self.reset_common(s_n, nmb, p);
+        let cells = s_n * nmb;
+        refill(&mut self.ptr, p, 0);
+        refill(&mut self.waiter_f, cells, NONE);
+        refill(&mut self.waiter_b, cells, NONE);
+        refill(&mut self.waiter_next, p, NONE);
+        self.heap.clear();
+    }
+
+    pub(crate) fn reset_fused(&mut self, s_n: usize, nmb: usize, p: usize) {
+        self.reset_common(s_n, nmb, p);
+        refill(&mut self.next_f, s_n, 0);
+        refill(&mut self.next_b, s_n, 0);
+        refill(&mut self.next_w, s_n, 0);
+        refill(&mut self.budget, p, 0.0);
+    }
+}
+
+/// Assemble the report from arena accounting (shared by both engines).
+pub(crate) fn report_from(
+    arena: &SimArena,
+    table: &StageTable,
+    mem_capacity: f64,
+    events: Vec<TraceEvent>,
+) -> PerfReport {
+    let p = table.p;
+    let total = arena.clock.iter().cloned().fold(0.0, f64::max);
+    let m_d: Vec<f64> = (0..p).map(|d| table.static_d[d] + arena.peak_stash[d]).collect();
+    let oom = m_d.iter().any(|&m| m > mem_capacity);
+    let bubble_d: Vec<f64> = (0..p)
+        .map(|d| (total - arena.busy[d] - arena.comm_block[d]).max(0.0))
+        .collect();
+    PerfReport {
+        total,
+        t_d: arena.clock.clone(),
+        busy_d: arena.busy.clone(),
+        bubble_d,
+        overlap_d: arena.overlap.clone(),
+        comm_block_d: arena.comm_block.clone(),
+        m_d,
+        static_d: table.static_d.clone(),
+        oom,
+        events,
+    }
+}
+
+/// Compute the earliest feasible start on a device (shared formula —
+/// identical expression shapes to the reference loop so results are
+/// bit-identical).
+#[inline]
+pub(crate) fn ready_at(dep: f64, comm: f64, clk: f64, overlap_aware: bool) -> f64 {
+    if comm == 0.0 {
+        clk.max(dep)
+    } else if overlap_aware {
+        clk.max(dep + comm)
+    } else {
+        clk.max(dep) + comm
+    }
+}
+
+/// Queue device `d`'s next slot: push to the heap if its dependency is
+/// resolved, else park on the producer cell's waiter list.
+fn queue_next(d: usize, schedule: &Schedule, table: &StageTable, a: &mut SimArena) {
+    let slots = &schedule.per_device[d];
+    if a.ptr[d] >= slots.len() {
+        return;
+    }
+    let sl = slots[a.ptr[d]];
+    let s = sl.stage as usize;
+    let mb = sl.mb as usize;
+    let nmb = schedule.nmb;
+    let s_n = table.n_stages;
+    let (dep, comm) = match sl.op {
+        OpKind::F => {
+            if s == 0 {
+                (0.0, 0.0)
+            } else {
+                let k = (s - 1) * nmb + mb;
+                let dep = a.end_f[k];
+                if dep.is_nan() {
+                    a.waiter_next[d] = a.waiter_f[k];
+                    a.waiter_f[k] = d as u32;
+                    return;
+                }
+                (dep, table.comm_f_in[s])
+            }
+        }
+        OpKind::B => {
+            if s == s_n - 1 {
+                let k = s * nmb + mb;
+                let dep = a.end_f[k];
+                if dep.is_nan() {
+                    a.waiter_next[d] = a.waiter_f[k];
+                    a.waiter_f[k] = d as u32;
+                    return;
+                }
+                (dep, 0.0)
+            } else {
+                let k = (s + 1) * nmb + mb;
+                let dep = a.end_b[k];
+                if dep.is_nan() {
+                    a.waiter_next[d] = a.waiter_b[k];
+                    a.waiter_b[k] = d as u32;
+                    return;
+                }
+                (dep, table.comm_b_in[s])
+            }
+        }
+        OpKind::W => {
+            let k = s * nmb + mb;
+            let dep = a.end_b[k];
+            if dep.is_nan() {
+                a.waiter_next[d] = a.waiter_b[k];
+                a.waiter_b[k] = d as u32;
+                return;
+            }
+            (dep, 0.0)
+        }
+    };
+    let start = ready_at(dep, comm, a.clock[d], schedule.overlap_aware);
+    a.heap.push(Ev { start, comm, d: d as u32, slot: sl });
+}
+
+/// Event-driven simulation over a prebuilt stage table and arena.
+/// Same contract as [`crate::perfmodel::simulate`].
+pub fn simulate_in(
+    arena: &mut SimArena,
+    table: &StageTable,
+    mem_capacity: f64,
+    schedule: &Schedule,
+    collect_trace: bool,
+) -> Result<PerfReport, Deadlock> {
+    let s_n = table.n_stages;
+    let p = schedule.p;
+    let nmb = schedule.nmb;
+    debug_assert_eq!(s_n, schedule.n_stages);
+    debug_assert_eq!(table.static_d.len(), p);
+    arena.reset_sim(s_n, nmb, p);
+    let total_slots: usize = schedule.per_device.iter().map(|v| v.len()).sum();
+    let mut events = Vec::new();
+    let split_bw = schedule.split_bw;
+
+    for d in 0..p {
+        queue_next(d, schedule, table, arena);
+    }
+
+    let mut done = 0usize;
+    while let Some(Ev { start, comm, d, slot: sl }) = arena.heap.pop() {
+        let d = d as usize;
+        let s = sl.stage as usize;
+        let mb = sl.mb as usize;
+        let dur = match sl.op {
+            OpKind::F => table.f[s],
+            OpKind::B => {
+                if split_bw {
+                    table.b[s]
+                } else {
+                    table.b[s] + table.w[s]
+                }
+            }
+            OpKind::W => table.w[s],
+        };
+        // Comm accounting (identical to the reference loop).
+        if comm > 0.0 {
+            if schedule.overlap_aware {
+                let hidden = (arena.clock[d] - (start - comm)).clamp(0.0, comm);
+                arena.overlap[d] += hidden;
+                if collect_trace {
+                    events.push(TraceEvent {
+                        name: format!("recv{}@s{}", mb, s),
+                        cat: "comm".into(),
+                        ts_us: (start - comm) * 1e6,
+                        dur_us: comm * 1e6,
+                        pid: d,
+                        tid: 1,
+                    });
+                }
+            } else {
+                arena.comm_block[d] += comm;
+                if collect_trace {
+                    events.push(TraceEvent {
+                        name: format!("recv{}@s{}", mb, s),
+                        cat: "comm".into(),
+                        ts_us: (start - comm) * 1e6,
+                        dur_us: comm * 1e6,
+                        pid: d,
+                        tid: 0,
+                    });
+                }
+            }
+        }
+        let end = start + dur;
+        arena.clock[d] = end;
+        arena.busy[d] += dur;
+        let k = s * nmb + mb;
+        match sl.op {
+            OpKind::F => {
+                arena.end_f[k] = end;
+                arena.stash[d] += table.act[s];
+                arena.peak_stash[d] = arena.peak_stash[d].max(arena.stash[d]);
+                // Wake consumers parked on F(s, mb).
+                let mut w = arena.waiter_f[k];
+                arena.waiter_f[k] = NONE;
+                while w != NONE {
+                    let next = arena.waiter_next[w as usize];
+                    arena.waiter_next[w as usize] = NONE;
+                    queue_next(w as usize, schedule, table, arena);
+                    w = next;
+                }
+            }
+            OpKind::B => {
+                arena.end_b[k] = end;
+                if !split_bw {
+                    arena.stash[d] -= table.act[s];
+                }
+                let mut w = arena.waiter_b[k];
+                arena.waiter_b[k] = NONE;
+                while w != NONE {
+                    let next = arena.waiter_next[w as usize];
+                    arena.waiter_next[w as usize] = NONE;
+                    queue_next(w as usize, schedule, table, arena);
+                    w = next;
+                }
+            }
+            OpKind::W => {
+                arena.stash[d] -= table.act[s];
+            }
+        }
+        if collect_trace {
+            events.push(TraceEvent {
+                name: format!("{}{}@s{}", sl.op.name(), mb, s),
+                cat: sl.op.name().into(),
+                ts_us: start * 1e6,
+                dur_us: dur * 1e6,
+                pid: d,
+                tid: 0,
+            });
+        }
+        arena.ptr[d] += 1;
+        done += 1;
+        queue_next(d, schedule, table, arena);
+    }
+
+    if done < total_slots {
+        // Heap drained with work outstanding: every remaining device is
+        // parked on an unresolvable dependency.  Report the first, like
+        // the reference loop.
+        let d = (0..p)
+            .find(|&d| arena.ptr[d] < schedule.per_device[d].len())
+            .expect("outstanding slots imply a blocked device");
+        return Err(Deadlock {
+            device: d,
+            at_slot: arena.ptr[d],
+            slot: schedule.per_device[d][arena.ptr[d]],
+        });
+    }
+    Ok(report_from(arena, table, mem_capacity, events))
+}

@@ -1,0 +1,222 @@
+//! Fused schedule+simulate evaluation — the Pipeline Generator's
+//! per-candidate hot path.
+//!
+//! The greedy list scheduler (`schedule::greedy`) already computes every
+//! op's start/end time while choosing the emission order; the seed code
+//! then *re-simulated* the materialised [`Schedule`] to obtain the
+//! [`PerfReport`].  Because the performance model replays ops with the
+//! exact same readiness formula, those two passes compute identical
+//! numbers — so this module runs the construction loop once and does the
+//! Algorithm-1 accounting inline, skipping the intermediate `Schedule`,
+//! the second pass, and every per-eval allocation (state lives in the
+//! caller's [`SimArena`]).
+//!
+//! `schedule::greedy::greedy_schedule` is a thin wrapper over this
+//! function with slot recording enabled, which is what guarantees the
+//! fused report cannot drift from `simulate(greedy_schedule(..))`: they
+//! are the same loop (enforced bitwise by
+//! `tests/perfmodel_differential.rs`).
+
+use super::engine::{ready_at, report_from, SimArena};
+use super::stagetable::StageTable;
+use super::PerfReport;
+use crate::schedule::greedy::SchedKnobs;
+use crate::schedule::{OpKind, Slot};
+
+/// Run the adaptive list scheduler over `table` and return the
+/// performance report of the resulting pipeline.  When `record` is
+/// given, emitted slots are appended per device (used by
+/// `greedy_schedule` to materialise the [`crate::schedule::Schedule`]).
+///
+/// Over-budget F ops are tracked separately and only taken when nothing
+/// else can make progress — the memory constraint is soft here so the
+/// builder always terminates; the report flags the resulting pipeline
+/// OOM (Eq. 2) and the generator prunes it.
+pub fn fused_eval(
+    table: &StageTable,
+    mem_capacity: f64,
+    nmb: usize,
+    knobs: SchedKnobs,
+    arena: &mut SimArena,
+    record: Option<&mut Vec<Vec<Slot>>>,
+) -> PerfReport {
+    run_loop(table, mem_capacity, nmb, knobs, arena, record);
+    report_from(arena, table, mem_capacity, Vec::new())
+}
+
+/// Score-only fused evaluation: identical loop, no report allocation.
+/// Returns the step makespan, or `+inf` when the pipeline is OOM
+/// (Eq. 2) — exactly `fused_eval(..).total` / `.oom` collapsed to the
+/// generator's objective.
+pub fn fused_score(
+    table: &StageTable,
+    mem_capacity: f64,
+    nmb: usize,
+    knobs: SchedKnobs,
+    arena: &mut SimArena,
+) -> f64 {
+    run_loop(table, mem_capacity, nmb, knobs, arena, None);
+    let mut total = 0.0f64;
+    for &c in &arena.clock {
+        total = total.max(c);
+    }
+    let oom = (0..table.p)
+        .any(|d| table.static_d[d] + arena.peak_stash[d] > mem_capacity);
+    if oom {
+        f64::INFINITY
+    } else {
+        total
+    }
+}
+
+fn run_loop(
+    table: &StageTable,
+    mem_capacity: f64,
+    nmb: usize,
+    knobs: SchedKnobs,
+    arena: &mut SimArena,
+    mut record: Option<&mut Vec<Vec<Slot>>>,
+) {
+    let s_n = table.n_stages;
+    let p = table.p;
+    arena.reset_fused(s_n, nmb, p);
+    for d in 0..p {
+        arena.budget[d] =
+            ((mem_capacity - table.static_d[d]) * knobs.mem_cap_factor).max(0.0);
+    }
+
+    let total_ops = s_n * nmb * if knobs.split_bw { 3 } else { 2 };
+    let mut emitted = 0usize;
+
+    // Candidate comparison with the scheduler's epsilon tie-break
+    // (prio: B=0 < F=1 < W-when-filling=2; first stage wins exact ties).
+    fn consider(
+        best: &mut Option<(f64, u8, usize, Slot)>,
+        start: f64,
+        prio: u8,
+        s: usize,
+        slot: Slot,
+    ) {
+        let better = match best {
+            None => true,
+            Some((bs, bp, _, _)) => {
+                start < *bs - 1e-15 || ((start - *bs).abs() <= 1e-15 && prio < *bp)
+            }
+        };
+        if better {
+            *best = Some((start, prio, s, slot));
+        }
+    }
+
+    while emitted < total_ops {
+        let mut best: Option<(f64, u8, usize, Slot)> = None;
+        let mut best_overlimit: Option<(f64, u8, usize, Slot)> = None;
+
+        for s in 0..s_n {
+            let d = table.device[s];
+            let clk = arena.clock[d];
+            // F candidate.
+            let mb = arena.next_f[s];
+            if mb < nmb {
+                let dep = if s == 0 { 0.0 } else { arena.end_f[(s - 1) * nmb + mb] };
+                if !dep.is_nan() {
+                    let fits = arena.stash[d] + table.act[s] <= arena.budget[d]
+                        || arena.stash[d] == 0.0;
+                    let start = ready_at(dep, table.comm_f_in[s], clk, knobs.overlap_aware);
+                    let target = if fits { &mut best } else { &mut best_overlimit };
+                    consider(target, start, 1, s, Slot::new(OpKind::F, mb, s));
+                }
+            }
+            // B candidate: needs F(mb,s) done and B(mb,s+1) done (or F
+            // for the last stage).
+            let mb = arena.next_b[s];
+            if mb < nmb && !arena.end_f[s * nmb + mb].is_nan() {
+                let (dep, comm) = if s == s_n - 1 {
+                    (arena.end_f[s * nmb + mb], 0.0)
+                } else if arena.end_b[(s + 1) * nmb + mb].is_nan() {
+                    (f64::NAN, 0.0)
+                } else {
+                    (arena.end_b[(s + 1) * nmb + mb], table.comm_b_in[s])
+                };
+                if !dep.is_nan() {
+                    consider(
+                        &mut best,
+                        ready_at(dep, comm, clk, knobs.overlap_aware),
+                        0,
+                        s,
+                        Slot::new(OpKind::B, mb, s),
+                    );
+                }
+            }
+            // W candidate (split mode): delayed by default so it only
+            // wins when nothing else can start earlier — bubble filling.
+            if knobs.split_bw {
+                let mb = arena.next_w[s];
+                if mb < nmb && mb < arena.next_b[s] {
+                    let prio = if knobs.w_fill { 2 } else { 0 };
+                    consider(
+                        &mut best,
+                        arena.end_b[s * nmb + mb].max(clk),
+                        prio,
+                        s,
+                        Slot::new(OpKind::W, mb, s),
+                    );
+                }
+            }
+        }
+
+        let (start, _, s, slot) = best.or(best_overlimit).unwrap_or_else(|| {
+            panic!("scheduler stuck: emitted {emitted}/{total_ops} (invalid deps?)")
+        });
+        let d = table.device[s];
+        let (dur, comm) = match slot.op {
+            OpKind::F => (table.f[s], table.comm_f_in[s]),
+            OpKind::B => {
+                let dur = if knobs.split_bw {
+                    table.b[s]
+                } else {
+                    table.b[s] + table.w[s]
+                };
+                let comm = if s == s_n - 1 { 0.0 } else { table.comm_b_in[s] };
+                (dur, comm)
+            }
+            OpKind::W => (table.w[s], 0.0),
+        };
+        // Algorithm-1 accounting, identical to the simulation engines.
+        if comm > 0.0 {
+            if knobs.overlap_aware {
+                let hidden = (arena.clock[d] - (start - comm)).clamp(0.0, comm);
+                arena.overlap[d] += hidden;
+            } else {
+                arena.comm_block[d] += comm;
+            }
+        }
+        let end = start + dur;
+        arena.clock[d] = end;
+        arena.busy[d] += dur;
+        let k = s * nmb + slot.mb as usize;
+        match slot.op {
+            OpKind::F => {
+                arena.end_f[k] = end;
+                arena.next_f[s] += 1;
+                arena.stash[d] += table.act[s];
+                arena.peak_stash[d] = arena.peak_stash[d].max(arena.stash[d]);
+            }
+            OpKind::B => {
+                arena.end_b[k] = end;
+                arena.next_b[s] += 1;
+                if !knobs.split_bw {
+                    arena.stash[d] -= table.act[s];
+                }
+            }
+            OpKind::W => {
+                arena.next_w[s] += 1;
+                arena.stash[d] -= table.act[s];
+            }
+        }
+        if let Some(rec) = record.as_mut() {
+            rec[d].push(slot);
+        }
+        emitted += 1;
+    }
+}

@@ -3,16 +3,35 @@
 //! Event-driven simulation of a [`Schedule`] over a (partition,
 //! placement) with profiled per-layer costs:
 //!
-//! - **Step 1** layer-level aggregation: [`ProfiledData::stage_cost`];
-//! - **Step 2** stage→device aggregation: here, via the placement;
-//! - **Step 3** runtime & memory estimation: the simulation below
-//!   yields `T_d = C_d + BubbleTime(d) − OverlapTime(d)` (identity:
-//!   we measure busy/bubble/overlap directly), `M_d`, and, optionally,
+//! - **Step 1** layer-level aggregation: [`ProfiledData::stage_cost`]
+//!   (O(1) via prefix sums);
+//! - **Step 2** stage→device aggregation: [`StageTable`];
+//! - **Step 3** runtime & memory estimation: the simulation kernels
+//!   yield `T_d = C_d + BubbleTime(d) − OverlapTime(d)` (identity: we
+//!   measure busy/bubble/overlap directly), `M_d`, and, optionally,
 //!   per-op trace events (Fig 11's simulated traces).
+//!
+//! Three entry points share identical arithmetic (and bit-identical
+//! outputs, enforced by `tests/perfmodel_differential.rs`):
+//!
+//! - [`simulate`] — the O(slots · log P) event-driven engine
+//!   ([`engine::simulate_in`]) behind a convenience wrapper;
+//! - [`simulate_reference`] — the retained O(slots · P) scan loop, kept
+//!   as the differential-testing oracle and the bench baseline;
+//! - [`fused::fused_eval`] — schedule construction + accounting in one
+//!   pass, the Pipeline Generator's per-candidate hot path.
 //!
 //! Deadlock (a schedule whose cross-device waits cycle) is detected and
 //! reported rather than hanging — the Pipeline Generator relies on this
 //! to prune invalid candidates.
+
+pub mod engine;
+pub mod fused;
+pub mod stagetable;
+
+pub use engine::{simulate_in, SimArena};
+pub use fused::{fused_eval, fused_score};
+pub use stagetable::StageTable;
 
 use crate::partition::Partition;
 use crate::placement::Placement;
@@ -78,8 +97,27 @@ impl std::fmt::Display for Deadlock {
 
 impl std::error::Error for Deadlock {}
 
-/// Simulate a schedule; see module docs.
+/// Simulate a schedule; see module docs.  Convenience wrapper over the
+/// event-driven engine with a fresh [`SimArena`] — hot callers (the
+/// generator, the benches) keep an arena and use [`simulate_in`].
 pub fn simulate(
+    profile: &ProfiledData,
+    partition: &Partition,
+    placement: &Placement,
+    schedule: &Schedule,
+    collect_trace: bool,
+) -> Result<PerfReport, Deadlock> {
+    debug_assert_eq!(placement.n_stages(), partition.n_stages());
+    let table = StageTable::build(profile, partition, placement);
+    let mut arena = SimArena::new();
+    simulate_in(&mut arena, &table, profile.mem_capacity, schedule, collect_trace)
+}
+
+/// The retained reference simulator: the original per-event all-device
+/// scan, O(slots · P).  Kept verbatim (plus an explicit `(start,
+/// device)` tie-break) as the differential-testing oracle for the fast
+/// engines and as the baseline for `benches/perfmodel.rs`.
+pub fn simulate_reference(
     profile: &ProfiledData,
     partition: &Partition,
     placement: &Placement,
@@ -156,7 +194,9 @@ pub fn simulate(
 
     while done < total_slots {
         // Pick, among devices whose next slot is dependency-ready, the
-        // one that can start earliest (event-driven order).
+        // one that can start earliest (event-driven order); ties break
+        // on the lower device id so reports are reproducible across
+        // refactors (and match the heap engine's `(start, d)` key).
         let mut best: Option<(f64, f64, usize)> = None; // (start, comm, device)
         for d in 0..p {
             if ptr[d] >= schedule.per_device[d].len() {
@@ -192,7 +232,7 @@ pub fn simulate(
             } else {
                 clock[d].max(dep) + comm
             };
-            if best.map_or(true, |(bs, _, _)| start < bs) {
+            if best.map_or(true, |(bs, _, bd)| start < bs || (start == bs && d < bd)) {
                 best = Some((start, comm, d));
             }
         }
@@ -376,7 +416,6 @@ mod tests {
 
     #[test]
     fn deadlock_detected() {
-        use crate::schedule::{OpKind, Schedule, Slot};
         let (prof, part, pl) = setup(Family::Llama2, 2, 1);
         // Device 0 waits for B(0,0)'s dep B(0,1) before running F(0,0):
         // cross-device cycle with device 1 needing F(0,0) first.
@@ -391,6 +430,62 @@ mod tests {
                 vec![Slot::new(OpKind::F, 0, 1), Slot::new(OpKind::B, 0, 1)],
             ],
         };
-        assert!(simulate(&prof, &part, &pl, &bad, false).is_err());
+        let fast = simulate(&prof, &part, &pl, &bad, false);
+        let refr = simulate_reference(&prof, &part, &pl, &bad, false);
+        let (f, r) = (fast.unwrap_err(), refr.unwrap_err());
+        assert_eq!((f.device, f.at_slot, f.slot), (r.device, r.at_slot, r.slot));
+    }
+
+    #[test]
+    fn equal_start_ties_break_on_lower_device() {
+        // Regression for the tie-break contract: two dependency-free ops
+        // with identical start times must execute lowest-device-first in
+        // both engines, so trace order (and any order-sensitive derived
+        // report) is reproducible across refactors.
+        let (prof, _, _) = setup(Family::Llama2, 2, 2);
+        let part = Partition::from_sizes(&[prof.n_layers()]);
+        let pl = Placement { p: 2, device_of: vec![0] };
+        let sch = Schedule {
+            p: 2,
+            nmb: 2,
+            n_stages: 1,
+            split_bw: false,
+            overlap_aware: false,
+            // Both devices open with a dependency-free F at t=0: a tie.
+            per_device: vec![
+                vec![Slot::new(OpKind::F, 0, 0)],
+                vec![Slot::new(OpKind::F, 1, 0)],
+            ],
+        };
+        let fast = simulate(&prof, &part, &pl, &sch, true).unwrap();
+        let refr = simulate_reference(&prof, &part, &pl, &sch, true).unwrap();
+        for r in [&fast, &refr] {
+            assert_eq!(r.events.len(), 2);
+            assert_eq!(r.events[0].pid, 0, "device 0 must win the t=0 tie");
+            assert_eq!(r.events[1].pid, 1);
+        }
+        assert_eq!(fast.t_d, refr.t_d);
+    }
+
+    #[test]
+    fn fast_engine_matches_reference_on_builders() {
+        for (fam, p, nmb) in
+            [(Family::Gemma, 4, 8), (Family::NemotronH, 4, 16), (Family::Llama2, 2, 4)]
+        {
+            let (prof, part, pl) = setup(fam, p, nmb);
+            for sch in [one_f_one_b(p, nmb), gpipe(p, nmb), zb_h1(p, nmb)] {
+                let a = simulate(&prof, &part, &pl, &sch, false).unwrap();
+                let b = simulate_reference(&prof, &part, &pl, &sch, false).unwrap();
+                assert_eq!(a.total, b.total);
+                assert_eq!(a.t_d, b.t_d);
+                assert_eq!(a.busy_d, b.busy_d);
+                assert_eq!(a.bubble_d, b.bubble_d);
+                assert_eq!(a.overlap_d, b.overlap_d);
+                assert_eq!(a.comm_block_d, b.comm_block_d);
+                assert_eq!(a.m_d, b.m_d);
+                assert_eq!(a.static_d, b.static_d);
+                assert_eq!(a.oom, b.oom);
+            }
+        }
     }
 }

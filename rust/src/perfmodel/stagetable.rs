@@ -1,0 +1,198 @@
+//! Per-stage aggregated costs for one (partition, placement) —
+//! Algorithm 1 Steps 1–2 factored out of the simulation kernel.
+//!
+//! The Pipeline Generator builds one table per candidate (O(S) thanks
+//! to the profile's prefix sums) and, for single-boundary partition
+//! moves, re-derives only the two affected stages via
+//! [`StageTable::update_boundary`] — bit-identical to a full rebuild,
+//! so incremental evaluation cannot drift from the reference path.
+
+use crate::partition::Partition;
+use crate::placement::Placement;
+use crate::profile::ProfiledData;
+
+/// Stage-level cost vectors consumed by the evaluation engines
+/// ([`crate::perfmodel::engine`] and [`crate::perfmodel::fused`]).
+#[derive(Clone, Debug)]
+pub struct StageTable {
+    /// Pipeline devices.
+    pub p: usize,
+    pub n_stages: usize,
+    /// Owning device per stage (from the placement).
+    pub device: Vec<usize>,
+    /// Forward seconds per stage per micro-batch.
+    pub f: Vec<f64>,
+    /// Input-grad backward seconds (B).  Fused backward is `b + w`.
+    pub b: Vec<f64>,
+    /// Param-grad backward seconds (W).
+    pub w: Vec<f64>,
+    /// Activation stash bytes per in-flight micro-batch.
+    pub act: Vec<f64>,
+    /// Static memory (params+grads+optimizer) per stage.
+    pub mem_static: Vec<f64>,
+    /// Boundary message bytes leaving each stage.
+    pub comm_bytes: Vec<f64>,
+    /// P2P seconds for the F input from stage `s-1` (0 when colocated
+    /// or `s == 0`).
+    pub comm_f_in: Vec<f64>,
+    /// P2P seconds for the B input from stage `s+1` (0 when colocated
+    /// or `s` is last).
+    pub comm_b_in: Vec<f64>,
+    /// Static memory aggregated per device.
+    pub static_d: Vec<f64>,
+}
+
+impl StageTable {
+    /// Aggregate the profile over a (partition, placement) — O(S).
+    pub fn build(
+        profile: &ProfiledData,
+        partition: &Partition,
+        placement: &Placement,
+    ) -> StageTable {
+        let s_n = partition.n_stages();
+        assert_eq!(
+            placement.n_stages(),
+            s_n,
+            "partition has {s_n} stages, placement {}",
+            placement.n_stages()
+        );
+        let mut t = StageTable {
+            p: placement.p,
+            n_stages: s_n,
+            device: placement.device_of.clone(),
+            f: vec![0.0; s_n],
+            b: vec![0.0; s_n],
+            w: vec![0.0; s_n],
+            act: vec![0.0; s_n],
+            mem_static: vec![0.0; s_n],
+            comm_bytes: vec![0.0; s_n],
+            comm_f_in: vec![0.0; s_n],
+            comm_b_in: vec![0.0; s_n],
+            static_d: vec![0.0; placement.p],
+        };
+        for s in 0..s_n {
+            t.set_stage(profile, partition, s);
+        }
+        for s in 0..s_n {
+            t.set_comm(profile, s);
+        }
+        t.recompute_static_d();
+        t
+    }
+
+    /// Re-derive the table after `partition.shift_boundary(b, _)`:
+    /// only stages `b` and `b+1` changed, so only they — and the comm
+    /// entries reading their boundary bytes — are recomputed.
+    pub fn update_boundary(
+        &mut self,
+        profile: &ProfiledData,
+        partition: &Partition,
+        b: usize,
+    ) {
+        debug_assert!(b + 1 < self.n_stages);
+        self.set_stage(profile, partition, b);
+        self.set_stage(profile, partition, b + 1);
+        // comm_f_in[s] reads comm_bytes[s-1]; comm_b_in[s] reads
+        // comm_bytes[s] — stages b-1..=b+2 cover every affected entry.
+        let lo = b.saturating_sub(1);
+        let hi = (b + 2).min(self.n_stages - 1);
+        for s in lo..=hi {
+            self.set_comm(profile, s);
+        }
+        // Recomputed from scratch (ascending stage order) so the result
+        // is bit-identical to `build` rather than patched ± ulps.
+        self.recompute_static_d();
+    }
+
+    fn set_stage(&mut self, profile: &ProfiledData, partition: &Partition, s: usize) {
+        let c = profile.stage_cost(partition.stage_range(s));
+        self.f[s] = c.f;
+        self.b[s] = c.b;
+        self.w[s] = c.w;
+        self.act[s] = c.mem_act;
+        self.mem_static[s] = c.mem_static;
+        self.comm_bytes[s] = c.comm_bytes;
+    }
+
+    fn set_comm(&mut self, profile: &ProfiledData, s: usize) {
+        self.comm_f_in[s] = if s > 0 && self.device[s - 1] != self.device[s] {
+            profile.p2p(self.comm_bytes[s - 1])
+        } else {
+            0.0
+        };
+        self.comm_b_in[s] = if s + 1 < self.n_stages && self.device[s + 1] != self.device[s]
+        {
+            profile.p2p(self.comm_bytes[s])
+        } else {
+            0.0
+        };
+    }
+
+    fn recompute_static_d(&mut self) {
+        self.static_d.clear();
+        self.static_d.resize(self.p, 0.0);
+        for s in 0..self.n_stages {
+            self.static_d[self.device[s]] += self.mem_static[s];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::partition::uniform;
+    use crate::placement::{interleaved, sequential};
+
+    fn prof() -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn build_matches_manual_aggregation() {
+        let p = prof();
+        let part = uniform(p.n_layers(), 4);
+        let pl = sequential(4);
+        let t = StageTable::build(&p, &part, &pl);
+        for s in 0..4 {
+            let c = p.stage_cost(part.stage_range(s));
+            assert_eq!(t.f[s], c.f);
+            assert_eq!(t.comm_bytes[s], c.comm_bytes);
+        }
+        // Sequential placement: every interior boundary crosses devices.
+        assert_eq!(t.comm_f_in[0], 0.0);
+        assert!(t.comm_f_in[1] > 0.0);
+        assert!(t.comm_b_in[2] > 0.0);
+        assert_eq!(t.comm_b_in[3], 0.0);
+    }
+
+    #[test]
+    fn incremental_update_is_bit_identical_to_rebuild() {
+        let p = prof();
+        let pl = interleaved(4, 2);
+        let mut part = uniform(p.n_layers(), 8);
+        let mut t = StageTable::build(&p, &part, &pl);
+        for (b, dir) in [(0usize, true), (3, false), (6, true), (3, true)] {
+            if !part.shift_boundary(b, dir) {
+                continue;
+            }
+            t.update_boundary(&p, &part, b);
+            let fresh = StageTable::build(&p, &part, &pl);
+            assert_eq!(t.f, fresh.f, "after shift {b}");
+            assert_eq!(t.b, fresh.b);
+            assert_eq!(t.w, fresh.w);
+            assert_eq!(t.act, fresh.act);
+            assert_eq!(t.mem_static, fresh.mem_static);
+            assert_eq!(t.comm_bytes, fresh.comm_bytes);
+            assert_eq!(t.comm_f_in, fresh.comm_f_in);
+            assert_eq!(t.comm_b_in, fresh.comm_b_in);
+            assert_eq!(t.static_d, fresh.static_d);
+        }
+    }
+}

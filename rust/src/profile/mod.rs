@@ -7,31 +7,75 @@
 //! - [`ProfiledData::from_measured`]: wall-clock per-layer timings
 //!   measured by running the AOT artifacts on the PJRT CPU client
 //!   (RealCluster fidelity experiments, Fig 11/12).
+//!
+//! Both precompute a [`StageCostTable`] (prefix sums over the additive
+//! per-layer fields) so [`ProfiledData::stage_cost`] is O(1) per stage
+//! instead of O(layers) — the Pipeline Generator aggregates stage costs
+//! for every one of its thousands of candidate evaluations, so this is
+//! the first stop of the evaluation hot path (see DESIGN.md §Hot path).
 
 use crate::config::{HardwareCfg, ParallelCfg};
 use crate::model::{CostModel, LayerCost, ModelSpec};
 
+/// Prefix sums over the additive [`LayerCost`] fields: entry `i` holds
+/// the sum over layers `0..i`, so any contiguous range aggregates with
+/// one subtraction per field.
+#[derive(Clone, Debug, Default)]
+pub struct StageCostTable {
+    f: Vec<f64>,
+    b: Vec<f64>,
+    w: Vec<f64>,
+    mem_static: Vec<f64>,
+    mem_act: Vec<f64>,
+}
+
+impl StageCostTable {
+    fn build(layers: &[LayerCost]) -> StageCostTable {
+        let n = layers.len();
+        let mut t = StageCostTable {
+            f: Vec::with_capacity(n + 1),
+            b: Vec::with_capacity(n + 1),
+            w: Vec::with_capacity(n + 1),
+            mem_static: Vec::with_capacity(n + 1),
+            mem_act: Vec::with_capacity(n + 1),
+        };
+        t.f.push(0.0);
+        t.b.push(0.0);
+        t.w.push(0.0);
+        t.mem_static.push(0.0);
+        t.mem_act.push(0.0);
+        for l in layers {
+            t.f.push(t.f.last().unwrap() + l.f);
+            t.b.push(t.b.last().unwrap() + l.b);
+            t.w.push(t.w.last().unwrap() + l.w);
+            t.mem_static.push(t.mem_static.last().unwrap() + l.mem_static);
+            t.mem_act.push(t.mem_act.last().unwrap() + l.mem_act);
+        }
+        t
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ProfiledData {
-    /// Per-layer costs, indexed by flat layer id.
+    /// Per-layer costs, indexed by flat layer id.  Treat as read-only:
+    /// [`ProfiledData::stage_cost`] answers from the prefix-sum table
+    /// built at construction (call [`ProfiledData::rebuild_table`]
+    /// after any in-place edit).
     pub layers: Vec<LayerCost>,
     /// P2P link parameters for stage-boundary messages.
     pub link_latency: f64,
     pub link_bw: f64,
     /// Per-device memory capacity (bytes).
     pub mem_capacity: f64,
+    /// Prefix sums over `layers` (kept consistent by the constructors).
+    cum: StageCostTable,
 }
 
 impl ProfiledData {
     /// Analytical backend (see module docs).
     pub fn analytical(spec: &ModelSpec, hw: &HardwareCfg, par: &ParallelCfg) -> Self {
         let cm = CostModel::new(*hw, *par);
-        ProfiledData {
-            layers: cm.model_costs(spec),
-            link_latency: hw.link_latency,
-            link_bw: hw.link_bw,
-            mem_capacity: hw.mem_capacity,
-        }
+        Self::from_measured(cm.model_costs(spec), hw.link_latency, hw.link_bw, hw.mem_capacity)
     }
 
     /// Measured backend: caller supplies wall-clock per-layer F/B/W
@@ -42,7 +86,13 @@ impl ProfiledData {
         link_bw: f64,
         mem_capacity: f64,
     ) -> Self {
-        ProfiledData { layers, link_latency, link_bw, mem_capacity }
+        let cum = StageCostTable::build(&layers);
+        ProfiledData { layers, link_latency, link_bw, mem_capacity, cum }
+    }
+
+    /// Recompute the prefix-sum table after mutating `layers` in place.
+    pub fn rebuild_table(&mut self) {
+        self.cum = StageCostTable::build(&self.layers);
     }
 
     pub fn n_layers(&self) -> usize {
@@ -59,19 +109,22 @@ impl ProfiledData {
     }
 
     /// Aggregate F/B/W times over a contiguous layer range (a stage) —
-    /// Algorithm 1 Step 1 (layer-level cost aggregation).
+    /// Algorithm 1 Step 1 (layer-level cost aggregation).  O(1) via the
+    /// prefix-sum table.
     pub fn stage_cost(&self, range: std::ops::Range<usize>) -> LayerCost {
-        let mut acc = LayerCost::default();
-        for l in &self.layers[range.clone()] {
-            acc.f += l.f;
-            acc.b += l.b;
-            acc.w += l.w;
-            acc.mem_static += l.mem_static;
-            acc.mem_act += l.mem_act;
-        }
+        let (a, b) = (range.start, range.end);
+        debug_assert!(a <= b && b <= self.layers.len());
+        let mut acc = LayerCost {
+            f: self.cum.f[b] - self.cum.f[a],
+            b: self.cum.b[b] - self.cum.b[a],
+            w: self.cum.w[b] - self.cum.w[a],
+            mem_static: self.cum.mem_static[b] - self.cum.mem_static[a],
+            mem_act: self.cum.mem_act[b] - self.cum.mem_act[a],
+            comm_bytes: 0.0,
+        };
         // Message size leaving the stage = last layer's output.
-        if let Some(last) = self.layers[range].last() {
-            acc.comm_bytes = last.comm_bytes;
+        if b > a {
+            acc.comm_bytes = self.layers[b - 1].comm_bytes;
         }
         acc
     }
@@ -79,7 +132,8 @@ impl ProfiledData {
     /// Total fused compute per micro-batch (lower bound on step time ×
     /// nmb / P — used for bubble-ratio denominators).
     pub fn total_compute(&self) -> f64 {
-        self.layers.iter().map(|l| l.f + l.b + l.w).sum()
+        let n = self.layers.len();
+        self.cum.f[n] + self.cum.b[n] + self.cum.w[n]
     }
 }
 
@@ -105,6 +159,45 @@ mod tests {
         let split: f64 = p.stage_cost(0..3).f + p.stage_cost(3..p.n_layers()).f;
         assert!((all.f - split).abs() < 1e-12);
         assert!((p.total_compute() - (all.f + all.b + all.w)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_cost_matches_direct_sum() {
+        // The prefix-sum fast path must agree with a direct O(layers)
+        // aggregation to floating-point reassociation tolerance.
+        let p = pd();
+        let n = p.n_layers();
+        let close = |x: f64, y: f64| (x - y).abs() <= 1e-12 * (1.0 + x.abs().max(y.abs()));
+        for (a, b) in [(0usize, 1usize), (0, n), (2, 7), (n - 1, n), (3, 3)] {
+            let fast = p.stage_cost(a..b);
+            let mut acc = LayerCost::default();
+            for l in &p.layers[a..b] {
+                acc.f += l.f;
+                acc.b += l.b;
+                acc.w += l.w;
+                acc.mem_static += l.mem_static;
+                acc.mem_act += l.mem_act;
+            }
+            if let Some(last) = p.layers[a..b].last() {
+                acc.comm_bytes = last.comm_bytes;
+            }
+            assert!(close(fast.f, acc.f), "f over {a}..{b}");
+            assert!(close(fast.b, acc.b), "b over {a}..{b}");
+            assert!(close(fast.w, acc.w), "w over {a}..{b}");
+            assert!(close(fast.mem_static, acc.mem_static), "mem_static over {a}..{b}");
+            assert!(close(fast.mem_act, acc.mem_act), "mem_act over {a}..{b}");
+            assert_eq!(fast.comm_bytes, acc.comm_bytes, "comm over {a}..{b}");
+        }
+    }
+
+    #[test]
+    fn rebuild_after_mutation() {
+        let mut p = pd();
+        let before = p.stage_cost(0..2).f;
+        p.layers[0].f += 1.0;
+        p.rebuild_table();
+        let after = p.stage_cost(0..2).f;
+        assert!((after - before - 1.0).abs() < 1e-9);
     }
 
     #[test]

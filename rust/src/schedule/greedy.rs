@@ -14,10 +14,18 @@
 //!
 //! Unlike the fixed builders this works for *arbitrary* partitions and
 //! placements, which is what makes the co-optimization loop possible.
+//!
+//! The construction loop itself lives in
+//! [`crate::perfmodel::fused::fused_eval`]: the scheduler computes every
+//! op's timing while choosing the emission order, so the Pipeline
+//! Generator evaluates candidates in that single fused pass.  This
+//! function is the wrapper that records the emitted slots and
+//! materialises the [`Schedule`] IR for the executor and the baselines.
 
-use super::{OpKind, Schedule, Slot};
+use super::{Schedule, Slot};
 use crate::partition::Partition;
 use crate::placement::Placement;
+use crate::perfmodel::{fused_eval, SimArena, StageTable};
 use crate::profile::ProfiledData;
 
 /// Tuning knobs for the adaptive scheduler.
@@ -44,16 +52,6 @@ impl Default for SchedKnobs {
     }
 }
 
-struct StageInfo {
-    device: usize,
-    f: f64,
-    b: f64,
-    w: f64,
-    act_bytes: f64,
-    comm_in: f64,   // p2p seconds for the activation arriving from prev stage
-    comm_b_in: f64, // p2p seconds for the gradient arriving from next stage
-}
-
 /// Build an adaptive schedule for any (partition, placement).
 pub fn greedy_schedule(
     profile: &ProfiledData,
@@ -62,199 +60,17 @@ pub fn greedy_schedule(
     nmb: usize,
     knobs: SchedKnobs,
 ) -> Schedule {
-    let s_n = partition.n_stages();
-    assert_eq!(s_n, placement.n_stages());
-    let p = placement.p;
-
-    let costs: Vec<_> =
-        (0..s_n).map(|s| profile.stage_cost(partition.stage_range(s))).collect();
-    let stages: Vec<StageInfo> = (0..s_n)
-        .map(|s| {
-            let c = &costs[s];
-            let comm_in = if s == 0 || placement.device_of[s - 1] == placement.device_of[s]
-            {
-                0.0
-            } else {
-                profile.p2p(costs[s - 1].comm_bytes)
-            };
-            let comm_b_in = if s + 1 == s_n
-                || placement.device_of[s + 1] == placement.device_of[s]
-            {
-                0.0
-            } else {
-                // Gradient message = this stage's output size.
-                profile.p2p(c.comm_bytes)
-            };
-            StageInfo {
-                device: placement.device_of[s],
-                f: c.f,
-                b: if knobs.split_bw { c.b } else { c.b + c.w },
-                w: c.w,
-                act_bytes: c.mem_act,
-                comm_in,
-                comm_b_in,
-            }
-        })
-        .collect();
-
-    // Per-device memory budget for activation stashes.
-    let budget: Vec<f64> = (0..p)
-        .map(|d| {
-            let static_mem: f64 = (0..s_n)
-                .filter(|&s| stages[s].device == d)
-                .map(|s| costs[s].mem_static)
-                .sum();
-            ((profile.mem_capacity - static_mem) * knobs.mem_cap_factor).max(0.0)
-        })
-        .collect();
-
-    // Progress counters: next micro-batch per (op, stage).
-    let mut next_f = vec![0usize; s_n];
-    let mut next_b = vec![0usize; s_n];
-    let mut next_w = vec![0usize; s_n];
-    // End times of completed ops.
-    let mut end_f = vec![vec![f64::NAN; nmb]; s_n];
-    let mut end_b = vec![vec![f64::NAN; nmb]; s_n];
-    let mut clock = vec![0.0f64; p];
-    let mut stash = vec![0.0f64; p]; // live activation bytes per device
-    let mut out: Vec<Vec<Slot>> = vec![Vec::new(); p];
-
-    let total_ops = s_n * nmb * if knobs.split_bw { 3 } else { 2 };
-    let mut emitted = 0usize;
-
-    // Earliest feasible start of a candidate on its device.
-    let ready = |dep_end: f64, comm: f64, clk: f64, overlap: bool| -> f64 {
-        if comm == 0.0 {
-            clk.max(dep_end)
-        } else if overlap {
-            clk.max(dep_end + comm)
-        } else {
-            clk.max(dep_end) + comm
-        }
-    };
-
-    while emitted < total_ops {
-        // Gather the globally earliest-start candidate; ties prefer
-        // B > F > W (B frees downstream deps and, fused, memory).
-        // Over-budget F's are tracked separately: they are only taken
-        // when nothing else can make progress — the memory constraint
-        // is soft here so the builder always terminates; the
-        // performance model flags the resulting pipeline OOM (Eq. 2)
-        // and the generator prunes it.
-        fn consider(
-            best: &mut Option<(f64, u8, usize, Slot)>,
-            start: f64,
-            prio: u8,
-            s: usize,
-            slot: Slot,
-        ) {
-            let better = match best {
-                None => true,
-                Some((bs, bp, _, _)) => {
-                    start < *bs - 1e-15 || ((start - *bs).abs() <= 1e-15 && prio < *bp)
-                }
-            };
-            if better {
-                *best = Some((start, prio, s, slot));
-            }
-        }
-        let mut best: Option<(f64, u8, usize, Slot)> = None; // (start, prio, stage, slot)
-        let mut best_overlimit: Option<(f64, u8, usize, Slot)> = None;
-
-        for s in 0..s_n {
-            let d = stages[s].device;
-            let clk = clock[d];
-            // F candidate.
-            let mb = next_f[s];
-            if mb < nmb {
-                let dep = if s == 0 { 0.0 } else { end_f[s - 1][mb] };
-                if !dep.is_nan() {
-                    let fits = stash[d] + stages[s].act_bytes <= budget[d]
-                        || stash[d] == 0.0;
-                    let start = ready(dep, stages[s].comm_in, clk, knobs.overlap_aware);
-                    let target = if fits { &mut best } else { &mut best_overlimit };
-                    consider(target, start, 1, s, Slot::new(OpKind::F, mb, s));
-                }
-            }
-            // B candidate: needs F(mb,s) done and B(mb,s+1) done (or F
-            // for the last stage).
-            let mb = next_b[s];
-            if mb < nmb && !end_f[s][mb].is_nan() {
-                let (dep, comm) = if s == s_n - 1 {
-                    (end_f[s][mb], 0.0)
-                } else if end_b[s + 1][mb].is_nan() {
-                    (f64::NAN, 0.0)
-                } else {
-                    (end_b[s + 1][mb], stages[s].comm_b_in)
-                };
-                if !dep.is_nan() {
-                    consider(
-                        &mut best,
-                        ready(dep, comm, clk, knobs.overlap_aware),
-                        0,
-                        s,
-                        Slot::new(OpKind::B, mb, s),
-                    );
-                }
-            }
-            // W candidate (split mode): needs B done; delayed by
-            // default (prio 2) so it only wins when nothing else can
-            // start earlier — i.e. it fills bubbles.
-            if knobs.split_bw {
-                let mb = next_w[s];
-                if mb < nmb && mb < next_b[s] {
-                    let prio = if knobs.w_fill { 2 } else { 0 };
-                    consider(
-                        &mut best,
-                        end_b[s][mb].max(clk),
-                        prio,
-                        s,
-                        Slot::new(OpKind::W, mb, s),
-                    );
-                }
-            }
-        }
-
-        let (start, _, s, slot) = best.or(best_overlimit).unwrap_or_else(|| {
-            panic!("scheduler stuck: emitted {emitted}/{total_ops} (invalid deps?)")
-        });
-        let d = stages[s].device;
-        let dur = match slot.op {
-            OpKind::F => stages[s].f,
-            OpKind::B => stages[s].b,
-            OpKind::W => stages[s].w,
-        };
-        let end = start + dur;
-        clock[d] = end;
-        match slot.op {
-            OpKind::F => {
-                end_f[s][slot.mb as usize] = end;
-                next_f[s] += 1;
-                stash[d] += stages[s].act_bytes;
-            }
-            OpKind::B => {
-                end_b[s][slot.mb as usize] = end;
-                next_b[s] += 1;
-                if !knobs.split_bw {
-                    stash[d] -= stages[s].act_bytes;
-                }
-            }
-            OpKind::W => {
-                next_w[s] += 1;
-                stash[d] -= stages[s].act_bytes;
-            }
-        }
-        out[d].push(slot);
-        emitted += 1;
-    }
-
+    let table = StageTable::build(profile, partition, placement);
+    let mut arena = SimArena::new();
+    let mut slots: Vec<Vec<Slot>> = vec![Vec::new(); placement.p];
+    let _ = fused_eval(&table, profile.mem_capacity, nmb, knobs, &mut arena, Some(&mut slots));
     Schedule {
-        p,
+        p: placement.p,
         nmb,
-        n_stages: s_n,
+        n_stages: table.n_stages,
         split_bw: knobs.split_bw,
         overlap_aware: knobs.overlap_aware,
-        per_device: out,
+        per_device: slots,
     }
 }
 
@@ -265,6 +81,7 @@ mod tests {
     use crate::model::build_model;
     use crate::partition::uniform;
     use crate::placement::{interleaved, sequential, wave};
+    use crate::schedule::OpKind;
 
     fn profile(fam: Family) -> ProfiledData {
         let spec = build_model(&ModelCfg::table5(fam, Size::Small));
@@ -322,5 +139,35 @@ mod tests {
         let pl = sequential(4);
         let sch = greedy_schedule(&prof, &part, &pl, 4, SchedKnobs::default());
         sch.validate(&pl).unwrap();
+    }
+
+    #[test]
+    fn fused_report_matches_rebuilt_schedule() {
+        // The wrapper and the fused evaluation are the same loop: the
+        // report returned while recording must equal a fresh simulation
+        // of the recorded schedule, bitwise.
+        let prof = profile(Family::NemotronH);
+        let part = uniform(prof.n_layers(), 4);
+        let pl = sequential(4);
+        let knobs = SchedKnobs::default();
+        let table = StageTable::build(&prof, &part, &pl);
+        let mut arena = SimArena::new();
+        let mut slots = vec![Vec::new(); 4];
+        let fused =
+            fused_eval(&table, prof.mem_capacity, 8, knobs, &mut arena, Some(&mut slots));
+        let sch = Schedule {
+            p: 4,
+            nmb: 8,
+            n_stages: 4,
+            split_bw: knobs.split_bw,
+            overlap_aware: knobs.overlap_aware,
+            per_device: slots,
+        };
+        let sim = crate::perfmodel::simulate_reference(&prof, &part, &pl, &sch, false)
+            .unwrap();
+        assert_eq!(fused.total, sim.total);
+        assert_eq!(fused.t_d, sim.t_d);
+        assert_eq!(fused.busy_d, sim.busy_d);
+        assert_eq!(fused.m_d, sim.m_d);
     }
 }

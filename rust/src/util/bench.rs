@@ -1,16 +1,52 @@
 //! Minimal benchmark harness (no criterion in the vendored crate set):
-//! warms up, runs timed iterations, reports mean ± σ and throughput.
+//! warms up, runs timed iterations, reports mean ± σ plus median and
+//! p95 (robust to warmup-adjacent outliers — bench deltas across PRs
+//! compare medians, not means), and derived throughput.
 //! Used by the `cargo bench` targets (`harness = false`).
 
 use std::time::Instant;
 
-use crate::util::stats::{mean, std_dev};
+use crate::util::stats::{mean, percentile, std_dev};
+
+/// Distribution summary of one benchmark run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub mean: f64,
+    pub sd: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub n: usize,
+}
+
+impl BenchStats {
+    fn from_times(times: &[f64]) -> BenchStats {
+        BenchStats {
+            mean: mean(times),
+            sd: std_dev(times),
+            median: percentile(times, 50.0),
+            p95: percentile(times, 95.0),
+            min: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            n: times.len(),
+        }
+    }
+}
 
 /// Run `f` repeatedly for at least `min_iters` iterations and ~`budget`
-/// seconds, print a criterion-style line, and return mean seconds/iter.
-pub fn bench<F: FnMut()>(name: &str, min_iters: usize, budget_s: f64, mut f: F) -> f64 {
-    // Warmup.
+/// seconds, print a criterion-style line, and return the distribution.
+/// Warmup runs (two, or until ~20 ms elapses) are excluded from the
+/// sample so first-call effects (allocation, page faults, lazy init)
+/// don't skew the mean.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, budget_s: f64, mut f: F) -> BenchStats {
+    // One guaranteed warmup; extras only while the warmup budget lasts
+    // (so second-scale one-shot benches don't pay multiple spare runs).
+    let warm_start = Instant::now();
     f();
+    let mut warmups = 1usize;
+    while warm_start.elapsed().as_secs_f64() < 0.02 && warmups < 16 {
+        f();
+        warmups += 1;
+    }
     let mut times = Vec::new();
     let start = Instant::now();
     while times.len() < min_iters || start.elapsed().as_secs_f64() < budget_s {
@@ -21,15 +57,16 @@ pub fn bench<F: FnMut()>(name: &str, min_iters: usize, budget_s: f64, mut f: F) 
             break;
         }
     }
-    let m = mean(&times);
-    let sd = std_dev(&times);
+    let s = BenchStats::from_times(&times);
     println!(
-        "bench {name:<44} {:>12}/iter  (±{:>10}, n={})",
-        crate::util::fmt_time(m),
-        crate::util::fmt_time(sd),
-        times.len()
+        "bench {name:<44} {:>12}/iter  (±{:>10}, median {:>10}, p95 {:>10}, n={})",
+        crate::util::fmt_time(s.mean),
+        crate::util::fmt_time(s.sd),
+        crate::util::fmt_time(s.median),
+        crate::util::fmt_time(s.p95),
+        s.n
     );
-    m
+    s
 }
 
 /// Report a derived throughput metric alongside a bench.
@@ -38,4 +75,19 @@ pub fn report_rate(name: &str, per_iter_s: f64, units_per_iter: f64, unit: &str)
         "      {name:<44} {:>12} {unit}/s",
         crate::util::fmt_si(units_per_iter / per_iter_s)
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_consistent() {
+        let s = bench("noop", 5, 0.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.n >= 5);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.mean >= 0.0 && s.sd >= 0.0);
+    }
 }

@@ -1,0 +1,237 @@
+//! Differential tests for the evaluation hot path: the event-driven
+//! heap kernel, the fused schedule+simulate pass and the incremental
+//! stage tables must reproduce the retained reference simulator
+//! *bit-for-bit* on randomized configurations (hand-rolled generator
+//! loop via `util::rng` — failures print the seed for reproduction).
+
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::model::build_model;
+use adaptis::partition::{uniform, Partition};
+use adaptis::placement::{interleaved, sequential, wave, Placement};
+use adaptis::perfmodel::{
+    fused_eval, fused_score, simulate, simulate_in, simulate_reference, PerfReport,
+    SimArena, StageTable,
+};
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::greedy::{greedy_schedule, SchedKnobs};
+use adaptis::schedule::{OpKind, Schedule, Slot};
+use adaptis::util::rng::Rng;
+
+fn random_profile(rng: &mut Rng) -> (ProfiledData, ParallelCfg) {
+    let fams = [Family::Llama2, Family::Gemma, Family::DeepSeek, Family::NemotronH];
+    let fam = fams[rng.below(fams.len())];
+    let mut cfg = ModelCfg::table5(fam, Size::Small);
+    cfg.blocks = [8, 12, 16, 24, 32][rng.below(5)];
+    let par = ParallelCfg {
+        p: [2, 3, 4, 8][rng.below(4)],
+        t: [1, 2][rng.below(2)],
+        d: 1,
+        e: 1,
+        nmb: [1, 2, 4, 7, 8, 16][rng.below(6)],
+        mbs: 1,
+        seq: [1024, 4096][rng.below(2)],
+    };
+    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+    (prof, par)
+}
+
+fn random_placement(rng: &mut Rng, p: usize, n_layers: usize) -> Placement {
+    match rng.below(3) {
+        0 => sequential(p),
+        1 => {
+            let v = 1 + rng.below(3.min(n_layers / p).max(1));
+            interleaved(p, v)
+        }
+        _ => {
+            let v = 1 + rng.below(3.min(n_layers / p).max(1));
+            wave(p, v)
+        }
+    }
+}
+
+fn random_knobs(rng: &mut Rng) -> SchedKnobs {
+    SchedKnobs {
+        split_bw: rng.below(2) == 0,
+        w_fill: rng.below(2) == 0,
+        mem_cap_factor: [1.0, 0.75, 0.5][rng.below(3)],
+        overlap_aware: rng.below(2) == 0,
+    }
+}
+
+fn random_partition(rng: &mut Rng, n_layers: usize, s_n: usize) -> Partition {
+    let mut part = uniform(n_layers, s_n);
+    for _ in 0..rng.below(8) {
+        let b = rng.below(s_n.saturating_sub(1).max(1));
+        part.shift_boundary(b, rng.below(2) == 0);
+    }
+    assert!(part.is_valid());
+    part
+}
+
+fn assert_reports_identical(a: &PerfReport, b: &PerfReport, what: &str) {
+    assert_eq!(a.total, b.total, "{what}: total");
+    assert_eq!(a.t_d, b.t_d, "{what}: t_d");
+    assert_eq!(a.busy_d, b.busy_d, "{what}: busy_d");
+    assert_eq!(a.bubble_d, b.bubble_d, "{what}: bubble_d");
+    assert_eq!(a.overlap_d, b.overlap_d, "{what}: overlap_d");
+    assert_eq!(a.comm_block_d, b.comm_block_d, "{what}: comm_block_d");
+    assert_eq!(a.m_d, b.m_d, "{what}: m_d");
+    assert_eq!(a.static_d, b.static_d, "{what}: static_d");
+    assert_eq!(a.oom, b.oom, "{what}: oom");
+}
+
+#[test]
+fn heap_kernel_matches_reference_on_random_pipelines() {
+    let mut arena = SimArena::new();
+    for seed in 0..120u64 {
+        let mut rng = Rng::new(seed);
+        let (prof, par) = random_profile(&mut rng);
+        let plac = random_placement(&mut rng, par.p, prof.n_layers());
+        if plac.n_stages() > prof.n_layers() {
+            continue;
+        }
+        let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let knobs = random_knobs(&mut rng);
+        let sch = greedy_schedule(&prof, &part, &plac, par.nmb, knobs);
+
+        let refr = simulate_reference(&prof, &part, &plac, &sch, false)
+            .unwrap_or_else(|e| panic!("seed {seed}: reference deadlock: {e}"));
+        // Wrapper (fresh arena) and arena-reusing fast path.
+        let fast = simulate(&prof, &part, &plac, &sch, false).unwrap();
+        let table = StageTable::build(&prof, &part, &plac);
+        let fast2 = simulate_in(&mut arena, &table, prof.mem_capacity, &sch, false).unwrap();
+        assert_reports_identical(&fast, &refr, &format!("seed {seed} wrapper"));
+        assert_reports_identical(&fast2, &refr, &format!("seed {seed} arena"));
+    }
+}
+
+#[test]
+fn fused_eval_matches_schedule_then_simulate() {
+    let mut arena = SimArena::new();
+    for seed in 300..400u64 {
+        let mut rng = Rng::new(seed);
+        let (prof, par) = random_profile(&mut rng);
+        let plac = random_placement(&mut rng, par.p, prof.n_layers());
+        if plac.n_stages() > prof.n_layers() {
+            continue;
+        }
+        let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let knobs = random_knobs(&mut rng);
+
+        let table = StageTable::build(&prof, &part, &plac);
+        let fused = fused_eval(&table, prof.mem_capacity, par.nmb, knobs, &mut arena, None);
+        let sch = greedy_schedule(&prof, &part, &plac, par.nmb, knobs);
+        let refr = simulate_reference(&prof, &part, &plac, &sch, false)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_reports_identical(&fused, &refr, &format!("seed {seed} fused"));
+        // Score-only path collapses to the same objective value.
+        let score = fused_score(&table, prof.mem_capacity, par.nmb, knobs, &mut arena);
+        let expect = if refr.oom { f64::INFINITY } else { refr.total };
+        assert_eq!(score, expect, "seed {seed}: fused_score");
+    }
+}
+
+#[test]
+fn incremental_stage_tables_match_fresh_builds_on_random_shifts() {
+    for seed in 500..540u64 {
+        let mut rng = Rng::new(seed);
+        let (prof, par) = random_profile(&mut rng);
+        let plac = random_placement(&mut rng, par.p, prof.n_layers());
+        if plac.n_stages() > prof.n_layers() || plac.n_stages() < 2 {
+            continue;
+        }
+        let mut part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let mut table = StageTable::build(&prof, &part, &plac);
+        for _ in 0..6 {
+            let b = rng.below(plac.n_stages() - 1);
+            if !part.shift_boundary(b, rng.below(2) == 0) {
+                continue;
+            }
+            table.update_boundary(&prof, &part, b);
+            let fresh = StageTable::build(&prof, &part, &plac);
+            assert_eq!(table.f, fresh.f, "seed {seed}");
+            assert_eq!(table.b, fresh.b, "seed {seed}");
+            assert_eq!(table.w, fresh.w, "seed {seed}");
+            assert_eq!(table.act, fresh.act, "seed {seed}");
+            assert_eq!(table.mem_static, fresh.mem_static, "seed {seed}");
+            assert_eq!(table.comm_bytes, fresh.comm_bytes, "seed {seed}");
+            assert_eq!(table.comm_f_in, fresh.comm_f_in, "seed {seed}");
+            assert_eq!(table.comm_b_in, fresh.comm_b_in, "seed {seed}");
+            assert_eq!(table.static_d, fresh.static_d, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn deadlock_reported_identically_by_both_kernels() {
+    let spec = build_model(&ModelCfg::table5(Family::Llama2, Size::Small));
+    let par = ParallelCfg::new(2, 2, 1, 1, 4096);
+    let prof = ProfiledData::analytical(&spec, &HardwareCfg::default(), &par);
+    let part = uniform(prof.n_layers(), 2);
+    let plac = sequential(2);
+    // Cross-device wait cycle: d0 runs B(0,0) before F(0,0); d1 needs
+    // F(0,0) before F(0,1) which B(0,0) depends on transitively.
+    let bad = Schedule {
+        p: 2,
+        nmb: 1,
+        n_stages: 2,
+        split_bw: false,
+        overlap_aware: false,
+        per_device: vec![
+            vec![Slot::new(OpKind::B, 0, 0), Slot::new(OpKind::F, 0, 0)],
+            vec![Slot::new(OpKind::F, 0, 1), Slot::new(OpKind::B, 0, 1)],
+        ],
+    };
+    let f = simulate(&prof, &part, &plac, &bad, false).unwrap_err();
+    let r = simulate_reference(&prof, &part, &plac, &bad, false).unwrap_err();
+    assert_eq!(f.device, r.device);
+    assert_eq!(f.at_slot, r.at_slot);
+    assert_eq!(f.slot, r.slot);
+}
+
+#[test]
+fn partial_progress_deadlocks_match_on_random_corruptions() {
+    // Corrupt valid schedules by swapping two slots on one device —
+    // sometimes still runnable, sometimes a deadlock; either way both
+    // kernels must agree exactly.
+    let mut checked = 0usize;
+    for seed in 700..780u64 {
+        let mut rng = Rng::new(seed);
+        let (prof, par) = random_profile(&mut rng);
+        if par.nmb < 2 {
+            continue;
+        }
+        let plac = random_placement(&mut rng, par.p, prof.n_layers());
+        if plac.n_stages() > prof.n_layers() {
+            continue;
+        }
+        let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let mut sch = greedy_schedule(&prof, &part, &plac, par.nmb, random_knobs(&mut rng));
+        let d = rng.below(par.p);
+        let n = sch.per_device[d].len();
+        if n < 2 {
+            continue;
+        }
+        let (i, j) = (rng.below(n), rng.below(n));
+        sch.per_device[d].swap(i, j);
+
+        match (
+            simulate(&prof, &part, &plac, &sch, false),
+            simulate_reference(&prof, &part, &plac, &sch, false),
+        ) {
+            (Ok(a), Ok(b)) => assert_reports_identical(&a, &b, &format!("seed {seed}")),
+            (Err(a), Err(b)) => {
+                assert_eq!(a.device, b.device, "seed {seed}");
+                assert_eq!(a.at_slot, b.at_slot, "seed {seed}");
+                assert_eq!(a.slot, b.slot, "seed {seed}");
+            }
+            (a, b) => panic!(
+                "seed {seed}: kernels disagree on deadlock: fast={:?} ref={:?}",
+                a.map(|r| r.total),
+                b.map(|r| r.total)
+            ),
+        }
+        checked += 1;
+    }
+    assert!(checked > 20, "too few corruption cases exercised: {checked}");
+}

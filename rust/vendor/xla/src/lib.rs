@@ -1,0 +1,128 @@
+//! Stub of the `xla-rs` PJRT binding surface that `adaptis::runtime`
+//! compiles against.  The build is hermetic (no registry, no
+//! `xla_extension` C++ tree), so this crate provides the exact types and
+//! signatures the runtime uses while every entry point that would need
+//! the real PJRT client reports `Error::Unavailable`.
+//!
+//! All RealCluster tests and benches already probe
+//! `ArtifactStore::open` and skip with a notice when it fails, so the
+//! whole Layer-3 stack (perf model, generator, executor, SimCluster)
+//! builds and tests green without a single native dependency.  To run
+//! the fidelity experiments (Figs 11/12), point the `xla` path
+//! dependency in `rust/Cargo.toml` at a real xla-rs checkout — the API
+//! here is a strict subset of it.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every PJRT operation is unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real xla_extension runtime (built with the vendored stub)"
+    )))
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_xs: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (stub: never constructed successfully).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle returned by `PjRtLoadedExecutable::execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// The TFRT CPU client — unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2]).is_ok());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}

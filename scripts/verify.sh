@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus a perfmodel bench smoke run.
+#   scripts/verify.sh          build + test + bench smoke
+#   scripts/verify.sh --fast   build + test only
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== perfmodel bench smoke (writes rust/BENCH_perfmodel.json) =="
+  cargo bench --bench perfmodel -- --smoke
+fi
+
+echo "verify: OK"
