@@ -10,16 +10,22 @@
 //! - `fused`: schedule construction + Algorithm-1 accounting in one
 //!   pass (`fused_eval`), the generator's per-candidate eval.
 //!
+//! Each `fast` config also runs with the peak-memory tracker disabled
+//! (`simulate_in_with(.., track_memory=false)`) and reports the
+//! tracking overhead (`mem_tracking_overhead_pct`), so regressions in
+//! the memory side of the hot kernel show up in the trajectory.
+//!
 //! Emits machine-readable `BENCH_perfmodel.json` (slots/s per config,
 //! medians) so the perf trajectory is tracked from PR 1 onward.
 //! `--smoke` runs the Small config only with a tiny budget (CI).
 
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::memory::MemCaps;
 use adaptis::model::build_model;
 use adaptis::partition::uniform;
 use adaptis::placement::sequential;
 use adaptis::perfmodel::{
-    fused_score, simulate_in, simulate_reference, SimArena, StageTable,
+    fused_score, simulate_in, simulate_in_with, simulate_reference, SimArena, StageTable,
 };
 use adaptis::profile::ProfiledData;
 use adaptis::schedule::builders::{one_f_one_b, zb_h1};
@@ -46,6 +52,7 @@ fn main() {
         let part = uniform(prof.n_layers(), p);
         let plac = sequential(p);
         let table = StageTable::build(&prof, &part, &plac);
+        let caps = MemCaps::uniform(p, prof.mem_capacity);
         let mut arena = SimArena::new();
 
         for (name, sch) in
@@ -62,11 +69,22 @@ fn main() {
 
             let label = format!("fast      {} P={p} nmb={nmb} ({name})", size.name());
             let t_fast = bench(&label, iters, budget, || {
-                let r =
-                    simulate_in(&mut arena, &table, prof.mem_capacity, &sch, false).unwrap();
+                let r = simulate_in(&mut arena, &table, &caps, &sch, false).unwrap();
                 std::hint::black_box(r.total);
             });
             report_rate("slot events (fast)", t_fast.median, slots, "slots");
+
+            // Memory-tracking overhead in the hot kernel: same run with
+            // the peak tracker compiled out of the loop.
+            let label = format!("fast/nomem {} P={p} nmb={nmb} ({name})", size.name());
+            let t_nomem = bench(&label, iters, budget, || {
+                let r = simulate_in_with(&mut arena, &table, &caps, &sch, false, false)
+                    .unwrap();
+                std::hint::black_box(r.total);
+            });
+            let mem_overhead_pct = 100.0 * (t_fast.median / t_nomem.median - 1.0);
+            report_rate("slot events (tracker off)", t_nomem.median, slots, "slots");
+            println!("      memory-tracking overhead                      {mem_overhead_pct:.1}%");
 
             let speedup = t_ref.median / t_fast.median;
             println!("      speedup (median reference/fast)               {speedup:.2}x");
@@ -80,6 +98,9 @@ fn main() {
                 ("reference_slots_per_s", num(slots / t_ref.median)),
                 ("fast_s_per_iter", num(t_fast.median)),
                 ("fast_slots_per_s", num(slots / t_fast.median)),
+                ("fast_notrack_s_per_iter", num(t_nomem.median)),
+                ("fast_notrack_slots_per_s", num(slots / t_nomem.median)),
+                ("mem_tracking_overhead_pct", num(mem_overhead_pct)),
                 ("speedup", num(speedup)),
                 ("reference_p95_s", num(t_ref.p95)),
                 ("fast_p95_s", num(t_fast.p95)),
@@ -91,7 +112,7 @@ fn main() {
         let ops = (table.n_stages * nmb * 3) as f64;
         let label = format!("fused eval {} P={p} nmb={nmb}", size.name());
         let t_fused = bench(&label, iters, budget, || {
-            let score = fused_score(&table, prof.mem_capacity, nmb, knobs, &mut arena);
+            let score = fused_score(&table, &caps, nmb, knobs, &mut arena);
             std::hint::black_box(score);
         });
         report_rate("slot ops (fused build+sim)", t_fused.median, ops, "slots");

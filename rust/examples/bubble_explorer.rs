@@ -1,12 +1,16 @@
 //! Bubble-ratio explorer: sweep pipeline depth and micro-batch count
 //! for one model/method and print the resulting bubble-ratio matrix —
-//! handy for building intuition about where bubbles come from.
+//! handy for building intuition about where bubbles come from.  Ends
+//! with a worked memory-cap example: the throughput winner gets
+//! rejected for OOM under a tightened per-device cap and the generator
+//! surfaces the feasible runner-up instead (DESIGN.md §4).
 //!
 //!     cargo run --release --example bubble_explorer [gemma|deepseek|nemotron|llama2]
 
 use adaptis::baselines::{build, Method};
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
 use adaptis::generator::{generate, GenOptions};
+use adaptis::memory::MemCaps;
 use adaptis::model::build_model;
 use adaptis::perfmodel::simulate;
 use adaptis::profile::ProfiledData;
@@ -55,4 +59,49 @@ fn main() {
         }
         println!();
     }
+
+    memory_cap_example(&cfg);
+}
+
+/// Worked example: what a binding per-device memory cap does to the
+/// generator's choice.  The unconstrained winner is re-evaluated under
+/// a cap set just below its own peak — OOM, rejected — and the search
+/// returns the feasible runner-up with its headroom.
+fn memory_cap_example(cfg: &ModelCfg) {
+    let (p, nmb) = (4usize, 16usize);
+    let par = ParallelCfg { p, t: 2, d: 1, e: 1, nmb, mbs: 1, seq: 4096 };
+    let prof = ProfiledData::analytical(&build_model(cfg), &HardwareCfg::default(), &par);
+    let gb = 1e9;
+
+    println!("--- memory-constrained generation (P={p}, nmb={nmb}) ---");
+    let mut opts = GenOptions::new(p, nmb);
+    opts.max_iters = 12;
+    let free = generate(&prof, &opts);
+    let free_peak = free.report.peak_mem();
+    println!(
+        "unconstrained winner: step {:.2} ms | per-device peak {:?} GB",
+        free.report.total * 1e3,
+        free.report.m_d.iter().map(|m| (m / gb * 100.0).round() / 100.0).collect::<Vec<_>>(),
+    );
+
+    // Tighten every device to 97% of the winner's peak: the winner no
+    // longer fits and the feasibility gate prunes it from the search.
+    let cap = 0.97 * free_peak;
+    let caps = MemCaps::uniform(p, cap);
+    println!(
+        "cap {:.2} GB/device: winner's peak {:.2} GB -> rejected for OOM",
+        cap / gb,
+        free_peak / gb
+    );
+    let mut opts = GenOptions::new(p, nmb).with_mem_caps(caps);
+    opts.max_iters = 12;
+    let fit = generate(&prof, &opts);
+    println!(
+        "feasible runner-up:  step {:.2} ms ({:+.1}% vs free) | peak {:.2} GB | min headroom {:.2} GB{}",
+        fit.report.total * 1e3,
+        100.0 * (fit.report.total / free.report.total - 1.0),
+        fit.report.peak_mem() / gb,
+        fit.report.min_headroom() / gb,
+        if fit.report.oom { "  [no feasible plan found]" } else { "" }
+    );
 }

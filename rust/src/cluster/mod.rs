@@ -1,5 +1,7 @@
 //! Cluster backends for executing lowered [`crate::executor::Program`]s:
 //!
+//! - [`spec`]: static per-device resource description (memory
+//!   capacities, heterogeneous allowed) consumed by the planning stack;
 //! - [`sim`]: discrete-event simulator with rendezvous send semantics —
 //!   instruction-level timing (validates the executor's comm passes and
 //!   quantifies overlap/deadlock-repair effects);
@@ -8,3 +10,6 @@
 
 pub mod real;
 pub mod sim;
+pub mod spec;
+
+pub use spec::{ClusterSpec, DeviceSpec};

@@ -1,0 +1,68 @@
+//! Static cluster description: the per-device resource spec the
+//! planning stack consumes (today: memory capacity; heterogeneous
+//! clusters mix device generations, so per-device values are the rule,
+//! not the exception).
+//!
+//! [`ClusterSpec::mem_caps`] is the bridge into the memory subsystem:
+//! the Pipeline Generator takes a [`crate::memory::MemCaps`] and
+//! rejects plans that do not fit the devices they are placed on.
+
+use crate::config::HardwareCfg;
+use crate::memory::MemCaps;
+
+/// One pipeline device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceSpec {
+    /// HBM capacity in bytes (`f64::INFINITY` = treat as unbounded).
+    pub mem_bytes: f64,
+}
+
+/// The pipeline devices of one training job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl ClusterSpec {
+    /// Homogeneous cluster: `p` devices with the hardware model's
+    /// capacity.
+    pub fn uniform(p: usize, hw: &HardwareCfg) -> ClusterSpec {
+        ClusterSpec::with_caps(vec![hw.mem_capacity; p])
+    }
+
+    /// Heterogeneous cluster from explicit per-device capacities.
+    pub fn with_caps(caps: Vec<f64>) -> ClusterSpec {
+        assert!(!caps.is_empty(), "no devices");
+        ClusterSpec { devices: caps.into_iter().map(|mem_bytes| DeviceSpec { mem_bytes }).collect() }
+    }
+
+    pub fn p(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The per-device capacity vector the evaluation stack consumes.
+    pub fn mem_caps(&self) -> MemCaps {
+        MemCaps::per_device(self.devices.iter().map(|d| d.mem_bytes).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_from_hardware() {
+        let hw = HardwareCfg::default();
+        let c = ClusterSpec::uniform(4, &hw);
+        assert_eq!(c.p(), 4);
+        assert_eq!(c.mem_caps().cap(2), hw.mem_capacity);
+    }
+
+    #[test]
+    fn heterogeneous_caps_survive_roundtrip() {
+        let c = ClusterSpec::with_caps(vec![80e9, 40e9, 80e9]);
+        let caps = c.mem_caps();
+        assert_eq!(caps.as_slice(), &[80e9, 40e9, 80e9]);
+        assert!(caps.bounded());
+    }
+}

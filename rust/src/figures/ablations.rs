@@ -1,4 +1,4 @@
-//! Design-choice ablations (DESIGN.md §7) — beyond the paper's own
+//! Design-choice ablations (DESIGN.md §8) — beyond the paper's own
 //! figures, these quantify the executor/generator mechanisms this repo
 //! implements:
 //!
@@ -25,7 +25,7 @@ use crate::profile::ProfiledData;
 use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
 
 pub fn ablations(ctx: &Ctx) -> String {
-    let mut out = String::from("## Ablations (design choices, DESIGN.md §7)\n\n");
+    let mut out = String::from("## Ablations (design choices, DESIGN.md §8)\n\n");
     let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 16, mbs: 1, seq: 4096 };
     let cfg = ModelCfg::table5(Family::NemotronH, Size::Small);
     let prof = ProfiledData::analytical(&build_model(&cfg), &ctx.hw, &par);
@@ -62,10 +62,36 @@ pub fn ablations(ctx: &Ctx) -> String {
         t.row(vec![
             name.into(),
             format!("{:.2}", r.total * 1e3),
-            format!("{:.1}", r.m_d.iter().cloned().fold(0.0, f64::max) / 1e9),
+            format!("{:.1}", r.peak_mem() / 1e9),
         ]);
     }
     let _ = write!(out, "### Backward splitting\n\n{}\n", t.render());
+
+    // --- memory caps: the throughput/memory frontier -------------------------
+    // Tightening the per-device capacity forces the generator onto
+    // memory-leaner plans: makespan may rise, peak memory must fall
+    // under the cap (memory/ feasibility gate).
+    let mut t = Table::new(&["cap (× free peak)", "step (ms)", "peak mem (GB)", "headroom (GB)"]);
+    let free = {
+        let mut opts = GenOptions::new(par.p, par.nmb);
+        opts.max_iters = if ctx.fast { 4 } else { 12 };
+        generate(&prof, &opts)
+    };
+    let free_peak = free.report.peak_mem();
+    for frac in [1.0f64, 0.9, 0.8] {
+        let mut opts = GenOptions::new(par.p, par.nmb);
+        opts.max_iters = if ctx.fast { 4 } else { 12 };
+        opts.mem_caps = Some(crate::memory::MemCaps::uniform(par.p, free_peak * frac));
+        let g = generate(&prof, &opts);
+        let peak = g.report.peak_mem();
+        t.row(vec![
+            format!("{frac:.2}{}", if g.report.oom { " [infeasible]" } else { "" }),
+            format!("{:.2}", g.report.total * 1e3),
+            format!("{:.2}", peak / 1e9),
+            format!("{:.2}", g.report.min_headroom() / 1e9),
+        ]);
+    }
+    let _ = write!(out, "### Memory caps (generator feasibility gate)\n\n{}\n", t.render());
 
     // --- placement granularity ----------------------------------------------
     let mut t = Table::new(&["virtual stages/device", "makespan (ms)", "bubble"]);

@@ -230,7 +230,7 @@ pub fn fig8(ctx: &Ctx) -> String {
                             let iters = if ctx.fast { 8 } else { 16 };
                             if let Some(r) = eval(&prof, *algo, p, nmb, iters) {
                                 let ts = cluster_throughput(&r, &par, &ctx.hw);
-                                if best[i].map_or(true, |b| ts > b) {
+                                if best[i].is_none_or(|b| ts > b) {
                                     best[i] = Some(ts);
                                 }
                             }

@@ -46,13 +46,15 @@ pub mod searchspace;
 use std::time::Instant;
 
 use crate::baselines::Pipeline;
-use crate::partition::{balanced, uniform, Partition};
+use crate::memory::MemCaps;
+use crate::partition::{balanced, memory_balanced, uniform, Partition};
 use crate::placement::{interleaved, sequential, wave, Placement};
 use crate::perfmodel::{
-    fused_eval, fused_score, simulate, simulate_reference, PerfReport, SimArena, StageTable,
+    fused_eval, fused_score, simulate_in, simulate_reference_in, PerfReport, SimArena,
+    StageTable,
 };
 use crate::profile::ProfiledData;
-use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
+use crate::schedule::greedy::{greedy_schedule_caps, SchedKnobs};
 
 /// Which phases the generator may tune (Fig 10 ablation masks).
 #[derive(Clone, Copy, Debug)]
@@ -97,6 +99,10 @@ pub struct GenOptions {
     pub max_chunks: usize,
     /// Candidate-evaluation engine (identical results either way).
     pub engine: EvalEngine,
+    /// Per-device memory capacities the search must respect.  `None`
+    /// uses the profile's uniform capacity (the seed behaviour);
+    /// heterogeneous caps come from [`crate::cluster::ClusterSpec::mem_caps`].
+    pub mem_caps: Option<MemCaps>,
 }
 
 impl GenOptions {
@@ -109,7 +115,14 @@ impl GenOptions {
             seed_s1f1b_only: false,
             max_chunks: 4,
             engine: EvalEngine::Fast,
+            mem_caps: None,
         }
+    }
+
+    /// Search under the given per-device memory capacities.
+    pub fn with_mem_caps(mut self, caps: MemCaps) -> Self {
+        self.mem_caps = Some(caps);
+        self
     }
 }
 
@@ -155,23 +168,54 @@ impl Prepared {
     }
 }
 
+/// Schedule-independent feasibility lower bound: a device holds its
+/// static memory plus, at each stage's first F, at least that stage's
+/// one-micro-batch stash (per-(stage, mb) holdings never go negative),
+/// so `static_d + act[s] > cap` for any stage proves OOM before any
+/// simulation runs.  O(S), allocation-free.
+fn fits_lower_bound(table: &StageTable, caps: &MemCaps) -> bool {
+    if !caps.fits_static(&table.static_d) {
+        return false;
+    }
+    (0..table.n_stages).all(|s| {
+        let d = table.device[s];
+        table.static_d[d] + table.act[s] <= caps.cap(d)
+    })
+}
+
 /// Score one candidate: step makespan, +inf on OOM / deadlock (Eq. 2).
+/// Candidates rejected by the feasibility lower bound never get a
+/// schedule built — no simulation for plans no schedule could save.
 fn eval_candidate(
     profile: &ProfiledData,
+    caps: &MemCaps,
     nmb: usize,
     engine: EvalEngine,
     prep: &Prepared,
     arena: &mut SimArena,
 ) -> f64 {
+    if !fits_lower_bound(&prep.table, caps) {
+        return f64::INFINITY;
+    }
     match engine {
-        EvalEngine::Fast => {
-            fused_score(&prep.table, profile.mem_capacity, nmb, prep.cand.knobs, arena)
-        }
+        EvalEngine::Fast => fused_score(&prep.table, caps, nmb, prep.cand.knobs, arena),
         EvalEngine::Reference => {
-            let sch =
-                greedy_schedule(profile, &prep.cand.part, &prep.cand.plac, nmb, prep.cand.knobs);
-            match simulate_reference(profile, &prep.cand.part, &prep.cand.plac, &sch, false)
-            {
+            let sch = greedy_schedule_caps(
+                profile,
+                caps,
+                &prep.cand.part,
+                &prep.cand.plac,
+                nmb,
+                prep.cand.knobs,
+            );
+            match simulate_reference_in(
+                profile,
+                caps,
+                &prep.cand.part,
+                &prep.cand.plac,
+                &sch,
+                false,
+            ) {
                 Ok(r) if !r.oom => r.total,
                 Ok(_) => f64::INFINITY,
                 Err(_) => f64::INFINITY,
@@ -182,6 +226,7 @@ fn eval_candidate(
 
 struct Evaluator<'a> {
     profile: &'a ProfiledData,
+    caps: &'a MemCaps,
     nmb: usize,
     engine: EvalEngine,
     evals: usize,
@@ -189,8 +234,13 @@ struct Evaluator<'a> {
 }
 
 impl<'a> Evaluator<'a> {
-    fn new(profile: &'a ProfiledData, nmb: usize, engine: EvalEngine) -> Self {
-        Evaluator { profile, nmb, engine, evals: 0, arena: SimArena::new() }
+    fn new(
+        profile: &'a ProfiledData,
+        caps: &'a MemCaps,
+        nmb: usize,
+        engine: EvalEngine,
+    ) -> Self {
+        Evaluator { profile, caps, nmb, engine, evals: 0, arena: SimArena::new() }
     }
 
     /// Score a whole move batch.  With the fast engine, candidates are
@@ -218,6 +268,7 @@ impl<'a> Evaluator<'a> {
             for prep in batch {
                 out.push(eval_candidate(
                     self.profile,
+                    self.caps,
                     self.nmb,
                     self.engine,
                     prep,
@@ -227,14 +278,14 @@ impl<'a> Evaluator<'a> {
             return out;
         }
         let mut out = vec![f64::INFINITY; n];
-        let chunk = (n + threads - 1) / threads;
-        let (profile, nmb, engine) = (self.profile, self.nmb, self.engine);
+        let chunk = n.div_ceil(threads);
+        let (profile, caps, nmb, engine) = (self.profile, self.caps, self.nmb, self.engine);
         std::thread::scope(|sc| {
             for (bch, och) in batch.chunks(chunk).zip(out.chunks_mut(chunk)) {
                 sc.spawn(move || {
                     let mut arena = SimArena::new();
                     for (prep, o) in bch.iter().zip(och.iter_mut()) {
-                        *o = eval_candidate(profile, nmb, engine, prep, &mut arena);
+                        *o = eval_candidate(profile, caps, nmb, engine, prep, &mut arena);
                     }
                 });
             }
@@ -248,16 +299,30 @@ impl<'a> Evaluator<'a> {
         match self.engine {
             EvalEngine::Fast => Some(fused_eval(
                 table,
-                self.profile.mem_capacity,
+                self.caps,
                 self.nmb,
                 cand.knobs,
                 &mut self.arena,
                 None,
             )),
             EvalEngine::Reference => {
-                let sch =
-                    greedy_schedule(self.profile, &cand.part, &cand.plac, self.nmb, cand.knobs);
-                simulate_reference(self.profile, &cand.part, &cand.plac, &sch, false).ok()
+                let sch = greedy_schedule_caps(
+                    self.profile,
+                    self.caps,
+                    &cand.part,
+                    &cand.plac,
+                    self.nmb,
+                    cand.knobs,
+                );
+                simulate_reference_in(
+                    self.profile,
+                    self.caps,
+                    &cand.part,
+                    &cand.plac,
+                    &sch,
+                    false,
+                )
+                .ok()
             }
         }
     }
@@ -268,7 +333,12 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     let t0 = Instant::now();
     let n_layers = profile.n_layers();
     let p = opts.p;
-    let mut ev = Evaluator::new(profile, opts.nmb, opts.engine);
+    let caps = opts
+        .mem_caps
+        .clone()
+        .unwrap_or_else(|| MemCaps::uniform(p, profile.mem_capacity));
+    assert_eq!(caps.p(), p, "mem_caps must cover every pipeline device");
+    let mut ev = Evaluator::new(profile, &caps, opts.nmb, opts.engine);
     let mut log = Vec::new();
 
     // ---- Seed selection --------------------------------------------------
@@ -319,6 +389,21 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         }
     }
 
+    // Memory pressure: when a standard seed already fails the
+    // feasibility lower bound under the caps, add memory-balanced
+    // seeds — the throughput-balanced splits concentrate the heavy
+    // embedding/head memory exactly where a tight cap rejects it.
+    // With slack caps the seed set (and the search) is unchanged.
+    if caps.bounded() && seeds.iter().any(|s| !fits_lower_bound(&s.table, &caps)) {
+        for knobs in [knobs_1f1b, knobs_zb] {
+            seeds.push(Prepared::fresh(
+                profile,
+                "memory-balanced seed".into(),
+                Cand { part: memory_balanced(profile, p), plac: sequential(p), knobs },
+            ));
+        }
+    }
+
     let seed_scores = ev.scores(&seeds);
     let mut best_i = 0usize;
     for (i, &sc) in seed_scores.iter().enumerate() {
@@ -359,11 +444,15 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
                 "schedule" => schedule_moves(&cur, &cur_table),
                 _ => unreachable!(),
             };
+            // Memory-violating moves are pruned inside `eval_candidate`
+            // (the feasibility lower bound short-circuits to +inf
+            // before any schedule is built), so one gate serves seeds
+            // and move batches alike.
             let scores = ev.scores(&moves);
             let mut best_move: Option<(f64, usize)> = None;
             for (i, &score) in scores.iter().enumerate() {
                 if score < best_score - 1e-12
-                    && best_move.map_or(true, |(b, _)| score < b)
+                    && best_move.is_none_or(|(b, _)| score < b)
                 {
                     best_move = Some((score, i));
                 }
@@ -386,10 +475,41 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         }
     }
 
-    // Final artifacts.
-    let schedule = greedy_schedule(profile, &cur.part, &cur.plac, opts.nmb, cur.knobs);
-    let report = simulate(profile, &cur.part, &cur.plac, &schedule, false)
+    // Final artifacts (evaluated under the same caps as the search, so
+    // the reported OOM/headroom matches what the generator optimized).
+    let final_table = StageTable::build(profile, &cur.part, &cur.plac);
+    let mut arena = SimArena::new();
+    let mut schedule =
+        greedy_schedule_caps(profile, &caps, &cur.part, &cur.plac, opts.nmb, cur.knobs);
+    let mut report = simulate_in(&mut arena, &final_table, &caps, &schedule, false)
         .expect("final pipeline must simulate");
+    // OOM repair (Eq. 2): under a binding cap the list scheduler's
+    // overlimit fallback can overshoot its activation budget (it admits
+    // an over-budget F when nothing else can make progress).  Tighten
+    // the budget factor geometrically — F's are deferred earlier,
+    // trading bubbles for memory — and keep the first feasible result.
+    if report.oom && caps.bounded() {
+        let mut knobs = cur.knobs;
+        for _ in 0..8 {
+            knobs.mem_cap_factor *= 0.5;
+            let sch =
+                greedy_schedule_caps(profile, &caps, &cur.part, &cur.plac, opts.nmb, knobs);
+            let rep = simulate_in(&mut arena, &final_table, &caps, &sch, false)
+                .expect("repaired pipeline must simulate");
+            if !rep.oom {
+                log.push(GenLogEntry {
+                    iter,
+                    phase: "repair",
+                    action: format!("tighten memory ×{:.4}", knobs.mem_cap_factor),
+                    total: rep.total,
+                });
+                schedule = sch;
+                report = rep;
+                cur.knobs = knobs;
+                break;
+            }
+        }
+    }
     GenResult {
         pipeline: Pipeline {
             name: "AdaPtis".into(),
@@ -644,6 +764,7 @@ mod tests {
     use crate::baselines::{build, Method};
     use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
     use crate::model::build_model;
+    use crate::perfmodel::simulate;
 
     fn profile(fam: Family, p: usize, nmb: usize) -> ProfiledData {
         let spec = build_model(&ModelCfg::table5(fam, Size::Small));

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   figures <id|all> [--fast] [--out DIR] [--artifacts DIR]
-//!       regenerate a paper table/figure (see DESIGN.md §5)
+//!       regenerate a paper table/figure (see DESIGN.md §6)
 //!   generate --model <fam> --size <sz> --p N --nmb N [--t N] [--seq N]
 //!       run the Pipeline Generator and print the co-optimized pipeline
 //!   simulate --method <m> --model <fam> --size <sz> --p N --nmb N
@@ -258,12 +258,18 @@ fn cmd_simulate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         par.nmb,
         par.seq
     );
+    let headroom = report.min_headroom();
     println!(
-        "step {} | bubble {:.1}% | peak mem {} | tput {} tok/s{}",
+        "step {} | bubble {:.1}% | peak mem {} | tput {} tok/s{}{}",
         fmt_time(report.total),
         100.0 * report.bubble_ratio(),
-        fmt_si(report.m_d.iter().cloned().fold(0.0, f64::max)),
+        fmt_si(report.peak_mem()),
         fmt_si(report.throughput((par.nmb * par.tokens()) as f64)),
+        if headroom.is_finite() {
+            format!(" | headroom {}", fmt_si(headroom.max(0.0)))
+        } else {
+            String::new()
+        },
         if report.oom { "  [OOM!]" } else { "" }
     );
     println!("partition: {:?}", pipeline.partition.bounds);

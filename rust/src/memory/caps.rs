@@ -1,0 +1,96 @@
+//! Per-device memory capacities.
+//!
+//! The seed code carried one scalar capacity on [`crate::profile::ProfiledData`];
+//! real clusters mix device generations (80 GB H800s next to 40 GB
+//! A100s), and the generator must reject plans that fit the average but
+//! not the smallest device.  [`MemCaps`] is the per-device vector the
+//! whole evaluation stack consumes; `f64::INFINITY` entries model
+//! unbounded devices (throughput-only search).
+
+/// Per-device memory capacity (bytes).  Entries may be
+/// `f64::INFINITY` (unbounded); non-positive entries are permitted and
+/// simply mark every plan on that device OOM (the seed code's scalar
+/// capacity had the same degenerate behaviour — kept so profiles with
+/// a zeroed `mem_capacity` degrade to OOM reports, not panics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemCaps {
+    caps: Vec<f64>,
+}
+
+impl MemCaps {
+    /// Same capacity on every device (the homogeneous-cluster default).
+    pub fn uniform(p: usize, bytes: f64) -> MemCaps {
+        assert!(p > 0, "no devices");
+        assert!(!bytes.is_nan(), "NaN capacity");
+        MemCaps { caps: vec![bytes; p] }
+    }
+
+    /// No memory constraint (throughput-only search).
+    pub fn unbounded(p: usize) -> MemCaps {
+        MemCaps::uniform(p, f64::INFINITY)
+    }
+
+    /// Heterogeneous capacities, one entry per device.
+    pub fn per_device(caps: Vec<f64>) -> MemCaps {
+        assert!(!caps.is_empty(), "no devices");
+        assert!(caps.iter().all(|c| !c.is_nan()), "NaN capacity");
+        MemCaps { caps }
+    }
+
+    pub fn p(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Capacity of device `d`.
+    #[inline]
+    pub fn cap(&self, d: usize) -> f64 {
+        self.caps[d]
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.caps
+    }
+
+    /// True when at least one device has a finite cap — i.e. memory can
+    /// constrain the search at all.
+    pub fn bounded(&self) -> bool {
+        self.caps.iter().any(|c| c.is_finite())
+    }
+
+    /// Feasibility lower bound: a pipeline whose *static* per-device
+    /// memory (weights + grads + optimizer) already exceeds a cap can
+    /// never fit, whatever the schedule does with activations.  The
+    /// generator uses this to reject candidates before scoring them.
+    pub fn fits_static(&self, static_d: &[f64]) -> bool {
+        debug_assert_eq!(static_d.len(), self.caps.len());
+        static_d.iter().zip(&self.caps).all(|(&m, &c)| m <= c)
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_and_unbounded() {
+        let u = MemCaps::uniform(4, 80e9);
+        assert_eq!(u.p(), 4);
+        assert_eq!(u.cap(3), 80e9);
+        assert!(u.bounded());
+        let inf = MemCaps::unbounded(2);
+        assert!(!inf.bounded());
+        assert_eq!(inf.cap(0), f64::INFINITY);
+    }
+
+    #[test]
+    fn static_gate() {
+        let caps = MemCaps::per_device(vec![10.0, 20.0]);
+        assert!(caps.fits_static(&[10.0, 19.0]));
+        assert!(!caps.fits_static(&[10.1, 19.0]));
+        // Unbounded devices never bind.
+        let hetero = MemCaps::per_device(vec![f64::INFINITY, 8.0]);
+        assert!(hetero.bounded());
+        assert!(hetero.fits_static(&[1e30, 8.0]));
+    }
+}

@@ -1,0 +1,39 @@
+//! Memory subsystem: the peak-memory model that sits next to the
+//! Pipeline Performance Model.
+//!
+//! Every axis the Pipeline Generator tunes trades bubbles against
+//! per-device memory — warmup depth sets the live-activation count,
+//! ZB-style W-delay retains part of the stash longer, and interleaved /
+//! wave placements stack several stages' static state on one device.
+//! Zero Bubble Pipeline Parallelism and Pipeline Parallelism with
+//! Controllable Memory (see PAPERS.md) make the point explicit:
+//! schedule families are points on a throughput/memory frontier.  This
+//! module supplies the memory half of that frontier:
+//!
+//! - [`model`]: [`MemoryModel`] / [`StageFootprint`] — per-stage
+//!   footprints (weights, gradient accumulators, optimizer state,
+//!   saved activations per in-flight micro-batch, and the W-retained
+//!   slice) derived from the profiled layer tables;
+//! - [`caps`]: [`MemCaps`] — per-device memory capacities
+//!   (heterogeneous caps allowed), consumed by the simulation kernels
+//!   (OOM + headroom reporting) and the generator (feasibility gate);
+//! - [`tracker`]: the retained *reference* peak tracker.  Per-device
+//!   stash only changes when that device executes one of its own
+//!   slots, so the peak is a pure function of the device's slot order —
+//!   the tracker replays it directly and must agree bit-for-bit with
+//!   the event-driven kernels (`tests/memory_differential.rs`).
+//!
+//! Charge/release protocol (shared by the fast kernels and the
+//! tracker): `act_per_mb` is charged when F executes; a fused backward
+//! releases all of it at B; a split backward releases the B-consumed
+//! part (`act_per_mb − act_w_per_mb`) at B and the W-retained slice
+//! (`act_w_per_mb`) at W.  Static memory is schedule-independent and is
+//! reported separately (`PerfReport::static_d`).
+
+pub mod caps;
+pub mod model;
+pub mod tracker;
+
+pub use caps::MemCaps;
+pub use model::{MemoryModel, StageFootprint};
+pub use tracker::{peak_stash, peak_stash_fused_release};

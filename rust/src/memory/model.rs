@@ -1,0 +1,158 @@
+//! Per-stage memory footprints derived from the profiled layer tables.
+//!
+//! [`MemoryModel::build`] aggregates [`crate::model::LayerCost`] memory
+//! fields over a (partition, placement) into [`StageFootprint`]s — the
+//! same numbers the evaluation kernels consume via
+//! [`crate::perfmodel::StageTable`], exposed here in taxonomy form
+//! (weights / grads / optimizer / activations / W-retained slice) for
+//! the generator's feasibility gate, the reference tracker and the
+//! reports.
+
+use crate::partition::Partition;
+use crate::placement::Placement;
+use crate::profile::ProfiledData;
+
+/// Fraction of a stage's static memory that is raw parameters.  The
+/// cost model packs static memory as `params + grads + 2 Adam moments`,
+/// all fp32 ⇒ 4× the parameter bytes (see `model/cost.rs`); the
+/// fractions below are exact binary values so the decomposition
+/// round-trips bitwise (`weights + grads + optimizer == mem_static`).
+pub const WEIGHTS_FRAC: f64 = 0.25;
+/// Fraction that is the gradient accumulation buffer.
+pub const GRADS_FRAC: f64 = 0.25;
+/// Fraction that is optimizer state (two Adam moments).
+pub const OPTIMIZER_FRAC: f64 = 0.5;
+
+/// Memory footprint of one pipeline stage.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageFootprint {
+    /// Parameter bytes (TP-sharded).
+    pub weights: f64,
+    /// Gradient accumulation buffer — allocated for the whole step
+    /// whether or not the backward is split.
+    pub grads: f64,
+    /// Optimizer state (Adam moments).
+    pub optimizer: f64,
+    /// Saved activations per in-flight micro-batch, charged at F: the
+    /// backward working set (layer inputs + stashed intermediates).
+    pub act_per_mb: f64,
+    /// The slice of `act_per_mb` a delayed W still needs (the layer
+    /// inputs feeding the param-grad matmuls).  A split backward
+    /// releases `act_per_mb − act_w_per_mb` at B and this part at W; a
+    /// fused backward releases everything at B.
+    pub act_w_per_mb: f64,
+}
+
+impl StageFootprint {
+    /// Schedule-independent memory: weights + grads + optimizer.
+    pub fn static_total(&self) -> f64 {
+        self.weights + self.grads + self.optimizer
+    }
+
+    /// The B-released part of the activation stash under a split
+    /// backward.
+    pub fn act_b_per_mb(&self) -> f64 {
+        self.act_per_mb - self.act_w_per_mb
+    }
+}
+
+/// Footprint of one stage (a contiguous layer range) — the aggregation
+/// the whole subsystem is built on.  O(1) via the profile prefix sums.
+pub fn stage_footprint(profile: &ProfiledData, range: std::ops::Range<usize>) -> StageFootprint {
+    let c = profile.stage_cost(range);
+    StageFootprint {
+        weights: c.mem_static * WEIGHTS_FRAC,
+        grads: c.mem_static * GRADS_FRAC,
+        optimizer: c.mem_static * OPTIMIZER_FRAC,
+        act_per_mb: c.mem_act,
+        act_w_per_mb: c.mem_act_w,
+    }
+}
+
+/// Per-stage footprints plus the stage → device mapping: everything the
+/// memory side of Algorithm 1 needs.
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    /// Pipeline devices.
+    pub p: usize,
+    /// Owning device per stage.
+    pub device: Vec<usize>,
+    /// Footprint per stage.
+    pub stages: Vec<StageFootprint>,
+}
+
+impl MemoryModel {
+    pub fn build(
+        profile: &ProfiledData,
+        partition: &Partition,
+        placement: &Placement,
+    ) -> MemoryModel {
+        let s_n = partition.n_stages();
+        assert_eq!(placement.n_stages(), s_n);
+        MemoryModel {
+            p: placement.p,
+            device: placement.device_of.clone(),
+            stages: (0..s_n)
+                .map(|s| stage_footprint(profile, partition.stage_range(s)))
+                .collect(),
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Static memory aggregated per device (ascending stage order —
+    /// the same summation the evaluation kernels use, so the result is
+    /// bit-identical to `PerfReport::static_d`).
+    pub fn static_d(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.p];
+        for (s, fp) in self.stages.iter().enumerate() {
+            out[self.device[s]] += fp.static_total();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::partition::uniform;
+    use crate::placement::interleaved;
+
+    fn prof() -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn static_decomposition_is_lossless() {
+        let p = prof();
+        let part = uniform(p.n_layers(), 4);
+        for s in 0..4 {
+            let fp = stage_footprint(&p, part.stage_range(s));
+            let c = p.stage_cost(part.stage_range(s));
+            // 0.25/0.25/0.5 are exact binary fractions: bitwise equal.
+            assert_eq!(fp.static_total(), c.mem_static);
+            assert!(fp.act_w_per_mb <= fp.act_per_mb);
+            assert!(fp.act_b_per_mb() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn static_d_matches_kernel_aggregation() {
+        let p = prof();
+        let part = uniform(p.n_layers(), 8);
+        let pl = interleaved(4, 2);
+        let mm = MemoryModel::build(&p, &part, &pl);
+        let table = crate::perfmodel::StageTable::build(&p, &part, &pl);
+        assert_eq!(mm.static_d(), table.static_d);
+    }
+
+}

@@ -1,0 +1,129 @@
+//! Reference peak-memory tracker.
+//!
+//! Per-device stash only changes when that device executes one of its
+//! own slots, and a device executes its slots strictly in list order —
+//! so the activation peak is a pure function of the per-device slot
+//! sequence, independent of cross-device timing.  That makes this
+//! tracker a timing-free oracle for the event-driven kernels: it
+//! applies the exact same f64 charge/release sequence the kernels do,
+//! so `static_d + peak` must equal `PerfReport::m_d` *bitwise*
+//! (pinned by `tests/memory_differential.rs`).
+
+use super::model::MemoryModel;
+use crate::schedule::{OpKind, Schedule};
+
+/// Per-device peak activation stash (bytes) under the subsystem's
+/// charge/release protocol: charge `act_per_mb` at F; fused backward
+/// releases all of it at B; split backward releases the B-consumed
+/// part at B and the W-retained slice at W.
+pub fn peak_stash(schedule: &Schedule, model: &MemoryModel) -> Vec<f64> {
+    replay(schedule, model, true)
+}
+
+/// The coarse accounting the seed code used for split backwards: B
+/// releases nothing and the *whole* stash is retained until W — i.e.
+/// the memory a fused-B implementation would hold if it only freed at
+/// backward completion.  Kept as the comparison baseline: at identical
+/// timing, split-aware release is strictly below this whenever a stage
+/// has a non-empty B-released part (the ZB/Controllable-Memory
+/// observation).
+pub fn peak_stash_fused_release(schedule: &Schedule, model: &MemoryModel) -> Vec<f64> {
+    replay(schedule, model, false)
+}
+
+fn replay(schedule: &Schedule, model: &MemoryModel, early_release: bool) -> Vec<f64> {
+    assert_eq!(schedule.p, model.p);
+    let mut peaks = vec![0.0f64; schedule.p];
+    for (d, slots) in schedule.per_device.iter().enumerate() {
+        let mut stash = 0.0f64;
+        let mut peak = 0.0f64;
+        for sl in slots {
+            let fp = &model.stages[sl.stage as usize];
+            match sl.op {
+                OpKind::F => {
+                    stash += fp.act_per_mb;
+                    peak = peak.max(stash);
+                }
+                OpKind::B => {
+                    if !schedule.split_bw {
+                        stash -= fp.act_per_mb;
+                    } else if early_release {
+                        stash -= fp.act_per_mb - fp.act_w_per_mb;
+                    }
+                }
+                OpKind::W => {
+                    stash -= if early_release { fp.act_w_per_mb } else { fp.act_per_mb };
+                }
+            }
+        }
+        peaks[d] = peak;
+    }
+    peaks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::partition::uniform;
+    use crate::placement::sequential;
+    use crate::profile::ProfiledData;
+    use crate::schedule::builders::{gpipe, one_f_one_b, zb_h1};
+
+    fn setup(p: usize, nmb: usize) -> (ProfiledData, MemoryModel) {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        let prof = ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(p, 2, nmb, 1, 4096),
+        );
+        let part = uniform(prof.n_layers(), p);
+        let mm = MemoryModel::build(&prof, &part, &sequential(p));
+        (prof, mm)
+    }
+
+    #[test]
+    fn gpipe_stashes_everything() {
+        let (_, mm) = setup(4, 8);
+        let peaks = peak_stash(&gpipe(4, 8), &mm);
+        for d in 0..4 {
+            let expect = 8.0 * mm.stages[d].act_per_mb;
+            assert!(
+                (peaks[d] - expect).abs() <= 1e-9 * expect,
+                "dev {d}: {} vs {expect}",
+                peaks[d]
+            );
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_bounded_by_depth() {
+        let (_, mm) = setup(4, 8);
+        let peaks = peak_stash(&one_f_one_b(4, 8), &mm);
+        for d in 0..4 {
+            let expect = (4 - d) as f64 * mm.stages[d].act_per_mb;
+            assert!(
+                (peaks[d] - expect).abs() <= 1e-9 * expect,
+                "dev {d}: {} vs {expect}",
+                peaks[d]
+            );
+        }
+    }
+
+    #[test]
+    fn split_release_strictly_below_fused_release() {
+        let (_, mm) = setup(4, 8);
+        let sch = zb_h1(4, 8);
+        let split = peak_stash(&sch, &mm);
+        let coarse = peak_stash_fused_release(&sch, &mm);
+        for d in 0..4 {
+            assert!(
+                split[d] < coarse[d],
+                "dev {d}: split {} !< coarse {}",
+                split[d],
+                coarse[d]
+            );
+        }
+    }
+}

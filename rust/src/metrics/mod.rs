@@ -101,6 +101,7 @@ mod tests {
             overlap_d: vec![0.0; p],
             comm_block_d: vec![0.0; p],
             m_d: static_d.clone(),
+            headroom_d: vec![f64::INFINITY; p],
             static_d,
             oom: false,
             events: vec![],

@@ -24,9 +24,14 @@ pub struct LayerCost {
     pub w: f64,
     /// Parameter + gradient + optimizer memory (bytes, TP-sharded).
     pub mem_static: f64,
-    /// Activation stash bytes per in-flight micro-batch (input only —
-    /// the executor's rematerialised backward, see python model.py).
+    /// Activation stash bytes per in-flight micro-batch: the backward
+    /// working set saved at F (layer input + stashed intermediates, the
+    /// ZB-paper taxonomy — see `memory/`).
     pub mem_act: f64,
+    /// The slice of `mem_act` a *delayed* param-grad (W) still needs —
+    /// the layer input feeding the dW matmuls.  The rest is consumed by
+    /// the input-grad B and released when B completes.
+    pub mem_act_w: f64,
     /// Output activation message size (bytes) if the next layer is on
     /// another device.
     pub comm_bytes: f64,
@@ -153,17 +158,34 @@ impl CostModel {
         };
 
         // Static memory: params + grads (fp32) + Adam moments (2×fp32).
+        // memory/model.rs decomposes this 4× packing — keep in sync.
         let mem_static = 4.0 * weight_bytes;
-        // Stash: layer input per in-flight micro-batch (remat backward).
-        let mem_act = match kind {
+        // Saved activations per in-flight micro-batch (ZB taxonomy,
+        // consumed by `memory/`): the layer input plus the stashed
+        // intermediates the input-grad B consumes.  Only the input
+        // (`mem_act_w`) must survive until a delayed W; intermediates
+        // are TP-sharded, inputs are TP-replicated.
+        let input_bytes = match kind {
             LayerKind::Embed => n * bytes_f32, // ids (i32)
             _ => act_bytes,
         };
+        let saved_intermediates = match kind {
+            LayerKind::Embed => 0.0,
+            // Logits are recomputed in the head backward (too big to stash).
+            LayerKind::Head => 0.0,
+            LayerKind::Sa => 4.0 * act_bytes / t, // q, k, v, attn out
+            LayerKind::Mla => (2.0 * r / h + 2.0) * act_bytes / t, // latents, q, out
+            LayerKind::Mamba => 3.0 * act_bytes / t, // gate + scan checkpoints
+            LayerKind::Ffn => 2.0 * (f / h) * act_bytes / t, // up & gate projections
+            LayerKind::Moe => 2.0 * k * (fm / h) * act_bytes / t, // top-k expert FFNs
+        };
+        let mem_act = input_bytes + saved_intermediates;
+        let mem_act_w = input_bytes;
         // P2P message: hidden activations (head/embed boundaries also
         // move act-sized tensors: embed output, head input).
         let comm_bytes = act_bytes / t;
 
-        LayerCost { f: f_time, b: b_time, w: w_time, mem_static, mem_act, comm_bytes }
+        LayerCost { f: f_time, b: b_time, w: w_time, mem_static, mem_act, mem_act_w, comm_bytes }
     }
 
     /// Costs for every layer of a model spec.
@@ -249,6 +271,28 @@ mod tests {
         let costs = cm().model_costs(&spec);
         assert_eq!(costs.len(), spec.n_layers());
         assert!(costs.iter().all(|c| c.f > 0.0));
+    }
+
+    #[test]
+    fn activation_taxonomy_is_consistent() {
+        // The W-retained slice is a non-empty subset of the stash, and
+        // layers with backward intermediates stash more than the input.
+        let cfg = ModelCfg::table5(Family::DeepSeek, Size::Small);
+        let m = cm();
+        for &k in &[
+            LayerKind::Embed,
+            LayerKind::Sa,
+            LayerKind::Mla,
+            LayerKind::Mamba,
+            LayerKind::Ffn,
+            LayerKind::Moe,
+            LayerKind::Head,
+        ] {
+            let c = m.layer(k, &cfg);
+            assert!(c.mem_act_w > 0.0 && c.mem_act_w <= c.mem_act, "{k:?}");
+        }
+        let ffn = m.layer(LayerKind::Ffn, &cfg);
+        assert!(ffn.mem_act > ffn.mem_act_w, "FFN must stash intermediates");
     }
 
     #[test]

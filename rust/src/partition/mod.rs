@@ -93,9 +93,24 @@ pub fn uniform(n_layers: usize, n_stages: usize) -> Partition {
 /// programming that minimises the maximum per-stage fused compute
 /// (F+B+W).  O(S · n²) — exact, not a heuristic.
 pub fn balanced(profile: &ProfiledData, n_stages: usize) -> Partition {
-    let n = profile.n_layers();
-    assert!(n >= n_stages);
     let w: Vec<f64> = profile.layers.iter().map(|l| l.f + l.b + l.w).collect();
+    balanced_by(&w, n_stages)
+}
+
+/// Memory-balanced partition: the same exact DP over per-layer memory
+/// (static + one micro-batch of stash) instead of compute.  Used as an
+/// extra Pipeline Generator seed when per-device memory caps bind —
+/// compute-balanced splits concentrate the vocab head's huge embedding
+/// on one device, which is exactly what a tight cap rejects.
+pub fn memory_balanced(profile: &ProfiledData, n_stages: usize) -> Partition {
+    let w: Vec<f64> = profile.layers.iter().map(|l| l.mem_static + l.mem_act).collect();
+    balanced_by(&w, n_stages)
+}
+
+/// Min-max DP over arbitrary non-negative per-layer weights.
+fn balanced_by(w: &[f64], n_stages: usize) -> Partition {
+    let n = w.len();
+    assert!(n >= n_stages);
     let mut prefix = vec![0.0; n + 1];
     for i in 0..n {
         prefix[i + 1] = prefix[i] + w[i];
@@ -189,6 +204,32 @@ mod tests {
             maxcost(&uni)
         );
         assert!(bal.stage_len(3) < uni.stage_len(3));
+    }
+
+    #[test]
+    fn memory_balanced_spreads_static_memory() {
+        // Gemma's embedding + head dominate static memory; the
+        // memory-balanced split must achieve a lower max per-stage
+        // footprint than the uniform split.
+        let prof = gemma_profile();
+        let uni = uniform(prof.n_layers(), 4);
+        let mem = memory_balanced(&prof, 4);
+        let maxmem = |p: &Partition| {
+            (0..p.n_stages())
+                .map(|s| {
+                    let c = prof.stage_cost(p.stage_range(s));
+                    c.mem_static + c.mem_act
+                })
+                .fold(0.0f64, f64::max)
+        };
+        assert!(mem.is_valid());
+        assert_eq!(mem.n_layers(), prof.n_layers());
+        assert!(
+            maxmem(&mem) < maxmem(&uni),
+            "memory-balanced {:.3e} should beat uniform {:.3e}",
+            maxmem(&mem),
+            maxmem(&uni)
+        );
     }
 
     #[test]

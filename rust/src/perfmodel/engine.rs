@@ -25,6 +25,7 @@ use std::collections::BinaryHeap;
 
 use super::stagetable::StageTable;
 use super::{Deadlock, PerfReport};
+use crate::memory::MemCaps;
 use crate::schedule::{OpKind, Schedule, Slot};
 use crate::util::trace::TraceEvent;
 
@@ -138,13 +139,15 @@ impl SimArena {
 pub(crate) fn report_from(
     arena: &SimArena,
     table: &StageTable,
-    mem_capacity: f64,
+    caps: &MemCaps,
     events: Vec<TraceEvent>,
 ) -> PerfReport {
     let p = table.p;
+    debug_assert_eq!(caps.p(), p);
     let total = arena.clock.iter().cloned().fold(0.0, f64::max);
     let m_d: Vec<f64> = (0..p).map(|d| table.static_d[d] + arena.peak_stash[d]).collect();
-    let oom = m_d.iter().any(|&m| m > mem_capacity);
+    let headroom_d: Vec<f64> = (0..p).map(|d| caps.cap(d) - m_d[d]).collect();
+    let oom = (0..p).any(|d| m_d[d] > caps.cap(d));
     let bubble_d: Vec<f64> = (0..p)
         .map(|d| (total - arena.busy[d] - arena.comm_block[d]).max(0.0))
         .collect();
@@ -157,6 +160,7 @@ pub(crate) fn report_from(
         comm_block_d: arena.comm_block.clone(),
         m_d,
         static_d: table.static_d.clone(),
+        headroom_d,
         oom,
         events,
     }
@@ -244,9 +248,24 @@ fn queue_next(d: usize, schedule: &Schedule, table: &StageTable, a: &mut SimAren
 pub fn simulate_in(
     arena: &mut SimArena,
     table: &StageTable,
-    mem_capacity: f64,
+    caps: &MemCaps,
     schedule: &Schedule,
     collect_trace: bool,
+) -> Result<PerfReport, Deadlock> {
+    simulate_in_with(arena, table, caps, schedule, collect_trace, true)
+}
+
+/// [`simulate_in`] with the peak-memory tracker switchable.
+/// `track_memory: false` skips all stash accounting (the report's
+/// `m_d` collapses to `static_d`) — benchmarking only, to price the
+/// tracker's overhead in the hot kernel (`benches/perfmodel.rs`).
+pub fn simulate_in_with(
+    arena: &mut SimArena,
+    table: &StageTable,
+    caps: &MemCaps,
+    schedule: &Schedule,
+    collect_trace: bool,
+    track_memory: bool,
 ) -> Result<PerfReport, Deadlock> {
     let s_n = table.n_stages;
     let p = schedule.p;
@@ -314,8 +333,10 @@ pub fn simulate_in(
         match sl.op {
             OpKind::F => {
                 arena.end_f[k] = end;
-                arena.stash[d] += table.act[s];
-                arena.peak_stash[d] = arena.peak_stash[d].max(arena.stash[d]);
+                if track_memory {
+                    arena.stash[d] += table.act[s];
+                    arena.peak_stash[d] = arena.peak_stash[d].max(arena.stash[d]);
+                }
                 // Wake consumers parked on F(s, mb).
                 let mut w = arena.waiter_f[k];
                 arena.waiter_f[k] = NONE;
@@ -328,8 +349,14 @@ pub fn simulate_in(
             }
             OpKind::B => {
                 arena.end_b[k] = end;
-                if !split_bw {
-                    arena.stash[d] -= table.act[s];
+                if track_memory {
+                    if split_bw {
+                        // B consumed the intermediates; only the
+                        // W-retained slice stays stashed (memory/).
+                        arena.stash[d] -= table.act[s] - table.act_w[s];
+                    } else {
+                        arena.stash[d] -= table.act[s];
+                    }
                 }
                 let mut w = arena.waiter_b[k];
                 arena.waiter_b[k] = NONE;
@@ -341,7 +368,9 @@ pub fn simulate_in(
                 }
             }
             OpKind::W => {
-                arena.stash[d] -= table.act[s];
+                if track_memory {
+                    arena.stash[d] -= table.act_w[s];
+                }
             }
         }
         if collect_trace {
@@ -372,5 +401,5 @@ pub fn simulate_in(
             slot: schedule.per_device[d][arena.ptr[d]],
         });
     }
-    Ok(report_from(arena, table, mem_capacity, events))
+    Ok(report_from(arena, table, caps, events))
 }

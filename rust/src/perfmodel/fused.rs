@@ -20,6 +20,7 @@
 use super::engine::{ready_at, report_from, SimArena};
 use super::stagetable::StageTable;
 use super::PerfReport;
+use crate::memory::MemCaps;
 use crate::schedule::greedy::SchedKnobs;
 use crate::schedule::{OpKind, Slot};
 
@@ -34,14 +35,14 @@ use crate::schedule::{OpKind, Slot};
 /// OOM (Eq. 2) and the generator prunes it.
 pub fn fused_eval(
     table: &StageTable,
-    mem_capacity: f64,
+    caps: &MemCaps,
     nmb: usize,
     knobs: SchedKnobs,
     arena: &mut SimArena,
     record: Option<&mut Vec<Vec<Slot>>>,
 ) -> PerfReport {
-    run_loop(table, mem_capacity, nmb, knobs, arena, record);
-    report_from(arena, table, mem_capacity, Vec::new())
+    run_loop(table, caps, nmb, knobs, arena, record);
+    report_from(arena, table, caps, Vec::new())
 }
 
 /// Score-only fused evaluation: identical loop, no report allocation.
@@ -50,18 +51,18 @@ pub fn fused_eval(
 /// generator's objective.
 pub fn fused_score(
     table: &StageTable,
-    mem_capacity: f64,
+    caps: &MemCaps,
     nmb: usize,
     knobs: SchedKnobs,
     arena: &mut SimArena,
 ) -> f64 {
-    run_loop(table, mem_capacity, nmb, knobs, arena, None);
+    run_loop(table, caps, nmb, knobs, arena, None);
     let mut total = 0.0f64;
     for &c in &arena.clock {
         total = total.max(c);
     }
     let oom = (0..table.p)
-        .any(|d| table.static_d[d] + arena.peak_stash[d] > mem_capacity);
+        .any(|d| table.static_d[d] + arena.peak_stash[d] > caps.cap(d));
     if oom {
         f64::INFINITY
     } else {
@@ -71,7 +72,7 @@ pub fn fused_score(
 
 fn run_loop(
     table: &StageTable,
-    mem_capacity: f64,
+    caps: &MemCaps,
     nmb: usize,
     knobs: SchedKnobs,
     arena: &mut SimArena,
@@ -79,10 +80,12 @@ fn run_loop(
 ) {
     let s_n = table.n_stages;
     let p = table.p;
+    debug_assert_eq!(caps.p(), p);
     arena.reset_fused(s_n, nmb, p);
     for d in 0..p {
+        // Unbounded caps give an infinite budget: `fits` always holds.
         arena.budget[d] =
-            ((mem_capacity - table.static_d[d]) * knobs.mem_cap_factor).max(0.0);
+            ((caps.cap(d) - table.static_d[d]) * knobs.mem_cap_factor).max(0.0);
     }
 
     let total_ops = s_n * nmb * if knobs.split_bw { 3 } else { 2 };
@@ -205,13 +208,17 @@ fn run_loop(
             OpKind::B => {
                 arena.end_b[k] = end;
                 arena.next_b[s] += 1;
-                if !knobs.split_bw {
+                if knobs.split_bw {
+                    // B consumed the intermediates; only the W-retained
+                    // slice stays stashed (memory/).
+                    arena.stash[d] -= table.act[s] - table.act_w[s];
+                } else {
                     arena.stash[d] -= table.act[s];
                 }
             }
             OpKind::W => {
                 arena.next_w[s] += 1;
-                arena.stash[d] -= table.act[s];
+                arena.stash[d] -= table.act_w[s];
             }
         }
         if let Some(rec) = record.as_mut() {

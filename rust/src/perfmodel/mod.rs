@@ -29,10 +29,11 @@ pub mod engine;
 pub mod fused;
 pub mod stagetable;
 
-pub use engine::{simulate_in, SimArena};
+pub use engine::{simulate_in, simulate_in_with, SimArena};
 pub use fused::{fused_eval, fused_score};
 pub use stagetable::StageTable;
 
+use crate::memory::MemCaps;
 use crate::partition::Partition;
 use crate::placement::Placement;
 use crate::profile::ProfiledData;
@@ -58,6 +59,9 @@ pub struct PerfReport {
     pub m_d: Vec<f64>,
     /// Per-device static memory (params+grads+optimizer).
     pub static_d: Vec<f64>,
+    /// Per-device headroom: capacity − `m_d` (`+inf` on unbounded
+    /// devices, negative on OOM devices).
+    pub headroom_d: Vec<f64>,
     /// Devices that exceeded capacity.
     pub oom: bool,
     /// Trace events (only when requested).
@@ -74,6 +78,17 @@ impl PerfReport {
     /// Training throughput in tokens/s for `tokens_per_step`.
     pub fn throughput(&self, tokens_per_step: f64) -> f64 {
         tokens_per_step / self.total.max(1e-12)
+    }
+
+    /// Tightest per-device memory headroom (the generator's frontier
+    /// metric): `+inf` when unconstrained, negative when OOM.
+    pub fn min_headroom(&self) -> f64 {
+        self.headroom_d.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Cluster peak memory: the largest per-device high-water mark.
+    pub fn peak_mem(&self) -> f64 {
+        self.m_d.iter().cloned().fold(0.0, f64::max)
     }
 }
 
@@ -108,17 +123,33 @@ pub fn simulate(
     collect_trace: bool,
 ) -> Result<PerfReport, Deadlock> {
     debug_assert_eq!(placement.n_stages(), partition.n_stages());
+    let caps = MemCaps::uniform(placement.p, profile.mem_capacity);
     let table = StageTable::build(profile, partition, placement);
     let mut arena = SimArena::new();
-    simulate_in(&mut arena, &table, profile.mem_capacity, schedule, collect_trace)
+    simulate_in(&mut arena, &table, &caps, schedule, collect_trace)
 }
 
 /// The retained reference simulator: the original per-event all-device
 /// scan, O(slots · P).  Kept verbatim (plus an explicit `(start,
 /// device)` tie-break) as the differential-testing oracle for the fast
-/// engines and as the baseline for `benches/perfmodel.rs`.
+/// engines and as the baseline for `benches/perfmodel.rs`.  Uniform
+/// capacity from the profile; [`simulate_reference_in`] takes
+/// heterogeneous caps.
 pub fn simulate_reference(
     profile: &ProfiledData,
+    partition: &Partition,
+    placement: &Placement,
+    schedule: &Schedule,
+    collect_trace: bool,
+) -> Result<PerfReport, Deadlock> {
+    let caps = MemCaps::uniform(placement.p, profile.mem_capacity);
+    simulate_reference_in(profile, &caps, partition, placement, schedule, collect_trace)
+}
+
+/// [`simulate_reference`] against per-device memory capacities.
+pub fn simulate_reference_in(
+    profile: &ProfiledData,
+    caps: &MemCaps,
     partition: &Partition,
     placement: &Placement,
     schedule: &Schedule,
@@ -128,6 +159,7 @@ pub fn simulate_reference(
     let p = schedule.p;
     let nmb = schedule.nmb;
     debug_assert_eq!(placement.n_stages(), s_n);
+    debug_assert_eq!(caps.p(), p);
 
     // Stage costs (Alg. 1 Steps 1–2).
     struct St {
@@ -135,6 +167,7 @@ pub fn simulate_reference(
         b: f64,
         w: f64,
         act: f64,
+        act_w: f64,
         comm_f_in: f64, // p2p time for F input (from stage-1)
         comm_b_in: f64, // p2p time for B input (from stage+1)
     }
@@ -162,6 +195,7 @@ pub fn simulate_reference(
                 b: if schedule.split_bw { costs[s].b } else { costs[s].b + costs[s].w },
                 w: costs[s].w,
                 act: costs[s].mem_act,
+                act_w: costs[s].mem_act_w,
                 comm_f_in,
                 comm_b_in,
             }
@@ -232,7 +266,7 @@ pub fn simulate_reference(
             } else {
                 clock[d].max(dep) + comm
             };
-            if best.map_or(true, |(bs, _, bd)| start < bs || (start == bs && d < bd)) {
+            if best.is_none_or(|(bs, _, bd)| start < bs || (start == bs && d < bd)) {
                 best = Some((start, comm, d));
             }
         }
@@ -300,12 +334,16 @@ pub fn simulate_reference(
             }
             OpKind::B => {
                 end_b[idx(s, mb)] = end;
-                if !schedule.split_bw {
+                if schedule.split_bw {
+                    // B consumed the intermediates; only the W-retained
+                    // slice stays stashed (memory/).
+                    stash[d] -= stages[s].act - stages[s].act_w;
+                } else {
                     stash[d] -= stages[s].act;
                 }
             }
             OpKind::W => {
-                stash[d] -= stages[s].act;
+                stash[d] -= stages[s].act_w;
             }
         }
         if collect_trace {
@@ -325,7 +363,8 @@ pub fn simulate_reference(
     let total = clock.iter().cloned().fold(0.0, f64::max);
     let m_d: Vec<f64> =
         (0..p).map(|d| static_d[d] + peak_stash[d]).collect();
-    let oom = m_d.iter().any(|&m| m > profile.mem_capacity);
+    let headroom_d: Vec<f64> = (0..p).map(|d| caps.cap(d) - m_d[d]).collect();
+    let oom = (0..p).any(|d| m_d[d] > caps.cap(d));
     let bubble_d: Vec<f64> =
         (0..p).map(|d| (total - busy[d] - comm_block[d]).max(0.0)).collect();
     Ok(PerfReport {
@@ -337,6 +376,7 @@ pub fn simulate_reference(
         comm_block_d: comm_block,
         m_d,
         static_d,
+        headroom_d,
         oom,
         events,
     })
@@ -484,6 +524,7 @@ mod tests {
                 assert_eq!(a.comm_block_d, b.comm_block_d);
                 assert_eq!(a.m_d, b.m_d);
                 assert_eq!(a.static_d, b.static_d);
+                assert_eq!(a.headroom_d, b.headroom_d);
                 assert_eq!(a.oom, b.oom);
             }
         }

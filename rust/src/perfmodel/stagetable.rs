@@ -26,8 +26,11 @@ pub struct StageTable {
     pub b: Vec<f64>,
     /// Param-grad backward seconds (W).
     pub w: Vec<f64>,
-    /// Activation stash bytes per in-flight micro-batch.
+    /// Activation stash bytes per in-flight micro-batch (charged at F).
     pub act: Vec<f64>,
+    /// W-retained slice of `act`: released at W under a split backward,
+    /// together with the rest at B otherwise (see `memory/`).
+    pub act_w: Vec<f64>,
     /// Static memory (params+grads+optimizer) per stage.
     pub mem_static: Vec<f64>,
     /// Boundary message bytes leaving each stage.
@@ -64,6 +67,7 @@ impl StageTable {
             b: vec![0.0; s_n],
             w: vec![0.0; s_n],
             act: vec![0.0; s_n],
+            act_w: vec![0.0; s_n],
             mem_static: vec![0.0; s_n],
             comm_bytes: vec![0.0; s_n],
             comm_f_in: vec![0.0; s_n],
@@ -110,6 +114,7 @@ impl StageTable {
         self.b[s] = c.b;
         self.w[s] = c.w;
         self.act[s] = c.mem_act;
+        self.act_w[s] = c.mem_act_w;
         self.mem_static[s] = c.mem_static;
         self.comm_bytes[s] = c.comm_bytes;
     }
@@ -188,6 +193,7 @@ mod tests {
             assert_eq!(t.b, fresh.b);
             assert_eq!(t.w, fresh.w);
             assert_eq!(t.act, fresh.act);
+            assert_eq!(t.act_w, fresh.act_w);
             assert_eq!(t.mem_static, fresh.mem_static);
             assert_eq!(t.comm_bytes, fresh.comm_bytes);
             assert_eq!(t.comm_f_in, fresh.comm_f_in);

@@ -22,9 +22,31 @@ impl Placement {
     }
 
     /// Every device must host ≥ 1 stage; device ids in range.
+    /// O(S + P) via a seen-bitmap — this runs inside the generator's
+    /// move loop, where the old per-device `contains` scan was O(S·P).
+    /// Allocation-free for P ≤ 128 (a u128 mask); larger clusters fall
+    /// back to a heap bitmap.
     pub fn is_valid(&self) -> bool {
-        self.device_of.iter().all(|&d| d < self.p)
-            && (0..self.p).all(|d| self.device_of.contains(&d))
+        if self.p <= 128 {
+            let mut seen: u128 = 0;
+            for &d in &self.device_of {
+                if d >= self.p {
+                    return false;
+                }
+                seen |= 1u128 << d;
+            }
+            let all = if self.p == 128 { u128::MAX } else { (1u128 << self.p) - 1 };
+            seen == all
+        } else {
+            let mut seen = vec![false; self.p];
+            for &d in &self.device_of {
+                if d >= self.p {
+                    return false;
+                }
+                seen[d] = true;
+            }
+            seen.iter().all(|&s| s)
+        }
     }
 
     /// Swap the devices of two stages (a placement tuning move).
@@ -91,6 +113,19 @@ mod tests {
         assert_eq!(pl.device_of, vec![0, 1, 2, 3, 3, 2, 1, 0]);
         assert_eq!(pl.stages_of(0), vec![0, 7]);
         assert!(pl.is_valid());
+    }
+
+    #[test]
+    fn is_valid_rejects_bad_placements() {
+        // Device 1 hosts nothing.
+        let empty = Placement { p: 2, device_of: vec![0, 0] };
+        assert!(!empty.is_valid());
+        // Device id out of range.
+        let oob = Placement { p: 2, device_of: vec![0, 2] };
+        assert!(!oob.is_valid());
+        // Both covered.
+        let ok = Placement { p: 2, device_of: vec![1, 0] };
+        assert!(ok.is_valid());
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub struct StageCostTable {
     w: Vec<f64>,
     mem_static: Vec<f64>,
     mem_act: Vec<f64>,
+    mem_act_w: Vec<f64>,
 }
 
 impl StageCostTable {
@@ -38,18 +39,21 @@ impl StageCostTable {
             w: Vec::with_capacity(n + 1),
             mem_static: Vec::with_capacity(n + 1),
             mem_act: Vec::with_capacity(n + 1),
+            mem_act_w: Vec::with_capacity(n + 1),
         };
         t.f.push(0.0);
         t.b.push(0.0);
         t.w.push(0.0);
         t.mem_static.push(0.0);
         t.mem_act.push(0.0);
+        t.mem_act_w.push(0.0);
         for l in layers {
             t.f.push(t.f.last().unwrap() + l.f);
             t.b.push(t.b.last().unwrap() + l.b);
             t.w.push(t.w.last().unwrap() + l.w);
             t.mem_static.push(t.mem_static.last().unwrap() + l.mem_static);
             t.mem_act.push(t.mem_act.last().unwrap() + l.mem_act);
+            t.mem_act_w.push(t.mem_act_w.last().unwrap() + l.mem_act_w);
         }
         t
     }
@@ -120,6 +124,7 @@ impl ProfiledData {
             w: self.cum.w[b] - self.cum.w[a],
             mem_static: self.cum.mem_static[b] - self.cum.mem_static[a],
             mem_act: self.cum.mem_act[b] - self.cum.mem_act[a],
+            mem_act_w: self.cum.mem_act_w[b] - self.cum.mem_act_w[a],
             comm_bytes: 0.0,
         };
         // Message size leaving the stage = last layer's output.
@@ -177,6 +182,7 @@ mod tests {
                 acc.w += l.w;
                 acc.mem_static += l.mem_static;
                 acc.mem_act += l.mem_act;
+                acc.mem_act_w += l.mem_act_w;
             }
             if let Some(last) = p.layers[a..b].last() {
                 acc.comm_bytes = last.comm_bytes;
@@ -186,6 +192,7 @@ mod tests {
             assert!(close(fast.w, acc.w), "w over {a}..{b}");
             assert!(close(fast.mem_static, acc.mem_static), "mem_static over {a}..{b}");
             assert!(close(fast.mem_act, acc.mem_act), "mem_act over {a}..{b}");
+            assert!(close(fast.mem_act_w, acc.mem_act_w), "mem_act_w over {a}..{b}");
             assert_eq!(fast.comm_bytes, acc.comm_bytes, "comm over {a}..{b}");
         }
     }

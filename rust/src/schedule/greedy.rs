@@ -23,6 +23,7 @@
 //! materialises the [`Schedule`] IR for the executor and the baselines.
 
 use super::{Schedule, Slot};
+use crate::memory::MemCaps;
 use crate::partition::Partition;
 use crate::placement::Placement;
 use crate::perfmodel::{fused_eval, SimArena, StageTable};
@@ -52,9 +53,24 @@ impl Default for SchedKnobs {
     }
 }
 
-/// Build an adaptive schedule for any (partition, placement).
+/// Build an adaptive schedule for any (partition, placement), with the
+/// profile's uniform memory capacity as the activation budget.
 pub fn greedy_schedule(
     profile: &ProfiledData,
+    partition: &Partition,
+    placement: &Placement,
+    nmb: usize,
+    knobs: SchedKnobs,
+) -> Schedule {
+    let caps = MemCaps::uniform(placement.p, profile.mem_capacity);
+    greedy_schedule_caps(profile, &caps, partition, placement, nmb, knobs)
+}
+
+/// [`greedy_schedule`] against per-device (possibly heterogeneous)
+/// memory capacities — the budget each device's F-admission respects.
+pub fn greedy_schedule_caps(
+    profile: &ProfiledData,
+    caps: &MemCaps,
     partition: &Partition,
     placement: &Placement,
     nmb: usize,
@@ -63,7 +79,7 @@ pub fn greedy_schedule(
     let table = StageTable::build(profile, partition, placement);
     let mut arena = SimArena::new();
     let mut slots: Vec<Vec<Slot>> = vec![Vec::new(); placement.p];
-    let _ = fused_eval(&table, profile.mem_capacity, nmb, knobs, &mut arena, Some(&mut slots));
+    let _ = fused_eval(&table, caps, nmb, knobs, &mut arena, Some(&mut slots));
     Schedule {
         p: placement.p,
         nmb,
@@ -151,10 +167,10 @@ mod tests {
         let pl = sequential(4);
         let knobs = SchedKnobs::default();
         let table = StageTable::build(&prof, &part, &pl);
+        let caps = MemCaps::uniform(4, prof.mem_capacity);
         let mut arena = SimArena::new();
         let mut slots = vec![Vec::new(); 4];
-        let fused =
-            fused_eval(&table, prof.mem_capacity, 8, knobs, &mut arena, Some(&mut slots));
+        let fused = fused_eval(&table, &caps, 8, knobs, &mut arena, Some(&mut slots));
         let sch = Schedule {
             p: 4,
             nmb: 8,

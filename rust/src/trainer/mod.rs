@@ -172,6 +172,7 @@ pub fn calibrate(
                 w,
                 mem_static: (params * 16) as f64,
                 mem_act: act_bytes,
+                mem_act_w: act_bytes,
                 comm_bytes: act_bytes,
             },
         );

@@ -1,0 +1,62 @@
+//! Randomized-pipeline generators shared by the differential suites
+//! (`perfmodel_differential.rs`, `memory_differential.rs`) so both
+//! sample the same candidate space — one copy, no drift.
+
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::model::build_model;
+use adaptis::partition::{uniform, Partition};
+use adaptis::placement::{interleaved, sequential, wave, Placement};
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::greedy::SchedKnobs;
+use adaptis::util::rng::Rng;
+
+pub fn random_profile(rng: &mut Rng) -> (ProfiledData, ParallelCfg) {
+    let fams = [Family::Llama2, Family::Gemma, Family::DeepSeek, Family::NemotronH];
+    let fam = fams[rng.below(fams.len())];
+    let mut cfg = ModelCfg::table5(fam, Size::Small);
+    cfg.blocks = [8, 12, 16, 24, 32][rng.below(5)];
+    let par = ParallelCfg {
+        p: [2, 3, 4, 8][rng.below(4)],
+        t: [1, 2][rng.below(2)],
+        d: 1,
+        e: 1,
+        nmb: [1, 2, 4, 7, 8, 16][rng.below(6)],
+        mbs: 1,
+        seq: [1024, 4096][rng.below(2)],
+    };
+    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+    (prof, par)
+}
+
+pub fn random_placement(rng: &mut Rng, p: usize, n_layers: usize) -> Placement {
+    match rng.below(3) {
+        0 => sequential(p),
+        1 => {
+            let v = 1 + rng.below(3.min(n_layers / p).max(1));
+            interleaved(p, v)
+        }
+        _ => {
+            let v = 1 + rng.below(3.min(n_layers / p).max(1));
+            wave(p, v)
+        }
+    }
+}
+
+pub fn random_partition(rng: &mut Rng, n_layers: usize, s_n: usize) -> Partition {
+    let mut part = uniform(n_layers, s_n);
+    for _ in 0..rng.below(8) {
+        let b = rng.below(s_n.saturating_sub(1).max(1));
+        part.shift_boundary(b, rng.below(2) == 0);
+    }
+    assert!(part.is_valid());
+    part
+}
+
+pub fn random_knobs(rng: &mut Rng) -> SchedKnobs {
+    SchedKnobs {
+        split_bw: rng.below(2) == 0,
+        w_fill: rng.below(2) == 0,
+        mem_cap_factor: [1.0, 0.75, 0.5][rng.below(3)],
+        overlap_aware: rng.below(2) == 0,
+    }
+}

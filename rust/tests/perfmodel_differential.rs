@@ -4,69 +4,22 @@
 //! *bit-for-bit* on randomized configurations (hand-rolled generator
 //! loop via `util::rng` — failures print the seed for reproduction).
 
+mod common;
+
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::memory::MemCaps;
 use adaptis::model::build_model;
-use adaptis::partition::{uniform, Partition};
-use adaptis::placement::{interleaved, sequential, wave, Placement};
+use adaptis::partition::uniform;
+use adaptis::placement::sequential;
 use adaptis::perfmodel::{
     fused_eval, fused_score, simulate, simulate_in, simulate_reference, PerfReport,
     SimArena, StageTable,
 };
 use adaptis::profile::ProfiledData;
-use adaptis::schedule::greedy::{greedy_schedule, SchedKnobs};
+use adaptis::schedule::greedy::greedy_schedule;
 use adaptis::schedule::{OpKind, Schedule, Slot};
 use adaptis::util::rng::Rng;
-
-fn random_profile(rng: &mut Rng) -> (ProfiledData, ParallelCfg) {
-    let fams = [Family::Llama2, Family::Gemma, Family::DeepSeek, Family::NemotronH];
-    let fam = fams[rng.below(fams.len())];
-    let mut cfg = ModelCfg::table5(fam, Size::Small);
-    cfg.blocks = [8, 12, 16, 24, 32][rng.below(5)];
-    let par = ParallelCfg {
-        p: [2, 3, 4, 8][rng.below(4)],
-        t: [1, 2][rng.below(2)],
-        d: 1,
-        e: 1,
-        nmb: [1, 2, 4, 7, 8, 16][rng.below(6)],
-        mbs: 1,
-        seq: [1024, 4096][rng.below(2)],
-    };
-    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
-    (prof, par)
-}
-
-fn random_placement(rng: &mut Rng, p: usize, n_layers: usize) -> Placement {
-    match rng.below(3) {
-        0 => sequential(p),
-        1 => {
-            let v = 1 + rng.below(3.min(n_layers / p).max(1));
-            interleaved(p, v)
-        }
-        _ => {
-            let v = 1 + rng.below(3.min(n_layers / p).max(1));
-            wave(p, v)
-        }
-    }
-}
-
-fn random_knobs(rng: &mut Rng) -> SchedKnobs {
-    SchedKnobs {
-        split_bw: rng.below(2) == 0,
-        w_fill: rng.below(2) == 0,
-        mem_cap_factor: [1.0, 0.75, 0.5][rng.below(3)],
-        overlap_aware: rng.below(2) == 0,
-    }
-}
-
-fn random_partition(rng: &mut Rng, n_layers: usize, s_n: usize) -> Partition {
-    let mut part = uniform(n_layers, s_n);
-    for _ in 0..rng.below(8) {
-        let b = rng.below(s_n.saturating_sub(1).max(1));
-        part.shift_boundary(b, rng.below(2) == 0);
-    }
-    assert!(part.is_valid());
-    part
-}
+use common::{random_knobs, random_partition, random_placement, random_profile};
 
 fn assert_reports_identical(a: &PerfReport, b: &PerfReport, what: &str) {
     assert_eq!(a.total, b.total, "{what}: total");
@@ -77,6 +30,7 @@ fn assert_reports_identical(a: &PerfReport, b: &PerfReport, what: &str) {
     assert_eq!(a.comm_block_d, b.comm_block_d, "{what}: comm_block_d");
     assert_eq!(a.m_d, b.m_d, "{what}: m_d");
     assert_eq!(a.static_d, b.static_d, "{what}: static_d");
+    assert_eq!(a.headroom_d, b.headroom_d, "{what}: headroom_d");
     assert_eq!(a.oom, b.oom, "{what}: oom");
 }
 
@@ -99,7 +53,8 @@ fn heap_kernel_matches_reference_on_random_pipelines() {
         // Wrapper (fresh arena) and arena-reusing fast path.
         let fast = simulate(&prof, &part, &plac, &sch, false).unwrap();
         let table = StageTable::build(&prof, &part, &plac);
-        let fast2 = simulate_in(&mut arena, &table, prof.mem_capacity, &sch, false).unwrap();
+        let caps = MemCaps::uniform(par.p, prof.mem_capacity);
+        let fast2 = simulate_in(&mut arena, &table, &caps, &sch, false).unwrap();
         assert_reports_identical(&fast, &refr, &format!("seed {seed} wrapper"));
         assert_reports_identical(&fast2, &refr, &format!("seed {seed} arena"));
     }
@@ -119,13 +74,14 @@ fn fused_eval_matches_schedule_then_simulate() {
         let knobs = random_knobs(&mut rng);
 
         let table = StageTable::build(&prof, &part, &plac);
-        let fused = fused_eval(&table, prof.mem_capacity, par.nmb, knobs, &mut arena, None);
+        let caps = MemCaps::uniform(par.p, prof.mem_capacity);
+        let fused = fused_eval(&table, &caps, par.nmb, knobs, &mut arena, None);
         let sch = greedy_schedule(&prof, &part, &plac, par.nmb, knobs);
         let refr = simulate_reference(&prof, &part, &plac, &sch, false)
             .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
         assert_reports_identical(&fused, &refr, &format!("seed {seed} fused"));
         // Score-only path collapses to the same objective value.
-        let score = fused_score(&table, prof.mem_capacity, par.nmb, knobs, &mut arena);
+        let score = fused_score(&table, &caps, par.nmb, knobs, &mut arena);
         let expect = if refr.oom { f64::INFINITY } else { refr.total };
         assert_eq!(score, expect, "seed {seed}: fused_score");
     }

@@ -11,6 +11,13 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== lint: cargo clippy --all-targets -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== lint: clippy not installed (rustup component add clippy); skipping =="
+fi
+
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== perfmodel bench smoke (writes rust/BENCH_perfmodel.json) =="
   cargo bench --bench perfmodel -- --smoke
