@@ -2,11 +2,21 @@
 //! (generation must stay within seconds at paper-scale instances) plus
 //! the greedy list-scheduler construction rate.
 //!
-//! `generate()` is benchmarked under both evaluation engines — the
-//! fused/parallel fast path and the retained schedule-then-resimulate
-//! reference path.  Both run the identical search (same pipelines, same
-//! eval counts — asserted here), so the wall-clock ratio is a pure
-//! hot-path speedup.  `--smoke` shrinks the sweep for CI.
+//! Two comparisons over the identical search (same pipelines, same
+//! tuning logs — asserted here):
+//!
+//! - **accelerated vs elision-free**: the default search (analytic
+//!   bound pruning + transposition cache + persistent eval pool,
+//!   DESIGN.md § Search acceleration) against the same engine with
+//!   every candidate fully evaluated — the end-to-end speedup of this
+//!   PR's search-side work;
+//! - **fast vs reference engine**: the fused/pooled hot path against
+//!   the retained schedule-then-resimulate path — the per-eval speedup
+//!   of the evaluation engine itself.
+//!
+//! Emits machine-readable `BENCH_generator.json` (evals/s, elision
+//! counters, speedups per config) next to `BENCH_perfmodel.json`, same
+//! schema conventions.  `--smoke` shrinks the sweep for CI.
 
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
 use adaptis::generator::{generate, EvalEngine, GenOptions};
@@ -16,6 +26,7 @@ use adaptis::placement::sequential;
 use adaptis::profile::ProfiledData;
 use adaptis::schedule::greedy::{greedy_schedule, SchedKnobs};
 use adaptis::util::bench::{bench, report_rate};
+use adaptis::util::json::{arr, num, obj, s, Json};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -41,12 +52,13 @@ fn main() {
         report_rate("slots built", t.median, (3 * p * nmb) as f64, "slots");
     }
 
-    println!("== pipeline generation (Fig 13 measured; fast vs reference engine) ==");
+    println!("== pipeline generation (Fig 13 measured) ==");
     let gen_sizes: &[(Size, usize, usize)] = if smoke {
         &[(Size::Small, 4, 64)]
     } else {
         &[(Size::Small, 4, 64), (Size::Medium, 8, 128), (Size::Large, 16, 256)]
     };
+    let mut rows: Vec<Json> = Vec::new();
     for &(size, p, nmb) in gen_sizes {
         let cfg = ModelCfg::table5(Family::NemotronH, size);
         let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
@@ -54,31 +66,92 @@ fn main() {
             ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
         let mut opts = GenOptions::new(p, nmb);
         opts.max_iters = 32;
-        let mut ref_opts = opts.clone();
+        let plain_opts = opts.clone().elision_free();
+        let mut ref_opts = plain_opts.clone();
         ref_opts.engine = EvalEngine::Reference;
 
-        // Identical search under both engines: same result, same evals.
-        let fast = generate(&prof, &opts);
+        // Identical search under every configuration: same pipeline,
+        // same log, differing only in how much work scoring skipped.
+        let accel = generate(&prof, &opts);
+        let plain = generate(&prof, &plain_opts);
         let refr = generate(&prof, &ref_opts);
-        assert_eq!(fast.evals, refr.evals, "engines must do equal work");
-        assert_eq!(fast.report.total, refr.report.total, "engines must agree");
+        assert_eq!(accel.report.total, plain.report.total, "elisions must not steer");
+        assert_eq!(
+            accel.pipeline.partition, plain.pipeline.partition,
+            "elisions must not steer"
+        );
+        assert_eq!(accel.log.len(), plain.log.len(), "elisions must not steer");
+        assert_eq!(plain.evals, refr.evals, "engines must do equal work");
+        assert_eq!(plain.report.total, refr.report.total, "engines must agree");
+        assert_eq!(plain.evals_pruned + plain.evals_cached, 0, "elision-free");
+        assert!(
+            accel.evals_pruned + accel.evals_cached > 0,
+            "acceleration must elide work"
+        );
+        assert_eq!(
+            accel.evals + accel.evals_pruned + accel.evals_cached,
+            plain.evals,
+            "every candidate accounted for"
+        );
 
-        let label = format!("generate[fast] {} P={p} nmb={nmb}", size.name());
-        let t_fast = bench(&label, 1, 0.0, || {
+        let label = format!("generate[accel] {} P={p} nmb={nmb}", size.name());
+        let t_accel = bench(&label, 1, 0.0, || {
             let g = generate(&prof, &opts);
             std::hint::black_box((g.evals, g.report.total));
         });
-        let label = format!("generate[ref]  {} P={p} nmb={nmb}", size.name());
+        let label = format!("generate[plain] {} P={p} nmb={nmb}", size.name());
+        let t_plain = bench(&label, 1, 0.0, || {
+            let g = generate(&prof, &plain_opts);
+            std::hint::black_box((g.evals, g.report.total));
+        });
+        let label = format!("generate[ref]   {} P={p} nmb={nmb}", size.name());
         let t_ref = bench(&label, 1, 0.0, || {
             let g = generate(&prof, &ref_opts);
             std::hint::black_box((g.evals, g.report.total));
         });
-        report_rate("candidate evals (fast)", t_fast.median, fast.evals as f64, "evals");
-        report_rate("candidate evals (ref) ", t_ref.median, refr.evals as f64, "evals");
+        let candidates = plain.evals as f64;
+        report_rate("candidates (accel)", t_accel.median, candidates, "cands");
+        report_rate("candidates (plain)", t_plain.median, candidates, "cands");
+        report_rate("candidates (ref)  ", t_ref.median, candidates, "cands");
         println!(
-            "      end-to-end speedup at {} evals                {:.2}x",
-            fast.evals,
-            t_ref.median / t_fast.median
+            "      pruned {} / cached {} of {} candidates",
+            accel.evals_pruned, accel.evals_cached, plain.evals
         );
+        println!(
+            "      end-to-end speedup: accel/plain {:.2}x, accel/ref {:.2}x",
+            t_plain.median / t_accel.median,
+            t_ref.median / t_accel.median
+        );
+        rows.push(obj(vec![
+            ("size", s(size.name())),
+            ("p", num(p as f64)),
+            ("nmb", num(nmb as f64)),
+            ("iters", num(accel.iters as f64)),
+            ("candidates", num(candidates)),
+            ("evals", num(accel.evals as f64)),
+            ("evals_pruned", num(accel.evals_pruned as f64)),
+            ("evals_cached", num(accel.evals_cached as f64)),
+            ("accel_s_per_gen", num(t_accel.median)),
+            ("plain_s_per_gen", num(t_plain.median)),
+            ("reference_s_per_gen", num(t_ref.median)),
+            ("accel_cands_per_s", num(candidates / t_accel.median)),
+            ("plain_cands_per_s", num(candidates / t_plain.median)),
+            ("reference_cands_per_s", num(candidates / t_ref.median)),
+            ("speedup_vs_elision_free", num(t_plain.median / t_accel.median)),
+            ("speedup_vs_reference", num(t_ref.median / t_accel.median)),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("bench", s("generator")),
+        ("smoke", Json::Bool(smoke)),
+        ("configs", arr(rows)),
+    ]);
+    // Anchor to the package dir so the artifact lands at
+    // rust/BENCH_generator.json regardless of the invoking CWD.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_generator.json");
+    match std::fs::write(path, out.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

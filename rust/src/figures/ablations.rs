@@ -1,4 +1,4 @@
-//! Design-choice ablations (DESIGN.md §8) — beyond the paper's own
+//! Design-choice ablations (DESIGN.md §9) — beyond the paper's own
 //! figures, these quantify the executor/generator mechanisms this repo
 //! implements:
 //!
@@ -25,7 +25,7 @@ use crate::profile::ProfiledData;
 use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
 
 pub fn ablations(ctx: &Ctx) -> String {
-    let mut out = String::from("## Ablations (design choices, DESIGN.md §8)\n\n");
+    let mut out = String::from("## Ablations (design choices, DESIGN.md §9)\n\n");
     let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 16, mbs: 1, seq: 4096 };
     let cfg = ModelCfg::table5(Family::NemotronH, Size::Small);
     let prof = ProfiledData::analytical(&build_model(&cfg), &ctx.hw, &par);
@@ -121,7 +121,8 @@ pub fn ablations(ctx: &Ctx) -> String {
     );
 
     // --- generator budget ----------------------------------------------------
-    let mut t = Table::new(&["max iters", "step time (ms)", "gen time", "evals"]);
+    let mut t =
+        Table::new(&["max iters", "step time (ms)", "gen time", "candidates", "simulated"]);
     for iters in [1usize, 4, 16, 64] {
         let mut opts = GenOptions::new(par.p, par.nmb);
         opts.max_iters = iters;
@@ -130,6 +131,9 @@ pub fn ablations(ctx: &Ctx) -> String {
             iters.to_string(),
             format!("{:.2}", g.report.total * 1e3),
             crate::util::fmt_time(g.elapsed_s),
+            // Candidates considered (incl. pruned/cached) vs actually
+            // simulated — the gap is the search-acceleration win.
+            (g.evals + g.evals_pruned + g.evals_cached).to_string(),
             g.evals.to_string(),
         ]);
     }

@@ -415,12 +415,18 @@ pub fn fig13(ctx: &Ctx) -> String {
             crate::util::fmt_si(nodes as f64),
             measured,
             extrapolated,
-            format!(
-                "{:.2} s ({} evals, {:.0} evals/s)",
-                g.elapsed_s,
-                g.evals,
-                g.evals as f64 / g.elapsed_s.max(1e-9)
-            ),
+            {
+                // "Candidates" counts pruned/cached elisions too, so the
+                // figure stays comparable across engines and PRs.
+                let cands = g.evals + g.evals_pruned + g.evals_cached;
+                format!(
+                    "{:.2} s ({} cands, {} simulated, {:.0} cands/s)",
+                    g.elapsed_s,
+                    cands,
+                    g.evals,
+                    cands as f64 / g.elapsed_s.max(1e-9)
+                )
+            },
         ]);
     }
     let _ = write!(out, "{}", t.render());

@@ -1,0 +1,224 @@
+//! Candidate memoization — the Pipeline Generator's transposition
+//! table (DESIGN.md § Search acceleration).
+//!
+//! The tuning loop regenerates large parts of its move batch every
+//! iteration: partition phases always propose the *undo* of the last
+//! accepted shift, the knob grid re-proposes settings the search has
+//! already visited, and rejected placement swaps come back verbatim
+//! until the current pipeline changes.  Every candidate's score is a
+//! pure function of `(partition boundaries, placement map, knobs)`
+//! given a fixed `(profile, caps, nmb)` — both engines are
+//! deterministic and bit-identical (pinned by the differential suites)
+//! — so re-simulating a structurally identical candidate can only
+//! reproduce the number already computed.  [`EvalCache`] stores that
+//! number keyed by the full structural identity ([`CandKey`], exact
+//! equality — hash collisions fall back to `Eq`, never to a wrong
+//! score), which is what makes cache hits *provably* unable to change
+//! the search trajectory.
+//!
+//! [`PrepPool`] is the allocation side of the same story: move batches
+//! used to clone a fresh `StageTable` (a dozen `Vec`s) per candidate
+//! and drop them all at the end of the phase.  The pool recycles the
+//! tables instead — `clone_from`/`rebuild` overwrite every entry in
+//! place, so a recycled table is bit-identical to a fresh one while
+//! steady-state candidate construction allocates nothing.
+
+use std::collections::HashMap;
+
+use crate::partition::Partition;
+use crate::placement::Placement;
+use crate::perfmodel::StageTable;
+use crate::profile::ProfiledData;
+use crate::schedule::greedy::SchedKnobs;
+
+/// Structural identity of a candidate: everything the (deterministic)
+/// evaluation reads besides the per-search constants.  Exact — two
+/// keys compare equal iff the candidates are evaluation-equivalent.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CandKey {
+    /// Partition stage bounds (layer offsets).
+    bounds: Vec<u32>,
+    /// Placement stage → device map.
+    device_of: Vec<u16>,
+    /// Boolean knobs packed: bit 0 `split_bw`, bit 1 `w_fill`,
+    /// bit 2 `overlap_aware`.
+    knob_bits: u8,
+    /// `mem_cap_factor`, compared bitwise (the knob grid only ever
+    /// produces it by deterministic arithmetic, so bitwise identity is
+    /// the right equivalence).
+    mem_cap_bits: u64,
+}
+
+impl CandKey {
+    pub fn of(part: &Partition, plac: &Placement, knobs: SchedKnobs) -> CandKey {
+        debug_assert!(part.n_layers() < u32::MAX as usize);
+        debug_assert!(plac.p <= u16::MAX as usize);
+        CandKey {
+            bounds: part.bounds.iter().map(|&b| b as u32).collect(),
+            device_of: plac.device_of.iter().map(|&d| d as u16).collect(),
+            knob_bits: u8::from(knobs.split_bw)
+                | u8::from(knobs.w_fill) << 1
+                | u8::from(knobs.overlap_aware) << 2,
+            mem_cap_bits: knobs.mem_cap_factor.to_bits(),
+        }
+    }
+}
+
+/// Transposition table: structural candidate identity → score.  Lives
+/// for one `generate()` call (profile, caps, nmb and engine are fixed
+/// per search, so they are not part of the key).
+#[derive(Default)]
+pub struct EvalCache {
+    map: HashMap<CandKey, f64>,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    pub fn get(&self, key: &CandKey) -> Option<f64> {
+        self.map.get(key).copied()
+    }
+
+    pub fn insert(&mut self, key: CandKey, score: f64) {
+        self.map.insert(key, score);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Recycler for candidate stage tables (see module docs).  `take_like`
+/// and `build` hand out tables that are bit-identical to freshly
+/// cloned/built ones; `recycle` returns a batch's tables once the
+/// phase is over.
+#[derive(Default)]
+pub struct PrepPool {
+    free: Vec<StageTable>,
+}
+
+impl PrepPool {
+    pub fn new() -> PrepPool {
+        PrepPool::default()
+    }
+
+    /// A table equal to `src` (recycled buffers when available).
+    pub fn take_like(&mut self, src: &StageTable) -> StageTable {
+        match self.free.pop() {
+            Some(mut t) => {
+                t.clone_from(src);
+                t
+            }
+            None => src.clone(),
+        }
+    }
+
+    /// A table built from scratch for `(part, plac)` (recycled buffers
+    /// when available).
+    pub fn build(
+        &mut self,
+        profile: &ProfiledData,
+        part: &Partition,
+        plac: &Placement,
+    ) -> StageTable {
+        match self.free.pop() {
+            Some(mut t) => {
+                t.rebuild(profile, part, plac);
+                t
+            }
+            None => StageTable::build(profile, part, plac),
+        }
+    }
+
+    /// Return a table's buffers to the pool.
+    pub fn recycle(&mut self, table: StageTable) {
+        self.free.push(table);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::partition::{balanced, uniform};
+    use crate::placement::{interleaved, sequential};
+
+    fn prof() -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn key_distinguishes_every_component() {
+        let pr = prof();
+        let n = pr.n_layers();
+        let knobs = SchedKnobs::default();
+        let base = CandKey::of(&uniform(n, 4), &sequential(4), knobs);
+        assert_eq!(base, CandKey::of(&uniform(n, 4), &sequential(4), knobs));
+        assert_ne!(base, CandKey::of(&balanced(&pr, 4), &sequential(4), knobs));
+        let mut swapped = sequential(4);
+        swapped.swap_stages(1, 2);
+        assert_ne!(base, CandKey::of(&uniform(n, 4), &swapped, knobs));
+        assert_ne!(
+            base,
+            CandKey::of(
+                &uniform(n, 4),
+                &sequential(4),
+                SchedKnobs { split_bw: !knobs.split_bw, ..knobs }
+            )
+        );
+        assert_ne!(
+            base,
+            CandKey::of(
+                &uniform(n, 4),
+                &sequential(4),
+                SchedKnobs { mem_cap_factor: 0.75, ..knobs }
+            )
+        );
+    }
+
+    #[test]
+    fn cache_round_trips() {
+        let pr = prof();
+        let key = CandKey::of(&uniform(pr.n_layers(), 4), &sequential(4), SchedKnobs::default());
+        let mut cache = EvalCache::new();
+        assert!(cache.is_empty());
+        assert_eq!(cache.get(&key), None);
+        cache.insert(key.clone(), 42.0);
+        assert_eq!(cache.get(&key), Some(42.0));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn recycled_tables_are_bit_identical() {
+        let pr = prof();
+        let mut pool = PrepPool::new();
+        let a = StageTable::build(&pr, &uniform(pr.n_layers(), 8), &interleaved(4, 2));
+        pool.recycle(a);
+        // Recycle into a differently-shaped target: must equal a fresh
+        // build/clone bitwise.
+        let part = balanced(&pr, 4);
+        let plac = sequential(4);
+        let built = pool.build(&pr, &part, &plac);
+        let fresh = StageTable::build(&pr, &part, &plac);
+        assert_eq!(built.f, fresh.f);
+        assert_eq!(built.static_d, fresh.static_d);
+        assert_eq!(built.comm_b_in, fresh.comm_b_in);
+        pool.recycle(built);
+        let like = pool.take_like(&fresh);
+        assert_eq!(like.f, fresh.f);
+        assert_eq!(like.device, fresh.device);
+        assert_eq!(like.act_w, fresh.act_w);
+    }
+}

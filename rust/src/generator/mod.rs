@@ -27,22 +27,46 @@
 //! single-phase local optima the paper shows for partially adaptive
 //! methods (Fig 10).
 //!
-//! **Evaluation hot path** (DESIGN.md §Hot path): every candidate is a
-//! [`Prepared`] bundle of (partition, placement, knobs) plus its
-//! [`StageTable`] — built incrementally for single-boundary partition
-//! moves, cloned for knob-only moves.  Scoring goes through the fused
-//! schedule+simulate pass ([`crate::perfmodel::fused_eval`]) on
-//! per-thread [`SimArena`]s, and move batches are scored concurrently
-//! with `std::thread::scope`; selection is by `(score, index)` so
-//! results are bit-identical to the serial order.  Set
+//! **Three-layer scoring path** (DESIGN.md § Search acceleration).
+//! Every candidate is a [`Prepared`] bundle of (partition, placement,
+//! knobs) — shared immutably via `Arc`, so building a move clones only
+//! the component it changes — plus its [`StageTable`], recycled
+//! through a [`cache::PrepPool`] and re-derived incrementally for
+//! single-boundary partition moves.  Scoring then goes through, in
+//! order:
+//!
+//! 1. **Bound pruning** ([`crate::perfmodel::bounds`]): an O(S)
+//!    analytic makespan lower bound; candidates that provably cannot
+//!    beat the incumbent (`bound ≥ best − ε`, the exact acceptance
+//!    threshold) are skipped without simulation and counted in
+//!    [`GenResult::evals_pruned`].
+//! 2. **Memoization** ([`cache::EvalCache`]): a transposition table
+//!    keyed by the candidate's exact structural identity; regenerated
+//!    candidates (undo moves, repeated knob-grid points) reuse their
+//!    score and are counted in [`GenResult::evals_cached`].
+//! 3. **Evaluation** — the fused schedule+simulate pass
+//!    ([`crate::perfmodel::fused_eval`]) on per-worker [`SimArena`]s.
+//!    Batches large enough to amortise dispatch run on a persistent
+//!    [`pool::EvalPool`] (threads spawned once per search, channel-fed);
+//!    results merge by `(score, index)`, so the outcome is
+//!    bit-identical to a serial run.
+//!
+//! Both elisions only skip evaluations that cannot change the argmin —
+//! the bound is a true lower bound and cache hits replay exact scores —
+//! so the chosen pipeline, score and tuning log are **bit-identical**
+//! to an elision-free run (`GenOptions::{prune_bounds, memoize}`
+//! false; pinned by `tests/generator_accel.rs`).  Set
 //! [`GenOptions::engine`] to [`EvalEngine::Reference`] to route every
 //! eval through the unfused two-pass path (materialise the schedule,
 //! re-simulate with the O(slots·P) reference kernel, single-threaded) —
 //! the two engines produce identical pipelines at identical eval
 //! counts, which is what `benches/generator.rs` compares.
 
+pub mod cache;
+pub mod pool;
 pub mod searchspace;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::baselines::Pipeline;
@@ -50,11 +74,19 @@ use crate::memory::MemCaps;
 use crate::partition::{balanced, memory_balanced, uniform, Partition};
 use crate::placement::{interleaved, sequential, wave, Placement};
 use crate::perfmodel::{
-    fused_eval, fused_score, simulate_in, simulate_reference_in, PerfReport, SimArena,
-    StageTable,
+    fits_lower_bound, fused_eval, fused_score, makespan_lower_bound_in, simulate_in,
+    simulate_reference_in, BoundScratch, PerfReport, SimArena, StageTable,
 };
 use crate::profile::ProfiledData;
-use crate::schedule::greedy::{greedy_schedule_caps, SchedKnobs};
+use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
+
+use cache::{CandKey, EvalCache, PrepPool};
+use pool::{EvalPool, Job};
+
+/// Acceptance epsilon: a move must beat the incumbent by more than
+/// this to be kept.  The bound pruner reuses the same threshold, which
+/// is what makes pruning unable to change the argmin.
+const ACCEPT_EPS: f64 = 1e-12;
 
 /// Which phases the generator may tune (Fig 10 ablation masks).
 #[derive(Clone, Copy, Debug)]
@@ -77,7 +109,8 @@ impl PhaseMask {
 /// How candidate evaluations are executed (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EvalEngine {
-    /// Fused schedule+simulate, reusable arenas, parallel move batches.
+    /// Fused schedule+simulate, reusable arenas, persistent-pool
+    /// parallel move batches.
     Fast,
     /// Materialise each schedule and re-simulate with the reference
     /// kernel, serially — the pre-optimization behaviour, retained for
@@ -103,6 +136,13 @@ pub struct GenOptions {
     /// uses the profile's uniform capacity (the seed behaviour);
     /// heterogeneous caps come from [`crate::cluster::ClusterSpec::mem_caps`].
     pub mem_caps: Option<MemCaps>,
+    /// Skip full evaluation of candidates whose analytic makespan
+    /// lower bound already exceeds the incumbent (bit-identical
+    /// search; default on).
+    pub prune_bounds: bool,
+    /// Memoize candidate scores across tuning iterations
+    /// (bit-identical search; default on).
+    pub memoize: bool,
 }
 
 impl GenOptions {
@@ -116,12 +156,23 @@ impl GenOptions {
             max_chunks: 4,
             engine: EvalEngine::Fast,
             mem_caps: None,
+            prune_bounds: true,
+            memoize: true,
         }
     }
 
     /// Search under the given per-device memory capacities.
     pub fn with_mem_caps(mut self, caps: MemCaps) -> Self {
         self.mem_caps = Some(caps);
+        self
+    }
+
+    /// Disable bound pruning and memoization — every candidate is
+    /// fully evaluated.  The baseline the accelerated search must
+    /// match bit-for-bit (tests, `benches/generator.rs`).
+    pub fn elision_free(mut self) -> Self {
+        self.prune_bounds = false;
+        self.memoize = false;
         self
     }
 }
@@ -141,16 +192,23 @@ pub struct GenResult {
     pub report: PerfReport,
     pub knobs: SchedKnobs,
     pub iters: usize,
+    /// Candidates fully evaluated (schedule built + simulated).
     pub evals: usize,
+    /// Candidates skipped because their analytic lower bound already
+    /// ruled them out (no schedule, no simulation).
+    pub evals_pruned: usize,
+    /// Candidates answered from the transposition table.
+    pub evals_cached: usize,
     pub elapsed_s: f64,
     pub log: Vec<GenLogEntry>,
 }
 
 /// Candidate = (partition, placement, knobs); schedules are derived.
+/// Components are `Arc`-shared: a move clones only what it changes.
 #[derive(Clone)]
 struct Cand {
-    part: Partition,
-    plac: Placement,
+    part: Arc<Partition>,
+    plac: Arc<Placement>,
     knobs: SchedKnobs,
 }
 
@@ -162,30 +220,22 @@ struct Prepared {
 }
 
 impl Prepared {
-    fn fresh(profile: &ProfiledData, desc: String, cand: Cand) -> Prepared {
-        let table = StageTable::build(profile, &cand.part, &cand.plac);
+    fn fresh(
+        profile: &ProfiledData,
+        pool: &mut PrepPool,
+        desc: String,
+        cand: Cand,
+    ) -> Prepared {
+        let table = pool.build(profile, &cand.part, &cand.plac);
         Prepared { desc, cand, table }
     }
 }
 
-/// Schedule-independent feasibility lower bound: a device holds its
-/// static memory plus, at each stage's first F, at least that stage's
-/// one-micro-batch stash (per-(stage, mb) holdings never go negative),
-/// so `static_d + act[s] > cap` for any stage proves OOM before any
-/// simulation runs.  O(S), allocation-free.
-fn fits_lower_bound(table: &StageTable, caps: &MemCaps) -> bool {
-    if !caps.fits_static(&table.static_d) {
-        return false;
-    }
-    (0..table.n_stages).all(|s| {
-        let d = table.device[s];
-        table.static_d[d] + table.act[s] <= caps.cap(d)
-    })
-}
-
-/// Score one candidate: step makespan, +inf on OOM / deadlock (Eq. 2).
-/// Candidates rejected by the feasibility lower bound never get a
-/// schedule built — no simulation for plans no schedule could save.
+/// Score one candidate serially: step makespan, +inf on OOM / deadlock
+/// (Eq. 2).  Candidates rejected by the feasibility lower bound never
+/// get a schedule built — no simulation for plans no schedule could
+/// save.  (Parallel batches route through [`pool::EvalPool`], which
+/// applies the identical gate.)
 fn eval_candidate(
     profile: &ProfiledData,
     caps: &MemCaps,
@@ -200,14 +250,7 @@ fn eval_candidate(
     match engine {
         EvalEngine::Fast => fused_score(&prep.table, caps, nmb, prep.cand.knobs, arena),
         EvalEngine::Reference => {
-            let sch = greedy_schedule_caps(
-                profile,
-                caps,
-                &prep.cand.part,
-                &prep.cand.plac,
-                nmb,
-                prep.cand.knobs,
-            );
+            let sch = greedy_schedule_in(arena, &prep.table, caps, nmb, prep.cand.knobs);
             match simulate_reference_in(
                 profile,
                 caps,
@@ -229,8 +272,21 @@ struct Evaluator<'a> {
     caps: &'a MemCaps,
     nmb: usize,
     engine: EvalEngine,
+    prune: bool,
+    memoize: bool,
     evals: usize,
+    evals_pruned: usize,
+    evals_cached: usize,
     arena: SimArena,
+    scratch: BoundScratch,
+    cache: EvalCache,
+    /// Persistent worker pool, spawned lazily on the first batch large
+    /// enough to amortise dispatch and reused for the whole search.
+    pool: Option<EvalPool>,
+    threads: usize,
+    // Per-batch bookkeeping, reused across batches.
+    need: Vec<usize>,
+    keys: Vec<Option<CandKey>>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -239,57 +295,114 @@ impl<'a> Evaluator<'a> {
         caps: &'a MemCaps,
         nmb: usize,
         engine: EvalEngine,
+        prune: bool,
+        memoize: bool,
     ) -> Self {
-        Evaluator { profile, caps, nmb, engine, evals: 0, arena: SimArena::new() }
+        Evaluator {
+            profile,
+            caps,
+            nmb,
+            engine,
+            prune,
+            memoize,
+            evals: 0,
+            evals_pruned: 0,
+            evals_cached: 0,
+            arena: SimArena::new(),
+            scratch: BoundScratch::default(),
+            cache: EvalCache::new(),
+            pool: None,
+            threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+            need: Vec::new(),
+            keys: Vec::new(),
+        }
     }
 
-    /// Score a whole move batch.  With the fast engine, candidates are
-    /// split across scoped threads (each with its own arena); output
-    /// order is the input order, so downstream `(score, index)`
-    /// selection is deterministic and identical to a serial run.
-    fn scores(&mut self, batch: &[Prepared]) -> Vec<f64> {
-        self.evals += batch.len();
+    /// Score a whole move batch against the incumbent `best`.  Output
+    /// order is the input order whatever elides or parallelises, so
+    /// downstream `(score, index)` selection is deterministic and
+    /// identical to a serial, elision-free run.  Pruned candidates
+    /// score `+inf` (their true score provably cannot be accepted).
+    fn scores(&mut self, batch: &mut [Prepared], best: f64) -> Vec<f64> {
         let n = batch.len();
-        // Thread spawn/join costs tens of µs; only fan out when the
-        // batch carries enough simulated ops to amortise it, else the
-        // serial loop (reused arena) wins.  Same results either way.
+        let mut out = vec![f64::INFINITY; n];
+        self.need.clear();
+        self.keys.clear();
+        self.keys.resize_with(n, || None);
+        for (i, prep) in batch.iter().enumerate() {
+            if self.prune {
+                let bound = makespan_lower_bound_in(
+                    &mut self.scratch,
+                    &prep.table,
+                    self.caps,
+                    self.nmb,
+                    prep.cand.knobs.split_bw,
+                );
+                // Acceptance needs score < best − ε and score ≥ bound,
+                // so bound ≥ best − ε proves the eval cannot matter.
+                if bound >= best - ACCEPT_EPS {
+                    self.evals_pruned += 1;
+                    continue;
+                }
+            }
+            if self.memoize {
+                let key = CandKey::of(&prep.cand.part, &prep.cand.plac, prep.cand.knobs);
+                if let Some(score) = self.cache.get(&key) {
+                    self.evals_cached += 1;
+                    out[i] = score;
+                    continue;
+                }
+                self.keys[i] = Some(key);
+            }
+            self.need.push(i);
+        }
+        self.evals += self.need.len();
+
+        // Dispatch heuristic: fan out only when the batch carries
+        // enough simulated ops to amortise channel round-trips; the
+        // serial loop (reused arena) wins otherwise.  Same results
+        // either way.
         let work_per_eval =
             batch.first().map_or(0, |prep| prep.table.n_stages * self.nmb);
-        let threads = match self.engine {
-            EvalEngine::Reference => 1,
-            EvalEngine::Fast if n < 4 || work_per_eval < 256 => 1,
-            EvalEngine::Fast => std::thread::available_parallelism()
-                .map(|v| v.get())
-                .unwrap_or(1)
-                .min(n),
-        };
-        if threads <= 1 {
-            let mut out = Vec::with_capacity(n);
-            for prep in batch {
-                out.push(eval_candidate(
+        let use_pool = self.engine == EvalEngine::Fast
+            && self.threads > 1
+            && self.need.len() >= 4
+            && work_per_eval >= 256;
+        if use_pool {
+            if self.pool.is_none() {
+                self.pool =
+                    Some(EvalPool::new(self.threads, self.caps.clone(), self.nmb));
+            }
+            let pool = self.pool.as_ref().expect("just created");
+            for &i in &self.need {
+                let table = std::mem::take(&mut batch[i].table);
+                pool.submit(Job { idx: i, table, knobs: batch[i].cand.knobs });
+            }
+            for _ in 0..self.need.len() {
+                let done = pool.collect();
+                assert!(!done.score.is_nan(), "pooled candidate evaluation panicked");
+                out[done.idx] = done.score;
+                batch[done.idx].table = done.table;
+            }
+        } else {
+            for &i in &self.need {
+                out[i] = eval_candidate(
                     self.profile,
                     self.caps,
                     self.nmb,
                     self.engine,
-                    prep,
+                    &batch[i],
                     &mut self.arena,
-                ));
+                );
             }
-            return out;
         }
-        let mut out = vec![f64::INFINITY; n];
-        let chunk = n.div_ceil(threads);
-        let (profile, caps, nmb, engine) = (self.profile, self.caps, self.nmb, self.engine);
-        std::thread::scope(|sc| {
-            for (bch, och) in batch.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                sc.spawn(move || {
-                    let mut arena = SimArena::new();
-                    for (prep, o) in bch.iter().zip(och.iter_mut()) {
-                        *o = eval_candidate(profile, caps, nmb, engine, prep, &mut arena);
-                    }
-                });
+        if self.memoize {
+            for &i in &self.need {
+                if let Some(key) = self.keys[i].take() {
+                    self.cache.insert(key, out[i]);
+                }
             }
-        });
+        }
         out
     }
 
@@ -306,14 +419,8 @@ impl<'a> Evaluator<'a> {
                 None,
             )),
             EvalEngine::Reference => {
-                let sch = greedy_schedule_caps(
-                    self.profile,
-                    self.caps,
-                    &cand.part,
-                    &cand.plac,
-                    self.nmb,
-                    cand.knobs,
-                );
+                let sch =
+                    greedy_schedule_in(&mut self.arena, table, self.caps, self.nmb, cand.knobs);
                 simulate_reference_in(
                     self.profile,
                     self.caps,
@@ -338,7 +445,15 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         .clone()
         .unwrap_or_else(|| MemCaps::uniform(p, profile.mem_capacity));
     assert_eq!(caps.p(), p, "mem_caps must cover every pipeline device");
-    let mut ev = Evaluator::new(profile, &caps, opts.nmb, opts.engine);
+    let mut ev = Evaluator::new(
+        profile,
+        &caps,
+        opts.nmb,
+        opts.engine,
+        opts.prune_bounds,
+        opts.memoize,
+    );
+    let mut prep_pool = PrepPool::new();
     let mut log = Vec::new();
 
     // ---- Seed selection --------------------------------------------------
@@ -358,8 +473,13 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     if opts.seed_s1f1b_only {
         seeds.push(Prepared::fresh(
             profile,
+            &mut prep_pool,
             "S-1F1B seed".into(),
-            Cand { part: uniform(n_layers, p), plac: sequential(p), knobs: knobs_1f1b },
+            Cand {
+                part: Arc::new(uniform(n_layers, p)),
+                plac: Arc::new(sequential(p)),
+                knobs: knobs_1f1b,
+            },
         ));
     } else {
         let parts: Vec<Partition> = vec![uniform(n_layers, p), balanced(profile, p)];
@@ -378,11 +498,13 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
                         balanced(profile, s_n)
                     }
                 };
+                let (part, plac) = (Arc::new(part), Arc::new(plac));
                 for knobs in [knobs_1f1b, knobs_zb] {
                     seeds.push(Prepared::fresh(
                         profile,
+                        &mut prep_pool,
                         "seed".into(),
-                        Cand { part: part.clone(), plac: plac.clone(), knobs },
+                        Cand { part: Arc::clone(&part), plac: Arc::clone(&plac), knobs },
                     ));
                 }
             }
@@ -395,16 +517,19 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     // embedding/head memory exactly where a tight cap rejects it.
     // With slack caps the seed set (and the search) is unchanged.
     if caps.bounded() && seeds.iter().any(|s| !fits_lower_bound(&s.table, &caps)) {
+        let part = Arc::new(memory_balanced(profile, p));
+        let plac = Arc::new(sequential(p));
         for knobs in [knobs_1f1b, knobs_zb] {
             seeds.push(Prepared::fresh(
                 profile,
+                &mut prep_pool,
                 "memory-balanced seed".into(),
-                Cand { part: memory_balanced(profile, p), plac: sequential(p), knobs },
+                Cand { part: Arc::clone(&part), plac: Arc::clone(&plac), knobs },
             ));
         }
     }
 
-    let seed_scores = ev.scores(&seeds);
+    let seed_scores = ev.scores(&mut seeds, f64::INFINITY);
     let mut best_i = 0usize;
     for (i, &sc) in seed_scores.iter().enumerate() {
         if sc < seed_scores[best_i] {
@@ -413,6 +538,9 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     }
     let mut best_score = seed_scores[best_i];
     let chosen = seeds.swap_remove(best_i);
+    for s in seeds {
+        prep_pool.recycle(s.table);
+    }
     let mut cur = chosen.cand;
     let mut cur_table = chosen.table;
     log.push(GenLogEntry {
@@ -437,37 +565,51 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         // Phase order: blame the phase with the strongest signal first.
         for phase in phase_order(cur_report.as_ref(), opts) {
             let mut moves: Vec<Prepared> = match phase {
-                "partition" => {
-                    partition_moves(profile, &cur, &cur_table, cur_report.as_ref())
-                }
-                "placement" => placement_moves(profile, &cur, opts),
-                "schedule" => schedule_moves(&cur, &cur_table),
+                "partition" => partition_moves(
+                    profile,
+                    &mut prep_pool,
+                    &cur,
+                    &cur_table,
+                    cur_report.as_ref(),
+                ),
+                "placement" => placement_moves(profile, &mut prep_pool, &cur, opts),
+                "schedule" => schedule_moves(&mut prep_pool, &cur, &cur_table),
                 _ => unreachable!(),
             };
-            // Memory-violating moves are pruned inside `eval_candidate`
-            // (the feasibility lower bound short-circuits to +inf
-            // before any schedule is built), so one gate serves seeds
+            // Memory-violating moves are pruned by the same feasibility
+            // lower bound (folded into the analytic bound, and applied
+            // again before any simulation), so one gate serves seeds
             // and move batches alike.
-            let scores = ev.scores(&moves);
+            let scores = ev.scores(&mut moves, best_score);
             let mut best_move: Option<(f64, usize)> = None;
             for (i, &score) in scores.iter().enumerate() {
-                if score < best_score - 1e-12
+                if score < best_score - ACCEPT_EPS
                     && best_move.is_none_or(|(b, _)| score < b)
                 {
                     best_move = Some((score, i));
                 }
             }
-            if let Some((score, i)) = best_move {
-                let prep = moves.swap_remove(i);
-                best_score = score;
-                cur = prep.cand;
-                cur_table = prep.table;
-                log.push(GenLogEntry { iter, phase, action: prep.desc, total: score });
-                cur_report = ev.report(&cur, &cur_table);
-                improved = true;
-                break; // re-assess bottleneck from the new pipeline
+            match best_move {
+                Some((score, i)) => {
+                    let Prepared { desc, cand, table } = moves.swap_remove(i);
+                    for m in moves {
+                        prep_pool.recycle(m.table);
+                    }
+                    best_score = score;
+                    cur = cand;
+                    prep_pool.recycle(std::mem::replace(&mut cur_table, table));
+                    log.push(GenLogEntry { iter, phase, action: desc, total: score });
+                    cur_report = ev.report(&cur, &cur_table);
+                    improved = true;
+                    break; // re-assess bottleneck from the new pipeline
+                }
+                None => {
+                    // Roll back (nothing kept) and try the next phase.
+                    for m in moves {
+                        prep_pool.recycle(m.table);
+                    }
+                }
             }
-            // else: roll back (nothing kept) and try the next phase.
         }
 
         if !improved {
@@ -480,7 +622,7 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     let final_table = StageTable::build(profile, &cur.part, &cur.plac);
     let mut arena = SimArena::new();
     let mut schedule =
-        greedy_schedule_caps(profile, &caps, &cur.part, &cur.plac, opts.nmb, cur.knobs);
+        greedy_schedule_in(&mut arena, &final_table, &caps, opts.nmb, cur.knobs);
     let mut report = simulate_in(&mut arena, &final_table, &caps, &schedule, false)
         .expect("final pipeline must simulate");
     // OOM repair (Eq. 2): under a binding cap the list scheduler's
@@ -492,8 +634,7 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         let mut knobs = cur.knobs;
         for _ in 0..8 {
             knobs.mem_cap_factor *= 0.5;
-            let sch =
-                greedy_schedule_caps(profile, &caps, &cur.part, &cur.plac, opts.nmb, knobs);
+            let sch = greedy_schedule_in(&mut arena, &final_table, &caps, opts.nmb, knobs);
             let rep = simulate_in(&mut arena, &final_table, &caps, &sch, false)
                 .expect("repaired pipeline must simulate");
             if !rep.oom {
@@ -513,21 +654,25 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     GenResult {
         pipeline: Pipeline {
             name: "AdaPtis".into(),
-            partition: cur.part,
-            placement: cur.plac,
+            partition: Arc::unwrap_or_clone(cur.part),
+            placement: Arc::unwrap_or_clone(cur.plac),
             schedule,
         },
         report,
         knobs: cur.knobs,
         iters: iter,
         evals: ev.evals,
+        evals_pruned: ev.evals_pruned,
+        evals_cached: ev.evals_cached,
         elapsed_s: t0.elapsed().as_secs_f64(),
         log,
     }
 }
 
 /// Decide phase attempt order from bottleneck signals (paper: "identify
-/// the bottleneck phase … and tune it accordingly").
+/// the bottleneck phase … and tune it accordingly").  `total_cmp` keeps
+/// the ordering total even when a degenerate profile (zero-cost layers)
+/// turns a blame ratio into NaN.
 fn phase_order(report: Option<&PerfReport>, opts: &GenOptions) -> Vec<&'static str> {
     let mut order: Vec<(&'static str, f64)> = Vec::new();
     if let Some(r) = report {
@@ -547,7 +692,7 @@ fn phase_order(report: Option<&PerfReport>, opts: &GenOptions) -> Vec<&'static s
             order.push(("schedule", bubble * 0.5));
         }
     }
-    order.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    order.sort_by(|a, b| b.1.total_cmp(&a.1));
     order.into_iter().map(|(n, _)| n).collect()
 }
 
@@ -557,6 +702,7 @@ fn phase_order(report: Option<&PerfReport>, opts: &GenOptions) -> Vec<&'static s
 /// device toward the highest-bubble device (§4.3).
 fn partition_moves(
     profile: &ProfiledData,
+    pool: &mut PrepPool,
     cur: &Cand,
     cur_table: &StageTable,
     report: Option<&PerfReport>,
@@ -565,13 +711,17 @@ fn partition_moves(
     let s_n = cur.part.n_stages();
     for b in 0..s_n - 1 {
         for dir in [true, false] {
-            let mut part = cur.part.clone();
+            let mut part = (*cur.part).clone();
             if part.shift_boundary(b, dir) {
-                let mut table = cur_table.clone();
+                let mut table = pool.take_like(cur_table);
                 table.update_boundary(profile, &part, b);
                 out.push(Prepared {
                     desc: format!("shift boundary {b} {}", if dir { "←" } else { "→" }),
-                    cand: Cand { part, plac: cur.plac.clone(), knobs: cur.knobs },
+                    cand: Cand {
+                        part: Arc::new(part),
+                        plac: Arc::clone(&cur.plac),
+                        knobs: cur.knobs,
+                    },
                     table,
                 });
             }
@@ -587,7 +737,7 @@ fn partition_moves(
             let sr = cur.plac.stages_of(recv);
             if let (Some(&a), Some(&b)) = (sd.first(), sr.first()) {
                 let (lo, hi, dir) = if a < b { (a, b, false) } else { (b, a, true) };
-                let mut part = cur.part.clone();
+                let mut part = (*cur.part).clone();
                 let mut ok = true;
                 for k in lo..hi {
                     ok &= part.shift_boundary(k, dir);
@@ -595,8 +745,13 @@ fn partition_moves(
                 if ok && part.is_valid() {
                     out.push(Prepared::fresh(
                         profile,
+                        pool,
                         format!("flow layer dev{donor}→dev{recv}"),
-                        Cand { part, plac: cur.plac.clone(), knobs: cur.knobs },
+                        Cand {
+                            part: Arc::new(part),
+                            plac: Arc::clone(&cur.plac),
+                            knobs: cur.knobs,
+                        },
                     ));
                 }
             }
@@ -609,6 +764,7 @@ fn partition_moves(
 /// wave layouts) and pairwise stage swaps.
 fn placement_moves(
     profile: &ProfiledData,
+    pool: &mut PrepPool,
     cur: &Cand,
     opts: &GenOptions,
 ) -> Vec<Prepared> {
@@ -626,8 +782,9 @@ fn placement_moves(
             let part = repartition_for(profile, p * v);
             out.push(Prepared::fresh(
                 profile,
+                pool,
                 format!("{name} v={v}"),
-                Cand { part, plac, knobs: cur.knobs },
+                Cand { part: Arc::new(part), plac: Arc::new(plac), knobs: cur.knobs },
             ));
             if v == 1 {
                 break; // wave(p,1) == interleaved(p,1) == sequential
@@ -638,13 +795,18 @@ fn placement_moves(
     let s_n = cur.plac.n_stages();
     for s in 0..s_n.saturating_sub(1) {
         if cur.plac.device_of[s] != cur.plac.device_of[s + 1] {
-            let mut plac = cur.plac.clone();
+            let mut plac = (*cur.plac).clone();
             plac.swap_stages(s, s + 1);
             if plac.is_valid() {
                 out.push(Prepared::fresh(
                     profile,
+                    pool,
                     format!("swap stages {s},{}", s + 1),
-                    Cand { part: cur.part.clone(), plac, knobs: cur.knobs },
+                    Cand {
+                        part: Arc::clone(&cur.part),
+                        plac: Arc::new(plac),
+                        knobs: cur.knobs,
+                    },
                 ));
             }
         }
@@ -653,8 +815,9 @@ fn placement_moves(
 }
 
 /// Scheduling tuning moves: knob grid around the current setting.  The
-/// stage table is knob-independent, so the current one is reused.
-fn schedule_moves(cur: &Cand, cur_table: &StageTable) -> Vec<Prepared> {
+/// stage table is knob-independent, so the current one is reused
+/// (recycled buffers, no partition/placement clones at all).
+fn schedule_moves(pool: &mut PrepPool, cur: &Cand, cur_table: &StageTable) -> Vec<Prepared> {
     let k0 = cur.knobs;
     let variants = [
         ("split B/W", SchedKnobs { split_bw: !k0.split_bw, ..k0 }),
@@ -679,8 +842,12 @@ fn schedule_moves(cur: &Cand, cur_table: &StageTable) -> Vec<Prepared> {
         .into_iter()
         .map(|(name, knobs)| Prepared {
             desc: name.to_string(),
-            cand: Cand { part: cur.part.clone(), plac: cur.plac.clone(), knobs },
-            table: cur_table.clone(),
+            cand: Cand {
+                part: Arc::clone(&cur.part),
+                plac: Arc::clone(&cur.plac),
+                knobs,
+            },
+            table: pool.take_like(cur_table),
         })
         .collect()
 }
@@ -742,10 +909,13 @@ fn balanced_range(
     cuts.windows(2).map(|wd| wd[1] - wd[0]).collect()
 }
 
+/// NaN-total argmax: `total_cmp` orders +NaN above +inf, so degenerate
+/// blame vectors (0/0 bubbles on zero-cost profiles) select an index
+/// instead of panicking.
 fn argmax(xs: &[f64]) -> usize {
     xs.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -753,7 +923,7 @@ fn argmax(xs: &[f64]) -> usize {
 fn argmin(xs: &[f64]) -> usize {
     xs.iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -813,7 +983,7 @@ mod tests {
         let prof = profile(Family::NemotronH, 4, 16);
         let res = generate(&prof, &GenOptions::new(4, 16));
         for w in res.log.windows(2) {
-            assert!(w[1].total <= w[0].total + 1e-12);
+            assert!(w[1].total <= w[0].total + ACCEPT_EPS);
         }
         assert!(res.evals > 0 && res.elapsed_s >= 0.0);
     }
@@ -830,9 +1000,11 @@ mod tests {
 
     #[test]
     fn fast_and_reference_engines_agree() {
-        // The fast engine (fused evals, parallel batches, incremental
+        // The fast engine (fused evals, pooled batches, incremental
         // stage tables) must reproduce the reference engine's search
-        // bit-for-bit: same pipeline, same score, same eval count.
+        // bit-for-bit: same pipeline, same score, same eval counts —
+        // including the pruned/cached elision counters, which depend
+        // only on the (identical) search trajectory.
         for fam in [Family::Gemma, Family::NemotronH] {
             let prof = profile(fam, 4, 8);
             let mut fast_opts = GenOptions::new(4, 8);
@@ -845,8 +1017,64 @@ mod tests {
             assert_eq!(a.pipeline.partition, b.pipeline.partition, "{fam:?}");
             assert_eq!(a.pipeline.placement, b.pipeline.placement, "{fam:?}");
             assert_eq!(a.evals, b.evals, "{fam:?}");
+            assert_eq!(a.evals_pruned, b.evals_pruned, "{fam:?}");
+            assert_eq!(a.evals_cached, b.evals_cached, "{fam:?}");
             assert_eq!(a.iters, b.iters, "{fam:?}");
             assert_eq!(a.log.len(), b.log.len(), "{fam:?}");
         }
+    }
+
+    #[test]
+    fn selection_helpers_are_nan_safe() {
+        // +NaN orders above +inf under total_cmp: argmax lands on it,
+        // argmin skips it — and neither panics (the old
+        // `partial_cmp().unwrap()` did).
+        assert_eq!(argmax(&[f64::NAN, 1.0, 2.0]), 0);
+        assert_eq!(argmin(&[f64::NAN, 1.0, 2.0]), 1);
+        assert_eq!(argmax(&[0.5, f64::INFINITY]), 1);
+        assert_eq!(argmin(&[]), 0);
+    }
+
+    #[test]
+    fn phase_order_survives_nan_blame() {
+        let nan = f64::NAN;
+        let report = PerfReport {
+            total: nan,
+            t_d: vec![nan; 2],
+            busy_d: vec![nan; 2],
+            bubble_d: vec![nan; 2],
+            overlap_d: vec![0.0; 2],
+            comm_block_d: vec![0.0; 2],
+            m_d: vec![0.0; 2],
+            static_d: vec![0.0; 2],
+            headroom_d: vec![f64::INFINITY; 2],
+            oom: false,
+            events: Vec::new(),
+        };
+        let order = phase_order(Some(&report), &GenOptions::new(2, 2));
+        assert_eq!(order.len(), 3, "all phases still ranked: {order:?}");
+    }
+
+    #[test]
+    fn zero_cost_profile_does_not_panic() {
+        // A degenerate profile (all-zero layer costs) produces 0/0
+        // blame ratios; the search must still terminate with a valid
+        // pipeline instead of panicking in a comparator.
+        use crate::model::LayerCost;
+        let zero = LayerCost {
+            f: 0.0,
+            b: 0.0,
+            w: 0.0,
+            mem_static: 0.0,
+            mem_act: 0.0,
+            mem_act_w: 0.0,
+            comm_bytes: 0.0,
+        };
+        let prof = ProfiledData::from_measured(vec![zero; 8], 0.0, 1.0, 1e12);
+        let mut opts = GenOptions::new(2, 2);
+        opts.max_iters = 4;
+        let res = generate(&prof, &opts);
+        res.pipeline.schedule.validate(&res.pipeline.placement).unwrap();
+        assert!(res.report.total >= 0.0);
     }
 }

@@ -1,0 +1,186 @@
+//! Persistent candidate-evaluation pool (DESIGN.md § Search
+//! acceleration).
+//!
+//! PR 1 parallelised move batches with `std::thread::scope`, which
+//! spawns and joins a fresh set of OS threads for *every* batch — tens
+//! of microseconds of overhead per batch, paid hundreds of times per
+//! `generate()` call.  This pool spawns its workers once per search
+//! and feeds them over channels instead:
+//!
+//! - jobs carry an owned [`StageTable`] + [`SchedKnobs`] (everything a
+//!   fused evaluation reads besides the per-search constants), so no
+//!   borrows cross the thread boundary and the workers outlive any
+//!   batch;
+//! - each worker owns one [`SimArena`] for its whole lifetime —
+//!   steady-state evaluation allocates nothing;
+//! - results return `(index, score, table)`; the caller writes scores
+//!   by index and puts tables back, so the merged score vector is
+//!   positionally identical to a serial evaluation.  Workers race only
+//!   for *which job they pull* — every score is a pure function of its
+//!   job — which is the pool's determinism argument: the `(score,
+//!   index)` selection downstream sees bit-identical inputs regardless
+//!   of scheduling.
+//!
+//! The pool evaluates the **Fast** engine only (fused scoring needs no
+//! `ProfiledData`); the Reference engine stays serial by design — it
+//! is the elision-free baseline the benches compare against.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::memory::MemCaps;
+use crate::perfmodel::{fits_lower_bound, fused_score, SimArena, StageTable};
+use crate::schedule::greedy::SchedKnobs;
+
+/// One candidate evaluation: score `table` under `knobs`.
+pub struct Job {
+    /// Caller's batch index — results are merged back by this.
+    pub idx: usize,
+    pub table: StageTable,
+    pub knobs: SchedKnobs,
+}
+
+/// A finished evaluation; `table` is returned for recycling.
+pub struct Done {
+    pub idx: usize,
+    pub score: f64,
+    pub table: StageTable,
+}
+
+/// Long-lived worker pool; see module docs.  Dropping the pool closes
+/// the job queue and joins every worker.
+pub struct EvalPool {
+    jobs: Option<Sender<Job>>,
+    done: Receiver<Done>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EvalPool {
+    /// Spawn `threads` workers scoring against `caps` with `nmb`
+    /// micro-batches (both fixed for one `generate()` call).
+    pub fn new(threads: usize, caps: MemCaps, nmb: usize) -> EvalPool {
+        assert!(threads >= 1);
+        let (jobs, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (done_tx, done) = channel::<Done>();
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&job_rx);
+                let tx = done_tx.clone();
+                let caps = caps.clone();
+                std::thread::spawn(move || {
+                    let mut arena = SimArena::new();
+                    loop {
+                        // The guard is a statement temporary: the lock
+                        // is released as soon as `recv` returns, so
+                        // workers only serialise on dequeue, not work.
+                        let job = rx.lock().unwrap().recv();
+                        let Ok(job) = job else { break };
+                        // Same gate as the serial path: plans no
+                        // schedule could fit are never simulated.  A
+                        // panicking evaluation (unreachable for valid
+                        // candidates) is reported as a NaN sentinel so
+                        // the caller fails loudly instead of waiting
+                        // forever for a result that never comes.
+                        let score = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                if fits_lower_bound(&job.table, &caps) {
+                                    fused_score(&job.table, &caps, nmb, job.knobs, &mut arena)
+                                } else {
+                                    f64::INFINITY
+                                }
+                            }),
+                        )
+                        .unwrap_or(f64::NAN);
+                        let out = Done { idx: job.idx, score, table: job.table };
+                        if tx.send(out).is_err() {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        EvalPool { jobs: Some(jobs), done, workers }
+    }
+
+    /// Enqueue one evaluation.
+    pub fn submit(&self, job: Job) {
+        self.jobs
+            .as_ref()
+            .expect("pool not shut down")
+            .send(job)
+            .expect("evaluation workers alive");
+    }
+
+    /// Block for one finished evaluation (any order; merge by `idx`).
+    pub fn collect(&self) -> Done {
+        self.done.recv().expect("evaluation workers alive")
+    }
+}
+
+impl Drop for EvalPool {
+    fn drop(&mut self) {
+        // Closing the job channel ends every worker's recv loop.
+        self.jobs.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::partition::uniform;
+    use crate::placement::sequential;
+    use crate::profile::ProfiledData;
+
+    #[test]
+    fn pool_scores_match_serial_fused_eval() {
+        let spec = build_model(&ModelCfg::table5(Family::NemotronH, Size::Small));
+        let prof = ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        );
+        let caps = MemCaps::uniform(4, prof.mem_capacity);
+        let plac = sequential(4);
+        let knob_grid = [
+            SchedKnobs::default(),
+            SchedKnobs { split_bw: false, ..SchedKnobs::default() },
+            SchedKnobs { w_fill: false, ..SchedKnobs::default() },
+            SchedKnobs { overlap_aware: false, ..SchedKnobs::default() },
+        ];
+        let mut arena = SimArena::new();
+        let mut tables = Vec::new();
+        let mut serial = Vec::new();
+        for (i, knobs) in knob_grid.iter().enumerate() {
+            let mut part = uniform(prof.n_layers(), 4);
+            if i % 2 == 1 {
+                part.shift_boundary(i / 2, true);
+            }
+            let table = StageTable::build(&prof, &part, &plac);
+            serial.push(fused_score(&table, &caps, 8, *knobs, &mut arena));
+            tables.push(table);
+        }
+
+        let pool = EvalPool::new(3, caps, 8);
+        for (idx, (table, knobs)) in
+            tables.into_iter().zip(knob_grid.iter()).enumerate()
+        {
+            pool.submit(Job { idx, table, knobs: *knobs });
+        }
+        let mut pooled = vec![f64::NAN; knob_grid.len()];
+        for _ in 0..knob_grid.len() {
+            let done = pool.collect();
+            pooled[done.idx] = done.score;
+            // Returned tables are intact (recyclable).
+            assert_eq!(done.table.n_stages, 4);
+        }
+        assert_eq!(pooled, serial, "pool must be positionally bit-identical");
+        drop(pool); // joins workers without hanging
+    }
+}

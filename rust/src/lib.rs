@@ -22,9 +22,11 @@
 //!   evaluation, and the retained reference oracle — DESIGN.md §3);
 //! - [`memory`]: the peak-memory model next to it — per-stage
 //!   footprints, per-device capacities, and the reference tracker
+//!   (DESIGN.md §5);
+//! - [`generator`]: §4.3 co-optimization loop — zero-alloc candidate
+//!   search over the fused evaluator, accelerated by analytic bound
+//!   pruning, score memoization and a persistent evaluation pool
 //!   (DESIGN.md §4);
-//! - [`generator`]: §4.3 co-optimization loop (zero-alloc, parallel
-//!   candidate search over the fused evaluator);
 //! - [`executor`]: §4.4 instruction lowering + comm passes;
 //! - [`cluster`]: simulated + real (threads & PJRT) clusters;
 //! - [`runtime`]: PJRT artifact loading/execution;

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   figures <id|all> [--fast] [--out DIR] [--artifacts DIR]
-//!       regenerate a paper table/figure (see DESIGN.md §6)
+//!       regenerate a paper table/figure (see DESIGN.md §7)
 //!   generate --model <fam> --size <sz> --p N --nmb N [--t N] [--seq N]
 //!       run the Pipeline Generator and print the co-optimized pipeline
 //!   simulate --method <m> --model <fam> --size <sz> --p N --nmb N
@@ -209,11 +209,13 @@ fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         res.knobs.mem_cap_factor
     );
     println!(
-        "  step time {} | bubble ratio {:.1}% | gen {} ({} evals, {} iters)",
+        "  step time {} | bubble ratio {:.1}% | gen {} ({} evals, {} pruned, {} cached, {} iters)",
         fmt_time(res.report.total),
         100.0 * res.report.bubble_ratio(),
         fmt_time(res.elapsed_s),
         res.evals,
+        res.evals_pruned,
+        res.evals_cached,
         res.iters
     );
     let r = simulate(

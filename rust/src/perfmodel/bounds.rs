@@ -1,0 +1,216 @@
+//! Analytic makespan lower bounds — the Pipeline Generator's pruning
+//! oracle (DESIGN.md § Search acceleration).
+//!
+//! A candidate whose *lower bound* already exceeds the incumbent best
+//! score can never win the argmin, so the generator skips its full
+//! fused evaluation.  The bound is computed from a [`StageTable`]
+//! alone in one O(S) pass (allocation-free via [`BoundScratch`]) and
+//! combines three certificates, each valid for *any* dependency-
+//! respecting schedule the list scheduler could emit:
+//!
+//! 1. **Memory feasibility** (the PR-2 gate, [`fits_lower_bound`]):
+//!    a device holds its static memory plus, at each hosted stage's
+//!    first F, at least that stage's one-micro-batch stash — if that
+//!    already exceeds the cap, every schedule is OOM and the objective
+//!    is `+inf` (Eq. 2), so the bound is `+inf`.
+//! 2. **Micro-batch critical path**: micro-batch 0 must flow F through
+//!    stages `0..S` and B back through `S..0`; every hop waits at least
+//!    `dep + comm` in both overlap modes, so the chain
+//!    `Σ (comm_f_in + f) + Σ (comm_b_in + b')` bounds the makespan
+//!    (`b' = b` under a split backward, `b + w` fused).
+//! 3. **Per-device compute + fill/drain**: device `d` cannot start
+//!    before the earliest F-chain arrival among its stages
+//!    (`head_d`), must execute `nmb · Σ (f + b + w)` seconds of
+//!    compute serially (`C_d`), and — without a B/W split, where its
+//!    last op is necessarily some stage's B — the B-chain below that
+//!    stage still runs afterwards (`tail_d`).  So
+//!    `T ≥ head_d + C_d + tail_d` for every device.
+//!
+//! **Floating-point safety.** The chain folds reuse the kernels'
+//! expression shapes (rounding is monotone, so the folded bound cannot
+//! exceed the folded simulation), but `C_d` sums compute in stage
+//! order while the simulation accumulates in execution order.  The
+//! returned value is therefore deflated by `1 − 1e-9` — orders of
+//! magnitude more than the worst-case accumulated rounding of any
+//! realistic slot count (≈ `ops · ε ≈ 1e-11` relative at 100k slots)
+//! — so `makespan_lower_bound ≤ simulate(..).total` holds *bitwise*,
+//! not just in exact arithmetic (pinned on randomized pipelines by
+//! `tests/generator_accel.rs`).
+
+use super::stagetable::StageTable;
+use crate::memory::MemCaps;
+
+/// Relative deflation applied to the analytic bound so accumulated
+/// floating-point rounding can never push it above a simulated
+/// makespan (see module docs).
+const FP_DEFLATION: f64 = 1e-9;
+
+/// Schedule-independent memory feasibility: a device holds its static
+/// memory plus, at each stage's first F, at least that stage's
+/// one-micro-batch stash (per-(stage, mb) holdings never go negative),
+/// so `static_d + act[s] > cap` for any stage proves OOM before any
+/// simulation runs.  O(S), allocation-free.
+pub fn fits_lower_bound(table: &StageTable, caps: &MemCaps) -> bool {
+    if !caps.fits_static(&table.static_d) {
+        return false;
+    }
+    (0..table.n_stages).all(|s| {
+        let d = table.device[s];
+        table.static_d[d] + table.act[s] <= caps.cap(d)
+    })
+}
+
+/// Reusable per-device accumulators for [`makespan_lower_bound_in`] —
+/// the generator keeps one so the hot pruning path allocates nothing.
+#[derive(Default)]
+pub struct BoundScratch {
+    head: Vec<f64>,
+    tail: Vec<f64>,
+    busy: Vec<f64>,
+}
+
+fn refill(v: &mut Vec<f64>, n: usize, x: f64) {
+    v.clear();
+    v.resize(n, x);
+}
+
+/// Allocation-free analytic makespan lower bound (see module docs).
+///
+/// Returns `+inf` when no schedule can fit the memory caps (the
+/// objective is `+inf` there too, Eq. 2); otherwise a value `≤` the
+/// simulated makespan of *every* schedule the greedy list scheduler
+/// can produce for this table, whatever the remaining knobs
+/// (`w_fill`, `overlap_aware`, `mem_cap_factor`) choose.
+pub fn makespan_lower_bound_in(
+    scratch: &mut BoundScratch,
+    table: &StageTable,
+    caps: &MemCaps,
+    nmb: usize,
+    split_bw: bool,
+) -> f64 {
+    if !fits_lower_bound(table, caps) {
+        return f64::INFINITY;
+    }
+    let s_n = table.n_stages;
+    let p = table.p;
+    let nmb_f = nmb as f64;
+    refill(&mut scratch.head, p, f64::INFINITY);
+    refill(&mut scratch.tail, p, if split_bw { 0.0 } else { f64::INFINITY });
+    refill(&mut scratch.busy, p, 0.0);
+
+    // Single forward pass: F-chain arrival per stage (head), B-chain
+    // mass below each stage (tail), and per-device compute (C_d).
+    let mut chain_f = 0.0f64; // end of the mb-0 F chain through stage s-1
+    let mut below = 0.0f64; // Σ_{u<s} (b'[u] + comm_b_in[u])
+    for s in 0..s_n {
+        let d = table.device[s];
+        let arrive = if s == 0 { 0.0 } else { chain_f + table.comm_f_in[s] };
+        if arrive < scratch.head[d] {
+            scratch.head[d] = arrive;
+        }
+        if !split_bw && below < scratch.tail[d] {
+            scratch.tail[d] = below;
+        }
+        scratch.busy[d] += (table.f[s] + table.b[s] + table.w[s]) * nmb_f;
+        chain_f = arrive + table.f[s];
+        let bp = if split_bw { table.b[s] } else { table.b[s] + table.w[s] };
+        below += bp + table.comm_b_in[s];
+    }
+
+    // Certificate 2: full F chain + full B chain for one micro-batch
+    // (comm_b_in of the last stage is 0 by construction).
+    let mut bound = chain_f + below;
+
+    // Certificate 3: per-device fill + compute + drain.
+    for d in 0..p {
+        if scratch.head[d].is_infinite() {
+            continue; // hosts no stage (invalid placement): no claim
+        }
+        let dev = scratch.head[d] + scratch.busy[d] + scratch.tail[d];
+        if dev > bound {
+            bound = dev;
+        }
+    }
+    bound * (1.0 - FP_DEFLATION)
+}
+
+/// [`makespan_lower_bound_in`] with throwaway scratch — tests and
+/// one-shot callers.
+pub fn makespan_lower_bound(
+    table: &StageTable,
+    caps: &MemCaps,
+    nmb: usize,
+    split_bw: bool,
+) -> f64 {
+    makespan_lower_bound_in(&mut BoundScratch::default(), table, caps, nmb, split_bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+    use crate::partition::uniform;
+    use crate::placement::{interleaved, sequential};
+    use crate::perfmodel::simulate;
+    use crate::profile::ProfiledData;
+    use crate::schedule::builders::{gpipe, one_f_one_b, zb_h1};
+
+    fn prof(p: usize, nmb: usize) -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(p, 2, nmb, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn bound_below_builder_schedules() {
+        let (p, nmb) = (4, 8);
+        let pr = prof(p, nmb);
+        let part = uniform(pr.n_layers(), p);
+        let pl = sequential(p);
+        let table = StageTable::build(&pr, &part, &pl);
+        let caps = MemCaps::uniform(p, pr.mem_capacity);
+        for (sch, split) in
+            [(one_f_one_b(p, nmb), false), (gpipe(p, nmb), false), (zb_h1(p, nmb), true)]
+        {
+            let r = simulate(&pr, &part, &pl, &sch, false).unwrap();
+            let lb = makespan_lower_bound(&table, &caps, nmb, split);
+            assert!(
+                lb <= r.total,
+                "bound {lb:.6} > simulated {:.6} (split={split})",
+                r.total
+            );
+            // The bound must be non-trivial: at least the busiest
+            // device's compute, deflated.
+            let max_busy = r.busy_d.iter().cloned().fold(0.0, f64::max);
+            assert!(lb >= max_busy * 0.999, "bound {lb} too loose vs busy {max_busy}");
+        }
+    }
+
+    #[test]
+    fn bound_is_monotone_in_nmb() {
+        let pr = prof(4, 8);
+        let part = uniform(pr.n_layers(), 8);
+        let pl = interleaved(4, 2);
+        let table = StageTable::build(&pr, &part, &pl);
+        let caps = MemCaps::unbounded(4);
+        let b8 = makespan_lower_bound(&table, &caps, 8, true);
+        let b16 = makespan_lower_bound(&table, &caps, 16, true);
+        assert!(b8.is_finite() && b16 > b8);
+    }
+
+    #[test]
+    fn infeasible_caps_bound_to_infinity() {
+        let pr = prof(4, 8);
+        let part = uniform(pr.n_layers(), 4);
+        let pl = sequential(4);
+        let table = StageTable::build(&pr, &part, &pl);
+        assert!(fits_lower_bound(&table, &MemCaps::unbounded(4)));
+        let tight = MemCaps::uniform(4, 1.0);
+        assert!(!fits_lower_bound(&table, &tight));
+        assert!(makespan_lower_bound(&table, &tight, 8, false).is_infinite());
+    }
+}

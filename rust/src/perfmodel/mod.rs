@@ -24,11 +24,20 @@
 //! Deadlock (a schedule whose cross-device waits cycle) is detected and
 //! reported rather than hanging — the Pipeline Generator relies on this
 //! to prune invalid candidates.
+//!
+//! [`bounds`] sits *in front of* the kernels: an O(S), allocation-free
+//! analytic makespan lower bound from a [`StageTable`] alone, which the
+//! Pipeline Generator uses to skip simulating candidates that provably
+//! cannot beat its incumbent (DESIGN.md § Search acceleration).
 
+pub mod bounds;
 pub mod engine;
 pub mod fused;
 pub mod stagetable;
 
+pub use bounds::{
+    fits_lower_bound, makespan_lower_bound, makespan_lower_bound_in, BoundScratch,
+};
 pub use engine::{simulate_in, simulate_in_with, SimArena};
 pub use fused::{fused_eval, fused_score};
 pub use stagetable::StageTable;

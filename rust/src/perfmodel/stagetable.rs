@@ -13,7 +13,11 @@ use crate::profile::ProfiledData;
 
 /// Stage-level cost vectors consumed by the evaluation engines
 /// ([`crate::perfmodel::engine`] and [`crate::perfmodel::fused`]).
-#[derive(Clone, Debug)]
+///
+/// `Default` is the empty table (0 stages, 0 devices) — a placeholder
+/// for `std::mem::take` when tables travel through the generator's
+/// evaluation pool; never evaluate one.
+#[derive(Clone, Debug, Default)]
 pub struct StageTable {
     /// Pipeline devices.
     pub p: usize,
@@ -52,6 +56,21 @@ impl StageTable {
         partition: &Partition,
         placement: &Placement,
     ) -> StageTable {
+        let mut t = StageTable::default();
+        t.rebuild(profile, partition, placement);
+        t
+    }
+
+    /// [`StageTable::build`] into `self`, reusing every buffer — the
+    /// generator's `PrepPool` recycles tables across move batches so
+    /// steady-state candidate construction allocates nothing.
+    /// Bit-identical to a fresh `build` (every entry is overwritten).
+    pub fn rebuild(
+        &mut self,
+        profile: &ProfiledData,
+        partition: &Partition,
+        placement: &Placement,
+    ) {
         let s_n = partition.n_stages();
         assert_eq!(
             placement.n_stages(),
@@ -59,29 +78,30 @@ impl StageTable {
             "partition has {s_n} stages, placement {}",
             placement.n_stages()
         );
-        let mut t = StageTable {
-            p: placement.p,
-            n_stages: s_n,
-            device: placement.device_of.clone(),
-            f: vec![0.0; s_n],
-            b: vec![0.0; s_n],
-            w: vec![0.0; s_n],
-            act: vec![0.0; s_n],
-            act_w: vec![0.0; s_n],
-            mem_static: vec![0.0; s_n],
-            comm_bytes: vec![0.0; s_n],
-            comm_f_in: vec![0.0; s_n],
-            comm_b_in: vec![0.0; s_n],
-            static_d: vec![0.0; placement.p],
-        };
-        for s in 0..s_n {
-            t.set_stage(profile, partition, s);
+        self.p = placement.p;
+        self.n_stages = s_n;
+        self.device.clone_from(&placement.device_of);
+        for v in [
+            &mut self.f,
+            &mut self.b,
+            &mut self.w,
+            &mut self.act,
+            &mut self.act_w,
+            &mut self.mem_static,
+            &mut self.comm_bytes,
+            &mut self.comm_f_in,
+            &mut self.comm_b_in,
+        ] {
+            v.clear();
+            v.resize(s_n, 0.0);
         }
         for s in 0..s_n {
-            t.set_comm(profile, s);
+            self.set_stage(profile, partition, s);
         }
-        t.recompute_static_d();
-        t
+        for s in 0..s_n {
+            self.set_comm(profile, s);
+        }
+        self.recompute_static_d();
     }
 
     /// Re-derive the table after `partition.shift_boundary(b, _)`:
@@ -175,6 +195,29 @@ mod tests {
         assert!(t.comm_f_in[1] > 0.0);
         assert!(t.comm_b_in[2] > 0.0);
         assert_eq!(t.comm_b_in[3], 0.0);
+    }
+
+    #[test]
+    fn rebuild_into_recycled_table_matches_fresh_build() {
+        let p = prof();
+        // Dirty donor shaped differently from the target.
+        let mut t = StageTable::build(&p, &uniform(p.n_layers(), 8), &interleaved(4, 2));
+        let part = uniform(p.n_layers(), 4);
+        let pl = sequential(4);
+        t.rebuild(&p, &part, &pl);
+        let fresh = StageTable::build(&p, &part, &pl);
+        assert_eq!(t.n_stages, fresh.n_stages);
+        assert_eq!(t.device, fresh.device);
+        assert_eq!(t.f, fresh.f);
+        assert_eq!(t.b, fresh.b);
+        assert_eq!(t.w, fresh.w);
+        assert_eq!(t.act, fresh.act);
+        assert_eq!(t.act_w, fresh.act_w);
+        assert_eq!(t.mem_static, fresh.mem_static);
+        assert_eq!(t.comm_bytes, fresh.comm_bytes);
+        assert_eq!(t.comm_f_in, fresh.comm_f_in);
+        assert_eq!(t.comm_b_in, fresh.comm_b_in);
+        assert_eq!(t.static_d, fresh.static_d);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::perfmodel::{fused_eval, SimArena, StageTable};
 use crate::profile::ProfiledData;
 
 /// Tuning knobs for the adaptive scheduler.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SchedKnobs {
     /// Split backward into B and W (ZB-style).
     pub split_bw: bool,
@@ -78,10 +78,26 @@ pub fn greedy_schedule_caps(
 ) -> Schedule {
     let table = StageTable::build(profile, partition, placement);
     let mut arena = SimArena::new();
-    let mut slots: Vec<Vec<Slot>> = vec![Vec::new(); placement.p];
-    let _ = fused_eval(&table, caps, nmb, knobs, &mut arena, Some(&mut slots));
+    greedy_schedule_in(&mut arena, &table, caps, nmb, knobs)
+}
+
+/// [`greedy_schedule_caps`] over a prebuilt [`StageTable`] and a
+/// caller-owned [`SimArena`] — the Pipeline Generator's Reference
+/// engine materialises a schedule per candidate, and the candidate's
+/// table is already built, so this variant skips the rebuild and the
+/// per-call arena allocation.  Identical output (the table build is
+/// deterministic).
+pub fn greedy_schedule_in(
+    arena: &mut SimArena,
+    table: &StageTable,
+    caps: &MemCaps,
+    nmb: usize,
+    knobs: SchedKnobs,
+) -> Schedule {
+    let mut slots: Vec<Vec<Slot>> = vec![Vec::new(); table.p];
+    let _ = fused_eval(table, caps, nmb, knobs, arena, Some(&mut slots));
     Schedule {
-        p: placement.p,
+        p: table.p,
         nmb,
         n_stages: table.n_stages,
         split_bw: knobs.split_bw,

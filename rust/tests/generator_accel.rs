@@ -1,0 +1,173 @@
+//! Search-acceleration equivalence suite (DESIGN.md § Search
+//! acceleration).
+//!
+//! The Pipeline Generator's three elision layers — analytic bound
+//! pruning, candidate memoization, persistent-pool evaluation — may
+//! only skip work that cannot change the argmin.  This suite pins
+//! that:
+//!
+//! - `makespan_lower_bound` really is a lower bound: never above the
+//!   simulated makespan of any greedy schedule on randomized
+//!   pipelines, and `+inf` only when the pipeline is provably OOM;
+//! - the accelerated search is **bit-identical** to the elision-free
+//!   search under both engines: same pipeline, same score, same knobs,
+//!   same tuning log — and every candidate is accounted for
+//!   (`evals + pruned + cached` is conserved).
+
+mod common;
+
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::generator::{generate, EvalEngine, GenOptions, GenResult};
+use adaptis::memory::MemCaps;
+use adaptis::model::build_model;
+use adaptis::perfmodel::{makespan_lower_bound, simulate_reference_in, StageTable};
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::greedy::greedy_schedule_caps;
+use adaptis::util::rng::Rng;
+use common::{random_knobs, random_partition, random_placement, random_profile};
+
+#[test]
+fn lower_bound_never_exceeds_simulated_makespan() {
+    let mut rng = Rng::new(0xb0a7);
+    for case in 0..40 {
+        let (prof, par) = random_profile(&mut rng);
+        let p = par.p;
+        let nmb = par.nmb;
+        let plac = random_placement(&mut rng, p, prof.n_layers());
+        let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let knobs = random_knobs(&mut rng);
+        // Every 4th case squeezes the caps so the OOM branch of the
+        // bound (`+inf` ⇒ provably OOM) is exercised too.
+        let cap = if case % 4 == 0 { prof.mem_capacity / 256.0 } else { prof.mem_capacity };
+        let caps = MemCaps::uniform(p, cap);
+        let table = StageTable::build(&prof, &part, &plac);
+        let lb = makespan_lower_bound(&table, &caps, nmb, knobs.split_bw);
+        let sch = greedy_schedule_caps(&prof, &caps, &part, &plac, nmb, knobs);
+        let rep = simulate_reference_in(&prof, &caps, &part, &plac, &sch, false)
+            .unwrap_or_else(|e| panic!("case {case}: greedy deadlocked: {e}"));
+        if lb.is_finite() {
+            assert!(
+                lb <= rep.total,
+                "case {case}: bound {lb:.9} > simulated {:.9} (p={p} nmb={nmb} \
+                 S={} split={})",
+                rep.total,
+                plac.n_stages(),
+                knobs.split_bw
+            );
+        } else {
+            // Infinite bound = static + one-mb stash breaches a cap;
+            // the schedule must then actually run OOM.
+            assert!(rep.oom, "case {case}: infinite bound on a non-OOM pipeline");
+        }
+    }
+}
+
+fn assert_same_search(a: &GenResult, b: &GenResult, ctx: &str) {
+    assert_eq!(a.report.total, b.report.total, "{ctx}: total");
+    assert_eq!(a.pipeline.partition, b.pipeline.partition, "{ctx}: partition");
+    assert_eq!(a.pipeline.placement, b.pipeline.placement, "{ctx}: placement");
+    assert_eq!(a.knobs, b.knobs, "{ctx}: knobs");
+    assert_eq!(a.iters, b.iters, "{ctx}: iters");
+    assert_eq!(a.log.len(), b.log.len(), "{ctx}: log length");
+    for (i, (x, y)) in a.log.iter().zip(b.log.iter()).enumerate() {
+        assert_eq!(x.iter, y.iter, "{ctx}: log[{i}].iter");
+        assert_eq!(x.phase, y.phase, "{ctx}: log[{i}].phase");
+        assert_eq!(x.action, y.action, "{ctx}: log[{i}].action");
+        assert_eq!(x.total, y.total, "{ctx}: log[{i}].total");
+    }
+}
+
+#[test]
+fn acceleration_is_bit_identical_on_randomized_profiles() {
+    let mut rng = Rng::new(0xacce1);
+    for case in 0..8 {
+        let (prof, par) = random_profile(&mut rng);
+        let mut base = GenOptions::new(par.p, par.nmb);
+        base.max_iters = 8;
+        // {Fast, Reference} × {accelerated, elision-free}.
+        let run = |engine: EvalEngine, accel: bool| {
+            let mut o = base.clone();
+            o.engine = engine;
+            if !accel {
+                o = o.elision_free();
+            }
+            generate(&prof, &o)
+        };
+        let fast_on = run(EvalEngine::Fast, true);
+        let fast_off = run(EvalEngine::Fast, false);
+        let ref_on = run(EvalEngine::Reference, true);
+        let ref_off = run(EvalEngine::Reference, false);
+
+        let ctx = format!("case {case} (p={} nmb={})", par.p, par.nmb);
+        assert_same_search(&fast_on, &fast_off, &format!("{ctx} fast on/off"));
+        assert_same_search(&fast_on, &ref_on, &format!("{ctx} fast/ref on"));
+        assert_same_search(&fast_on, &ref_off, &format!("{ctx} fast-on/ref-off"));
+
+        // Elision-free runs elide nothing; accelerated runs account
+        // for every candidate the elision-free run evaluated.
+        for r in [&fast_off, &ref_off] {
+            assert_eq!(r.evals_pruned + r.evals_cached, 0, "{ctx}: elision-free");
+        }
+        assert_eq!(
+            fast_on.evals + fast_on.evals_pruned + fast_on.evals_cached,
+            fast_off.evals,
+            "{ctx}: candidates conserved"
+        );
+        // Elision decisions are engine-independent (the bound reads
+        // the stage table, the cache keys structure).
+        assert_eq!(fast_on.evals, ref_on.evals, "{ctx}");
+        assert_eq!(fast_on.evals_pruned, ref_on.evals_pruned, "{ctx}");
+        assert_eq!(fast_on.evals_cached, ref_on.evals_cached, "{ctx}");
+    }
+}
+
+fn table5_profile(fam: Family, p: usize, nmb: usize) -> ProfiledData {
+    let spec = build_model(&ModelCfg::table5(fam, Size::Small));
+    ProfiledData::analytical(
+        &spec,
+        &HardwareCfg::default(),
+        &ParallelCfg::new(p, 2, nmb, 1, 4096),
+    )
+}
+
+#[test]
+fn table5_accel_identity_and_counters() {
+    // The acceptance shape: on the paper's model families the default
+    // (accelerated) search matches the elision-free search bitwise
+    // *and* actually elides work.
+    for fam in [Family::Gemma, Family::DeepSeek, Family::NemotronH] {
+        let prof = table5_profile(fam, 4, 16);
+        let accel = generate(&prof, &GenOptions::new(4, 16));
+        let plain = generate(&prof, &GenOptions::new(4, 16).elision_free());
+        assert_same_search(&accel, &plain, &format!("{fam:?}"));
+        assert!(
+            accel.evals_pruned + accel.evals_cached > 0,
+            "{fam:?}: acceleration elided nothing"
+        );
+        assert_eq!(
+            accel.evals + accel.evals_pruned + accel.evals_cached,
+            plain.evals,
+            "{fam:?}: candidates conserved"
+        );
+        assert!(accel.evals < plain.evals, "{fam:?}: no evaluation was saved");
+    }
+}
+
+#[test]
+fn accel_matches_elision_free_under_tight_caps() {
+    // Memory-constrained searches walk a different trajectory (OOM
+    // pruning, memory-balanced seeds); the elisions must be invisible
+    // there too.
+    let prof = table5_profile(Family::Gemma, 4, 16);
+    let free = generate(&prof, &GenOptions::new(4, 16));
+    let cap = free.report.peak_mem() * 0.9;
+    let caps = MemCaps::uniform(4, cap);
+    let accel = generate(&prof, &GenOptions::new(4, 16).with_mem_caps(caps.clone()));
+    let plain = generate(&prof, &GenOptions::new(4, 16).with_mem_caps(caps).elision_free());
+    assert_same_search(&accel, &plain, "tight caps");
+    assert_eq!(
+        accel.evals + accel.evals_pruned + accel.evals_cached,
+        plain.evals,
+        "tight caps: candidates conserved"
+    );
+}

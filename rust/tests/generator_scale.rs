@@ -1,0 +1,73 @@
+//! Large-scale generator scenario — guards the accelerated search
+//! path against regressions at the sizes the ROADMAP cares about:
+//! P=16 devices, nmb=64 micro-batches, ~96 heterogeneous layers
+//! (Nemotron-H's Mamba/SA/FFN mix) under tight *heterogeneous* memory
+//! caps.  The search must finish within a generous wall-clock budget —
+//! sized for the unoptimized debug profile tier-1 tests run under, an
+//! order of magnitude above the expected cost, so only a gross fast-path
+//! regression trips it — and still beat the S-1F1B baseline without
+//! breaching any per-device cap.
+
+use std::time::Instant;
+
+use adaptis::baselines::{build, Method};
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::generator::{generate, GenOptions};
+use adaptis::memory::MemCaps;
+use adaptis::model::build_model;
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+
+#[test]
+fn large_scale_search_stays_fast_and_beats_s1f1b() {
+    let (p, nmb) = (16usize, 64usize);
+    let mut cfg = ModelCfg::table5(Family::NemotronH, Size::Medium);
+    cfg.blocks = 47; // flat layer list ≈ 2·47 + 2 = 96 fine-grained layers
+    let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+    assert!(
+        (90..=110).contains(&prof.n_layers()),
+        "scenario wants ~96 layers, got {}",
+        prof.n_layers()
+    );
+
+    // Baseline and its per-device footprint.
+    let base = build(Method::S1F1B, &prof, p, nmb);
+    let rb = simulate(&prof, &base.partition, &base.placement, &base.schedule, false)
+        .unwrap();
+
+    // Tight heterogeneous caps: even devices get 15% headroom over the
+    // baseline's peak (these bind — interleaved/wave layouts that stack
+    // static state there are infeasible), odd devices get 2×.
+    let caps = MemCaps::per_device(
+        (0..p).map(|d| rb.m_d[d] * if d % 2 == 0 { 1.15 } else { 2.0 }).collect(),
+    );
+
+    let mut opts = GenOptions::new(p, nmb).with_mem_caps(caps.clone());
+    opts.max_iters = 12;
+    let t0 = Instant::now();
+    let res = generate(&prof, &opts);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    assert!(
+        elapsed < 120.0,
+        "P={p} nmb={nmb} search took {elapsed:.1}s — fast path regressed"
+    );
+    res.pipeline.schedule.validate(&res.pipeline.placement).unwrap();
+    assert!(!res.report.oom, "generated pipeline breaches its caps");
+    for d in 0..p {
+        assert!(
+            res.report.m_d[d] <= caps.cap(d),
+            "device {d}: {:.3e} B > cap {:.3e} B",
+            res.report.m_d[d],
+            caps.cap(d)
+        );
+    }
+    assert!(
+        res.report.total <= rb.total * 1.001,
+        "AdaPtis {:.4}s !<= S-1F1B {:.4}s at P={p} nmb={nmb}",
+        res.report.total,
+        rb.total
+    );
+    assert!(res.evals > 0 && res.iters > 0);
+}

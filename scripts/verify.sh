@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus a perfmodel bench smoke run.
+# Tier-1 verification plus bench smoke runs (perfmodel + generator).
 #   scripts/verify.sh          build + test + bench smoke
 #   scripts/verify.sh --fast   build + test only
 set -euo pipefail
@@ -21,6 +21,8 @@ fi
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== perfmodel bench smoke (writes rust/BENCH_perfmodel.json) =="
   cargo bench --bench perfmodel -- --smoke
+  echo "== generator bench smoke (writes rust/BENCH_generator.json) =="
+  cargo bench --bench generator -- --smoke
 fi
 
 echo "verify: OK"
