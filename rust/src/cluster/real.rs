@@ -10,11 +10,12 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::runtime::Tensor;
-use crate::schedule::OpKind;
 
 /// Logical channel id: (micro-batch, producer stage, consumer stage,
-/// kind).  Driver I/O uses reserved stage ids (see [`Tag`]).
-pub type ChannelKey = (u32, u32, u32, OpKind);
+/// kind) — the executor's [`crate::executor::Chan`], one key space
+/// across the abstract passes, the SimCluster and this fabric.  Driver
+/// I/O uses reserved stage ids (see [`Tag`]).
+pub type ChannelKey = crate::executor::Chan;
 
 /// Message tag distinguishing payload streams.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -116,6 +117,7 @@ impl Fabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::OpKind;
 
     #[test]
     fn out_of_order_delivery() {

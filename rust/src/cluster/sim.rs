@@ -1,25 +1,105 @@
-//! Timed discrete-event execution of a lowered [`Program`] with
-//! rendezvous (NCCL-style synchronous-pair) send semantics.
+//! Timed discrete-event execution of a lowered [`Program`] — the
+//! instruction-level *differential twin* of [`crate::perfmodel`].
 //!
-//! This is the instruction-level counterpart of
-//! [`crate::perfmodel::simulate`] (which works on schedules): it prices
-//! the executor's actual instruction stream, including the cost of
-//! un-hoisted receives and the stalls deadlock-repair reordering
-//! avoids.  Used for executor validation, the overlap ablation, and
+//! Two pricing modes ([`SimOptions`]):
+//!
+//! - **matched-assumption** ([`SimOptions::matched`]): transport is
+//!   eager (the RealCluster's buffered fabric), links are uncontended
+//!   and posting costs zero; every `Wait` prices its channel with the
+//!   *same* `start ≥ dep + comm` expression shape as the performance
+//!   model's kernels ([`crate::perfmodel::engine::ready_at`]).  Because
+//!   sends execute at their producer's completion time and per-device
+//!   instruction order equals slot order, the run agrees **bitwise**
+//!   with [`crate::perfmodel::simulate`] on makespan, per-device finish
+//!   times and busy time (`tests/executor_differential.rs`).
+//!
+//! - **rendezvous** ([`SimOptions::rendezvous`], the default): real
+//!   NCCL-style synchronous-pair timing.  A `Recv` posts at the
+//!   consumer's clock (plus an optional posting cost); a `Send` blocks
+//!   until the matching recv is posted and advances the sender's clock
+//!   to the match point; the transfer then occupies the directed
+//!   per-device-pair link — concurrent transfers on one link
+//!   **serialize** — and `Wait` blocks until arrival.  This prices what
+//!   the abstract passes cannot see: un-hoisted receives, repair
+//!   reorderings, and link contention.
+//!
+//! Used for executor validation (Fig 11/12), the overlap ablation, and
 //! SimCluster traces.
 
 use std::collections::HashMap;
 
-use crate::executor::{Instr, Program};
+use crate::executor::{Chan, Program, Step};
 use crate::partition::Partition;
+use crate::perfmodel::engine::ready_at;
 use crate::profile::ProfiledData;
 use crate::schedule::OpKind;
 use crate::util::trace::TraceEvent;
+
+/// Timing-mode knobs for [`run_timed_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    /// Matched-assumption mode: price waits with the perf-model
+    /// expression shapes (eager transport, no contention, zero posting
+    /// costs — the remaining knobs are ignored).
+    pub matched: bool,
+    /// Serialize concurrent transfers sharing a directed device-pair
+    /// link (rendezvous mode only).
+    pub link_contention: bool,
+    /// Seconds a device spends posting a `Recv` before the post is
+    /// visible to the sender (rendezvous mode only).  Counted as
+    /// overhead on the posting device's clock — not `busy_d` compute —
+    /// so it surfaces as bubble in makespan analyses.
+    pub recv_post_cost: f64,
+    /// Seconds a device spends initiating a matched `Send` — the
+    /// DMA-handoff cost after the rendezvous point (rendezvous mode
+    /// only).
+    pub send_post_cost: f64,
+    /// Collect per-op trace events.
+    pub collect_trace: bool,
+}
+
+impl SimOptions {
+    /// The perf-model differential twin (bitwise agreement mode).
+    pub fn matched() -> SimOptions {
+        SimOptions {
+            matched: true,
+            link_contention: false,
+            recv_post_cost: 0.0,
+            send_post_cost: 0.0,
+            collect_trace: false,
+        }
+    }
+
+    /// Real rendezvous timing with link contention on, posting free.
+    pub fn rendezvous() -> SimOptions {
+        SimOptions {
+            matched: false,
+            link_contention: true,
+            recv_post_cost: 0.0,
+            send_post_cost: 0.0,
+            collect_trace: false,
+        }
+    }
+
+    pub fn with_trace(mut self, on: bool) -> SimOptions {
+        self.collect_trace = on;
+        self
+    }
+}
+
+impl Default for SimOptions {
+    fn default() -> SimOptions {
+        SimOptions::rendezvous()
+    }
+}
 
 /// Timed execution result.
 #[derive(Clone, Debug)]
 pub struct SimRun {
     pub makespan: f64,
+    /// Per-device finish time (bitwise equal to `PerfReport::t_d` in
+    /// matched mode).
+    pub t_d: Vec<f64>,
     pub busy_d: Vec<f64>,
     pub events: Vec<TraceEvent>,
 }
@@ -39,19 +119,32 @@ impl std::fmt::Display for SimDeadlock {
 
 impl std::error::Error for SimDeadlock {}
 
-/// Execute `prog` in virtual time.
-///
-/// Timing model: `Recv` posts instantly; `Send` waits until the
-/// matching recv is posted (rendezvous), then the transfer occupies the
-/// link for `p2p(bytes)` while the sender continues; `Wait` blocks the
-/// consumer until arrival.
+/// Execute `prog` in virtual time under the default **rendezvous**
+/// pricing (see module docs); [`run_timed_with`] selects the mode.
 pub fn run_timed(
     profile: &ProfiledData,
     partition: &Partition,
     prog: &Program,
     collect_trace: bool,
 ) -> Result<SimRun, SimDeadlock> {
+    run_timed_with(profile, partition, prog, SimOptions::rendezvous().with_trace(collect_trace))
+}
+
+/// Execute `prog` in virtual time under `opts`.
+///
+/// The loop is a dataflow fixpoint: a device's clock only advances on
+/// its own instructions, channel times are write-once, and each
+/// directed link has a single writer (its sender device), so the
+/// solution is unique and independent of sweep order.
+pub fn run_timed_with(
+    profile: &ProfiledData,
+    partition: &Partition,
+    prog: &Program,
+    opts: SimOptions,
+) -> Result<SimRun, SimDeadlock> {
     let s_n = partition.n_stages();
+    // Identical Step-1 aggregation to `StageTable::build`, so matched
+    // mode consumes bit-equal durations and comm terms.
     let costs: Vec<_> =
         (0..s_n).map(|s| profile.stage_cost(partition.stage_range(s))).collect();
     let dur = |op: OpKind, s: usize| match op {
@@ -65,33 +158,36 @@ pub fn run_timed(
         }
         OpKind::W => costs[s].w,
     };
-    // Message sizes: F msg = producer stage's boundary bytes; B msg =
-    // consumer-of-gradient stage's boundary bytes (same tensor shape).
-    let msg_bytes = |key: &(u32, u32, u32, OpKind)| -> f64 {
-        let (_, from, to, kind) = *key;
+    // P2P seconds per channel: an F message carries the producer
+    // stage's boundary bytes (`comm_f_in[to]`), a B message the
+    // gradient w.r.t. the consumer stage's output (`comm_b_in[to]`) —
+    // the same expressions as `StageTable::set_comm`.
+    let comm_time = |chan: &Chan| -> f64 {
+        let (_, from, to, kind) = *chan;
         match kind {
-            OpKind::F => costs[from as usize].comm_bytes,
-            _ => costs[to as usize].comm_bytes,
+            OpKind::F => profile.p2p(costs[from as usize].comm_bytes),
+            _ => profile.p2p(costs[to as usize].comm_bytes),
         }
     };
 
     let mut pc = vec![0usize; prog.p];
     let mut clock = vec![0.0f64; prog.p];
     let mut busy = vec![0.0f64; prog.p];
-    let mut recv_post: HashMap<(u32, u32, u32, OpKind), f64> = HashMap::new();
-    let mut arrival: HashMap<(u32, u32, u32, OpKind), f64> = HashMap::new();
+    // Matched mode: send execution times.  Rendezvous mode: recv post
+    // (time, device), transfer arrivals, directed link next-free times.
+    let mut send_time: HashMap<Chan, f64> = HashMap::new();
+    let mut recv_post: HashMap<Chan, (f64, usize)> = HashMap::new();
+    let mut arrival: HashMap<Chan, f64> = HashMap::new();
+    let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
     let mut events = Vec::new();
     loop {
         let mut progressed = false;
-        let mut all_done = true;
         for d in 0..prog.p {
-            loop {
-                let Some(ins) = prog.per_device[d].get(pc[d]) else { break };
-                all_done = false;
-                match *ins {
-                    Instr::Compute { op, mb, stage } => {
+            while let Some(ins) = prog.per_device[d].get(pc[d]) {
+                match ins.step() {
+                    Step::Compute { op, mb, stage } => {
                         let t = dur(op, stage as usize);
-                        if collect_trace {
+                        if opts.collect_trace {
                             events.push(TraceEvent {
                                 name: format!("{}{}@s{}", op.name(), mb, stage),
                                 cat: op.name().into(),
@@ -104,45 +200,73 @@ pub fn run_timed(
                         clock[d] += t;
                         busy[d] += t;
                     }
-                    i if i.is_recv() => {
-                        recv_post.insert(i.channel().unwrap(), clock[d]);
-                    }
-                    i if i.is_send() => {
-                        let key = i.channel().unwrap();
-                        let Some(&r) = recv_post.get(&key) else { break };
-                        let start = clock[d].max(r);
-                        let t = profile.p2p(msg_bytes(&key));
-                        arrival.insert(key, start + t);
-                        if collect_trace {
-                            events.push(TraceEvent {
-                                name: format!("xfer{}@s{}->s{}", key.0, key.1, key.2),
-                                cat: "comm".into(),
-                                ts_us: start * 1e6,
-                                dur_us: t * 1e6,
-                                pid: d,
-                                tid: 1,
-                            });
+                    Step::Recv(chan) => {
+                        if !opts.matched {
+                            // The post becomes visible to the sender
+                            // only once posting completes, so the cost
+                            // gates the rendezvous match point too.
+                            let posted = clock[d] + opts.recv_post_cost;
+                            recv_post.insert(chan, (posted, d));
+                            clock[d] = posted;
                         }
-                        // Sender initiates and moves on (DMA engine).
-                        clock[d] = start;
                     }
-                    Instr::WaitF { mb, stage } => {
-                        let key = (mb, stage - 1, stage, OpKind::F);
-                        let Some(&a) = arrival.get(&key) else { break };
-                        clock[d] = clock[d].max(a);
+                    Step::Send(chan) => {
+                        if opts.matched {
+                            // Eager transport: record the producer-side
+                            // departure; the wait prices the transfer.
+                            send_time.insert(chan, clock[d]);
+                        } else {
+                            // Rendezvous: block until the peer posted.
+                            let Some(&(r, rd)) = recv_post.get(&chan) else { break };
+                            let mut start = clock[d].max(r);
+                            if opts.link_contention {
+                                start = start.max(
+                                    link_free.get(&(d, rd)).copied().unwrap_or(0.0),
+                                );
+                            }
+                            let t = comm_time(&chan);
+                            arrival.insert(chan, start + t);
+                            if opts.link_contention {
+                                link_free.insert((d, rd), start + t);
+                            }
+                            if opts.collect_trace {
+                                events.push(TraceEvent {
+                                    name: format!(
+                                        "xfer{}{}@s{}->s{}",
+                                        chan.3.name(),
+                                        chan.0,
+                                        chan.1,
+                                        chan.2
+                                    ),
+                                    cat: "comm".into(),
+                                    ts_us: start * 1e6,
+                                    dur_us: t * 1e6,
+                                    pid: d,
+                                    tid: 1,
+                                });
+                            }
+                            // The sender is held to the match point
+                            // (rendezvous handshake), then the DMA
+                            // engine owns the transfer.
+                            clock[d] = clock[d].max(r) + opts.send_post_cost;
+                        }
                     }
-                    Instr::WaitB { mb, stage } => {
-                        let key = (mb, stage + 1, stage, OpKind::B);
-                        let Some(&a) = arrival.get(&key) else { break };
-                        clock[d] = clock[d].max(a);
+                    Step::Wait(chan) => {
+                        if opts.matched {
+                            let Some(&dep) = send_time.get(&chan) else { break };
+                            clock[d] =
+                                ready_at(dep, comm_time(&chan), clock[d], prog.overlap_aware);
+                        } else {
+                            let Some(&a) = arrival.get(&chan) else { break };
+                            clock[d] = clock[d].max(a);
+                        }
                     }
-                    _ => unreachable!(),
                 }
                 pc[d] += 1;
                 progressed = true;
             }
         }
-        if all_done {
+        if (0..prog.p).all(|d| pc[d] >= prog.per_device[d].len()) {
             break;
         }
         if !progressed {
@@ -152,6 +276,7 @@ pub fn run_timed(
     }
     Ok(SimRun {
         makespan: clock.iter().cloned().fold(0.0, f64::max),
+        t_d: clock,
         busy_d: busy,
         events,
     })
@@ -162,10 +287,10 @@ mod tests {
     use super::*;
     use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
     use crate::executor::lower::{lower, LowerOptions};
-    use crate::model::build_model;
+    use crate::model::{build_model, LayerCost};
     use crate::partition::uniform;
     use crate::placement::sequential;
-    use crate::schedule::builders::one_f_one_b;
+    use crate::schedule::builders::{gpipe, one_f_one_b, zb_h1};
 
     fn setup() -> (ProfiledData, Partition) {
         let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
@@ -180,17 +305,30 @@ mod tests {
 
     #[test]
     fn timed_run_close_to_perfmodel() {
-        // Program-level timing should track the schedule-level perfmodel
-        // within a modest margin (they price comm slightly differently).
+        // Matched mode is the perf model bitwise; rendezvous mode (real
+        // link timing) stays within 2% on fully hoisted programs.
         let (prof, part) = setup();
         let pl = sequential(4);
-        let mut sch = one_f_one_b(4, 8);
-        sch.overlap_aware = true;
-        let prog = lower(&sch, &pl, LowerOptions::default());
-        let run = run_timed(&prof, &part, &prog, false).unwrap();
-        let pm = crate::perfmodel::simulate(&prof, &part, &pl, &sch, false).unwrap();
-        let rel = (run.makespan - pm.total).abs() / pm.total;
-        assert!(rel < 0.15, "sim {:.4} vs perfmodel {:.4} (rel {rel:.3})", run.makespan, pm.total);
+        for (split, overlap) in [(false, true), (true, true), (false, false)] {
+            let mut sch =
+                if split { zb_h1(4, 8) } else { one_f_one_b(4, 8) };
+            sch.overlap_aware = overlap;
+            let prog = lower(&sch, &pl, LowerOptions::default());
+            prog.validate().unwrap();
+            let pm = crate::perfmodel::simulate(&prof, &part, &pl, &sch, false).unwrap();
+            let m = run_timed_with(&prof, &part, &prog, SimOptions::matched()).unwrap();
+            assert_eq!(m.makespan, pm.total, "matched mode must be bitwise");
+            assert_eq!(m.t_d, pm.t_d);
+            assert_eq!(m.busy_d, pm.busy_d);
+            let r = run_timed(&prof, &part, &prog, false).unwrap();
+            let rel = (r.makespan - pm.total).abs() / pm.total;
+            assert!(
+                rel < 0.02,
+                "rendezvous {:.4} vs perfmodel {:.4} (rel {rel:.4})",
+                r.makespan,
+                pm.total
+            );
+        }
     }
 
     #[test]
@@ -226,5 +364,100 @@ mod tests {
             d0.push(r);
         }
         assert!(run_timed(&prof, &part, &prog, false).is_err());
+    }
+
+    /// One layer per stage with unit costs and a transfer five times
+    /// longer than a forward — GPipe's back-to-back warmup sends then
+    /// overlap on each link, so serialization must bind.
+    fn comm_heavy(p: usize) -> (ProfiledData, Partition) {
+        let layers = vec![
+            LayerCost {
+                f: 1.0,
+                b: 2.0,
+                w: 1.0,
+                comm_bytes: 5.0,
+                ..LayerCost::default()
+            };
+            p
+        ];
+        let prof = ProfiledData::from_measured(layers, 0.0, 1.0, f64::INFINITY);
+        let part = uniform(p, p);
+        (prof, part)
+    }
+
+    #[test]
+    fn link_contention_serializes_transfers() {
+        for p in [2, 4] {
+            let (prof, part) = comm_heavy(p);
+            let mut sch = gpipe(p, 8);
+            sch.overlap_aware = true;
+            let prog = lower(&sch, &sequential(p), LowerOptions::default());
+            prog.validate().unwrap();
+            let matched =
+                run_timed_with(&prof, &part, &prog, SimOptions::matched()).unwrap();
+            let free = run_timed_with(
+                &prof,
+                &part,
+                &prog,
+                SimOptions { link_contention: false, ..SimOptions::rendezvous() },
+            )
+            .unwrap();
+            let cont = run_timed_with(&prof, &part, &prog, SimOptions::rendezvous()).unwrap();
+            // Fully hoisted + uncontended rendezvous = matched exactly.
+            assert_eq!(free.makespan, matched.makespan);
+            assert!(
+                cont.makespan > free.makespan,
+                "p={p}: contention must delay comm-bound GPipe \
+                 (cont {} !> free {})",
+                cont.makespan,
+                free.makespan
+            );
+            // Transfers on one directed link must not overlap.
+            let cont = run_timed_with(
+                &prof,
+                &part,
+                &prog,
+                SimOptions::rendezvous().with_trace(true),
+            )
+            .unwrap();
+            // A directed link is (sender device, direction): with the
+            // sequential placement a sender's F traffic shares one link
+            // (d → d+1) and its B traffic the other (d → d-1).
+            let mut per_link: HashMap<(usize, char), Vec<(f64, f64)>> = HashMap::new();
+            for e in cont.events.iter().filter(|e| e.cat == "comm") {
+                let dir = e.name.chars().nth(4).unwrap();
+                per_link
+                    .entry((e.pid, dir))
+                    .or_default()
+                    .push((e.ts_us, e.ts_us + e.dur_us));
+            }
+            for ivs in per_link.values_mut() {
+                ivs.sort_by(|a, b| a.0.total_cmp(&b.0));
+                for w in ivs.windows(2) {
+                    assert!(
+                        w[1].0 >= w[0].1 - 1e-9,
+                        "p={p}: overlapping transfers on one link"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recv_posting_cost_delays_rendezvous_run() {
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let mut sch = one_f_one_b(4, 8);
+        sch.overlap_aware = true;
+        let prog = lower(&sch, &pl, LowerOptions::default());
+        let base = run_timed(&prof, &part, &prog, false).unwrap();
+        let posted = run_timed_with(
+            &prof,
+            &part,
+            &prog,
+            SimOptions { recv_post_cost: 1e-4, ..SimOptions::rendezvous() },
+        )
+        .unwrap();
+        assert!(posted.makespan > base.makespan);
     }
 }

@@ -1,9 +1,21 @@
 //! Schedule → instruction-list lowering and the §4.4 communication
 //! passes (comm insertion, deadlock repair, overlap hoisting).
+//!
+//! Comm insertion keys on **stage adjacency** (a `Recv`+`Wait` wherever
+//! stage `s`'s input is produced on another *device*, whatever the
+//! placement shape), so interleaved, V-shape/wave and arbitrary
+//! generator placements all lower through the same path.
+//!
+//! Deadlock repair is a single resumable abstract execution
+//! ([`AbstractExec`]): the rendezvous fixpoint runs forward once, and
+//! at each stuck point every blocked `Send`'s missing `Recv` is hoisted
+//! to its consumer's current program counter, then the *same* execution
+//! resumes — O(total instrs + repairs · scan) instead of the former
+//! three-full-simulations-per-repair O(n²–n³) retry loop.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use super::{Instr, Program};
+use super::{Chan, Instr, Program, Step};
 use crate::placement::Placement;
 use crate::schedule::{OpKind, Schedule};
 
@@ -14,17 +26,20 @@ pub struct LowerOptions {
     /// only useful for tests/ablations that want to observe deadlocks.
     pub repair_deadlocks: bool,
     /// Hoist receives up to this many instructions earlier for overlap
-    /// (Fig 7 Step 4); 0 disables the pass.
+    /// (Fig 7 Step 4); 0 disables the pass, `usize::MAX` posts every
+    /// receive as early as possible.
     pub hoist_window: usize,
 }
 
 impl Default for LowerOptions {
     fn default() -> Self {
-        // A deep hoist window lets receives start as soon as their
-        // producer finishes — the timed executor then matches the
-        // performance model's overlap assumption exactly (validated in
-        // the Fig 12 harness: window 3 → ~12% gap, window 16 → 0%).
-        LowerOptions { repair_deadlocks: true, hoist_window: 16 }
+        // Unbounded hoisting posts every receive at the earliest
+        // dependency-free point — the performance model's overlap
+        // assumption, and what the RealCluster's buffered transport
+        // does anyway.  This is the matched-assumption default under
+        // which the timed SimCluster agrees with `perfmodel::simulate`
+        // bitwise (tests/executor_differential.rs).
+        LowerOptions { repair_deadlocks: true, hoist_window: usize::MAX }
     }
 }
 
@@ -72,6 +87,7 @@ pub fn lower(schedule: &Schedule, placement: &Placement, opts: LowerOptions) -> 
         nmb: schedule.nmb,
         n_stages: s_n,
         split_bw: schedule.split_bw,
+        overlap_aware: schedule.overlap_aware,
         per_device,
     };
 
@@ -110,171 +126,138 @@ fn hoist_receives(prog: &mut Program, window: usize) {
     }
 }
 
+/// Resumable abstract rendezvous execution: `Send`s block until the
+/// matching recv is posted, `Wait`s until the matching send executed.
+/// The fixpoint can be re-entered after the program is mutated *at or
+/// after* the stuck program counters — the repair pass exploits this to
+/// fix every deadlock in one forward pass.
+struct AbstractExec {
+    pc: Vec<usize>,
+    recv_posted: HashSet<Chan>,
+    sent: HashSet<Chan>,
+}
+
+impl AbstractExec {
+    fn new(p: usize) -> AbstractExec {
+        AbstractExec { pc: vec![0; p], recv_posted: HashSet::new(), sent: HashSet::new() }
+    }
+
+    /// Run (or resume) the fixpoint; `true` iff every device completed.
+    fn run(&mut self, prog: &Program) -> bool {
+        loop {
+            let mut progressed = false;
+            for d in 0..prog.p {
+                while let Some(ins) = prog.per_device[d].get(self.pc[d]) {
+                    match ins.step() {
+                        Step::Compute { .. } => {}
+                        Step::Recv(c) => {
+                            self.recv_posted.insert(c);
+                        }
+                        Step::Send(c) => {
+                            if !self.recv_posted.contains(&c) {
+                                break; // rendezvous: peer hasn't posted
+                            }
+                            self.sent.insert(c);
+                        }
+                        Step::Wait(c) => {
+                            if !self.sent.contains(&c) {
+                                break;
+                            }
+                        }
+                    }
+                    self.pc[d] += 1;
+                    progressed = true;
+                }
+            }
+            if (0..prog.p).all(|d| self.pc[d] >= prog.per_device[d].len()) {
+                return true;
+            }
+            if !progressed {
+                return false;
+            }
+        }
+    }
+
+    /// First device still short of its list end (only valid when stuck).
+    fn first_blocked(&self, prog: &Program) -> (usize, usize) {
+        (0..prog.p)
+            .find(|&d| self.pc[d] < prog.per_device[d].len())
+            .map(|d| (d, self.pc[d]))
+            .expect("not stuck")
+    }
+}
+
 /// Abstract rendezvous execution: sends block until the matching recv
 /// is posted; waits block until the matching send executed.  Returns
 /// the device/pc of the first blocked instruction if the program
 /// cannot complete.
 pub fn check_rendezvous(prog: &Program) -> Result<(), (usize, usize)> {
-    let mut pc = vec![0usize; prog.p];
-    let mut recv_posted: HashMap<(u32, u32, u32, OpKind), bool> = HashMap::new();
-    let mut sent: HashMap<(u32, u32, u32, OpKind), bool> = HashMap::new();
-    loop {
-        let mut progressed = false;
-        let mut all_done = true;
-        for d in 0..prog.p {
-            loop {
-                let Some(ins) = prog.per_device[d].get(pc[d]) else { break };
-                all_done = false;
-                match ins {
-                    Instr::Compute { .. } => {}
-                    i if i.is_recv() => {
-                        recv_posted.insert(i.channel().unwrap(), true);
-                    }
-                    i if i.is_send() => {
-                        let key = i.channel().unwrap();
-                        if !recv_posted.get(&key).copied().unwrap_or(false) {
-                            break; // rendezvous: peer hasn't posted
-                        }
-                        sent.insert(key, true);
-                    }
-                    Instr::WaitF { mb, stage } => {
-                        let key = (*mb, *stage - 1, *stage, OpKind::F);
-                        if !sent.get(&key).copied().unwrap_or(false) {
-                            break;
-                        }
-                    }
-                    Instr::WaitB { mb, stage } => {
-                        let key = (*mb, *stage + 1, *stage, OpKind::B);
-                        if !sent.get(&key).copied().unwrap_or(false) {
-                            break;
-                        }
-                    }
-                    _ => unreachable!(),
-                }
-                pc[d] += 1;
-                progressed = true;
-            }
-        }
-        if all_done && pc.iter().enumerate().all(|(d, &p)| p >= prog.per_device[d].len())
-        {
-            return Ok(());
-        }
-        if !progressed {
-            let d = (0..prog.p).find(|&d| pc[d] < prog.per_device[d].len()).unwrap();
-            return Err((d, pc[d]));
-        }
+    let mut ex = AbstractExec::new(prog.p);
+    if ex.run(prog) {
+        Ok(())
+    } else {
+        Err(ex.first_blocked(prog))
     }
 }
 
 /// Detect rendezvous deadlocks and repair them by hoisting the missing
 /// `Recv` on the peer device directly before its blocking instruction
 /// (paper: "reorders them to ensure deadlock-free execution").
-pub fn repair_deadlocks(prog: &mut Program) {
-    let mut guard = 0usize;
-    let limit = prog.total_instrs() * 4 + 64;
-    while let Err((d0, at0)) = check_rendezvous(prog) {
-        guard += 1;
-        assert!(
-            guard < limit,
-            "deadlock repair did not converge (blocked at dev {d0} pc {at0})"
-        );
-        // The reported device may be blocked on a Wait whose *sender*
-        // is the repairable root: find any device stuck at a Send.
-        let pcs = stuck_pcs(prog);
-        let (d, at) = (0..prog.p)
-            .filter_map(|d| {
-                let pc = pcs[d];
-                prog.per_device[d]
-                    .get(pc)
-                    .filter(|i| i.is_send())
-                    .map(|_| (d, pc))
-            })
-            .next()
-            .unwrap_or_else(|| {
-                panic!(
-                    "unrepairable deadlock: no blocked send (dev {d0} pc {at0}: {:?}) — schedule invalid?",
-                    prog.per_device[d0][at0]
-                )
-            });
-        let blocked = prog.per_device[d][at];
-        let key = blocked.channel().unwrap();
-        // Find the matching Recv on the consumer device and hoist it to
-        // the consumer's current blocking point.
-        let consumer = consumer_device(prog, key);
-        let list = &mut prog.per_device[consumer];
-        let rpos = list
-            .iter()
-            .position(|i| i.is_recv() && i.channel() == Some(key))
-            .unwrap_or_else(|| panic!("send {key:?} has no matching recv"));
-        // Hoist before the consumer's first blocking comm instruction
-        // at or before rpos (conservatively: to the front of the
-        // consumer's unexecuted region — position of its own pc).
-        let target = blocking_point(prog, consumer, rpos);
-        let list = &mut prog.per_device[consumer];
-        let ins = list.remove(rpos);
-        list.insert(target, ins);
-    }
-}
-
-/// Program counters at the stuck point of the abstract execution.
-fn stuck_pcs(prog: &Program) -> Vec<usize> {
-    let mut pc = vec![0usize; prog.p];
-    let mut recv_posted: HashMap<(u32, u32, u32, OpKind), bool> = HashMap::new();
-    let mut sent: HashMap<(u32, u32, u32, OpKind), bool> = HashMap::new();
-    loop {
-        let mut progressed = false;
-        for d in 0..prog.p {
-            loop {
-                let Some(ins) = prog.per_device[d].get(pc[d]) else { break };
-                let ok = match ins {
-                    Instr::Compute { .. } => true,
-                    i if i.is_recv() => {
-                        recv_posted.insert(i.channel().unwrap(), true);
-                        true
-                    }
-                    i if i.is_send() => {
-                        let key = i.channel().unwrap();
-                        recv_posted.get(&key).copied().unwrap_or(false) && {
-                            sent.insert(key, true);
-                            true
-                        }
-                    }
-                    Instr::WaitF { mb, stage } => sent
-                        .get(&(*mb, *stage - 1, *stage, OpKind::F))
-                        .copied()
-                        .unwrap_or(false),
-                    Instr::WaitB { mb, stage } => sent
-                        .get(&(*mb, *stage + 1, *stage, OpKind::B))
-                        .copied()
-                        .unwrap_or(false),
-                    _ => unreachable!(),
-                };
-                if !ok {
-                    break;
-                }
-                pc[d] += 1;
-                progressed = true;
+///
+/// One resumable [`AbstractExec`] drives the whole pass: at each stuck
+/// point, every device blocked at a `Send` gets its channel's `Recv`
+/// hoisted to the consumer's current pc (the recv provably sits at or
+/// after it — otherwise it would already be posted), then the same
+/// execution resumes; nothing already executed is ever re-simulated.
+/// Returns the number of hoisted receives.
+///
+/// Panics on unrepairable deadlocks (a cycle through compute/wait
+/// dependencies, i.e. an invalid schedule rather than a send/recv
+/// ordering mismatch — recv hoisting cannot fix those).
+pub fn repair_deadlocks(prog: &mut Program) -> usize {
+    // Consumer device per channel (recvs never change device).
+    let mut recv_dev: HashMap<Chan, usize> = HashMap::new();
+    for (d, list) in prog.per_device.iter().enumerate() {
+        for ins in list {
+            if let Step::Recv(c) = ins.step() {
+                recv_dev.insert(c, d);
             }
         }
-        if !progressed {
-            return pc;
+    }
+    let mut ex = AbstractExec::new(prog.p);
+    let mut repairs = 0usize;
+    loop {
+        if ex.run(prog) {
+            return repairs;
+        }
+        let mut repaired = false;
+        for d in 0..prog.p {
+            let Some(ins) = prog.per_device[d].get(ex.pc[d]) else { continue };
+            let Step::Send(chan) = ins.step() else { continue };
+            if ex.recv_posted.contains(&chan) {
+                continue;
+            }
+            let consumer = *recv_dev
+                .get(&chan)
+                .unwrap_or_else(|| panic!("send {chan:?} has no matching recv"));
+            let at = ex.pc[consumer];
+            let list = &mut prog.per_device[consumer];
+            let rpos = (at..list.len())
+                .find(|&i| matches!(list[i].step(), Step::Recv(c) if c == chan))
+                .expect("unposted recv must sit at or after the consumer's pc");
+            let r = list.remove(rpos);
+            list.insert(at, r);
+            repaired = true;
+            repairs += 1;
+        }
+        if !repaired {
+            let (d, at) = ex.first_blocked(prog);
+            panic!(
+                "unrepairable deadlock: no blocked send (dev {d} pc {at}: {:?}) — schedule invalid?",
+                prog.per_device[d][at]
+            );
         }
     }
-}
-
-fn consumer_device(prog: &Program, key: (u32, u32, u32, OpKind)) -> usize {
-    for (d, list) in prog.per_device.iter().enumerate() {
-        if list.iter().any(|i| i.is_recv() && i.channel() == Some(key)) {
-            return d;
-        }
-    }
-    panic!("no consumer for channel {key:?}");
-}
-
-/// Where to re-insert the hoisted recv: the consumer's current stuck
-/// position (its pc in the abstract execution) — guaranteed ≤ rpos.
-fn blocking_point(prog: &Program, consumer: usize, rpos: usize) -> usize {
-    stuck_pcs(prog)[consumer].min(rpos)
 }
 
 #[cfg(test)]
@@ -288,6 +271,7 @@ mod tests {
     fn lowering_inserts_matched_comm() {
         let sch = one_f_one_b(4, 8);
         let prog = lower(&sch, &sequential(4), LowerOptions::default());
+        prog.validate().unwrap();
         // Every send has exactly one matching recv.
         let mut sends = HashMap::new();
         let mut recvs = HashMap::new();
@@ -311,6 +295,7 @@ mod tests {
             for nmb in [2, 8, 16] {
                 let sch = one_f_one_b(p, nmb);
                 let prog = lower(&sch, &sequential(p), LowerOptions::default());
+                prog.validate().unwrap();
                 check_rendezvous(&prog).unwrap_or_else(|(d, pc)| {
                     panic!("p={p} nmb={nmb}: blocked at dev {d} pc {pc}")
                 });
@@ -323,6 +308,7 @@ mod tests {
         for p in [2, 4] {
             let sch = zb_h1(p, 8);
             let prog = lower(&sch, &sequential(p), LowerOptions::default());
+            prog.validate().unwrap();
             check_rendezvous(&prog).unwrap();
         }
     }
@@ -363,8 +349,10 @@ mod tests {
         d0.push(r);
         // dev0 now waits (W_B) before posting R_B ⇒ blocked forever.
         assert!(check_rendezvous(&broken).is_err());
-        repair_deadlocks(&mut broken);
+        let repairs = repair_deadlocks(&mut broken);
+        assert!(repairs >= 1);
         check_rendezvous(&broken).unwrap();
+        broken.validate().unwrap();
     }
 
     #[test]
@@ -390,6 +378,27 @@ mod tests {
                 .sum()
         };
         assert!(pos_sum(&hoisted) <= pos_sum(&plain));
+        hoisted.validate().unwrap();
+        plain.validate().unwrap();
         check_rendezvous(&hoisted).unwrap();
+    }
+
+    #[test]
+    fn unbounded_hoist_posts_all_recvs_first() {
+        let mut sch = one_f_one_b(4, 8);
+        sch.overlap_aware = true;
+        let prog = lower(&sch, &sequential(4), LowerOptions::default());
+        prog.validate().unwrap();
+        for list in &prog.per_device {
+            let n_recvs = list.iter().filter(|i| i.is_recv()).count();
+            assert!(
+                list[..n_recvs].iter().all(|i| i.is_recv()),
+                "unbounded hoist must move every recv to the list head"
+            );
+        }
+        // With every recv pre-posted no send can block: repair is a
+        // no-op on fully hoisted programs.
+        let mut clone = prog.clone();
+        assert_eq!(repair_deadlocks(&mut clone), 0);
     }
 }

@@ -7,19 +7,33 @@
 //!    compute that produces one;
 //! 2. deadlock repair (Fig 7 Step 3): under rendezvous send semantics
 //!    (NCCL-style), mismatched send/recv orderings between device pairs
-//!    are detected and repaired by hoisting the blocking `Recv`;
+//!    are detected and repaired by hoisting the blocking `Recv` — one
+//!    resumable abstract execution repairs every deadlock in a single
+//!    forward pass (see [`lower::repair_deadlocks`]);
 //! 3. overlap hoisting (Fig 7 Step 4): each `Recv` is moved to the
 //!    earliest dependency-free position so the transfer proceeds under
 //!    compute.
 //!
 //! The same [`Program`] runs on the discrete-event [`crate::cluster`]
-//! SimCluster (virtual time, rendezvous semantics — validates the
-//! passes) and the RealCluster (OS threads + channels + PJRT
-//! executables — the actual trainer).
+//! SimCluster (virtual time; a *differential twin* of the performance
+//! model — see `cluster::sim`) and the RealCluster (OS threads +
+//! channels + PJRT executables — the actual trainer).
+//!
+//! [`Program::validate`] is the executor-level counterpart of
+//! `Schedule::validate`: structural well-formedness of the instruction
+//! lists (channel 1:1 matching, recv-before-wait, in-range stage refs),
+//! asserted after every pass in the executor test suites.
 
 pub mod lower;
 
+use std::collections::HashMap;
+
 use crate::schedule::OpKind;
+
+/// Logical channel id shared by a matched `Send`/`Recv`/`Wait` triple:
+/// `(micro-batch, producer stage, consumer stage, kind)`.  The same key
+/// tags RealCluster messages (`cluster::real::ChannelKey`).
+pub type Chan = (u32, u32, u32, OpKind);
 
 /// Pipeline execution instructions (paper Table 4).
 ///
@@ -45,19 +59,48 @@ pub enum Instr {
     WaitB { mb: u32, stage: u32 },
 }
 
+/// Behavioural classification of an [`Instr`] with its channel resolved
+/// — **complete**, so rendezvous logic (the abstract repair executor
+/// and the timed SimCluster) matches on four arms with no
+/// `unreachable!`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    Compute { op: OpKind, mb: u32, stage: u32 },
+    Send(Chan),
+    Recv(Chan),
+    Wait(Chan),
+}
+
 impl Instr {
-    /// Channel key (mb, producer stage, consumer stage, kind) shared by
-    /// a matched send/recv pair.
-    pub fn channel(&self) -> Option<(u32, u32, u32, OpKind)> {
+    /// Classify the instruction, resolving `Wait`s to the channel they
+    /// block on (a `WaitF` at stage `s` waits for `s-1 → s`; requires
+    /// in-range stage refs — guaranteed by [`Program::validate`]).
+    pub fn step(&self) -> Step {
         match *self {
-            Instr::SendF { mb, stage, to_stage } => Some((mb, stage, to_stage, OpKind::F)),
+            Instr::Compute { op, mb, stage } => Step::Compute { op, mb, stage },
+            Instr::SendF { mb, stage, to_stage } => {
+                Step::Send((mb, stage, to_stage, OpKind::F))
+            }
+            Instr::SendB { mb, stage, to_stage } => {
+                Step::Send((mb, stage, to_stage, OpKind::B))
+            }
             Instr::RecvF { mb, stage, from_stage } => {
-                Some((mb, from_stage, stage, OpKind::F))
+                Step::Recv((mb, from_stage, stage, OpKind::F))
             }
-            Instr::SendB { mb, stage, to_stage } => Some((mb, stage, to_stage, OpKind::B)),
             Instr::RecvB { mb, stage, from_stage } => {
-                Some((mb, from_stage, stage, OpKind::B))
+                Step::Recv((mb, from_stage, stage, OpKind::B))
             }
+            Instr::WaitF { mb, stage } => Step::Wait((mb, stage - 1, stage, OpKind::F)),
+            Instr::WaitB { mb, stage } => Step::Wait((mb, stage + 1, stage, OpKind::B)),
+        }
+    }
+
+    /// Channel key (mb, producer stage, consumer stage, kind) shared by
+    /// a matched send/recv pair (`None` for computes and waits — waits
+    /// resolve their channel via [`Instr::step`]).
+    pub fn channel(&self) -> Option<Chan> {
+        match self.step() {
+            Step::Send(c) | Step::Recv(c) => Some(c),
             _ => None,
         }
     }
@@ -78,6 +121,10 @@ pub struct Program {
     pub nmb: usize,
     pub n_stages: usize,
     pub split_bw: bool,
+    /// Comm-overlap assumption the program was scheduled under (copied
+    /// from `Schedule::overlap_aware`); the matched-assumption timed
+    /// run prices waits with the same expression shape.
+    pub overlap_aware: bool,
     pub per_device: Vec<Vec<Instr>>,
 }
 
@@ -94,6 +141,172 @@ impl Program {
             .filter(|i| i.is_send() || i.is_recv())
             .count()
     }
+
+    /// Structural well-formedness (executor-level counterpart of
+    /// `Schedule::validate`):
+    ///
+    /// 1. every stage/mb reference is in range, channel endpoints are
+    ///    stage-adjacent, and `W` computes appear iff `split_bw`;
+    /// 2. each stage's computes live on a single device (the inferred
+    ///    stage→device map);
+    /// 3. send/recv channels are 1:1, sends on the producer's device,
+    ///    recvs on the consumer's;
+    /// 4. every `Wait` has its `Recv` earlier on the same device, and
+    ///    every cross-device compute input has a `Wait` before the
+    ///    consuming compute.
+    ///
+    /// Asserted after lowering, hoisting and repair in the executor
+    /// test suites — all three passes must preserve it.
+    pub fn validate(&self) -> Result<(), String> {
+        let s_n = self.n_stages as u32;
+        let nmb = self.nmb as u32;
+        // Pass 1: range checks + per-instruction classification.
+        let mut sends: HashMap<Chan, (usize, usize)> = HashMap::new(); // dev, count
+        let mut recvs: HashMap<Chan, (usize, usize, usize)> = HashMap::new(); // dev, idx, count
+        let mut device_of: Vec<Option<usize>> = vec![None; self.n_stages];
+        for (d, list) in self.per_device.iter().enumerate() {
+            for (i, ins) in list.iter().enumerate() {
+                let (mb, stage) = match *ins {
+                    Instr::Compute { mb, stage, .. }
+                    | Instr::SendF { mb, stage, .. }
+                    | Instr::SendB { mb, stage, .. }
+                    | Instr::RecvF { mb, stage, .. }
+                    | Instr::RecvB { mb, stage, .. }
+                    | Instr::WaitF { mb, stage }
+                    | Instr::WaitB { mb, stage } => (mb, stage),
+                };
+                if stage >= s_n || mb >= nmb {
+                    return Err(format!("dev {d}[{i}]: {ins:?} out of range"));
+                }
+                match *ins {
+                    Instr::Compute { op: OpKind::W, .. } if !self.split_bw => {
+                        return Err(format!("dev {d}[{i}]: W compute in fused program"));
+                    }
+                    Instr::Compute { stage, .. } => {
+                        let s = stage as usize;
+                        match device_of[s] {
+                            None => device_of[s] = Some(d),
+                            Some(prev) if prev != d => {
+                                return Err(format!(
+                                    "stage {s} computes on devices {prev} and {d}"
+                                ));
+                            }
+                            _ => {}
+                        }
+                    }
+                    Instr::SendF { stage, to_stage, .. }
+                        if to_stage != stage + 1 || to_stage >= s_n =>
+                    {
+                        return Err(format!("dev {d}[{i}]: non-adjacent SendF"));
+                    }
+                    Instr::SendB { stage, to_stage, .. }
+                        if stage == 0 || to_stage != stage - 1 =>
+                    {
+                        return Err(format!("dev {d}[{i}]: non-adjacent SendB"));
+                    }
+                    Instr::RecvF { stage, from_stage, .. }
+                        if stage == 0 || from_stage != stage - 1 =>
+                    {
+                        return Err(format!("dev {d}[{i}]: non-adjacent RecvF"));
+                    }
+                    Instr::RecvB { stage, from_stage, .. }
+                        if from_stage != stage + 1 || from_stage >= s_n =>
+                    {
+                        return Err(format!("dev {d}[{i}]: non-adjacent RecvB"));
+                    }
+                    Instr::WaitF { stage, .. } if stage == 0 => {
+                        return Err(format!("dev {d}[{i}]: WaitF at stage 0"));
+                    }
+                    Instr::WaitB { stage, .. } if stage + 1 >= s_n => {
+                        return Err(format!("dev {d}[{i}]: WaitB at last stage"));
+                    }
+                    _ => {}
+                }
+                // Range-checked instructions classify safely now.
+                match ins.step() {
+                    Step::Send(c) => {
+                        let e = sends.entry(c).or_insert((d, 0));
+                        e.1 += 1;
+                    }
+                    Step::Recv(c) => {
+                        let e = recvs.entry(c).or_insert((d, i, 0));
+                        e.2 += 1;
+                    }
+                    Step::Compute { .. } | Step::Wait(_) => {}
+                }
+            }
+        }
+        // Pass 2: channel matching + wait/compute ordering.
+        for (c, &(_, n)) in &sends {
+            if n != 1 {
+                return Err(format!("channel {c:?}: {n} sends"));
+            }
+            match recvs.get(c) {
+                None => return Err(format!("send {c:?} has no matching recv")),
+                Some(&(_, _, n)) if n != 1 => {
+                    return Err(format!("channel {c:?}: {n} recvs"));
+                }
+                Some(&(rd, _, _)) => {
+                    let consumer = c.2 as usize;
+                    if device_of[consumer].is_some_and(|cd| cd != rd) {
+                        return Err(format!("recv {c:?} not on the consumer's device"));
+                    }
+                }
+            }
+            let producer = c.1 as usize;
+            let sd = sends[c].0;
+            if device_of[producer].is_some_and(|pd| pd != sd) {
+                return Err(format!("send {c:?} not on the producer's device"));
+            }
+        }
+        for c in recvs.keys() {
+            if !sends.contains_key(c) {
+                return Err(format!("recv {c:?} has no matching send"));
+            }
+        }
+        for (d, list) in self.per_device.iter().enumerate() {
+            for (i, ins) in list.iter().enumerate() {
+                match ins.step() {
+                    Step::Wait(c) => match recvs.get(&c) {
+                        None => return Err(format!("dev {d}[{i}]: wait {c:?} has no recv")),
+                        Some(&(rd, ri, _)) if rd != d || ri >= i => {
+                            return Err(format!(
+                                "dev {d}[{i}]: recv for {c:?} does not precede its wait"
+                            ));
+                        }
+                        _ => {}
+                    },
+                    Step::Compute { op, mb, stage } => {
+                        // Cross-device inputs must be waited for.
+                        let s = stage as usize;
+                        let needed = match op {
+                            OpKind::F if s > 0 => {
+                                (device_of[s - 1] != device_of[s])
+                                    .then_some((mb, stage - 1, stage, OpKind::F))
+                            }
+                            OpKind::B if s + 1 < self.n_stages => {
+                                (device_of[s + 1] != device_of[s])
+                                    .then_some((mb, stage + 1, stage, OpKind::B))
+                            }
+                            _ => None,
+                        };
+                        if let Some(c) = needed {
+                            let waited = list[..i]
+                                .iter()
+                                .any(|w| matches!(w.step(), Step::Wait(wc) if wc == c));
+                            if !waited {
+                                return Err(format!(
+                                    "dev {d}[{i}]: {ins:?} consumes remote input without a wait"
+                                ));
+                            }
+                        }
+                    }
+                    Step::Send(_) | Step::Recv(_) => {}
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -109,5 +322,14 @@ mod tests {
         let rb = Instr::RecvB { mb: 0, stage: 2, from_stage: 3 };
         assert_eq!(sb.channel(), rb.channel());
         assert_ne!(s.channel(), sb.channel());
+    }
+
+    #[test]
+    fn waits_resolve_their_channel() {
+        let w = Instr::WaitF { mb: 1, stage: 3 };
+        assert_eq!(w.step(), Step::Wait((1, 2, 3, OpKind::F)));
+        assert_eq!(w.channel(), None);
+        let w = Instr::WaitB { mb: 0, stage: 2 };
+        assert_eq!(w.step(), Step::Wait((0, 3, 2, OpKind::B)));
     }
 }

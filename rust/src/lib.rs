@@ -27,8 +27,12 @@
 //!   search over the fused evaluator, accelerated by analytic bound
 //!   pruning, score memoization and a persistent evaluation pool
 //!   (DESIGN.md §4);
-//! - [`executor`]: §4.4 instruction lowering + comm passes;
-//! - [`cluster`]: simulated + real (threads & PJRT) clusters;
+//! - [`executor`]: §4.4 instruction lowering + comm passes —
+//!   single-pass resumable deadlock repair, program well-formedness
+//!   validation (DESIGN.md §6);
+//! - [`cluster`]: simulated + real (threads & PJRT) clusters — the
+//!   timed SimCluster is a differential twin of [`perfmodel`]
+//!   (bitwise in matched-assumption mode, DESIGN.md §6);
 //! - [`runtime`]: PJRT artifact loading/execution;
 //! - [`trainer`]: end-to-end pipeline training;
 //! - [`figures`]: one harness per paper table/figure.

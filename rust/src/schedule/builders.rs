@@ -81,11 +81,13 @@ pub fn interleaved_1f1b(p: usize, v: usize, nmb: usize) -> Schedule {
     };
     let per_device = (0..p)
         .map(|rank| {
-            let mut warmup = (p - rank - 1) * 2 + (v - 1) * p;
-            if nmb == p {
-                warmup = total;
-            }
-            let warmup = warmup.min(total);
+            // Megatron-LM forces all-warmup when nmb == p, papering
+            // over its warmup depth; the general formula is valid and
+            // deadlock-free for every nmb % p == 0 (pinned by
+            // `builders_valid_and_deadlock_free_on_grid` over a wide
+            // (p, v, nmb) grid) and stashes strictly fewer in-flight
+            // activations, so the special case is gone.
+            let warmup = ((p - rank - 1) * 2 + (v - 1) * p).min(total);
             let mut sched = Vec::with_capacity(2 * total);
             for k in 0..warmup {
                 sched.push(f_slot(rank, k));
@@ -165,7 +167,29 @@ pub fn zb_h1(p: usize, nmb: usize) -> Schedule {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::LayerCost;
+    use crate::partition::uniform;
+    use crate::perfmodel::simulate;
     use crate::placement::{interleaved, sequential};
+    use crate::profile::ProfiledData;
+
+    /// One synthetic layer per stage — builder grids test *structure*
+    /// (validity, deadlock-freedom), not magnitudes.
+    fn unit_profile(n_layers: usize) -> ProfiledData {
+        let layers = vec![
+            LayerCost {
+                f: 1.0,
+                b: 2.0,
+                w: 1.0,
+                mem_act: 1.0,
+                mem_act_w: 0.5,
+                comm_bytes: 0.5,
+                ..LayerCost::default()
+            };
+            n_layers
+        ];
+        ProfiledData::from_measured(layers, 1e-3, 1.0, f64::INFINITY)
+    }
 
     #[test]
     fn gpipe_valid() {
@@ -206,6 +230,84 @@ mod tests {
             sch.validate(&interleaved(p, v))
                 .unwrap_or_else(|e| panic!("p={p} v={v} nmb={nmb}: {e}"));
         }
+    }
+
+    #[test]
+    fn builders_valid_and_deadlock_free_on_grid() {
+        // Every fixed builder, over a wide (p, nmb) grid: structurally
+        // valid AND executable (the perf model's event-driven run is
+        // the deadlock oracle — validate() only checks per-device
+        // order, not cross-device feasibility).
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for nmb in [1usize, 2, 3, 4, 7, 8, 16] {
+                let prof = unit_profile(p);
+                let part = uniform(p, p);
+                let pl = sequential(p);
+                for (name, sch) in [
+                    ("gpipe", gpipe(p, nmb)),
+                    ("1f1b", one_f_one_b(p, nmb)),
+                    ("zb-h1", zb_h1(p, nmb)),
+                ] {
+                    sch.validate(&pl)
+                        .unwrap_or_else(|e| panic!("{name} p={p} nmb={nmb}: {e}"));
+                    simulate(&prof, &part, &pl, &sch, false).unwrap_or_else(|e| {
+                        panic!("{name} p={p} nmb={nmb}: deadlock: {e}")
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_general_warmup_valid_and_deadlock_free_on_grid() {
+        // The general warmup depth — no `nmb == p` special case — over
+        // every (p, v, nmb % p == 0) combination in the grid.
+        for p in [1usize, 2, 3, 4, 6, 8] {
+            for v in 1usize..=4 {
+                for mult in 1usize..=3 {
+                    let nmb = p * mult;
+                    let sch = interleaved_1f1b(p, v, nmb);
+                    let pl = interleaved(p, v);
+                    sch.validate(&pl)
+                        .unwrap_or_else(|e| panic!("p={p} v={v} nmb={nmb}: {e}"));
+                    let prof = unit_profile(p * v);
+                    let part = uniform(p * v, p * v);
+                    simulate(&prof, &part, &pl, &sch, false).unwrap_or_else(|e| {
+                        panic!("p={p} v={v} nmb={nmb}: deadlock: {e}")
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_nmb_eq_p_interleaves_instead_of_all_warmup() {
+        // The removed Megatron special case degraded nmb == p to a
+        // GPipe-like all-warmup run; the general depth starts B's in
+        // the steady state on late ranks and stashes less.
+        let (p, v, nmb) = (4usize, 2usize, 4usize);
+        let sch = interleaved_1f1b(p, v, nmb);
+        // Rank p-1's warmup is (v-1)·p = 4 of 8 virtual mbs: after the
+        // fifth F (the first steady-state one) comes its first B —
+        // index 5, where all-warmup would still be forwarding.
+        let first_b = sch.per_device[p - 1]
+            .iter()
+            .position(|s| s.op == OpKind::B)
+            .unwrap();
+        assert_eq!(first_b, 5);
+        // Under all-warmup every device stashes all nmb·v activations
+        // (8.0 with unit act); the last rank must now peak below that.
+        let prof = unit_profile(p * v);
+        let part = uniform(p * v, p * v);
+        let pl = interleaved(p, v);
+        let r = simulate(&prof, &part, &pl, &sch, false).unwrap();
+        assert!(
+            r.m_d[p - 1] < (nmb * v) as f64,
+            "rank {} stash {} not below all-warmup {}",
+            p - 1,
+            r.m_d[p - 1],
+            nmb * v
+        );
     }
 
     #[test]

@@ -226,6 +226,7 @@ pub fn train(
         .validate(&pipeline.placement)
         .map_err(|e| anyhow!("invalid schedule: {e}"))?;
     let prog = lower(&pipeline.schedule, &pipeline.placement, LowerOptions::default());
+    prog.validate().map_err(|e| anyhow!("malformed program: {e}"))?;
     crate::executor::lower::check_rendezvous(&prog)
         .map_err(|(d, pc)| anyhow!("program deadlocks at dev {d} pc {pc}"))?;
 

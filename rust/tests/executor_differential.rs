@@ -1,0 +1,301 @@
+//! Differential tests for the executor layer: the timed SimCluster is
+//! a *differential twin* of the performance model.
+//!
+//! - **matched-assumption mode** (`SimOptions::matched()`): lowered-
+//!   and-timed programs must reproduce `perfmodel::simulate` **bitwise**
+//!   (makespan, per-device finish and busy times) on randomized
+//!   pipelines — every placement shape, both backward modes, both
+//!   overlap modes, any hoist window;
+//! - **rendezvous mode** (link contention + post-gated transfers) must
+//!   stay within 2% of the model on overlap-aware pipelines whose
+//!   transfers fit under compute (the paper's regime — contention
+//!   physics the model does not price is bounded by construction);
+//! - the deadlock-repair pass fixes mass-displaced programs in a single
+//!   resumable forward pass (wall-clock guard at P=16, nmb=64);
+//! - `Program::validate` holds after lowering, hoisting and repair, and
+//!   rejects malformed programs.
+
+mod common;
+
+use std::time::Instant;
+
+use adaptis::cluster::sim::{run_timed, run_timed_with, SimOptions};
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::executor::lower::{check_rendezvous, lower, repair_deadlocks, LowerOptions};
+use adaptis::executor::{Instr, Program};
+use adaptis::generator::{generate, EvalEngine, GenOptions};
+use adaptis::model::build_model;
+use adaptis::partition::{uniform, Partition};
+use adaptis::placement::{interleaved, sequential, wave, Placement};
+use adaptis::perfmodel::simulate;
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::greedy::{greedy_schedule, SchedKnobs};
+use adaptis::schedule::Schedule;
+use adaptis::util::rng::Rng;
+use common::{random_knobs, random_partition, random_placement, random_profile};
+
+/// Lower under `opts`, validate, and assert the matched-assumption
+/// timed run reproduces the perf model bitwise.
+fn assert_matched_bitwise(
+    prof: &ProfiledData,
+    part: &Partition,
+    plac: &Placement,
+    sch: &Schedule,
+    opts: LowerOptions,
+    what: &str,
+) -> Program {
+    let prog = lower(sch, plac, opts);
+    prog.validate().unwrap_or_else(|e| panic!("{what}: invalid program: {e}"));
+    let pm = simulate(prof, part, plac, sch, false)
+        .unwrap_or_else(|e| panic!("{what}: perfmodel deadlock: {e}"));
+    let run = run_timed_with(prof, part, &prog, SimOptions::matched())
+        .unwrap_or_else(|e| panic!("{what}: timed deadlock: {e}"));
+    assert_eq!(run.makespan, pm.total, "{what}: makespan");
+    assert_eq!(run.t_d, pm.t_d, "{what}: t_d");
+    assert_eq!(run.busy_d, pm.busy_d, "{what}: busy_d");
+    prog
+}
+
+#[test]
+fn matched_mode_is_bitwise_equal_on_random_pipelines() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let (prof, par) = random_profile(&mut rng);
+        let plac = random_placement(&mut rng, par.p, prof.n_layers());
+        if plac.n_stages() > prof.n_layers() {
+            continue;
+        }
+        let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let knobs = random_knobs(&mut rng);
+        let sch = greedy_schedule(&prof, &part, &plac, par.nmb, knobs);
+        for window in [0usize, 3, usize::MAX] {
+            assert_matched_bitwise(
+                &prof,
+                &part,
+                &plac,
+                &sch,
+                LowerOptions { repair_deadlocks: true, hoist_window: window },
+                &format!("seed {seed} window {window}"),
+            );
+        }
+    }
+}
+
+/// Full-size Table 5 profiles (P2P transfers well under stage compute,
+/// the paper's testbed regime) with p ≤ 4, v ≤ 3 — the scope on which
+/// the rendezvous run is certified within 2% of the model.
+fn scoped_profile(rng: &mut Rng, p: usize, nmb: usize) -> ProfiledData {
+    let fams = [Family::Gemma, Family::DeepSeek, Family::NemotronH, Family::Llama2];
+    let fam = fams[rng.below(fams.len())];
+    let cfg = ModelCfg::table5(fam, Size::Small);
+    let t = if fam == Family::NemotronH { 1 } else { 2 };
+    let par = ParallelCfg::new(p, t, nmb, 1, 4096);
+    ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par)
+}
+
+#[test]
+fn rendezvous_mode_within_2pct_on_overlap_aware_pipelines() {
+    for seed in 100..160u64 {
+        let mut rng = Rng::new(seed);
+        let p = [2, 3, 4][rng.below(3)];
+        let v = 1 + rng.below(3);
+        let nmb = [1, 2, 4, 7, 8, 16][rng.below(6)];
+        let prof = scoped_profile(&mut rng, p, nmb);
+        let plac = match rng.below(3) {
+            0 => sequential(p),
+            1 => interleaved(p, v),
+            _ => wave(p, v),
+        };
+        let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let knobs = SchedKnobs {
+            split_bw: rng.below(2) == 0,
+            w_fill: rng.below(2) == 0,
+            mem_cap_factor: 1.0,
+            overlap_aware: true,
+        };
+        let sch = greedy_schedule(&prof, &part, &plac, nmb, knobs);
+        let prog = lower(&sch, &plac, LowerOptions::default());
+        prog.validate().unwrap();
+        let pm = simulate(&prof, &part, &plac, &sch, false).unwrap();
+        let matched =
+            run_timed_with(&prof, &part, &prog, SimOptions::matched()).unwrap();
+        let rv = run_timed(&prof, &part, &prog, false).unwrap();
+        // Contention can only delay: the rendezvous run dominates the
+        // matched twin…
+        assert!(
+            rv.makespan >= matched.makespan - 1e-12,
+            "seed {seed}: rendezvous {} < matched {}",
+            rv.makespan,
+            matched.makespan
+        );
+        // …and by at most 2% on this scope.
+        let rel = (rv.makespan - pm.total).abs() / pm.total;
+        assert!(
+            rel <= 0.02,
+            "seed {seed}: rendezvous {} vs perfmodel {} (rel {rel:.4})",
+            rv.makespan,
+            pm.total
+        );
+    }
+}
+
+#[test]
+fn generator_emitted_pipelines_match_bitwise_and_within_2pct() {
+    for (fam, engine) in [
+        (Family::Gemma, EvalEngine::Fast),
+        (Family::Gemma, EvalEngine::Reference),
+        (Family::DeepSeek, EvalEngine::Fast),
+        (Family::DeepSeek, EvalEngine::Reference),
+    ] {
+        let cfg = ModelCfg::table5(fam, Size::Small);
+        let par = ParallelCfg::new(4, 2, 8, 1, 4096);
+        let prof =
+            ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let mut opts = GenOptions::new(par.p, par.nmb);
+        opts.max_iters = 6;
+        opts.engine = engine;
+        let g = generate(&prof, &opts);
+        let pl = &g.pipeline;
+        let what = format!("{fam:?}/{engine:?}");
+        let prog = assert_matched_bitwise(
+            &prof,
+            &pl.partition,
+            &pl.placement,
+            &pl.schedule,
+            LowerOptions::default(),
+            &what,
+        );
+        if pl.schedule.overlap_aware {
+            let pm =
+                simulate(&prof, &pl.partition, &pl.placement, &pl.schedule, false).unwrap();
+            let rv = run_timed(&prof, &pl.partition, &prog, false).unwrap();
+            let rel = (rv.makespan - pm.total).abs() / pm.total;
+            assert!(
+                rel <= 0.02,
+                "{what}: rendezvous {} vs perfmodel {} (rel {rel:.4})",
+                rv.makespan,
+                pm.total
+            );
+        }
+    }
+}
+
+#[test]
+fn lowering_passes_preserve_wellformedness() {
+    for seed in 200..230u64 {
+        let mut rng = Rng::new(seed);
+        let (prof, par) = random_profile(&mut rng);
+        let plac = random_placement(&mut rng, par.p, prof.n_layers());
+        if plac.n_stages() > prof.n_layers() {
+            continue;
+        }
+        let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
+        let sch = greedy_schedule(&prof, &part, &plac, par.nmb, random_knobs(&mut rng));
+        for repair in [false, true] {
+            for window in [0usize, 2, 16, usize::MAX] {
+                let prog = lower(
+                    &sch,
+                    &plac,
+                    LowerOptions { repair_deadlocks: repair, hoist_window: window },
+                );
+                prog.validate().unwrap_or_else(|e| {
+                    panic!("seed {seed} repair={repair} window={window}: {e}")
+                });
+            }
+        }
+    }
+}
+
+/// Move every `Recv` to the end of its device's list — the worst-case
+/// send/recv mismatch the repair pass can face.
+fn displace_all_recvs(prog: &mut Program) {
+    for list in &mut prog.per_device {
+        let (recvs, rest): (Vec<Instr>, Vec<Instr>) =
+            list.iter().copied().partition(|i| i.is_recv());
+        *list = rest;
+        list.extend(recvs);
+    }
+}
+
+#[test]
+fn repair_fixes_mass_displaced_large_program_in_one_fast_pass() {
+    // Satellite guard: P=16, nmb=64 — the former restart-per-repair
+    // structure re-ran three O(total) simulations per hoisted recv
+    // (O(n²–n³) overall); the resumable pass must stay comfortably
+    // inside a CI-friendly wall-clock budget.
+    let cfg = ModelCfg::table5(Family::DeepSeek, Size::Small);
+    let par = ParallelCfg::new(16, 2, 64, 1, 4096);
+    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+    let part = uniform(prof.n_layers(), 16);
+    let plac = sequential(16);
+    let mut sch = adaptis::schedule::builders::zb_h1(16, 64);
+    sch.overlap_aware = true;
+    let mut prog =
+        lower(&sch, &plac, LowerOptions { repair_deadlocks: false, hoist_window: 0 });
+    displace_all_recvs(&mut prog);
+    assert!(check_rendezvous(&prog).is_err(), "displacement must deadlock");
+    let t0 = Instant::now();
+    let repairs = repair_deadlocks(&mut prog);
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert!(repairs > 500, "expected a mass repair, got {repairs}");
+    assert!(
+        elapsed < 5.0,
+        "repair pass took {elapsed:.2}s for {} instrs ({repairs} repairs)",
+        prog.total_instrs()
+    );
+    check_rendezvous(&prog).unwrap();
+    prog.validate().unwrap();
+    run_timed(&prof, &part, &prog, false).unwrap();
+}
+
+#[test]
+fn program_validate_catches_malformed_programs() {
+    let sch = adaptis::schedule::builders::one_f_one_b(4, 4);
+    let plac = sequential(4);
+    let good = lower(&sch, &plac, LowerOptions::default());
+    good.validate().unwrap();
+
+    // Recv displaced after its wait.
+    let mut bad = good.clone();
+    let list = &mut bad.per_device[1];
+    let rpos = list.iter().position(|i| i.is_recv()).unwrap();
+    let r = list.remove(rpos);
+    list.push(r);
+    assert!(bad.validate().is_err(), "recv after wait must be rejected");
+
+    // Missing recv (channel no longer 1:1).
+    let mut bad = good.clone();
+    let list = &mut bad.per_device[1];
+    let rpos = list.iter().position(|i| i.is_recv()).unwrap();
+    list.remove(rpos);
+    assert!(bad.validate().is_err(), "dangling send must be rejected");
+
+    // Duplicated send.
+    let mut bad = good.clone();
+    let s = *bad.per_device[0].iter().find(|i| i.is_send()).unwrap();
+    bad.per_device[0].push(s);
+    assert!(bad.validate().is_err(), "duplicate send must be rejected");
+
+    // Underflowing stage ref.
+    let mut bad = good.clone();
+    bad.per_device[0].push(Instr::WaitF { mb: 0, stage: 0 });
+    assert!(bad.validate().is_err(), "WaitF at stage 0 must be rejected");
+
+    // Out-of-range microbatch.
+    let mut bad = good.clone();
+    bad.per_device[0].push(Instr::Compute {
+        op: adaptis::schedule::OpKind::F,
+        mb: 99,
+        stage: 0,
+    });
+    assert!(bad.validate().is_err(), "mb out of range must be rejected");
+
+    // W compute in a fused-backward program.
+    let mut bad = good.clone();
+    bad.per_device[0].push(Instr::Compute {
+        op: adaptis::schedule::OpKind::W,
+        mb: 0,
+        stage: 0,
+    });
+    assert!(bad.validate().is_err(), "W in fused program must be rejected");
+}

@@ -107,6 +107,8 @@ fn lowered_programs_pass_rendezvous_after_repair() {
         let part = random_partition(&mut rng, prof.n_layers(), plac.n_stages());
         let sch = greedy_schedule(&prof, &part, &plac, par.nmb, random_knobs(&mut rng));
         let prog = lower(&sch, &plac, LowerOptions::default());
+        prog.validate()
+            .unwrap_or_else(|e| panic!("seed {seed}: malformed program: {e}"));
         check_rendezvous(&prog)
             .unwrap_or_else(|(d, pc)| panic!("seed {seed}: deadlock dev {d} pc {pc}"));
         // Comm instruction count: one send+recv+wait triple per

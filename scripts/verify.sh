@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus bench smoke runs (perfmodel + generator).
+# Tier-1 verification plus bench smoke runs (perfmodel + generator +
+# executor).
 #   scripts/verify.sh          build + test + bench smoke
 #   scripts/verify.sh --fast   build + test only
 set -euo pipefail
@@ -23,6 +24,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   cargo bench --bench perfmodel -- --smoke
   echo "== generator bench smoke (writes rust/BENCH_generator.json) =="
   cargo bench --bench generator -- --smoke
+  echo "== executor bench smoke (writes rust/BENCH_executor.json) =="
+  cargo bench --bench executor -- --smoke
 fi
 
 echo "verify: OK"
