@@ -136,6 +136,10 @@ fn main() {
             ("rendezvous_instrs_per_s", num(instrs / t_rv.median)),
             ("matched_gap_pct", num(matched_gap_pct)),
             ("rendezvous_gap_pct", num(rendezvous_gap_pct)),
+            ("lower_repair_stats", t_lower.json()),
+            ("check_stats", t_check.json()),
+            ("matched_stats", t_matched.json()),
+            ("rendezvous_stats", t_rv.json()),
         ]));
     }
 

@@ -14,8 +14,15 @@
 //!   the retained schedule-then-resimulate path — the per-eval speedup
 //!   of the evaluation engine itself.
 //!
+//! A third axis, the `nmb sweep`, scales the micro-batch count at
+//! fixed P and compares the default search against `no_collapse()` —
+//! the steady-state-collapse payoff end-to-end (same pipeline, same
+//! log, asserted; `evals_collapsed` counts how many evaluations the
+//! cycle replay actually accelerated).
+//!
 //! Emits machine-readable `BENCH_generator.json` (evals/s, elision
-//! counters, speedups per config) next to `BENCH_perfmodel.json`, same
+//! counters, collapse counters, speedups per config, distribution
+//! blocks with iters/min/max) next to `BENCH_perfmodel.json`, same
 //! schema conventions.  `--smoke` shrinks the sweep for CI.
 
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
@@ -139,6 +146,67 @@ fn main() {
             ("reference_cands_per_s", num(candidates / t_ref.median)),
             ("speedup_vs_elision_free", num(t_plain.median / t_accel.median)),
             ("speedup_vs_reference", num(t_ref.median / t_accel.median)),
+            ("evals_collapsed", num(accel.evals_collapsed as f64)),
+            ("accel_stats", t_accel.json()),
+            ("plain_stats", t_plain.json()),
+            ("reference_stats", t_ref.json()),
+        ]));
+    }
+
+    // ---- steady-state collapse: nmb sweep at fixed P -------------------
+    println!("== pipeline generation nmb sweep (steady-state collapse) ==");
+    let sweep_p = if smoke { 4 } else { 8 };
+    let sweep_nmbs: &[usize] = if smoke { &[32] } else { &[32, 128, 512] };
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for &nmb in sweep_nmbs {
+        let cfg = ModelCfg::table5(Family::NemotronH, Size::Small);
+        let par = ParallelCfg::new(sweep_p, 2, nmb, 1, 4096);
+        let prof =
+            ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let mut opts = GenOptions::new(sweep_p, nmb);
+        opts.max_iters = 16;
+        let flat_opts = opts.clone().no_collapse();
+
+        // Collapse must not steer the search: same pipeline, same log.
+        let coll = generate(&prof, &opts);
+        let flat = generate(&prof, &flat_opts);
+        assert_eq!(coll.report.total, flat.report.total, "collapse must not steer");
+        assert_eq!(
+            coll.pipeline.partition, flat.pipeline.partition,
+            "collapse must not steer"
+        );
+        assert_eq!(coll.log.len(), flat.log.len(), "collapse must not steer");
+        assert_eq!(coll.evals, flat.evals, "collapse elides no evaluations");
+        assert_eq!(flat.evals_collapsed, 0, "no_collapse must not collapse");
+
+        let label = format!("generate[collapse]    P={sweep_p} nmb={nmb}");
+        let t_coll = bench(&label, 1, 0.0, || {
+            let g = generate(&prof, &opts);
+            std::hint::black_box((g.evals_collapsed, g.report.total));
+        });
+        let label = format!("generate[no-collapse] P={sweep_p} nmb={nmb}");
+        let t_flat = bench(&label, 1, 0.0, || {
+            let g = generate(&prof, &flat_opts);
+            std::hint::black_box((g.evals, g.report.total));
+        });
+        println!(
+            "      {} of {} evals collapsed, end-to-end speedup {:.2}x",
+            coll.evals_collapsed,
+            coll.evals,
+            t_flat.median / t_coll.median
+        );
+        sweep_rows.push(obj(vec![
+            ("p", num(sweep_p as f64)),
+            ("nmb", num(nmb as f64)),
+            ("evals", num(coll.evals as f64)),
+            ("evals_collapsed", num(coll.evals_collapsed as f64)),
+            ("evals_pruned", num(coll.evals_pruned as f64)),
+            ("evals_cached", num(coll.evals_cached as f64)),
+            ("collapse_s_per_gen", num(t_coll.median)),
+            ("no_collapse_s_per_gen", num(t_flat.median)),
+            ("speedup_collapsed", num(t_flat.median / t_coll.median)),
+            ("collapse_stats", t_coll.json()),
+            ("no_collapse_stats", t_flat.json()),
         ]));
     }
 
@@ -146,6 +214,7 @@ fn main() {
         ("bench", s("generator")),
         ("smoke", Json::Bool(smoke)),
         ("configs", arr(rows)),
+        ("nmb_sweep", arr(sweep_rows)),
     ]);
     // Anchor to the package dir so the artifact lands at
     // rust/BENCH_generator.json regardless of the invoking CWD.

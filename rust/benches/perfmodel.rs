@@ -15,9 +15,18 @@
 //! tracking overhead (`mem_tracking_overhead_pct`), so regressions in
 //! the memory side of the hot kernel show up in the trajectory.
 //!
+//! The `nmb sweep` section is the steady-state-collapse axis: at fixed
+//! P it scales the micro-batch count and times the engine and the
+//! fused evaluator with collapse off vs on (`simulate_in_opts` /
+//! `fused_score_collapsed`), asserting the reports stay bitwise equal
+//! and emitting `collapse_rounds_detected` and the collapsed-vs-full
+//! speedup per config.
+//!
 //! Emits machine-readable `BENCH_perfmodel.json` (slots/s per config,
-//! medians) so the perf trajectory is tracked from PR 1 onward.
-//! `--smoke` runs the Small config only with a tiny budget (CI).
+//! medians, full distribution blocks with iters/min/max for
+//! `scripts/bench_diff.py`) so the perf trajectory is tracked from
+//! PR 1 onward.  `--smoke` runs the Small config only with a tiny
+//! budget (CI).
 
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
 use adaptis::memory::MemCaps;
@@ -25,13 +34,25 @@ use adaptis::model::build_model;
 use adaptis::partition::uniform;
 use adaptis::placement::sequential;
 use adaptis::perfmodel::{
-    fused_score, simulate_in, simulate_in_with, simulate_reference, SimArena, StageTable,
+    fused_score, fused_score_collapsed, simulate_in, simulate_in_opts, simulate_in_with,
+    simulate_reference, EngineOpts, SimArena, StageTable,
 };
 use adaptis::profile::ProfiledData;
 use adaptis::schedule::builders::{one_f_one_b, zb_h1};
 use adaptis::schedule::greedy::SchedKnobs;
 use adaptis::util::bench::{bench, report_rate};
 use adaptis::util::json::{arr, num, obj, s, Json};
+
+fn table5(size: Size, p: usize, nmb: usize) -> (ProfiledData, StageTable, MemCaps) {
+    let cfg = ModelCfg::table5(Family::NemotronH, size);
+    let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+    let part = uniform(prof.n_layers(), p);
+    let plac = sequential(p);
+    let table = StageTable::build(&prof, &part, &plac);
+    let caps = MemCaps::uniform(p, prof.mem_capacity);
+    (prof, table, caps)
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -46,13 +67,9 @@ fn main() {
     let mut cfg_rows: Vec<Json> = Vec::new();
     let mut fused_rows: Vec<Json> = Vec::new();
     for &(size, p, nmb) in sizes {
-        let cfg = ModelCfg::table5(Family::NemotronH, size);
-        let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
-        let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let (prof, table, caps) = table5(size, p, nmb);
         let part = uniform(prof.n_layers(), p);
         let plac = sequential(p);
-        let table = StageTable::build(&prof, &part, &plac);
-        let caps = MemCaps::uniform(p, prof.mem_capacity);
         let mut arena = SimArena::new();
 
         for (name, sch) in
@@ -102,8 +119,9 @@ fn main() {
                 ("fast_notrack_slots_per_s", num(slots / t_nomem.median)),
                 ("mem_tracking_overhead_pct", num(mem_overhead_pct)),
                 ("speedup", num(speedup)),
-                ("reference_p95_s", num(t_ref.p95)),
-                ("fast_p95_s", num(t_fast.p95)),
+                ("reference_stats", t_ref.json()),
+                ("fast_stats", t_fast.json()),
+                ("fast_notrack_stats", t_nomem.json()),
             ]));
         }
 
@@ -125,6 +143,109 @@ fn main() {
             ("s_per_eval", num(t_fused.median)),
             ("evals_per_s", num(1.0 / t_fused.median)),
             ("slot_ops_per_s", num(ops / t_fused.median)),
+            ("stats", t_fused.json()),
+        ]));
+    }
+
+    // ---- steady-state collapse: nmb sweep at fixed P -------------------
+    println!("== steady-state collapse (nmb sweep) ==");
+    let (sweep_size, sweep_p) = if smoke { (Size::Small, 4) } else { (Size::Medium, 8) };
+    let sweep_nmbs: &[usize] = if smoke { &[32] } else { &[32, 128, 512] };
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for &nmb in sweep_nmbs {
+        let (_prof, table, caps) = table5(sweep_size, sweep_p, nmb);
+        let mut arena = SimArena::new();
+
+        for (name, sch) in
+            [("1f1b", one_f_one_b(sweep_p, nmb)), ("zb-h1", zb_h1(sweep_p, nmb))]
+        {
+            let full_opts = EngineOpts { collapse: false, ..EngineOpts::default() };
+            let (full_rep, _) =
+                simulate_in_opts(&mut arena, &table, &caps, &sch, full_opts);
+            let full_rep = full_rep.unwrap();
+            let (coll_rep, cstats) =
+                simulate_in_opts(&mut arena, &table, &caps, &sch, EngineOpts::default());
+            let coll_rep = coll_rep.unwrap();
+            // The collapsed path must be bit-identical to the full
+            // kernel — including memory peaks — before being timed.
+            assert_eq!(full_rep.total, coll_rep.total, "{name} nmb={nmb}");
+            assert_eq!(full_rep.t_d, coll_rep.t_d, "{name} nmb={nmb}");
+            assert_eq!(full_rep.busy_d, coll_rep.busy_d, "{name} nmb={nmb}");
+            assert_eq!(full_rep.m_d, coll_rep.m_d, "{name} nmb={nmb}");
+            assert_eq!(full_rep.headroom_d, coll_rep.headroom_d, "{name} nmb={nmb}");
+
+            let label = format!("engine/full      P={sweep_p} nmb={nmb} ({name})");
+            let t_full = bench(&label, iters, budget, || {
+                let (r, _) = simulate_in_opts(&mut arena, &table, &caps, &sch, full_opts);
+                std::hint::black_box(r.unwrap().total);
+            });
+            let label = format!("engine/collapsed P={sweep_p} nmb={nmb} ({name})");
+            let t_coll = bench(&label, iters, budget, || {
+                let (r, _) = simulate_in_opts(
+                    &mut arena,
+                    &table,
+                    &caps,
+                    &sch,
+                    EngineOpts::default(),
+                );
+                std::hint::black_box(r.unwrap().total);
+            });
+            println!(
+                "      rounds collapsed {}/{nmb} (sessions {}), speedup {:.2}x",
+                cstats.rounds_replayed,
+                cstats.sessions,
+                t_full.median / t_coll.median
+            );
+            sweep_rows.push(obj(vec![
+                ("kernel", s("engine")),
+                ("schedule", s(name)),
+                ("p", num(sweep_p as f64)),
+                ("nmb", num(nmb as f64)),
+                ("slots", num(sch.total_slots() as f64)),
+                ("full_s_per_eval", num(t_full.median)),
+                ("collapsed_s_per_eval", num(t_coll.median)),
+                ("speedup_collapsed", num(t_full.median / t_coll.median)),
+                ("collapse_rounds_detected", num(cstats.rounds_replayed as f64)),
+                ("collapse_sessions", num(cstats.sessions as f64)),
+                ("full_stats", t_full.json()),
+                ("collapsed_stats", t_coll.json()),
+            ]));
+        }
+
+        // Fused evaluator (the generator's hot path) on the same sweep.
+        let knobs = SchedKnobs::default();
+        let full_score = fused_score(&table, &caps, nmb, knobs, &mut arena);
+        let (coll_score, cstats) =
+            fused_score_collapsed(&table, &caps, nmb, knobs, &mut arena);
+        assert_eq!(full_score, coll_score, "fused collapse must not change the score");
+        let label = format!("fused/full       P={sweep_p} nmb={nmb}");
+        let t_full = bench(&label, iters, budget, || {
+            let score = fused_score(&table, &caps, nmb, knobs, &mut arena);
+            std::hint::black_box(score);
+        });
+        let label = format!("fused/collapsed  P={sweep_p} nmb={nmb}");
+        let t_coll = bench(&label, iters, budget, || {
+            let (score, _) = fused_score_collapsed(&table, &caps, nmb, knobs, &mut arena);
+            std::hint::black_box(score);
+        });
+        println!(
+            "      rounds collapsed {}/{nmb}, speedup {:.2}x",
+            cstats.rounds_replayed,
+            t_full.median / t_coll.median
+        );
+        sweep_rows.push(obj(vec![
+            ("kernel", s("fused")),
+            ("schedule", s("greedy-default")),
+            ("p", num(sweep_p as f64)),
+            ("nmb", num(nmb as f64)),
+            ("ops", num((table.n_stages * nmb * 3) as f64)),
+            ("full_s_per_eval", num(t_full.median)),
+            ("collapsed_s_per_eval", num(t_coll.median)),
+            ("speedup_collapsed", num(t_full.median / t_coll.median)),
+            ("collapse_rounds_detected", num(cstats.rounds_replayed as f64)),
+            ("collapse_sessions", num(cstats.sessions as f64)),
+            ("full_stats", t_full.json()),
+            ("collapsed_stats", t_coll.json()),
         ]));
     }
 
@@ -133,6 +254,7 @@ fn main() {
         ("smoke", Json::Bool(smoke)),
         ("configs", arr(cfg_rows)),
         ("fused", arr(fused_rows)),
+        ("nmb_sweep", arr(sweep_rows)),
     ]);
     // Anchor to the package dir so the artifact lands at
     // rust/BENCH_perfmodel.json regardless of the invoking CWD.

@@ -45,11 +45,17 @@
 //!    candidates (undo moves, repeated knob-grid points) reuse their
 //!    score and are counted in [`GenResult::evals_cached`].
 //! 3. **Evaluation** — the fused schedule+simulate pass
-//!    ([`crate::perfmodel::fused_eval`]) on per-worker [`SimArena`]s.
-//!    Batches large enough to amortise dispatch run on a persistent
-//!    [`pool::EvalPool`] (threads spawned once per search, channel-fed);
-//!    results merge by `(score, index)`, so the outcome is
-//!    bit-identical to a serial run.
+//!    ([`crate::perfmodel::fused_eval`]) on per-worker [`SimArena`]s,
+//!    with steady-state collapse ([`GenOptions::collapse`], default
+//!    on): once a candidate's schedule locks into its per-micro-batch
+//!    cycle, the remaining rounds are replayed by a per-op loop with
+//!    no candidate scan — same f64 ops in the same order, so scores
+//!    are bitwise-unchanged while the per-eval cost becomes (nearly)
+//!    independent of `nmb` ([`GenResult::evals_collapsed`] counts the
+//!    evaluations it fired in).  Batches large enough to amortise
+//!    dispatch run on a persistent [`pool::EvalPool`] (threads spawned
+//!    once per search, channel-fed); results merge by `(score,
+//!    index)`, so the outcome is bit-identical to a serial run.
 //!
 //! Both elisions only skip evaluations that cannot change the argmin —
 //! the bound is a true lower bound and cache hits replay exact scores —
@@ -74,8 +80,9 @@ use crate::memory::MemCaps;
 use crate::partition::{balanced, memory_balanced, uniform, Partition};
 use crate::placement::{interleaved, sequential, wave, Placement};
 use crate::perfmodel::{
-    fits_lower_bound, fused_eval, fused_score, makespan_lower_bound_in, simulate_in,
-    simulate_reference_in, BoundScratch, PerfReport, SimArena, StageTable,
+    fits_lower_bound, fused_eval, fused_score, fused_score_collapsed,
+    makespan_lower_bound_in, simulate_in, simulate_reference_in, BoundScratch,
+    PerfReport, SimArena, StageTable,
 };
 use crate::profile::ProfiledData;
 use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
@@ -143,6 +150,12 @@ pub struct GenOptions {
     /// Memoize candidate scores across tuning iterations
     /// (bit-identical search; default on).
     pub memoize: bool,
+    /// Steady-state collapse in the fused evaluation kernel: replay
+    /// the detected per-micro-batch cycle instead of re-scanning it
+    /// (bit-identical scores — same f64 ops in the same order — so the
+    /// chosen pipeline is unchanged, pinned by
+    /// `tests/perfmodel_collapse.rs`; default on).
+    pub collapse: bool,
 }
 
 impl GenOptions {
@@ -158,6 +171,7 @@ impl GenOptions {
             mem_caps: None,
             prune_bounds: true,
             memoize: true,
+            collapse: true,
         }
     }
 
@@ -169,10 +183,20 @@ impl GenOptions {
 
     /// Disable bound pruning and memoization — every candidate is
     /// fully evaluated.  The baseline the accelerated search must
-    /// match bit-for-bit (tests, `benches/generator.rs`).
+    /// match bit-for-bit (tests, `benches/generator.rs`).  Collapse is
+    /// orthogonal (it elides no evaluations, only re-derivations
+    /// inside one) and is controlled separately.
     pub fn elision_free(mut self) -> Self {
         self.prune_bounds = false;
         self.memoize = false;
+        self
+    }
+
+    /// Disable steady-state collapse — every evaluation simulates all
+    /// `S·nmb` slots.  The per-eval baseline the collapsed search must
+    /// match bit-for-bit (tests, `benches/generator.rs`).
+    pub fn no_collapse(mut self) -> Self {
+        self.collapse = false;
         self
     }
 }
@@ -199,6 +223,9 @@ pub struct GenResult {
     pub evals_pruned: usize,
     /// Candidates answered from the transposition table.
     pub evals_cached: usize,
+    /// Full evaluations in which the steady-state collapse layer
+    /// replayed at least one micro-batch round (subset of `evals`).
+    pub evals_collapsed: usize,
     pub elapsed_s: f64,
     pub log: Vec<GenLogEntry>,
 }
@@ -232,26 +259,36 @@ impl Prepared {
 }
 
 /// Score one candidate serially: step makespan, +inf on OOM / deadlock
-/// (Eq. 2).  Candidates rejected by the feasibility lower bound never
-/// get a schedule built — no simulation for plans no schedule could
-/// save.  (Parallel batches route through [`pool::EvalPool`], which
-/// applies the identical gate.)
+/// (Eq. 2), plus whether the collapse layer fired.  Candidates
+/// rejected by the feasibility lower bound never get a schedule built
+/// — no simulation for plans no schedule could save.  (Parallel
+/// batches route through [`pool::EvalPool`], which applies the
+/// identical gate.)
 fn eval_candidate(
     profile: &ProfiledData,
     caps: &MemCaps,
     nmb: usize,
     engine: EvalEngine,
+    collapse: bool,
     prep: &Prepared,
     arena: &mut SimArena,
-) -> f64 {
+) -> (f64, bool) {
     if !fits_lower_bound(&prep.table, caps) {
-        return f64::INFINITY;
+        return (f64::INFINITY, false);
     }
     match engine {
-        EvalEngine::Fast => fused_score(&prep.table, caps, nmb, prep.cand.knobs, arena),
+        EvalEngine::Fast => {
+            if collapse {
+                let (score, stats) =
+                    fused_score_collapsed(&prep.table, caps, nmb, prep.cand.knobs, arena);
+                (score, stats.fired)
+            } else {
+                (fused_score(&prep.table, caps, nmb, prep.cand.knobs, arena), false)
+            }
+        }
         EvalEngine::Reference => {
             let sch = greedy_schedule_in(arena, &prep.table, caps, nmb, prep.cand.knobs);
-            match simulate_reference_in(
+            let score = match simulate_reference_in(
                 profile,
                 caps,
                 &prep.cand.part,
@@ -262,7 +299,8 @@ fn eval_candidate(
                 Ok(r) if !r.oom => r.total,
                 Ok(_) => f64::INFINITY,
                 Err(_) => f64::INFINITY,
-            }
+            };
+            (score, false)
         }
     }
 }
@@ -274,9 +312,11 @@ struct Evaluator<'a> {
     engine: EvalEngine,
     prune: bool,
     memoize: bool,
+    collapse: bool,
     evals: usize,
     evals_pruned: usize,
     evals_cached: usize,
+    evals_collapsed: usize,
     arena: SimArena,
     scratch: BoundScratch,
     cache: EvalCache,
@@ -297,6 +337,7 @@ impl<'a> Evaluator<'a> {
         engine: EvalEngine,
         prune: bool,
         memoize: bool,
+        collapse: bool,
     ) -> Self {
         Evaluator {
             profile,
@@ -305,9 +346,11 @@ impl<'a> Evaluator<'a> {
             engine,
             prune,
             memoize,
+            collapse,
             evals: 0,
             evals_pruned: 0,
             evals_cached: 0,
+            evals_collapsed: 0,
             arena: SimArena::new(),
             scratch: BoundScratch::default(),
             cache: EvalCache::new(),
@@ -337,6 +380,7 @@ impl<'a> Evaluator<'a> {
                     self.caps,
                     self.nmb,
                     prep.cand.knobs.split_bw,
+                    prep.cand.knobs.overlap_aware,
                 );
                 // Acceptance needs score < best − ε and score ≥ bound,
                 // so bound ≥ best − ε proves the eval cannot matter.
@@ -370,8 +414,12 @@ impl<'a> Evaluator<'a> {
             && work_per_eval >= 256;
         if use_pool {
             if self.pool.is_none() {
-                self.pool =
-                    Some(EvalPool::new(self.threads, self.caps.clone(), self.nmb));
+                self.pool = Some(EvalPool::new(
+                    self.threads,
+                    self.caps.clone(),
+                    self.nmb,
+                    self.collapse,
+                ));
             }
             let pool = self.pool.as_ref().expect("just created");
             for &i in &self.need {
@@ -382,18 +430,22 @@ impl<'a> Evaluator<'a> {
                 let done = pool.collect();
                 assert!(!done.score.is_nan(), "pooled candidate evaluation panicked");
                 out[done.idx] = done.score;
+                self.evals_collapsed += usize::from(done.collapsed);
                 batch[done.idx].table = done.table;
             }
         } else {
             for &i in &self.need {
-                out[i] = eval_candidate(
+                let (score, collapsed) = eval_candidate(
                     self.profile,
                     self.caps,
                     self.nmb,
                     self.engine,
+                    self.collapse,
                     &batch[i],
                     &mut self.arena,
                 );
+                out[i] = score;
+                self.evals_collapsed += usize::from(collapsed);
             }
         }
         if self.memoize {
@@ -452,6 +504,7 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         opts.engine,
         opts.prune_bounds,
         opts.memoize,
+        opts.collapse,
     );
     let mut prep_pool = PrepPool::new();
     let mut log = Vec::new();
@@ -664,6 +717,7 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         evals: ev.evals,
         evals_pruned: ev.evals_pruned,
         evals_cached: ev.evals_cached,
+        evals_collapsed: ev.evals_collapsed,
         elapsed_s: t0.elapsed().as_secs_f64(),
         log,
     }

@@ -30,7 +30,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::memory::MemCaps;
-use crate::perfmodel::{fits_lower_bound, fused_score, SimArena, StageTable};
+use crate::perfmodel::{
+    fits_lower_bound, fused_score, fused_score_collapsed, SimArena, StageTable,
+};
 use crate::schedule::greedy::SchedKnobs;
 
 /// One candidate evaluation: score `table` under `knobs`.
@@ -45,6 +47,8 @@ pub struct Job {
 pub struct Done {
     pub idx: usize,
     pub score: f64,
+    /// The steady-state collapse layer replayed rounds for this score.
+    pub collapsed: bool,
     pub table: StageTable,
 }
 
@@ -58,8 +62,9 @@ pub struct EvalPool {
 
 impl EvalPool {
     /// Spawn `threads` workers scoring against `caps` with `nmb`
-    /// micro-batches (both fixed for one `generate()` call).
-    pub fn new(threads: usize, caps: MemCaps, nmb: usize) -> EvalPool {
+    /// micro-batches (both fixed for one `generate()` call), with
+    /// steady-state collapse on or off (`GenOptions::collapse`).
+    pub fn new(threads: usize, caps: MemCaps, nmb: usize, collapse: bool) -> EvalPool {
         assert!(threads >= 1);
         let (jobs, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -83,17 +88,27 @@ impl EvalPool {
                         // candidates) is reported as a NaN sentinel so
                         // the caller fails loudly instead of waiting
                         // forever for a result that never comes.
-                        let score = std::panic::catch_unwind(
+                        let (score, collapsed) = std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| {
-                                if fits_lower_bound(&job.table, &caps) {
-                                    fused_score(&job.table, &caps, nmb, job.knobs, &mut arena)
+                                if !fits_lower_bound(&job.table, &caps) {
+                                    (f64::INFINITY, false)
+                                } else if collapse {
+                                    let (score, stats) = fused_score_collapsed(
+                                        &job.table, &caps, nmb, job.knobs, &mut arena,
+                                    );
+                                    (score, stats.fired)
                                 } else {
-                                    f64::INFINITY
+                                    (
+                                        fused_score(
+                                            &job.table, &caps, nmb, job.knobs, &mut arena,
+                                        ),
+                                        false,
+                                    )
                                 }
                             }),
                         )
-                        .unwrap_or(f64::NAN);
-                        let out = Done { idx: job.idx, score, table: job.table };
+                        .unwrap_or((f64::NAN, false));
+                        let out = Done { idx: job.idx, score, collapsed, table: job.table };
                         if tx.send(out).is_err() {
                             break;
                         }
@@ -167,20 +182,36 @@ mod tests {
             tables.push(table);
         }
 
-        let pool = EvalPool::new(3, caps, 8);
+        let pool = EvalPool::new(3, caps.clone(), 8, false);
         for (idx, (table, knobs)) in
             tables.into_iter().zip(knob_grid.iter()).enumerate()
         {
             pool.submit(Job { idx, table, knobs: *knobs });
         }
         let mut pooled = vec![f64::NAN; knob_grid.len()];
+        let mut returned = Vec::new();
         for _ in 0..knob_grid.len() {
             let done = pool.collect();
             pooled[done.idx] = done.score;
             // Returned tables are intact (recyclable).
             assert_eq!(done.table.n_stages, 4);
+            assert!(!done.collapsed, "collapse off must report no collapse");
+            returned.push((done.idx, done.table));
         }
         assert_eq!(pooled, serial, "pool must be positionally bit-identical");
         drop(pool); // joins workers without hanging
+
+        // Collapse-enabled workers must return the exact same scores
+        // (bitwise) whether or not the cycle replay fires.
+        let pool = EvalPool::new(3, caps, 8, true);
+        for (idx, table) in returned {
+            pool.submit(Job { idx, table, knobs: knob_grid[idx] });
+        }
+        let mut collapsed = vec![f64::NAN; knob_grid.len()];
+        for _ in 0..knob_grid.len() {
+            let done = pool.collect();
+            collapsed[done.idx] = done.score;
+        }
+        assert_eq!(collapsed, serial, "collapsed pool must be bit-identical");
     }
 }

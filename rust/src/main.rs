@@ -209,13 +209,14 @@ fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         res.knobs.mem_cap_factor
     );
     println!(
-        "  step time {} | bubble ratio {:.1}% | gen {} ({} evals, {} pruned, {} cached, {} iters)",
+        "  step time {} | bubble ratio {:.1}% | gen {} ({} evals, {} pruned, {} cached, {} collapsed, {} iters)",
         fmt_time(res.report.total),
         100.0 * res.report.bubble_ratio(),
         fmt_time(res.elapsed_s),
         res.evals,
         res.evals_pruned,
         res.evals_cached,
+        res.evals_collapsed,
         res.iters
     );
     let r = simulate(

@@ -36,4 +36,4 @@ pub mod tracker;
 
 pub use caps::MemCaps;
 pub use model::{MemoryModel, StageFootprint};
-pub use tracker::{peak_stash, peak_stash_fused_release};
+pub use tracker::{peak_stash, peak_stash_collapsed, peak_stash_fused_release};

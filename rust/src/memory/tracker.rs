@@ -8,9 +8,19 @@
 //! applies the exact same f64 charge/release sequence the kernels do,
 //! so `static_d + peak` must equal `PerfReport::m_d` *bitwise*
 //! (pinned by `tests/memory_differential.rs`).
+//!
+//! [`peak_stash_collapsed`] is the steady-state-collapse analogue of
+//! the kernels' cycle replay (`perfmodel::collapse`) at the tracker
+//! level: when a device's slot list repeats a per-micro-batch cycle
+//! *and* the stash level at the cycle boundary is a bitwise fixpoint,
+//! every further repetition replays the exact same f64 values — the
+//! peak cannot move — so whole cycles are skipped structurally.  The
+//! result is pinned bitwise-equal to [`peak_stash`] (and therefore to
+//! the kernels' `m_d`/headroom accounting) by
+//! `tests/memory_differential.rs`.
 
 use super::model::MemoryModel;
-use crate::schedule::{OpKind, Schedule};
+use crate::schedule::{OpKind, Schedule, Slot};
 
 /// Per-device peak activation stash (bytes) under the subsystem's
 /// charge/release protocol: charge `act_per_mb` at F; fused backward
@@ -31,30 +41,123 @@ pub fn peak_stash_fused_release(schedule: &Schedule, model: &MemoryModel) -> Vec
     replay(schedule, model, false)
 }
 
+/// [`peak_stash`] with steady-state cycle skipping (module docs):
+/// bitwise-identical peaks, O(slots) structural compares but only
+/// O(warmup + drain) f64 operations on periodic schedules.
+pub fn peak_stash_collapsed(schedule: &Schedule, model: &MemoryModel) -> Vec<f64> {
+    assert_eq!(schedule.p, model.p);
+    const KMAX: usize = 4;
+    let mut peaks = vec![0.0f64; schedule.p];
+    for (d, slots) in schedule.per_device.iter().enumerate() {
+        let mut stash = 0.0f64;
+        let mut peak = 0.0f64;
+        let anchor = slots.first().map(|sl| (sl.op, sl.stage));
+        // Closed rounds: (round, end position exclusive, stash bits).
+        let mut hist: Vec<(i64, usize, u64)> = Vec::new();
+        let mut i = 0usize;
+        while i < slots.len() {
+            let sl = slots[i];
+            apply_slot(&mut stash, &mut peak, schedule.split_bw, true, model, sl);
+            i += 1;
+            if Some((sl.op, sl.stage)) != anchor {
+                continue;
+            }
+            let r = sl.mb as i64;
+            if hist.last().is_some_and(|&(pr, _, _)| pr != r - 1) {
+                hist.clear();
+            }
+            hist.push((r, i, stash.to_bits()));
+            if hist.len() > 2 * KMAX + 1 {
+                hist.remove(0);
+            }
+            let n = hist.len();
+            for k in 1..=KMAX {
+                if n < 2 * k + 1 {
+                    break;
+                }
+                // Stash fixpoint over the candidate cycle, bitwise.
+                if hist[n - 1].2 != hist[n - 1 - k].2 {
+                    continue;
+                }
+                let (a0, a, b) = (hist[n - 1 - 2 * k].1, hist[n - 1 - k].1, hist[n - 1].1);
+                if a - a0 != b - a || !cycles_match(&slots[a0..a], &slots[a..b], k as u32)
+                {
+                    continue;
+                }
+                // Locked: skip whole repetitions — the stash trajectory
+                // is a pure function of (fixpoint value, cycle ops), so
+                // every skipped block replays the same values and the
+                // peak cannot move.
+                let len = b - a;
+                let mut j = b;
+                while j + len <= slots.len()
+                    && cycles_match(&slots[j - len..j], &slots[j..j + len], k as u32)
+                {
+                    j += len;
+                }
+                if j > b {
+                    i = j;
+                    hist.clear();
+                }
+                break;
+            }
+        }
+        peaks[d] = peak;
+    }
+    peaks
+}
+
+/// `cur` continues `prev`'s per-micro-batch cycle: same ops on the
+/// same stages, micro-batches advanced by exactly the period.
+fn cycles_match(prev: &[Slot], cur: &[Slot], period: u32) -> bool {
+    prev.len() == cur.len()
+        && prev
+            .iter()
+            .zip(cur)
+            .all(|(p, c)| p.op == c.op && p.stage == c.stage && c.mb == p.mb + period)
+}
+
+/// The one copy of the charge/release arithmetic (shared by the plain
+/// replay, the fused-release baseline and the cycle-skipping tracker —
+/// the protocol is bitwise-pinned against the kernels, so it must not
+/// fork).  `early_release: false` models the coarse fused-B accounting
+/// (B frees nothing, W frees the whole stash).
+#[inline]
+fn apply_slot(
+    stash: &mut f64,
+    peak: &mut f64,
+    split_bw: bool,
+    early_release: bool,
+    model: &MemoryModel,
+    sl: Slot,
+) {
+    let fp = &model.stages[sl.stage as usize];
+    match sl.op {
+        OpKind::F => {
+            *stash += fp.act_per_mb;
+            *peak = peak.max(*stash);
+        }
+        OpKind::B => {
+            if !split_bw {
+                *stash -= fp.act_per_mb;
+            } else if early_release {
+                *stash -= fp.act_per_mb - fp.act_w_per_mb;
+            }
+        }
+        OpKind::W => {
+            *stash -= if early_release { fp.act_w_per_mb } else { fp.act_per_mb };
+        }
+    }
+}
+
 fn replay(schedule: &Schedule, model: &MemoryModel, early_release: bool) -> Vec<f64> {
     assert_eq!(schedule.p, model.p);
     let mut peaks = vec![0.0f64; schedule.p];
     for (d, slots) in schedule.per_device.iter().enumerate() {
         let mut stash = 0.0f64;
         let mut peak = 0.0f64;
-        for sl in slots {
-            let fp = &model.stages[sl.stage as usize];
-            match sl.op {
-                OpKind::F => {
-                    stash += fp.act_per_mb;
-                    peak = peak.max(stash);
-                }
-                OpKind::B => {
-                    if !schedule.split_bw {
-                        stash -= fp.act_per_mb;
-                    } else if early_release {
-                        stash -= fp.act_per_mb - fp.act_w_per_mb;
-                    }
-                }
-                OpKind::W => {
-                    stash -= if early_release { fp.act_w_per_mb } else { fp.act_per_mb };
-                }
-            }
+        for &sl in slots {
+            apply_slot(&mut stash, &mut peak, schedule.split_bw, early_release, model, sl);
         }
         peaks[d] = peak;
     }
@@ -109,6 +212,30 @@ mod tests {
                 peaks[d]
             );
         }
+    }
+
+    #[test]
+    fn collapsed_tracker_is_bitwise_equal_on_builders() {
+        for (p, nmb) in [(2, 4), (4, 8), (4, 32), (8, 64)] {
+            let (_, mm) = setup(p, nmb);
+            for sch in [gpipe(p, nmb), one_f_one_b(p, nmb), zb_h1(p, nmb)] {
+                let full = peak_stash(&sch, &mm);
+                let fast = peak_stash_collapsed(&sch, &mm);
+                assert_eq!(full, fast, "p={p} nmb={nmb} split={}", sch.split_bw);
+            }
+        }
+    }
+
+    #[test]
+    fn collapsed_tracker_survives_aperiodic_tail() {
+        // Swapping two mid-stream slots breaks the cycle on one device;
+        // the skipper must stop at the break and still match bitwise.
+        let (_, mm) = setup(4, 32);
+        let mut sch = one_f_one_b(4, 32);
+        let v = &mut sch.per_device[1];
+        let mid = v.len() / 2;
+        v.swap(mid, mid + 1);
+        assert_eq!(peak_stash(&sch, &mm), peak_stash_collapsed(&sch, &mm));
     }
 
     #[test]

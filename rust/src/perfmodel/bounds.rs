@@ -5,7 +5,7 @@
 //! score can never win the argmin, so the generator skips its full
 //! fused evaluation.  The bound is computed from a [`StageTable`]
 //! alone in one O(S) pass (allocation-free via [`BoundScratch`]) and
-//! combines three certificates, each valid for *any* dependency-
+//! combines four certificates, each valid for *any* dependency-
 //! respecting schedule the list scheduler could emit:
 //!
 //! 1. **Memory feasibility** (the PR-2 gate, [`fits_lower_bound`]):
@@ -25,6 +25,18 @@
 //!    last op is necessarily some stage's B — the B-chain below that
 //!    stage still runs afterwards (`tail_d`).  So
 //!    `T ≥ head_d + C_d + tail_d` for every device.
+//! 4. **Steady-state cycle with serial comm** (non-overlap mode only):
+//!    without overlap-awareness every receive serialises on the
+//!    consumer (`start = max(clk, dep) + comm`), so each op advances
+//!    its device's clock by at least `comm + dur` — the device's
+//!    steady-state cycle is `cycle_d = C_d/nmb + Σ_s (comm_f_in +
+//!    comm_b_in)`, not just its compute.  With `warmup_d` the earliest
+//!    *pre-receive* F-chain arrival (the first hop's comm is already
+//!    inside the cycle sum — counting it in the head too would double
+//!    count) this gives `T ≥ warmup_d + nmb·cycle_d + drain_d`, which
+//!    is much tighter at large `nmb` on comm-heavy pipelines — the
+//!    bound-side mirror of the kernels' steady-state collapse
+//!    ([`crate::perfmodel::collapse`]).
 //!
 //! **Floating-point safety.** The chain folds reuse the kernels'
 //! expression shapes (rounding is monotone, so the folded bound cannot
@@ -65,8 +77,10 @@ pub fn fits_lower_bound(table: &StageTable, caps: &MemCaps) -> bool {
 #[derive(Default)]
 pub struct BoundScratch {
     head: Vec<f64>,
+    head_pre: Vec<f64>,
     tail: Vec<f64>,
     busy: Vec<f64>,
+    comm: Vec<f64>,
 }
 
 fn refill(v: &mut Vec<f64>, n: usize, x: f64) {
@@ -79,14 +93,15 @@ fn refill(v: &mut Vec<f64>, n: usize, x: f64) {
 /// Returns `+inf` when no schedule can fit the memory caps (the
 /// objective is `+inf` there too, Eq. 2); otherwise a value `≤` the
 /// simulated makespan of *every* schedule the greedy list scheduler
-/// can produce for this table, whatever the remaining knobs
-/// (`w_fill`, `overlap_aware`, `mem_cap_factor`) choose.
+/// can produce for this table under the given backward/overlap modes,
+/// whatever the remaining knobs (`w_fill`, `mem_cap_factor`) choose.
 pub fn makespan_lower_bound_in(
     scratch: &mut BoundScratch,
     table: &StageTable,
     caps: &MemCaps,
     nmb: usize,
     split_bw: bool,
+    overlap_aware: bool,
 ) -> f64 {
     if !fits_lower_bound(table, caps) {
         return f64::INFINITY;
@@ -95,11 +110,14 @@ pub fn makespan_lower_bound_in(
     let p = table.p;
     let nmb_f = nmb as f64;
     refill(&mut scratch.head, p, f64::INFINITY);
+    refill(&mut scratch.head_pre, p, f64::INFINITY);
     refill(&mut scratch.tail, p, if split_bw { 0.0 } else { f64::INFINITY });
     refill(&mut scratch.busy, p, 0.0);
+    refill(&mut scratch.comm, p, 0.0);
 
-    // Single forward pass: F-chain arrival per stage (head), B-chain
-    // mass below each stage (tail), and per-device compute (C_d).
+    // Single forward pass: F-chain arrival per stage (head, and its
+    // pre-receive variant), B-chain mass below each stage (tail),
+    // per-device compute (C_d) and per-round serial comm.
     let mut chain_f = 0.0f64; // end of the mb-0 F chain through stage s-1
     let mut below = 0.0f64; // Σ_{u<s} (b'[u] + comm_b_in[u])
     for s in 0..s_n {
@@ -108,12 +126,16 @@ pub fn makespan_lower_bound_in(
         if arrive < scratch.head[d] {
             scratch.head[d] = arrive;
         }
+        if chain_f < scratch.head_pre[d] {
+            scratch.head_pre[d] = chain_f;
+        }
         if !split_bw && below < scratch.tail[d] {
             scratch.tail[d] = below;
         }
         scratch.busy[d] += (table.f[s] + table.b[s] + table.w[s]) * nmb_f;
+        scratch.comm[d] += (table.comm_f_in[s] + table.comm_b_in[s]) * nmb_f;
         chain_f = arrive + table.f[s];
-        let bp = if split_bw { table.b[s] } else { table.b[s] + table.w[s] };
+        let bp = if split_bw { table.b[s] } else { table.bw[s] };
         below += bp + table.comm_b_in[s];
     }
 
@@ -121,7 +143,7 @@ pub fn makespan_lower_bound_in(
     // (comm_b_in of the last stage is 0 by construction).
     let mut bound = chain_f + below;
 
-    // Certificate 3: per-device fill + compute + drain.
+    // Certificates 3 and 4: per-device fill + cycle·nmb + drain.
     for d in 0..p {
         if scratch.head[d].is_infinite() {
             continue; // hosts no stage (invalid placement): no claim
@@ -129,6 +151,16 @@ pub fn makespan_lower_bound_in(
         let dev = scratch.head[d] + scratch.busy[d] + scratch.tail[d];
         if dev > bound {
             bound = dev;
+        }
+        if !overlap_aware {
+            // Serial receives: every op advances the consumer's clock
+            // by comm + dur, so the steady cycle includes the comm mass
+            // (the head drops its last receive — it is in the sum).
+            let dev =
+                scratch.head_pre[d] + scratch.busy[d] + scratch.comm[d] + scratch.tail[d];
+            if dev > bound {
+                bound = dev;
+            }
         }
     }
     bound * (1.0 - FP_DEFLATION)
@@ -141,8 +173,16 @@ pub fn makespan_lower_bound(
     caps: &MemCaps,
     nmb: usize,
     split_bw: bool,
+    overlap_aware: bool,
 ) -> f64 {
-    makespan_lower_bound_in(&mut BoundScratch::default(), table, caps, nmb, split_bw)
+    makespan_lower_bound_in(
+        &mut BoundScratch::default(),
+        table,
+        caps,
+        nmb,
+        split_bw,
+        overlap_aware,
+    )
 }
 
 #[cfg(test)]
@@ -176,8 +216,9 @@ mod tests {
         for (sch, split) in
             [(one_f_one_b(p, nmb), false), (gpipe(p, nmb), false), (zb_h1(p, nmb), true)]
         {
+            // Builder schedules run with overlap_aware = false.
             let r = simulate(&pr, &part, &pl, &sch, false).unwrap();
-            let lb = makespan_lower_bound(&table, &caps, nmb, split);
+            let lb = makespan_lower_bound(&table, &caps, nmb, split, false);
             assert!(
                 lb <= r.total,
                 "bound {lb:.6} > simulated {:.6} (split={split})",
@@ -191,14 +232,38 @@ mod tests {
     }
 
     #[test]
+    fn serial_comm_cycle_tightens_non_overlap_bound() {
+        // Certificate 4 only applies without overlap-awareness, where
+        // every receive serialises on the consumer — the non-overlap
+        // bound must be at least the overlap bound plus the busiest
+        // device's serial comm mass growth, i.e. strictly above it on
+        // any pipeline with cross-device boundaries.
+        let (p, nmb) = (4, 32);
+        let pr = prof(p, nmb);
+        let part = uniform(pr.n_layers(), p);
+        let table = StageTable::build(&pr, &part, &sequential(p));
+        let caps = MemCaps::unbounded(p);
+        let with_overlap = makespan_lower_bound(&table, &caps, nmb, false, true);
+        let without = makespan_lower_bound(&table, &caps, nmb, false, false);
+        assert!(
+            without > with_overlap,
+            "serial-comm certificate must tighten: {without} !> {with_overlap}"
+        );
+        // And it remains a true lower bound for the non-overlap kernel.
+        let r = simulate(&pr, &part, &sequential(p), &one_f_one_b(p, nmb), false)
+            .unwrap();
+        assert!(without <= r.total, "{without} > simulated {}", r.total);
+    }
+
+    #[test]
     fn bound_is_monotone_in_nmb() {
         let pr = prof(4, 8);
         let part = uniform(pr.n_layers(), 8);
         let pl = interleaved(4, 2);
         let table = StageTable::build(&pr, &part, &pl);
         let caps = MemCaps::unbounded(4);
-        let b8 = makespan_lower_bound(&table, &caps, 8, true);
-        let b16 = makespan_lower_bound(&table, &caps, 16, true);
+        let b8 = makespan_lower_bound(&table, &caps, 8, true, true);
+        let b16 = makespan_lower_bound(&table, &caps, 16, true, true);
         assert!(b8.is_finite() && b16 > b8);
     }
 
@@ -211,6 +276,6 @@ mod tests {
         assert!(fits_lower_bound(&table, &MemCaps::unbounded(4)));
         let tight = MemCaps::uniform(4, 1.0);
         assert!(!fits_lower_bound(&table, &tight));
-        assert!(makespan_lower_bound(&table, &tight, 8, false).is_infinite());
+        assert!(makespan_lower_bound(&table, &tight, 8, false, false).is_infinite());
     }
 }

@@ -1,0 +1,325 @@
+//! Steady-state collapse — periodicity detection for the simulation
+//! kernels (DESIGN.md §3).
+//!
+//! 1F1B-family pipelines are *periodic*: after a warmup of O(P·v)
+//! micro-batch rounds, every device repeats one steady-state cycle per
+//! micro-batch (the structural fact Zero Bubble's scheduling analysis
+//! and Controllable-Memory's repeated-building-block formulation rest
+//! on).  Simulating the full train of `nmb` micro-batches re-derives
+//! that cycle `nmb − O(P)` times through the heap / the greedy scan.
+//! This module detects the cycle so the kernels can *replay* it with a
+//! tight per-op loop instead — no heap, no waiter lists, no O(S)
+//! candidate scans — performing the **same f64 operations in the same
+//! order** as the full run, which is what keeps the collapsed path
+//! bitwise-equal to the full kernels (`tests/perfmodel_collapse.rs`).
+//!
+//! **Detection.**  The first executed op names the anchor device `d0`
+//! and the anchor `(kind, stage)`.  Every time `d0` re-executes the
+//! anchor with micro-batch `r`, one *round* closes; the ops executed
+//! since the previous boundary form its *window*, stored with
+//! micro-batches relative to `r`.  When the last `k` windows equal the
+//! `k` before them element-wise (`k ≤ 4`, so period-2/-3 interleavings
+//! lock too) — plus, for callers that require it, a bitwise
+//! fingerprint of per-device state (clock deltas to `d0`, absolute
+//! stash levels) — the schedule has locked and the concatenated
+//! windows become the replay cycle.
+//!
+//! **Why the two callers need different evidence.**  The heap engine
+//! simulates a *fixed* schedule: every value it computes is a pure
+//! dataflow function of the schedule (clocks are per-device sequential,
+//! dependency cells are write-once), so a replay that (a) follows each
+//! device's own slot order — verified against the schedule per op —
+//! and (b) never reads an unwritten cell — NaN-guarded per op — is
+//! *provably* bitwise-exact however the heap would have interleaved
+//! devices.  The engine therefore locks on window structure alone and
+//! treats a mid-replay guard trip as "stop replaying here": the prefix
+//! is exact, and the heap resumes from it.  The fused scheduler,
+//! by contrast, *chooses* each op from data (start-time comparisons,
+//! memory-budget `fits` checks), so its replay freezes decisions; it
+//! locks only on the full fingerprint (the stash fingerprint makes the
+//! budget decisions provably repeat; clock-delta repetition is the
+//! evidence the comparisons repeat — stable in practice because FP
+//! increments are shift-invariant while the clocks stay within one
+//! binade) and a guard trip discards the attempt and re-runs the full
+//! scan from scratch.
+//!
+//! Schedules that never lock step — strongly heterogeneous stages,
+//! aperiodic knob combinations, too-few micro-batches — simply never
+//! fire and take the existing kernels unchanged.
+
+use std::collections::VecDeque;
+
+use crate::schedule::OpKind;
+
+/// How many consecutive round periods the detector searches (period-k
+/// cycles up to this k lock; ZB-style W retirement often alternates
+/// with period 2–3).
+const KMAX: usize = 4;
+
+/// Collapse is pointless below this many micro-batches (warmup + the
+/// two detection rounds already cover the step).
+pub(crate) const MIN_NMB: usize = 4;
+
+/// What the collapse layer did during one kernel run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CollapseStats {
+    /// A steady-state cycle was detected and replayed.
+    pub fired: bool,
+    /// Round (micro-batch index at the anchor) of the first lock.
+    pub lock_round: i64,
+    /// Micro-batch rounds replayed by the collapse loop (across all
+    /// replay sessions; multi-phase schedules like GPipe re-lock per
+    /// phase, so this can exceed `nmb`).
+    pub rounds_replayed: usize,
+    /// Replay sessions entered.
+    pub sessions: usize,
+    /// A replay guard tripped (engine: replay stopped early and the
+    /// heap resumed; fused: the attempt was discarded and re-run full).
+    pub bailed: bool,
+}
+
+/// One op of a detection window / replay cycle: device, op kind,
+/// stage, and micro-batch relative to the closing round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct WinOp {
+    pub d: u32,
+    pub kind: OpKind,
+    pub s: u32,
+    pub off: i32,
+}
+
+/// Reusable periodicity detector (lives in the caller's
+/// [`crate::perfmodel::SimArena`]; all buffers recycle across runs).
+#[derive(Default)]
+pub(crate) struct Detector {
+    enabled: bool,
+    nmb: i64,
+    win_cap: usize,
+    d0: i64,
+    anchor: Option<(OpKind, u32)>,
+    cur: Vec<WinOp>,
+    /// Consecutive closed rounds: (round, window, fingerprint bits).
+    hist: VecDeque<(i64, Vec<WinOp>, Vec<u64>)>,
+    spare_wins: Vec<Vec<WinOp>>,
+    spare_fps: Vec<Vec<u64>>,
+    /// Filled on lock: the cycle ops, offs rebased to the lock round.
+    pub cycle: Vec<WinOp>,
+}
+
+/// A detected lock: replay rounds `r + period, r + 2·period, …` while
+/// `round + max_off ≤ nmb − 1`.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Lock {
+    pub r: i64,
+    pub period: i64,
+    pub max_off: i64,
+}
+
+impl Detector {
+    /// Arm (or disarm) the detector for one kernel run over `nmb`
+    /// micro-batches and ~`ops_total` executed ops.
+    pub fn reset(&mut self, enabled: bool, nmb: usize, ops_total: usize) {
+        self.enabled = enabled && nmb >= MIN_NMB && ops_total > 0;
+        self.nmb = nmb as i64;
+        // Steady windows hold ~ops_total/nmb ops; anything much longer
+        // is an aperiodic stretch not worth tracking.
+        self.win_cap = 2 * (ops_total / nmb.max(1)) + 16;
+        self.soft_reset();
+    }
+
+    /// Clear detection state (after a replay session or an aperiodic
+    /// stretch) without touching the run configuration.
+    pub fn soft_reset(&mut self) {
+        self.d0 = -1;
+        self.anchor = None;
+        self.recycle_cur();
+        while let Some((_, w, f)) = self.hist.pop_front() {
+            self.spare_wins.push(w);
+            self.spare_fps.push(f);
+        }
+    }
+
+    fn recycle_cur(&mut self) {
+        self.cur.clear();
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one executed op.  `fp` fills the caller's state
+    /// fingerprint at round boundaries (leave empty for structural-only
+    /// locking).  Returns a [`Lock`] when the schedule locks step; the
+    /// replay cycle is then in [`Detector::cycle`].
+    #[inline]
+    pub fn record(
+        &mut self,
+        d: usize,
+        kind: OpKind,
+        s: usize,
+        mb: usize,
+        fp: impl FnOnce(&mut Vec<u64>),
+    ) -> Option<Lock> {
+        debug_assert!(self.enabled);
+        if self.d0 < 0 {
+            self.d0 = d as i64;
+            self.anchor = Some((kind, s as u32));
+        }
+        self.cur.push(WinOp { d: d as u32, kind, s: s as u32, off: mb as i32 });
+        if self.cur.len() > self.win_cap {
+            // Aperiodic stretch: drop everything, re-anchor at d0's
+            // next op.
+            let keep_d0 = self.d0;
+            self.soft_reset();
+            self.d0 = keep_d0;
+            return None;
+        }
+        if d as i64 != self.d0 {
+            return None;
+        }
+        let anchored = match self.anchor {
+            Some((ak, asg)) => ak == kind && asg == s as u32,
+            None => {
+                self.anchor = Some((kind, s as u32));
+                true
+            }
+        };
+        if !anchored {
+            return None;
+        }
+        self.close_round(mb as i64, fp)
+    }
+
+    /// Close round `r`: rebase the window, fingerprint, and search for
+    /// a period-k lock.
+    fn close_round(&mut self, r: i64, fp: impl FnOnce(&mut Vec<u64>)) -> Option<Lock> {
+        let mut win = self.spare_wins.pop().unwrap_or_default();
+        win.clear();
+        for op in &self.cur {
+            win.push(WinOp { off: op.off - r as i32, ..*op });
+        }
+        self.recycle_cur();
+        let mut bits = self.spare_fps.pop().unwrap_or_default();
+        bits.clear();
+        fp(&mut bits);
+
+        if self.hist.back().is_some_and(|(pr, _, _)| *pr != r - 1) {
+            // Non-consecutive rounds (phase change): history restarts.
+            while let Some((_, w, f)) = self.hist.pop_front() {
+                self.spare_wins.push(w);
+                self.spare_fps.push(f);
+            }
+        }
+        self.hist.push_back((r, win, bits));
+        if self.hist.len() > 2 * KMAX {
+            let (_, w, f) = self.hist.pop_front().expect("non-empty");
+            self.spare_wins.push(w);
+            self.spare_fps.push(f);
+        }
+
+        let n = self.hist.len();
+        for k in 1..=KMAX {
+            if n < 2 * k {
+                break;
+            }
+            let last = &self.hist[n - 1];
+            let prev = &self.hist[n - 1 - k];
+            if last.2 != prev.2 {
+                continue;
+            }
+            if (0..k).any(|i| self.hist[n - 1 - i].1 != self.hist[n - 1 - k - i].1) {
+                continue;
+            }
+            // Lock: concatenate the last k windows, offs rebased to r.
+            self.cycle.clear();
+            let mut max_off = i64::MIN;
+            for i in (0..k).rev() {
+                let (rj, win, _) = &self.hist[n - 1 - i];
+                let shift = *rj - r;
+                for op in win {
+                    let off = op.off as i64 + shift;
+                    max_off = max_off.max(off);
+                    self.cycle.push(WinOp { off: off as i32, ..*op });
+                }
+            }
+            let lock = Lock { r, period: k as i64, max_off };
+            // Only worth replaying if at least one full period fits.
+            if lock.r + lock.period + lock.max_off <= self.nmb - 1 {
+                return Some(lock);
+            }
+            self.cycle.clear();
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locks_on_period_one_pattern() {
+        let mut det = Detector::default();
+        det.reset(true, 16, 32);
+        let mut lock = None;
+        // Device 0 alternates F/B per round; device 1 trails by one mb.
+        for r in 0..16usize {
+            if lock.is_some() {
+                break;
+            }
+            lock = det.record(0, OpKind::F, 0, r, |_| ());
+            if lock.is_some() {
+                break;
+            }
+            if r >= 1 {
+                lock = lock.or(det.record(1, OpKind::F, 1, r - 1, |_| ()));
+            }
+        }
+        let lock = lock.expect("periodic pattern must lock");
+        assert_eq!(lock.period, 1);
+        assert!(det.cycle.len() >= 2);
+        assert!(lock.max_off <= 0);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_blocks_lock() {
+        let mut det = Detector::default();
+        det.reset(true, 16, 32);
+        let mut fired = false;
+        for r in 0..16usize {
+            // Structurally periodic, but the state fingerprint changes
+            // every round: must never lock.
+            fired |= det
+                .record(0, OpKind::F, 0, r, |bits| bits.push(r as u64))
+                .is_some();
+        }
+        assert!(!fired);
+    }
+
+    #[test]
+    fn too_few_microbatches_disable_detection() {
+        let mut det = Detector::default();
+        det.reset(true, MIN_NMB - 1, 6);
+        assert!(!det.enabled());
+    }
+
+    #[test]
+    fn locks_on_period_two_alternation() {
+        let mut det = Detector::default();
+        det.reset(true, 32, 64);
+        let mut lock = None;
+        for r in 0..32usize {
+            // The anchor op recurs every round; every other round an
+            // extra op rides along — a period-2 cycle.
+            lock = det.record(0, OpKind::F, 0, r, |_| ());
+            if lock.is_some() {
+                break;
+            }
+            if r % 2 == 0 {
+                assert!(det.record(1, OpKind::B, 1, r, |_| ()).is_none());
+            }
+        }
+        let lock = lock.expect("period-2 pattern must lock");
+        assert_eq!(lock.period, 2);
+    }
+}

@@ -19,10 +19,26 @@
 //! Generator issues thousands) allocate nothing after warm-up.
 //! Identical arithmetic to the reference loop ⇒ bit-identical
 //! [`PerfReport`]s (enforced by `tests/perfmodel_differential.rs`).
+//!
+//! **Steady-state collapse** ([`crate::perfmodel::collapse`], default
+//! on): once the executed-op stream locks into a per-micro-batch cycle,
+//! the remaining rounds are replayed by a tight per-op loop — no heap,
+//! no waiter lists — doing the same f64 operations in the same order,
+//! so the report stays bitwise-equal while the per-round cost drops to
+//! a handful of flops per op.  The replay is *provably* exact: every
+//! simulated value is a pure dataflow function of the schedule (clocks
+//! are per-device sequential, dependency cells write-once), the replay
+//! follows each device's own slot order (verified against the schedule
+//! per op) and never reads an unwritten cell (NaN-guarded); a guard
+//! trip just resumes the heap from the exact prefix.  Multi-phase
+//! schedules (GPipe's flood/drain) re-lock per phase.  O(slots·log P)
+//! becomes O((warmup+drain)·log P + slots) with a near-scalar constant
+//! on the second term.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use super::collapse::{CollapseStats, Detector, Lock, MIN_NMB};
 use super::stagetable::StageTable;
 use super::{Deadlock, PerfReport};
 use crate::memory::MemCaps;
@@ -65,6 +81,24 @@ impl Ord for Ev {
     }
 }
 
+/// One op of the replay cycle, precomputed so the replay loop touches
+/// only flat arrays: durations, comm, the dependency cell offset
+/// (`s·nmb + off`, to which the running round index is added) and the
+/// write cell offset.
+#[derive(Clone, Copy)]
+struct CycOp {
+    d: u32,
+    kind: OpKind,
+    s: u32,
+    off: i32,
+    dur: f64,
+    comm: f64,
+    /// 0 = no dependency, 1 = end_f, 2 = end_b.
+    dep_arr: u8,
+    dep_cell_off: i64,
+    cell_off: i64,
+}
+
 /// Reusable simulation state.  Create once, pass to every call of
 /// [`simulate_in`] / [`crate::perfmodel::fused::fused_eval`]; buffers
 /// are resized (never shrunk) so steady-state evaluations are
@@ -92,6 +126,9 @@ pub struct SimArena {
     pub(crate) next_b: Vec<usize>,
     pub(crate) next_w: Vec<usize>,
     pub(crate) budget: Vec<f64>,
+    // Steady-state collapse machinery (engine + fused paths).
+    pub(crate) det: Detector,
+    cyc: Vec<CycOp>,
 }
 
 fn refill<T: Copy>(v: &mut Vec<T>, n: usize, x: T) {
@@ -126,12 +163,47 @@ impl SimArena {
         self.heap.clear();
     }
 
+    /// Re-prime the heap and waiter lists from the current cursor /
+    /// end-time state (used when the engine resumes after a replay
+    /// session).
+    fn reprime(&mut self, schedule: &Schedule, table: &StageTable) {
+        let cells = table.n_stages * schedule.nmb;
+        let p = schedule.p;
+        refill(&mut self.waiter_f, cells, NONE);
+        refill(&mut self.waiter_b, cells, NONE);
+        refill(&mut self.waiter_next, p, NONE);
+        self.heap.clear();
+        for d in 0..p {
+            queue_next(d, schedule, table, self);
+        }
+    }
+
     pub(crate) fn reset_fused(&mut self, s_n: usize, nmb: usize, p: usize) {
         self.reset_common(s_n, nmb, p);
         refill(&mut self.next_f, s_n, 0);
         refill(&mut self.next_b, s_n, 0);
         refill(&mut self.next_w, s_n, 0);
         refill(&mut self.budget, p, 0.0);
+    }
+}
+
+/// Options for [`simulate_in_opts`].
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOpts {
+    /// Collect per-op trace events (disables collapse: every op must
+    /// be materialised).
+    pub collect_trace: bool,
+    /// Track the activation stash / peak memory (off = bench-only
+    /// pricing mode; `m_d` collapses to `static_d`).
+    pub track_memory: bool,
+    /// Enable steady-state collapse (bit-identical either way; off
+    /// retains the pure heap kernel, the differential baseline).
+    pub collapse: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { collect_trace: false, track_memory: true, collapse: true }
     }
 }
 
@@ -244,7 +316,8 @@ fn queue_next(d: usize, schedule: &Schedule, table: &StageTable, a: &mut SimAren
 }
 
 /// Event-driven simulation over a prebuilt stage table and arena.
-/// Same contract as [`crate::perfmodel::simulate`].
+/// Same contract as [`crate::perfmodel::simulate`]; steady-state
+/// collapse enabled (bit-identical to the pure heap run).
 pub fn simulate_in(
     arena: &mut SimArena,
     table: &StageTable,
@@ -252,7 +325,14 @@ pub fn simulate_in(
     schedule: &Schedule,
     collect_trace: bool,
 ) -> Result<PerfReport, Deadlock> {
-    simulate_in_with(arena, table, caps, schedule, collect_trace, true)
+    simulate_in_opts(
+        arena,
+        table,
+        caps,
+        schedule,
+        EngineOpts { collect_trace, ..EngineOpts::default() },
+    )
+    .0
 }
 
 /// [`simulate_in`] with the peak-memory tracker switchable.
@@ -267,6 +347,26 @@ pub fn simulate_in_with(
     collect_trace: bool,
     track_memory: bool,
 ) -> Result<PerfReport, Deadlock> {
+    simulate_in_opts(
+        arena,
+        table,
+        caps,
+        schedule,
+        EngineOpts { collect_trace, track_memory, ..EngineOpts::default() },
+    )
+    .0
+}
+
+/// Full-control entry point: the report plus what the collapse layer
+/// did (`benches/perfmodel.rs` sweeps `collapse` on/off and reports
+/// rounds replayed per config).
+pub fn simulate_in_opts(
+    arena: &mut SimArena,
+    table: &StageTable,
+    caps: &MemCaps,
+    schedule: &Schedule,
+    opts: EngineOpts,
+) -> (Result<PerfReport, Deadlock>, CollapseStats) {
     let s_n = table.n_stages;
     let p = schedule.p;
     let nmb = schedule.nmb;
@@ -275,117 +375,167 @@ pub fn simulate_in_with(
     arena.reset_sim(s_n, nmb, p);
     let total_slots: usize = schedule.per_device.iter().map(|v| v.len()).sum();
     let mut events = Vec::new();
-    let split_bw = schedule.split_bw;
+    let mut stats = CollapseStats::default();
+    // Tracing needs every op materialised; collapse skips that.
+    let collapse = opts.collapse && !opts.collect_trace && nmb >= MIN_NMB;
+    arena.det.reset(collapse, nmb, total_slots);
 
     for d in 0..p {
         queue_next(d, schedule, table, arena);
     }
 
     let mut done = 0usize;
-    while let Some(Ev { start, comm, d, slot: sl }) = arena.heap.pop() {
-        let d = d as usize;
-        let s = sl.stage as usize;
-        let mb = sl.mb as usize;
-        let dur = match sl.op {
-            OpKind::F => table.f[s],
-            OpKind::B => {
-                if split_bw {
-                    table.b[s]
-                } else {
-                    table.b[s] + table.w[s]
-                }
-            }
-            OpKind::W => table.w[s],
-        };
-        // Comm accounting (identical to the reference loop).
-        if comm > 0.0 {
-            if schedule.overlap_aware {
-                let hidden = (arena.clock[d] - (start - comm)).clamp(0.0, comm);
-                arena.overlap[d] += hidden;
-                if collect_trace {
-                    events.push(TraceEvent {
-                        name: format!("recv{}@s{}", mb, s),
-                        cat: "comm".into(),
-                        ts_us: (start - comm) * 1e6,
-                        dur_us: comm * 1e6,
-                        pid: d,
-                        tid: 1,
-                    });
-                }
-            } else {
-                arena.comm_block[d] += comm;
-                if collect_trace {
-                    events.push(TraceEvent {
-                        name: format!("recv{}@s{}", mb, s),
-                        cat: "comm".into(),
-                        ts_us: (start - comm) * 1e6,
-                        dur_us: comm * 1e6,
-                        pid: d,
-                        tid: 0,
-                    });
-                }
-            }
-        }
-        let end = start + dur;
-        arena.clock[d] = end;
-        arena.busy[d] += dur;
-        let k = s * nmb + mb;
-        match sl.op {
-            OpKind::F => {
-                arena.end_f[k] = end;
-                if track_memory {
-                    arena.stash[d] += table.act[s];
-                    arena.peak_stash[d] = arena.peak_stash[d].max(arena.stash[d]);
-                }
-                // Wake consumers parked on F(s, mb).
-                let mut w = arena.waiter_f[k];
-                arena.waiter_f[k] = NONE;
-                while w != NONE {
-                    let next = arena.waiter_next[w as usize];
-                    arena.waiter_next[w as usize] = NONE;
-                    queue_next(w as usize, schedule, table, arena);
-                    w = next;
-                }
-            }
-            OpKind::B => {
-                arena.end_b[k] = end;
-                if track_memory {
-                    if split_bw {
-                        // B consumed the intermediates; only the
-                        // W-retained slice stays stashed (memory/).
-                        arena.stash[d] -= table.act[s] - table.act_w[s];
-                    } else {
-                        arena.stash[d] -= table.act[s];
+    loop {
+        // ---- heap phase (with periodicity detection) -------------------
+        let mut lock: Option<Lock> = None;
+        while let Some(Ev { start, comm, d, slot: sl }) = arena.heap.pop() {
+            let d = d as usize;
+            let s = sl.stage as usize;
+            let mb = sl.mb as usize;
+            execute_slot(
+                arena, table, schedule, &mut events, opts, start, comm, d, s, mb, sl.op,
+            );
+            let k = s * nmb + mb;
+            // Wake consumers parked on the completed cell.
+            match sl.op {
+                OpKind::F => {
+                    let mut w = arena.waiter_f[k];
+                    arena.waiter_f[k] = NONE;
+                    while w != NONE {
+                        let next = arena.waiter_next[w as usize];
+                        arena.waiter_next[w as usize] = NONE;
+                        queue_next(w as usize, schedule, table, arena);
+                        w = next;
                     }
                 }
-                let mut w = arena.waiter_b[k];
-                arena.waiter_b[k] = NONE;
-                while w != NONE {
-                    let next = arena.waiter_next[w as usize];
-                    arena.waiter_next[w as usize] = NONE;
-                    queue_next(w as usize, schedule, table, arena);
-                    w = next;
+                OpKind::B => {
+                    let mut w = arena.waiter_b[k];
+                    arena.waiter_b[k] = NONE;
+                    while w != NONE {
+                        let next = arena.waiter_next[w as usize];
+                        arena.waiter_next[w as usize] = NONE;
+                        queue_next(w as usize, schedule, table, arena);
+                        w = next;
+                    }
                 }
+                OpKind::W => {}
             }
-            OpKind::W => {
-                if track_memory {
-                    arena.stash[d] -= table.act_w[s];
+            arena.ptr[d] += 1;
+            done += 1;
+            queue_next(d, schedule, table, arena);
+
+            if arena.det.enabled() {
+                // The engine locks on window structure alone: the
+                // replay is exact by dataflow (module docs), so the
+                // fingerprint carries no state bits.
+                lock = arena.det.record(d, sl.op, s, mb, |_| ());
+                if lock.is_some() {
+                    break;
                 }
             }
         }
-        if collect_trace {
-            events.push(TraceEvent {
-                name: format!("{}{}@s{}", sl.op.name(), mb, s),
-                cat: sl.op.name().into(),
-                ts_us: start * 1e6,
-                dur_us: dur * 1e6,
-                pid: d,
-                tid: 0,
-            });
+
+        let Some(lock) = lock else { break };
+
+        // ---- replay session -------------------------------------------
+        build_cycle(arena, table, schedule, nmb);
+        let track = opts.track_memory;
+        let overlap_aware = schedule.overlap_aware;
+        let mut r_cur = lock.r + lock.period;
+        let mut session_rounds = 0usize;
+        let mut bailed = false;
+        'replay: while r_cur + lock.max_off <= (nmb - 1) as i64 {
+            for i in 0..arena.cyc.len() {
+                let op = arena.cyc[i];
+                let d = op.d as usize;
+                let mb = r_cur + op.off as i64;
+                // Per-op guard 1: the schedule really continues the
+                // periodic pattern on this device.
+                let pd = &schedule.per_device[d];
+                let pi = arena.ptr[d];
+                if pi >= pd.len() {
+                    bailed = true;
+                    break 'replay;
+                }
+                let sl = pd[pi];
+                if sl.op != op.kind || sl.stage != op.s || sl.mb as i64 != mb {
+                    bailed = true;
+                    break 'replay;
+                }
+                // Per-op guard 2: the dependency cell is written.
+                let dep = match op.dep_arr {
+                    0 => 0.0,
+                    1 => arena.end_f[(op.dep_cell_off + r_cur) as usize],
+                    _ => arena.end_b[(op.dep_cell_off + r_cur) as usize],
+                };
+                if dep.is_nan() {
+                    bailed = true;
+                    break 'replay;
+                }
+                let clk = arena.clock[d];
+                let start = ready_at(dep, op.comm, clk, overlap_aware);
+                if op.comm > 0.0 {
+                    if overlap_aware {
+                        let hidden = (clk - (start - op.comm)).clamp(0.0, op.comm);
+                        arena.overlap[d] += hidden;
+                    } else {
+                        arena.comm_block[d] += op.comm;
+                    }
+                }
+                let end = start + op.dur;
+                arena.clock[d] = end;
+                arena.busy[d] += op.dur;
+                let cell = (op.cell_off + r_cur) as usize;
+                let s = op.s as usize;
+                match op.kind {
+                    OpKind::F => {
+                        arena.end_f[cell] = end;
+                        if track {
+                            arena.stash[d] += table.act[s];
+                            arena.peak_stash[d] =
+                                arena.peak_stash[d].max(arena.stash[d]);
+                        }
+                    }
+                    OpKind::B => {
+                        arena.end_b[cell] = end;
+                        if track {
+                            if schedule.split_bw {
+                                arena.stash[d] -= table.act[s] - table.act_w[s];
+                            } else {
+                                arena.stash[d] -= table.act[s];
+                            }
+                        }
+                    }
+                    OpKind::W => {
+                        if track {
+                            arena.stash[d] -= table.act_w[s];
+                        }
+                    }
+                }
+                arena.ptr[d] = pi + 1;
+                done += 1;
+            }
+            session_rounds += lock.period as usize;
+            r_cur += lock.period;
         }
-        arena.ptr[d] += 1;
-        done += 1;
-        queue_next(d, schedule, table, arena);
+        // A session only counts if it actually replayed a round — a
+        // guard trip on the very first op reports nothing fired (same
+        // inert-collapse semantics as the fused kernel).
+        if session_rounds > 0 {
+            if !stats.fired {
+                stats.lock_round = lock.r;
+            }
+            stats.fired = true;
+            stats.sessions += 1;
+            stats.rounds_replayed += session_rounds;
+        }
+        stats.bailed |= bailed;
+
+        // Resume the heap from the exact prefix (drain, or the rest of
+        // an aperiodic stretch); detection restarts and may re-lock
+        // (multi-phase schedules).
+        arena.reprime(schedule, table);
+        arena.det.soft_reset();
     }
 
     if done < total_slots {
@@ -395,11 +545,160 @@ pub fn simulate_in_with(
         let d = (0..p)
             .find(|&d| arena.ptr[d] < schedule.per_device[d].len())
             .expect("outstanding slots imply a blocked device");
-        return Err(Deadlock {
-            device: d,
-            at_slot: arena.ptr[d],
-            slot: schedule.per_device[d][arena.ptr[d]],
+        return (
+            Err(Deadlock {
+                device: d,
+                at_slot: arena.ptr[d],
+                slot: schedule.per_device[d][arena.ptr[d]],
+            }),
+            stats,
+        );
+    }
+    (Ok(report_from(arena, table, caps, events)), stats)
+}
+
+/// Execute one slot on `d` (accounting identical to the reference
+/// loop); shared by the heap phase and trace collection.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn execute_slot(
+    arena: &mut SimArena,
+    table: &StageTable,
+    schedule: &Schedule,
+    events: &mut Vec<TraceEvent>,
+    opts: EngineOpts,
+    start: f64,
+    comm: f64,
+    d: usize,
+    s: usize,
+    mb: usize,
+    kind: OpKind,
+) {
+    let dur = match kind {
+        OpKind::F => table.f[s],
+        OpKind::B => {
+            if schedule.split_bw {
+                table.b[s]
+            } else {
+                table.bw[s]
+            }
+        }
+        OpKind::W => table.w[s],
+    };
+    // Comm accounting (identical to the reference loop).
+    if comm > 0.0 {
+        if schedule.overlap_aware {
+            let hidden = (arena.clock[d] - (start - comm)).clamp(0.0, comm);
+            arena.overlap[d] += hidden;
+            if opts.collect_trace {
+                events.push(TraceEvent {
+                    name: format!("recv{}@s{}", mb, s),
+                    cat: "comm".into(),
+                    ts_us: (start - comm) * 1e6,
+                    dur_us: comm * 1e6,
+                    pid: d,
+                    tid: 1,
+                });
+            }
+        } else {
+            arena.comm_block[d] += comm;
+            if opts.collect_trace {
+                events.push(TraceEvent {
+                    name: format!("recv{}@s{}", mb, s),
+                    cat: "comm".into(),
+                    ts_us: (start - comm) * 1e6,
+                    dur_us: comm * 1e6,
+                    pid: d,
+                    tid: 0,
+                });
+            }
+        }
+    }
+    let end = start + dur;
+    arena.clock[d] = end;
+    arena.busy[d] += dur;
+    let k = s * schedule.nmb + mb;
+    match kind {
+        OpKind::F => {
+            arena.end_f[k] = end;
+            if opts.track_memory {
+                arena.stash[d] += table.act[s];
+                arena.peak_stash[d] = arena.peak_stash[d].max(arena.stash[d]);
+            }
+        }
+        OpKind::B => {
+            arena.end_b[k] = end;
+            if opts.track_memory {
+                if schedule.split_bw {
+                    // B consumed the intermediates; only the W-retained
+                    // slice stays stashed (memory/).
+                    arena.stash[d] -= table.act[s] - table.act_w[s];
+                } else {
+                    arena.stash[d] -= table.act[s];
+                }
+            }
+        }
+        OpKind::W => {
+            if opts.track_memory {
+                arena.stash[d] -= table.act_w[s];
+            }
+        }
+    }
+    if opts.collect_trace {
+        events.push(TraceEvent {
+            name: format!("{}{}@s{}", kind.name(), mb, s),
+            cat: kind.name().into(),
+            ts_us: start * 1e6,
+            dur_us: dur * 1e6,
+            pid: d,
+            tid: 0,
         });
     }
-    Ok(report_from(arena, table, caps, events))
+}
+
+/// Precompute the replay cycle's per-op durations, comm terms and cell
+/// offsets from the detector's window ops.
+fn build_cycle(arena: &mut SimArena, table: &StageTable, schedule: &Schedule, nmb: usize) {
+    let s_n = table.n_stages;
+    arena.cyc.clear();
+    for op in &arena.det.cycle {
+        let s = op.s as usize;
+        let (dur, comm) = match op.kind {
+            OpKind::F => (table.f[s], table.comm_f_in[s]),
+            OpKind::B => {
+                let dur = if schedule.split_bw { table.b[s] } else { table.bw[s] };
+                let comm = if s == s_n - 1 { 0.0 } else { table.comm_b_in[s] };
+                (dur, comm)
+            }
+            OpKind::W => (table.w[s], 0.0),
+        };
+        let (dep_arr, dep_s): (u8, usize) = match op.kind {
+            OpKind::F => {
+                if s == 0 {
+                    (0, 0)
+                } else {
+                    (1, s - 1)
+                }
+            }
+            OpKind::B => {
+                if s == s_n - 1 {
+                    (1, s)
+                } else {
+                    (2, s + 1)
+                }
+            }
+            OpKind::W => (2, s),
+        };
+        arena.cyc.push(CycOp {
+            d: op.d,
+            kind: op.kind,
+            s: op.s,
+            off: op.off,
+            dur,
+            comm,
+            dep_arr,
+            dep_cell_off: (dep_s * nmb) as i64 + op.off as i64,
+            cell_off: (s * nmb) as i64 + op.off as i64,
+        });
+    }
 }

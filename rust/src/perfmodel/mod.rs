@@ -29,8 +29,17 @@
 //! analytic makespan lower bound from a [`StageTable`] alone, which the
 //! Pipeline Generator uses to skip simulating candidates that provably
 //! cannot beat its incumbent (DESIGN.md § Search acceleration).
+//!
+//! [`collapse`] sits *inside* the kernels: once a schedule locks into
+//! its per-micro-batch steady state, the remaining rounds are replayed
+//! by a tight per-op loop (same f64 operations in the same order ⇒
+//! bitwise-identical reports, pinned by `tests/perfmodel_collapse.rs`)
+//! instead of re-deriving the cycle through the heap or the greedy
+//! scan — candidate-evaluation cost becomes (nearly) independent of
+//! `nmb`.
 
 pub mod bounds;
+pub mod collapse;
 pub mod engine;
 pub mod fused;
 pub mod stagetable;
@@ -38,8 +47,9 @@ pub mod stagetable;
 pub use bounds::{
     fits_lower_bound, makespan_lower_bound, makespan_lower_bound_in, BoundScratch,
 };
-pub use engine::{simulate_in, simulate_in_with, SimArena};
-pub use fused::{fused_eval, fused_score};
+pub use collapse::CollapseStats;
+pub use engine::{simulate_in, simulate_in_opts, simulate_in_with, EngineOpts, SimArena};
+pub use fused::{fused_eval, fused_eval_collapsed, fused_score, fused_score_collapsed};
 pub use stagetable::StageTable;
 
 use crate::memory::MemCaps;

@@ -30,6 +30,10 @@ pub struct StageTable {
     pub b: Vec<f64>,
     /// Param-grad backward seconds (W).
     pub w: Vec<f64>,
+    /// Fused backward seconds, precomputed as `b + w` (the exact
+    /// expression the kernels previously folded per executed op, so
+    /// using it is bit-identical and saves an add in the hot loops).
+    pub bw: Vec<f64>,
     /// Activation stash bytes per in-flight micro-batch (charged at F).
     pub act: Vec<f64>,
     /// W-retained slice of `act`: released at W under a split backward,
@@ -85,6 +89,7 @@ impl StageTable {
             &mut self.f,
             &mut self.b,
             &mut self.w,
+            &mut self.bw,
             &mut self.act,
             &mut self.act_w,
             &mut self.mem_static,
@@ -133,6 +138,7 @@ impl StageTable {
         self.f[s] = c.f;
         self.b[s] = c.b;
         self.w[s] = c.w;
+        self.bw[s] = c.b + c.w;
         self.act[s] = c.mem_act;
         self.act_w[s] = c.mem_act_w;
         self.mem_static[s] = c.mem_static;
@@ -211,6 +217,7 @@ mod tests {
         assert_eq!(t.f, fresh.f);
         assert_eq!(t.b, fresh.b);
         assert_eq!(t.w, fresh.w);
+        assert_eq!(t.bw, fresh.bw);
         assert_eq!(t.act, fresh.act);
         assert_eq!(t.act_w, fresh.act_w);
         assert_eq!(t.mem_static, fresh.mem_static);
@@ -218,6 +225,16 @@ mod tests {
         assert_eq!(t.comm_f_in, fresh.comm_f_in);
         assert_eq!(t.comm_b_in, fresh.comm_b_in);
         assert_eq!(t.static_d, fresh.static_d);
+    }
+
+    #[test]
+    fn fused_backward_column_matches_fold() {
+        let p = prof();
+        let part = uniform(p.n_layers(), 4);
+        let t = StageTable::build(&p, &part, &sequential(4));
+        for s in 0..4 {
+            assert_eq!(t.bw[s], t.b[s] + t.w[s]);
+        }
     }
 
     #[test]
@@ -235,6 +252,7 @@ mod tests {
             assert_eq!(t.f, fresh.f, "after shift {b}");
             assert_eq!(t.b, fresh.b);
             assert_eq!(t.w, fresh.w);
+            assert_eq!(t.bw, fresh.bw);
             assert_eq!(t.act, fresh.act);
             assert_eq!(t.act_w, fresh.act_w);
             assert_eq!(t.mem_static, fresh.mem_static);

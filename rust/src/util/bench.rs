@@ -6,6 +6,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::{num, obj, Json};
 use crate::util::stats::{mean, percentile, std_dev};
 
 /// Distribution summary of one benchmark run.
@@ -16,6 +17,7 @@ pub struct BenchStats {
     pub median: f64,
     pub p95: f64,
     pub min: f64,
+    pub max: f64,
     pub n: usize,
 }
 
@@ -27,8 +29,25 @@ impl BenchStats {
             median: percentile(times, 50.0),
             p95: percentile(times, 95.0),
             min: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: times.iter().cloned().fold(0.0, f64::max),
             n: times.len(),
         }
+    }
+
+    /// Full distribution block for the `BENCH_*.json` artifacts —
+    /// `iters` plus min/max alongside the medians let
+    /// `scripts/bench_diff.py` judge cross-PR deltas against
+    /// run-to-run noise.
+    pub fn json(&self) -> Json {
+        obj(vec![
+            ("mean_s", num(self.mean)),
+            ("sd_s", num(self.sd)),
+            ("median_s", num(self.median)),
+            ("p95_s", num(self.p95)),
+            ("min_s", num(self.min)),
+            ("max_s", num(self.max)),
+            ("iters", num(self.n as f64)),
+        ])
     }
 }
 
@@ -87,7 +106,10 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert!(s.n >= 5);
-        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.max);
         assert!(s.mean >= 0.0 && s.sd >= 0.0);
+        let j = s.json();
+        assert_eq!(j.get("iters").and_then(|x| x.as_usize()), Some(s.n));
+        assert!(j.get("max_s").and_then(|x| x.as_f64()).unwrap() >= 0.0);
     }
 }

@@ -41,7 +41,7 @@ fn lower_bound_never_exceeds_simulated_makespan() {
         let cap = if case % 4 == 0 { prof.mem_capacity / 256.0 } else { prof.mem_capacity };
         let caps = MemCaps::uniform(p, cap);
         let table = StageTable::build(&prof, &part, &plac);
-        let lb = makespan_lower_bound(&table, &caps, nmb, knobs.split_bw);
+        let lb = makespan_lower_bound(&table, &caps, nmb, knobs.split_bw, knobs.overlap_aware);
         let sch = greedy_schedule_caps(&prof, &caps, &part, &plac, nmb, knobs);
         let rep = simulate_reference_in(&prof, &caps, &part, &plac, &sch, false)
             .unwrap_or_else(|e| panic!("case {case}: greedy deadlocked: {e}"));
@@ -151,6 +151,31 @@ fn table5_accel_identity_and_counters() {
         );
         assert!(accel.evals < plain.evals, "{fam:?}: no evaluation was saved");
     }
+}
+
+#[test]
+fn seed_grid_routes_through_evaluator_gates() {
+    // The seed grid is scored by the same Evaluator as move batches
+    // (bound-prune → memoize → pool): with tuning disabled, the only
+    // candidates are the 2 partitions × 3 placements × 2 knob seeds
+    // plus the single bottleneck-attribution report of the winner, and
+    // every one of them shows up in the conservation sum.
+    let prof = table5_profile(Family::Gemma, 4, 16);
+    let mut opts = GenOptions::new(4, 16);
+    opts.max_iters = 0;
+    let res = generate(&prof, &opts);
+    assert_eq!(res.iters, 0);
+    assert_eq!(
+        res.evals + res.evals_pruned + res.evals_cached,
+        13,
+        "12 seeds + 1 report must all route through the Evaluator"
+    );
+    // And the elision-free run evaluates the identical seed set.
+    let mut plain = GenOptions::new(4, 16).elision_free();
+    plain.max_iters = 0;
+    let p = generate(&prof, &plain);
+    assert_eq!(p.evals, 13);
+    assert_eq!(res.report.total, p.report.total);
 }
 
 #[test]

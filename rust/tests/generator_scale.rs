@@ -71,3 +71,58 @@ fn large_scale_search_stays_fast_and_beats_s1f1b() {
     );
     assert!(res.evals > 0 && res.iters > 0);
 }
+
+/// The `nmb ≫ P` tier the steady-state collapse layer exists for:
+/// P=16 with 512 micro-batches under binding per-device caps.  Without
+/// collapse every evaluation walks all `S·nmb·3` slots through the
+/// O(S)-per-op greedy scan — an order of magnitude more work per
+/// candidate than this guard's budget is sized for; with collapse
+/// (default) the search must finish inside the wall-clock guard,
+/// actually replay cycles, and still beat the S-1F1B baseline.
+#[test]
+fn collapse_makes_nmb_512_search_feasible() {
+    let (p, nmb) = (16usize, 512usize);
+    let mut cfg = ModelCfg::table5(Family::NemotronH, Size::Medium);
+    cfg.blocks = 47; // ≈ 96 fine-grained layers, as above
+    let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+    let prof = ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+
+    let base = build(Method::S1F1B, &prof, p, nmb);
+    let rb = simulate(&prof, &base.partition, &base.placement, &base.schedule, false)
+        .unwrap();
+    // Binding activation budgets (static + ~1.3× the baseline's peak
+    // stash) keep the greedy scheduler in its periodic 1F1B-like
+    // regime — the memory-bound shape realistic large-nmb runs have.
+    let caps = MemCaps::per_device(
+        (0..p)
+            .map(|d| {
+                let stash = rb.m_d[d] - rb.static_d[d];
+                rb.static_d[d] + stash.max(1.0) * 1.3
+            })
+            .collect(),
+    );
+
+    let mut opts = GenOptions::new(p, nmb).with_mem_caps(caps);
+    opts.max_iters = 4;
+    let t0 = Instant::now();
+    let res = generate(&prof, &opts);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    assert!(
+        elapsed < 180.0,
+        "P={p} nmb={nmb} search took {elapsed:.1}s — collapse regressed"
+    );
+    assert!(
+        res.evals_collapsed > 0,
+        "no evaluation collapsed at P={p} nmb={nmb} ({} evals)",
+        res.evals
+    );
+    res.pipeline.schedule.validate(&res.pipeline.placement).unwrap();
+    assert!(!res.report.oom, "generated pipeline breaches its caps");
+    assert!(
+        res.report.total <= rb.total * 1.001,
+        "AdaPtis {:.4}s !<= S-1F1B {:.4}s at P={p} nmb={nmb}",
+        res.report.total,
+        rb.total
+    );
+}

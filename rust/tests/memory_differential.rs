@@ -17,7 +17,9 @@ mod common;
 use adaptis::cluster::ClusterSpec;
 use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
 use adaptis::generator::{generate, GenOptions};
-use adaptis::memory::{peak_stash, peak_stash_fused_release, MemCaps, MemoryModel};
+use adaptis::memory::{
+    peak_stash, peak_stash_collapsed, peak_stash_fused_release, MemCaps, MemoryModel,
+};
 use adaptis::model::build_model;
 use adaptis::partition::{uniform, Partition};
 use adaptis::placement::sequential;
@@ -59,6 +61,13 @@ fn fast_tracker_matches_reference_tracker_on_random_pipelines() {
             );
         }
         assert_eq!(static_d, report.static_d, "seed {seed}: static_d");
+        // The cycle-skipping tracker must agree with the slot replay —
+        // and therefore with the kernels' peak and headroom — bitwise.
+        assert_eq!(
+            peaks,
+            peak_stash_collapsed(&sch, &mm),
+            "seed {seed}: collapsed tracker drifted"
+        );
     }
 }
 

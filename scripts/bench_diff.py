@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Compare the BENCH_*.json artifacts against a committed baseline.
+
+Report-only, never fails: prints a per-metric delta table (markdown, so
+CI can drop it into the job summary) for every numeric metric shared by
+the current artifacts (rust/BENCH_{perfmodel,generator,executor}.json)
+and the baseline snapshot (scripts/bench_baseline/BENCH_*.json), keyed
+by each row's identity fields.  Deltas are judged against run-to-run
+noise using the artifacts' distribution blocks (`*_stats` objects with
+min/max/iters, written by util::bench::BenchStats::json): a delta whose
+magnitude is inside the baseline's min..max spread is tagged "noise".
+
+Usage:
+    python3 scripts/bench_diff.py            # print the delta table
+    python3 scripts/bench_diff.py --update   # copy current artifacts
+                                             # into the baseline dir
+
+Seeding: the baseline directory starts empty (bench numbers can only be
+produced by a machine with the Rust toolchain, i.e. CI or a dev box).
+Run the benches, then `--update`, and commit the snapshot; every later
+PR's CI prints its drift against it.
+"""
+
+import json
+import os
+import shutil
+import sys
+
+ARTIFACTS = ["BENCH_perfmodel.json", "BENCH_generator.json", "BENCH_executor.json"]
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CUR_DIR = os.path.join(REPO, "rust")
+BASE_DIR = os.path.join(REPO, "scripts", "bench_baseline")
+
+# Fields that identify a row rather than measure it.
+ID_FIELDS = ("size", "p", "nmb", "schedule", "kernel")
+
+
+def load(path):
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"  (skipping {os.path.basename(path)}: {e})")
+        return None
+
+
+def row_key(row):
+    return tuple((k, row[k]) for k in ID_FIELDS if k in row)
+
+
+def iter_rows(doc):
+    """Yield (section, key, row) for every row of every array section."""
+    for section, val in sorted(doc.items()):
+        if isinstance(val, list):
+            for row in val:
+                if isinstance(row, dict):
+                    yield section, row_key(row), row
+
+
+# A `<stem>_stats` block describes exactly the seconds-valued headline
+# metric named `<stem> + suffix` — never rates or other stems that
+# merely share a prefix (fast_stats must not band fast_notrack_* or
+# *_slots_per_s, whose units the band would not even match).
+SECONDS_SUFFIXES = ("_s", "_s_per_iter", "_s_per_eval", "_s_per_gen")
+
+
+def noise_band(row, metric):
+    """Half-width of the run-to-run spread for `metric`, if the row
+    carries the `*_stats` distribution block of that exact metric."""
+    for name, val in row.items():
+        if not (isinstance(val, dict) and (name.endswith("_stats") or name == "stats")):
+            continue
+        stem = name[: -len("_stats")] if name.endswith("_stats") else ""
+        described = [stem + suf if stem else suf.lstrip("_") for suf in SECONDS_SUFFIXES]
+        if metric in described and "min_s" in val and "max_s" in val:
+            return (val["max_s"] - val["min_s"]) / 2.0
+    return None
+
+
+def fmt_delta(cur, base, band):
+    if base == 0:
+        return f"{cur:+.3g} (new-from-0)"
+    pct = 100.0 * (cur - base) / abs(base)
+    tag = ""
+    if band is not None and abs(cur - base) <= band:
+        tag = " ~noise"
+    return f"{pct:+.1f}%{tag}"
+
+
+def diff_artifact(name):
+    cur = load(os.path.join(CUR_DIR, name))
+    base = load(os.path.join(BASE_DIR, name))
+    if cur is None or base is None:
+        if cur is not None and base is None:
+            print(f"  (no baseline for {name} — run with --update to seed it)")
+        return 0
+    base_rows = {(s, k): r for s, k, r in iter_rows(base)}
+    printed = 0
+    lines = []
+    for section, key, row in iter_rows(cur):
+        b = base_rows.get((section, key))
+        if b is None:
+            continue
+        ident = " ".join(f"{k}={v}" for k, v in key) or section
+        for metric, val in sorted(row.items()):
+            if metric in ID_FIELDS or not isinstance(val, (int, float)):
+                continue
+            bval = b.get(metric)
+            if not isinstance(bval, (int, float)):
+                continue
+            band = noise_band(b, metric)
+            lines.append(
+                f"| {section} | {ident} | {metric} | {bval:.4g} | {val:.4g} "
+                f"| {fmt_delta(val, bval, band)} |"
+            )
+            printed += 1
+    if lines:
+        print(f"\n### {name}\n")
+        print("| section | config | metric | baseline | current | delta |")
+        print("|---|---|---|---|---|---|")
+        for line in lines:
+            print(line)
+    return printed
+
+
+def main():
+    if "--update" in sys.argv[1:]:
+        os.makedirs(BASE_DIR, exist_ok=True)
+        copied = 0
+        for name in ARTIFACTS:
+            src = os.path.join(CUR_DIR, name)
+            if os.path.exists(src):
+                shutil.copy(src, os.path.join(BASE_DIR, name))
+                copied += 1
+                print(f"baseline <- {name}")
+        if not copied:
+            print("no artifacts to snapshot — run the benches first")
+        return 0
+
+    print("## Bench drift vs committed baseline (report-only)")
+    total = 0
+    for name in ARTIFACTS:
+        total += diff_artifact(name)
+    if total == 0:
+        print(
+            "\nno comparable metrics (baseline not seeded yet — run the "
+            "benches and `python3 scripts/bench_diff.py --update`, then "
+            "commit scripts/bench_baseline/)"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,10 @@ if [[ "${1:-}" != "--fast" ]]; then
   cargo bench --bench generator -- --smoke
   echo "== executor bench smoke (writes rust/BENCH_executor.json) =="
   cargo bench --bench executor -- --smoke
+  if command -v python3 >/dev/null 2>&1; then
+    echo "== bench drift vs committed baseline (report-only) =="
+    python3 ../scripts/bench_diff.py || true
+  fi
 fi
 
 echo "verify: OK"
