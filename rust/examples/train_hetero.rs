@@ -1,4 +1,4 @@
-//! End-to-end validation driver (DESIGN.md §8): train a ~100M-parameter
+//! End-to-end validation driver (DESIGN.md §9): train a ~100M-parameter
 //! heterogeneous transformer (large vocab + SA/FFN/Mamba/MLA/MoE mix)
 //! with an AdaPtis-generated pipeline on the RealCluster — real PJRT
 //! compute on P worker threads, python nowhere in sight.
@@ -45,6 +45,9 @@ fn main() -> anyhow::Result<()> {
             method: method.clone(),
             collect_trace: false,
             live_log: true,
+            // Advisory drift monitor: recommendations only (the real
+            // cluster can't migrate weights), surfaced below.
+            monitor: Some(adaptis::adapt::MonitorCfg::default()),
         };
         println!("\n=== {} ===", method.name());
         let r = train(store.clone(), &kinds, &opts)?;
@@ -61,6 +64,11 @@ fn main() -> anyhow::Result<()> {
             "loss {first:.4} -> {last:.4} | {} tokens/s",
             fmt_si(r.tokens_per_s())
         );
+        if r.replan_advice.is_empty() {
+            println!("drift monitor: no re-plan advised");
+        } else {
+            println!("drift monitor: re-plan advised at steps {:?}", r.replan_advice);
+        }
         assert!(last < first, "training must reduce the loss");
     }
     Ok(())

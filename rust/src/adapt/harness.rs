@@ -1,0 +1,552 @@
+//! Closed-loop fault-scenario harness: Static vs Elastic vs Oracle
+//! over the *same* deterministic [`FaultPlan`].
+//!
+//! One virtual training run = `steps` executions of the active plan's
+//! lowered [`Program`] on the timed SimCluster, each under the fault
+//! view of its step.  Three policies:
+//!
+//! - **Static**: plan once, never adapt.  A straggler degrades every
+//!   remaining step; a device kill stalls the run permanently (the
+//!   paper's implicit baseline).
+//! - **Elastic**: the full loop — [`Monitor`] watches executed-step
+//!   timings, [`Replanner`] re-generates warm-started plans under the
+//!   monitor's rate estimates, switches pay the migration pause, bad
+//!   switches roll back.
+//! - **Oracle**: reads the fault plan directly and re-plans with zero
+//!   latency and zero switch cost whenever the (quantized) true rates
+//!   move — the upper bound "throughput retained" is measured against.
+//!
+//! **Accounting.**  Virtual time advances by each step's simulated
+//! makespan plus, for Elastic, the migration pause of every switch
+//! (`switch_seconds`: weights + optimizer state of every layer whose
+//! *physical* owner changes, at [`MigrationCfg`]'s bandwidth).
+//! Re-plan *search latency* is measured and reported
+//! ([`ReplanEvent::latency_s`]) but not charged to virtual time — the
+//! search runs host-side while the old plan keeps training; only the
+//! weight movement pauses the pipeline.  That keeps every virtual
+//! quantity a pure function of the fault seed, so scenario runs replay
+//! bitwise (`tests/adapt_replan.rs`) while latency percentiles stay
+//! honest wall-clock measurements (`benches/replan.rs`).
+//!
+//! **Device loss.**  Plans live in a *logical* device space;
+//! [`ActivePlan`]'s `phys` map ties logical indices to the fault
+//! plan's physical devices.  When a physical device dies, the harness
+//! remaps to the survivors, drops the (structurally meaningless)
+//! incumbent, re-plans on `p−1` logical devices, and keeps going —
+//! the sim never has to execute a program on a dead device, so the
+//! [`crate::cluster::sim::SimDeadlock`] stall path stays an
+//! exceptional diagnostic rather than a control-flow mechanism.
+
+use std::time::Instant;
+
+use crate::cluster::fault::{FaultPlan, FaultView};
+use crate::cluster::sim::{run_timed_faulted, SimOptions};
+use crate::executor::lower::{lower, LowerOptions};
+use crate::executor::Program;
+use crate::generator::{GenResult, Incumbent, MigrationCfg};
+use crate::memory::model::layer_migration_bytes;
+use crate::memory::MemCaps;
+use crate::partition::Partition;
+use crate::placement::{sequential, Placement};
+use crate::perfmodel::{simulate_in, SimArena, StageTable};
+use crate::profile::ProfiledData;
+use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
+
+use super::monitor::{Decision, Monitor, MonitorCfg};
+use super::replan::{ReplanCfg, Replanner};
+
+/// Adaptation policy for one scenario run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Static,
+    Elastic,
+    Oracle,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::Elastic => "elastic",
+            Policy::Oracle => "oracle",
+        }
+    }
+}
+
+/// A named fault schedule plus a step horizon.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub fault: FaultPlan,
+    pub steps: usize,
+}
+
+impl Scenario {
+    /// Canonical straggler: `device` slows `factor`× from `from` to
+    /// the end of the run.
+    pub fn straggler(p: usize, device: usize, factor: f64, from: usize, steps: usize) -> Scenario {
+        Scenario {
+            name: "straggler",
+            fault: FaultPlan::healthy(p).with_event(
+                crate::cluster::fault::FaultEvent::Straggler {
+                    device,
+                    factor,
+                    from,
+                    until: usize::MAX,
+                },
+            ),
+            steps,
+        }
+    }
+
+    /// Canonical device loss at `at`.
+    pub fn kill(p: usize, device: usize, at: usize, steps: usize) -> Scenario {
+        Scenario {
+            name: "kill",
+            fault: FaultPlan::healthy(p)
+                .with_event(crate::cluster::fault::FaultEvent::Kill { device, step: at }),
+            steps,
+        }
+    }
+
+    /// Mild smooth drift (stays under the default gap threshold): the
+    /// control scenario where the elastic loop must *not* fire.
+    pub fn drift_mild(p: usize, device: usize, steps: usize) -> Scenario {
+        Scenario {
+            name: "drift_mild",
+            fault: FaultPlan::healthy(p).with_drift(crate::cluster::fault::Drift {
+                device,
+                amplitude: 0.04,
+                period: 2.0 * steps as f64,
+                phase: 0.0,
+            }),
+            steps,
+        }
+    }
+}
+
+/// Elastic-policy configuration (also carries the migration pricing
+/// Static/Oracle accounting shares).
+#[derive(Clone, Debug, Default)]
+pub struct ElasticCfg {
+    pub monitor: MonitorCfg,
+    pub replan: ReplanCfg,
+    /// Chaos knob for the rollback path: replace the *first* re-plan's
+    /// result with a deliberately terrible (but valid) plan, so
+    /// probation must fail and the monitor must restore the incumbent.
+    pub sabotage_first_replan: bool,
+}
+
+/// One switch (or attempted switch) of the active plan.
+#[derive(Clone, Debug)]
+pub struct ReplanEvent {
+    pub step: usize,
+    /// Wall-clock seconds the re-generation search took (0 for the
+    /// oracle and for rollbacks, which need no search).
+    pub latency_s: f64,
+    /// Virtual seconds the pipeline paused to move weights.
+    pub switch_s: f64,
+    /// "drift" | "kill" | "rollback" | "oracle".
+    pub kind: &'static str,
+}
+
+/// Outcome of one (scenario, policy) run.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub policy: &'static str,
+    pub scenario: &'static str,
+    /// Steps actually completed (`< steps` only when stalled).
+    pub steps_done: usize,
+    /// Simulated seconds: step makespans + migration pauses.
+    pub virtual_time_s: f64,
+    pub step_times: Vec<f64>,
+    pub replans: Vec<ReplanEvent>,
+    pub rollbacks: usize,
+    /// Steps from the first over-threshold gap to the first
+    /// post-switch step back under the threshold (elastic only).
+    pub steps_to_recover: Option<usize>,
+    /// Step at which a static run hit a dead device and froze.
+    pub stalled_at: Option<usize>,
+}
+
+/// Throughput of `run` relative to the oracle, both measured over the
+/// longer of the two virtual horizons — so a stalled run is charged
+/// for the steps it never delivered, and the oracle scores 1.0 by
+/// construction.
+pub fn throughput_retained(run: &RunStats, oracle: &RunStats) -> f64 {
+    let horizon = run.virtual_time_s.max(oracle.virtual_time_s);
+    let own = run.steps_done as f64 / horizon;
+    let orc = oracle.steps_done as f64 / oracle.virtual_time_s;
+    own / orc
+}
+
+/// The running plan: logical-space artifacts plus the logical →
+/// physical device map.
+struct ActivePlan {
+    part: Partition,
+    plac: Placement,
+    knobs: SchedKnobs,
+    prog: Program,
+    pred_total: f64,
+    pred_busy: Vec<f64>,
+    /// Rates the predictions were priced under (logical space).
+    plan_rates: Vec<f64>,
+    /// Logical device `d` runs on physical device `phys[d]`.
+    phys: Vec<usize>,
+}
+
+impl ActivePlan {
+    fn from_gen(res: &GenResult, phys: Vec<usize>, plan_rates: Vec<f64>) -> ActivePlan {
+        let prog =
+            lower(&res.pipeline.schedule, &res.pipeline.placement, LowerOptions::default());
+        ActivePlan {
+            part: res.pipeline.partition.clone(),
+            plac: res.pipeline.placement.clone(),
+            knobs: res.knobs,
+            prog,
+            pred_total: res.report.total,
+            pred_busy: res.report.busy_d.clone(),
+            plan_rates,
+            phys,
+        }
+    }
+
+    fn incumbent(&self) -> Incumbent {
+        Incumbent {
+            partition: self.part.clone(),
+            placement: self.plac.clone(),
+            knobs: self.knobs,
+        }
+    }
+}
+
+/// Project the physical fault view into a plan's logical space.
+fn remap_view(view: &FaultView, phys: &[usize]) -> FaultView {
+    let p = phys.len();
+    let pp = view.alive.len();
+    let mut v = FaultView::healthy(p);
+    v.step = view.step;
+    for (i, &pi) in phys.iter().enumerate() {
+        v.compute_scale[i] = view.compute_scale[pi];
+        v.alive[i] = view.alive[pi];
+        for (j, &pj) in phys.iter().enumerate() {
+            v.link_scale[i * p + j] = view.link_scale[pi * pp + pj];
+        }
+    }
+    v
+}
+
+/// Physical owner per layer.
+fn phys_owner(plan: &ActivePlan, n_layers: usize) -> Vec<usize> {
+    let mut out = vec![usize::MAX; n_layers];
+    for s in 0..plan.part.n_stages() {
+        let d = plan.phys[plan.plac.device_of[s]];
+        for l in plan.part.stage_range(s) {
+            out[l] = d;
+        }
+    }
+    out
+}
+
+/// Virtual seconds the pipeline pauses to ship weights + optimizer
+/// state for every layer whose physical owner changes between plans.
+fn switch_seconds(
+    profile: &ProfiledData,
+    from: &ActivePlan,
+    to: &ActivePlan,
+    cfg: MigrationCfg,
+) -> f64 {
+    let n = profile.n_layers();
+    let (a, b) = (phys_owner(from, n), phys_owner(to, n));
+    let mut bytes = 0.0;
+    for l in 0..n {
+        if a[l] != b[l] {
+            bytes += layer_migration_bytes(profile, l);
+        }
+    }
+    bytes / cfg.bw
+}
+
+/// A valid but deliberately terrible plan (nearly all layers on one
+/// device) with honest predictions — the sabotage target for rollback
+/// tests.  `Placement::is_valid` requires every device to own a stage,
+/// so "terrible" is a maximally imbalanced partition, not an
+/// all-on-one placement.
+fn sabotage_plan(
+    profile: &ProfiledData,
+    p: usize,
+    nmb: usize,
+    rates: &[f64],
+    phys: Vec<usize>,
+) -> ActivePlan {
+    let n = profile.n_layers();
+    assert!(n >= p && p >= 2);
+    let mut sizes = vec![1usize; p];
+    sizes[0] = n - (p - 1);
+    let part = Partition::from_sizes(&sizes);
+    let plac = sequential(p);
+    let knobs = SchedKnobs::default();
+    let table = StageTable::build_rated(profile, &part, &plac, rates);
+    let caps = MemCaps::unbounded(p);
+    let mut arena = SimArena::new();
+    let schedule = greedy_schedule_in(&mut arena, &table, &caps, nmb, knobs);
+    let report =
+        simulate_in(&mut arena, &table, &caps, &schedule, false).expect("sabotage plan simulates");
+    let prog = lower(&schedule, &plac, LowerOptions::default());
+    ActivePlan {
+        part,
+        plac,
+        knobs,
+        prog,
+        pred_total: report.total,
+        pred_busy: report.busy_d,
+        plan_rates: rates.to_vec(),
+        phys,
+    }
+}
+
+/// Run one (scenario, policy) pair.  See the module docs for the
+/// accounting rules.
+pub fn run_scenario(
+    profile: &ProfiledData,
+    scenario: &Scenario,
+    nmb: usize,
+    policy: Policy,
+    cfg: &ElasticCfg,
+) -> RunStats {
+    let p0 = scenario.fault.p;
+    let sim = SimOptions::matched();
+    let mut replanner = Replanner::new(cfg.replan);
+    let unit = vec![1.0; p0];
+    let res0 = replanner.plan(profile, p0, nmb, &unit);
+    let mut plan = ActivePlan::from_gen(&res0, (0..p0).collect(), unit);
+    let mut monitor = Monitor::new(p0, cfg.monitor);
+    monitor.set_plan(plan.pred_total, plan.pred_busy.clone(), plan.plan_rates.clone());
+
+    let mut stats = RunStats {
+        policy: policy.name(),
+        scenario: scenario.name,
+        steps_done: 0,
+        virtual_time_s: 0.0,
+        step_times: Vec::with_capacity(scenario.steps),
+        replans: Vec::new(),
+        rollbacks: 0,
+        steps_to_recover: None,
+        stalled_at: None,
+    };
+    let mut rollback_to: Option<ActivePlan> = None;
+    let mut sabotaged = false;
+    let mut gap_onset: Option<usize> = None;
+    let mut switched_since_gap = false;
+
+    for step in 0..scenario.steps {
+        let pview = scenario.fault.view(step);
+
+        // ---- Device loss ------------------------------------------------
+        if plan.phys.iter().any(|&d| !pview.alive[d]) {
+            if policy == Policy::Static {
+                stats.stalled_at = Some(step);
+                break;
+            }
+            let alive: Vec<usize> = (0..p0).filter(|&d| pview.alive[d]).collect();
+            let p_new = alive.len();
+            assert!(p_new >= 2, "scenario killed the cluster below a pipeline");
+            // Carry estimates across the remap where the physical
+            // device survives; the oracle reads the true scales.
+            let mut est = vec![1.0; p_new];
+            for (j, &pd) in alive.iter().enumerate() {
+                est[j] = if policy == Policy::Oracle {
+                    pview.compute_scale[pd]
+                } else if let Some(l) = plan.phys.iter().position(|&q| q == pd) {
+                    monitor.rates().get(l).copied().unwrap_or(1.0)
+                } else {
+                    1.0
+                };
+            }
+            let t = Instant::now();
+            let res = replanner.plan(profile, p_new, nmb, &est);
+            let latency = t.elapsed().as_secs_f64();
+            let rates_q = replanner.quantize(&est).unwrap_or_else(|| vec![1.0; p_new]);
+            let new_plan = ActivePlan::from_gen(&res, alive, rates_q);
+            let switch_s = switch_seconds(profile, &plan, &new_plan, cfg.replan.migration);
+            if policy == Policy::Elastic {
+                stats.virtual_time_s += switch_s;
+            }
+            stats.replans.push(ReplanEvent {
+                step,
+                latency_s: if policy == Policy::Oracle { 0.0 } else { latency },
+                switch_s,
+                kind: "kill",
+            });
+            plan = new_plan;
+            rollback_to = None;
+            monitor = Monitor::new(p_new, cfg.monitor);
+            monitor.set_plan(plan.pred_total, plan.pred_busy.clone(), plan.plan_rates.clone());
+            gap_onset.get_or_insert(step);
+            switched_since_gap = true;
+        }
+
+        // ---- Oracle: re-plan the moment true rates move -----------------
+        if policy == Policy::Oracle {
+            let true_rates: Vec<f64> =
+                plan.phys.iter().map(|&pd| pview.compute_scale[pd]).collect();
+            let q = replanner
+                .quantize(&true_rates)
+                .unwrap_or_else(|| vec![1.0; plan.phys.len()]);
+            if q.iter()
+                .zip(&plan.plan_rates)
+                .any(|(a, b)| (a - b).abs() > 0.03)
+            {
+                let res = replanner.plan(profile, plan.phys.len(), nmb, &true_rates);
+                plan = ActivePlan::from_gen(&res, plan.phys.clone(), q);
+                stats.replans.push(ReplanEvent {
+                    step,
+                    latency_s: 0.0,
+                    switch_s: 0.0,
+                    kind: "oracle",
+                });
+            }
+        }
+
+        // ---- Execute the step -------------------------------------------
+        let lview = remap_view(&pview, &plan.phys);
+        let run = run_timed_faulted(profile, &plan.part, &plan.prog, sim, Some(&lview))
+            .expect("no live plan may stall (kills are handled above)");
+        let dt = run.makespan;
+        stats.virtual_time_s += dt;
+        stats.step_times.push(dt);
+        stats.steps_done += 1;
+
+        if policy != Policy::Elastic {
+            continue;
+        }
+
+        // ---- Elastic: monitor + decisions -------------------------------
+        let gap = (dt - plan.pred_total) / plan.pred_total;
+        if gap > cfg.monitor.gap_threshold {
+            if gap_onset.is_none() {
+                gap_onset = Some(step);
+                switched_since_gap = false;
+            }
+        } else if let Some(onset) = gap_onset {
+            if switched_since_gap && stats.steps_to_recover.is_none() {
+                stats.steps_to_recover = Some(step - onset);
+            }
+        }
+        match monitor.observe(dt, Some(&run.busy_d)) {
+            Decision::Steady => {}
+            Decision::Commit => {
+                rollback_to = None;
+            }
+            Decision::Rollback => {
+                if let Some(old) = rollback_to.take() {
+                    let switch_s = switch_seconds(profile, &plan, &old, cfg.replan.migration);
+                    stats.virtual_time_s += switch_s;
+                    stats.replans.push(ReplanEvent {
+                        step,
+                        latency_s: 0.0,
+                        switch_s,
+                        kind: "rollback",
+                    });
+                    replanner.set_incumbent(old.incumbent());
+                    plan = old;
+                    monitor.set_plan(
+                        plan.pred_total,
+                        plan.pred_busy.clone(),
+                        plan.plan_rates.clone(),
+                    );
+                    stats.rollbacks += 1;
+                }
+            }
+            Decision::Replan { .. } => {
+                let est = monitor.rates().to_vec();
+                let t = Instant::now();
+                let res = replanner.plan(profile, plan.phys.len(), nmb, &est);
+                let latency = t.elapsed().as_secs_f64();
+                let rates_q =
+                    replanner.quantize(&est).unwrap_or_else(|| vec![1.0; plan.phys.len()]);
+                let mut new_plan = ActivePlan::from_gen(&res, plan.phys.clone(), rates_q);
+                if cfg.sabotage_first_replan && !sabotaged {
+                    sabotaged = true;
+                    new_plan = sabotage_plan(
+                        profile,
+                        plan.phys.len(),
+                        nmb,
+                        &new_plan.plan_rates.clone(),
+                        plan.phys.clone(),
+                    );
+                    replanner.set_incumbent(new_plan.incumbent());
+                }
+                let unchanged = new_plan.part == plan.part
+                    && new_plan.plac == plan.plac
+                    && new_plan.knobs == plan.knobs;
+                if unchanged {
+                    // Nothing better exists under the current
+                    // estimates; cool down instead of thrashing.
+                    monitor.dismissed();
+                } else {
+                    let switch_s = switch_seconds(profile, &plan, &new_plan, cfg.replan.migration);
+                    stats.virtual_time_s += switch_s;
+                    stats.replans.push(ReplanEvent { step, latency_s: latency, switch_s, kind: "drift" });
+                    rollback_to = Some(std::mem::replace(&mut plan, new_plan));
+                    monitor.switched(
+                        plan.pred_total,
+                        plan.pred_busy.clone(),
+                        plan.plan_rates.clone(),
+                    );
+                    switched_since_gap = true;
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+
+    fn prof(p: usize, nmb: usize) -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(p, 2, nmb, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn healthy_scenario_is_identical_across_policies() {
+        let pr = prof(4, 8);
+        let sc = Scenario { name: "healthy", fault: FaultPlan::healthy(4), steps: 12 };
+        let cfg = ElasticCfg::default();
+        let st = run_scenario(&pr, &sc, 8, Policy::Static, &cfg);
+        let el = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+        let or = run_scenario(&pr, &sc, 8, Policy::Oracle, &cfg);
+        // No faults: nobody re-plans, all three run the same plan and
+        // the virtual clocks agree bitwise.
+        assert!(el.replans.is_empty() && or.replans.is_empty());
+        assert_eq!(st.virtual_time_s, el.virtual_time_s);
+        assert_eq!(st.virtual_time_s, or.virtual_time_s);
+        assert_eq!(throughput_retained(&el, &or), 1.0);
+        // Matched-mode predictions are exact: zero healthy-state gap.
+        assert_eq!(el.step_times[0], el.step_times[11]);
+    }
+
+    #[test]
+    fn remapped_views_index_physical_space() {
+        let v = FaultPlan::healthy(4)
+            .with_event(crate::cluster::fault::FaultEvent::Straggler {
+                device: 2,
+                factor: 2.0,
+                from: 0,
+                until: usize::MAX,
+            })
+            .view(0);
+        let r = remap_view(&v, &[0, 2, 3]);
+        assert_eq!(r.compute_scale, vec![1.0, 2.0, 1.0]);
+        assert_eq!(r.alive, vec![true, true, true]);
+    }
+}

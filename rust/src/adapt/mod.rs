@@ -1,0 +1,47 @@
+//! Elastic re-planning (DESIGN.md § Elastic re-planning): the runtime
+//! loop that keeps an AdaPtis pipeline near-optimal while the cluster
+//! degrades underneath it.
+//!
+//! The paper's Pipeline Generator plans once, offline, for a cluster
+//! profile assumed constant.  Real clusters drift — thermal
+//! throttling, noisy neighbours, slow links, outright device loss —
+//! and a static plan silently decays (or stalls) as its assumptions
+//! rot.  This module closes the loop:
+//!
+//! ```text
+//!   SimCluster + FaultPlan ──step timings──▶ Monitor ──Replan──▶ Replanner
+//!        ▲                                   (drift est.,        (warm-started
+//!        │                                    hysteresis,         generate_with_cache)
+//!        └────────── switch (pay migration) ◀─rollback)◀──────────────┘
+//! ```
+//!
+//! - [`monitor`]: consumes executed-step timings (total + per-device
+//!   busy), maintains rolling per-device *rate* estimates with
+//!   median-based outlier rejection, and decides — with hysteresis, a
+//!   cooldown, and a probation window that rolls back switches that
+//!   don't pay off — when the gap between observed and predicted step
+//!   time justifies re-planning.
+//! - [`replan`]: wraps [`crate::generator::generate_with_cache`] with
+//!   the persistent [`crate::generator::cache::EvalCache`], quantized
+//!   rate estimates (cache-fingerprint stability), the incumbent warm
+//!   start and the migration-cost objective.
+//! - [`harness`]: the closed-loop scenario runner — Static vs Elastic
+//!   vs Oracle over the *same* deterministic
+//!   [`crate::cluster::FaultPlan`] — producing the recovery metrics
+//!   `benches/replan.rs` emits (re-plan latency, steps-to-recover,
+//!   throughput retained vs oracle).
+//!
+//! Everything downstream of the fault seed is deterministic: the fault
+//! views are pure functions of `(plan, step)`, the simulator and the
+//! generator are bitwise-reproducible, and re-plan *latency* is kept
+//! out of the virtual-time accounting (searches run async with
+//! training; only the migration pause is charged).  Scenario runs
+//! therefore replay bitwise (`tests/adapt_replan.rs`).
+
+pub mod harness;
+pub mod monitor;
+pub mod replan;
+
+pub use harness::{run_scenario, throughput_retained, ElasticCfg, Policy, RunStats, Scenario};
+pub use monitor::{Decision, Monitor, MonitorCfg};
+pub use replan::{ReplanCfg, Replanner};

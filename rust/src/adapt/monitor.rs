@@ -1,0 +1,385 @@
+//! Runtime monitor: executed-step timings in, re-plan decisions out.
+//!
+//! The monitor holds the active plan's *predictions* — step makespan
+//! and per-device busy time, both priced under the rates the plan was
+//! generated for — and compares them against what the cluster actually
+//! delivers.  Three mechanisms keep it from thrashing:
+//!
+//! - **Hysteresis**: the relative gap `(obs − pred)/pred` must exceed
+//!   [`MonitorCfg::gap_threshold`] for [`MonitorCfg::hysteresis`]
+//!   *consecutive* steps before [`Decision::Replan`] fires — one slow
+//!   step (GC pause, jitter spike) is not a regime change.
+//! - **Cooldown**: after any switch, rollback or dismissed advice, no
+//!   new re-plan fires for [`MonitorCfg::cooldown_steps`] steps.
+//! - **Probation**: a switch is provisional.  For
+//!   [`MonitorCfg::probation_steps`] steps the new plan's mean step
+//!   time must beat the old plan's recent mean by
+//!   [`MonitorCfg::min_improve`], else [`Decision::Rollback`] tells
+//!   the driver to restore the incumbent.
+//!
+//! **Rate estimation.**  Per-device estimates are *absolute*: each
+//! step contributes `obs_busy_d / pred_busy_d × plan_rate_d` — the
+//! device's current slowdown relative to the healthy profile,
+//! independent of which plan is running — so the sample windows
+//! survive plan switches.  The estimate is the *median* of the last
+//! `2·hysteresis − 1` samples: jitter outliers are rejected, while a
+//! persistent shift flips the median after exactly `hysteresis`
+//! consistent samples — the same step the gap hysteresis fires, so the
+//! re-plan prices the shift it just confirmed.
+
+use std::collections::VecDeque;
+
+/// Monitor tuning knobs (defaults follow the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct MonitorCfg {
+    /// Rolling window of observed step totals (drives `must_beat`).
+    pub window: usize,
+    /// Relative gap above which a step counts toward re-planning.
+    pub gap_threshold: f64,
+    /// Consecutive over-gap steps required before `Replan` fires.
+    pub hysteresis: usize,
+    /// Steps with no new re-plan advice after a switch/rollback/dismiss.
+    pub cooldown_steps: usize,
+    /// Steps a switched-to plan has to prove itself.
+    pub probation_steps: usize,
+    /// Relative improvement over the old plan's recent mean a switch
+    /// must deliver to be kept.
+    pub min_improve: f64,
+}
+
+impl Default for MonitorCfg {
+    fn default() -> MonitorCfg {
+        MonitorCfg {
+            window: 8,
+            gap_threshold: 0.10,
+            hysteresis: 3,
+            cooldown_steps: 24,
+            probation_steps: 6,
+            min_improve: 0.02,
+        }
+    }
+}
+
+/// What the driver should do after this step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Keep running the current plan.
+    Steady,
+    /// The gap persisted: re-generate now.  `must_beat` is the old
+    /// plan's recent mean step time — the bar a switched-to plan must
+    /// clear during probation.  The monitor waits in place until the
+    /// driver answers with [`Monitor::switched`] or
+    /// [`Monitor::dismissed`].
+    Replan { must_beat: f64 },
+    /// Probation passed: the switch is confirmed; the driver can drop
+    /// its rollback copy of the old plan.
+    Commit,
+    /// Probation failed: restore the incumbent plan (then call
+    /// [`Monitor::set_plan`] with its predictions).
+    Rollback,
+}
+
+#[derive(Clone, Debug)]
+enum State {
+    Stable { over: usize },
+    /// `Replan` fired; awaiting `switched`/`dismissed` from the driver.
+    Await { must_beat: f64 },
+    Probation { left: usize, must_beat: f64, acc: f64, n: usize },
+    Cooldown { left: usize },
+}
+
+/// See the module docs.  One monitor per running pipeline; feed every
+/// executed step to [`Monitor::observe`].
+pub struct Monitor {
+    cfg: MonitorCfg,
+    state: State,
+    /// Predicted step makespan of the active plan (under `plan_rates`).
+    pred_total: f64,
+    /// Predicted per-device busy time of the active plan.
+    pred_busy: Vec<f64>,
+    /// Rates the active plan's predictions were priced under.
+    plan_rates: Vec<f64>,
+    /// Current absolute per-device rate estimates (median-filtered).
+    rate_est: Vec<f64>,
+    /// Per-device absolute-rate sample windows (len `2·hysteresis−1`).
+    samples: Vec<VecDeque<f64>>,
+    /// Recent observed step totals (len `window`).
+    recent: VecDeque<f64>,
+    last_gap: f64,
+    scratch: Vec<f64>,
+}
+
+/// Median under `total_cmp` (deterministic, NaN-tolerant); `buf` is a
+/// reusable sort buffer.
+fn median(w: &VecDeque<f64>, buf: &mut Vec<f64>) -> f64 {
+    buf.clear();
+    buf.extend(w.iter().copied());
+    buf.sort_by(|a, b| a.total_cmp(b));
+    let n = buf.len();
+    if n % 2 == 1 {
+        buf[n / 2]
+    } else {
+        0.5 * (buf[n / 2 - 1] + buf[n / 2])
+    }
+}
+
+impl Monitor {
+    pub fn new(p: usize, cfg: MonitorCfg) -> Monitor {
+        assert!(cfg.window >= 1 && cfg.hysteresis >= 1 && cfg.probation_steps >= 1);
+        Monitor {
+            cfg,
+            state: State::Stable { over: 0 },
+            pred_total: 1.0,
+            pred_busy: vec![0.0; p],
+            plan_rates: vec![1.0; p],
+            rate_est: vec![1.0; p],
+            samples: vec![VecDeque::new(); p],
+            recent: VecDeque::new(),
+            last_gap: 0.0,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn install(&mut self, pred_total: f64, pred_busy: Vec<f64>, plan_rates: Vec<f64>) {
+        assert!(pred_total > 0.0, "predictions must be positive");
+        assert_eq!(pred_busy.len(), plan_rates.len());
+        if pred_busy.len() != self.pred_busy.len() {
+            // Device count changed (kill + remap): the old windows are
+            // in a different index space — start estimation over.
+            self.samples = vec![VecDeque::new(); pred_busy.len()];
+            self.rate_est = plan_rates.clone();
+        }
+        self.pred_total = pred_total;
+        self.pred_busy = pred_busy;
+        self.plan_rates = plan_rates;
+    }
+
+    /// Install a plan's predictions without touching the decision
+    /// state: the initial plan, or the incumbent after a rollback (the
+    /// `Rollback` decision already put the monitor in cooldown).
+    pub fn set_plan(&mut self, pred_total: f64, pred_busy: Vec<f64>, plan_rates: Vec<f64>) {
+        self.install(pred_total, pred_busy, plan_rates);
+    }
+
+    /// The driver took the `Replan` advice and switched: install the
+    /// new plan's predictions and start probation against the
+    /// `must_beat` captured when the advice fired.
+    pub fn switched(&mut self, pred_total: f64, pred_busy: Vec<f64>, plan_rates: Vec<f64>) {
+        let must_beat = match self.state {
+            State::Await { must_beat } => must_beat,
+            // Forced switch (e.g. device kill): nothing meaningful to
+            // probe against — install and cool down instead.
+            _ => {
+                self.install(pred_total, pred_busy, plan_rates);
+                self.state = State::Cooldown { left: self.cfg.cooldown_steps.max(1) };
+                return;
+            }
+        };
+        self.install(pred_total, pred_busy, plan_rates);
+        self.state = State::Probation {
+            left: self.cfg.probation_steps,
+            must_beat,
+            acc: 0.0,
+            n: 0,
+        };
+    }
+
+    /// The driver declined the `Replan` advice (the search returned
+    /// the same plan): cool down so the advice doesn't re-fire every
+    /// step while the condition persists.
+    pub fn dismissed(&mut self) {
+        self.state = State::Cooldown { left: self.cfg.cooldown_steps.max(1) };
+    }
+
+    /// Current absolute per-device rate estimates (what the re-planner
+    /// should price the search under).
+    pub fn rates(&self) -> &[f64] {
+        &self.rate_est
+    }
+
+    /// Relative gap of the most recent observed step.
+    pub fn gap(&self) -> f64 {
+        self.last_gap
+    }
+
+    /// Feed one executed step: total step seconds and, when available,
+    /// per-device busy seconds (from a `SimRun` trace or device-side
+    /// timers).  Returns the decision for this step.
+    pub fn observe(&mut self, obs_total: f64, obs_busy: Option<&[f64]>) -> Decision {
+        if let Some(busy) = obs_busy {
+            debug_assert_eq!(busy.len(), self.pred_busy.len());
+            let win = 2 * self.cfg.hysteresis - 1;
+            for d in 0..self.pred_busy.len().min(busy.len()) {
+                if self.pred_busy[d] > 0.0 {
+                    let sample = busy[d] / self.pred_busy[d] * self.plan_rates[d];
+                    let w = &mut self.samples[d];
+                    while w.len() >= win {
+                        w.pop_front();
+                    }
+                    w.push_back(sample);
+                    self.rate_est[d] = median(&self.samples[d], &mut self.scratch);
+                }
+            }
+        }
+        while self.recent.len() >= self.cfg.window {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(obs_total);
+        self.last_gap = (obs_total - self.pred_total) / self.pred_total;
+
+        match &mut self.state {
+            State::Cooldown { left } => {
+                *left -= 1;
+                if *left == 0 {
+                    self.state = State::Stable { over: 0 };
+                }
+                Decision::Steady
+            }
+            State::Await { .. } => Decision::Steady,
+            State::Probation { left, must_beat, acc, n } => {
+                *acc += obs_total;
+                *n += 1;
+                *left -= 1;
+                if *left == 0 {
+                    let mean = *acc / *n as f64;
+                    let ok = mean <= *must_beat * (1.0 - self.cfg.min_improve);
+                    self.state = State::Cooldown { left: self.cfg.cooldown_steps.max(1) };
+                    if ok {
+                        Decision::Commit
+                    } else {
+                        Decision::Rollback
+                    }
+                } else {
+                    Decision::Steady
+                }
+            }
+            State::Stable { over } => {
+                if self.last_gap > self.cfg.gap_threshold {
+                    *over += 1;
+                } else {
+                    *over = 0;
+                }
+                if *over >= self.cfg.hysteresis {
+                    // The bar is the *degraded* regime — the mean of
+                    // the over-gap streak, not of the whole window
+                    // (which still holds pre-fault steps no plan on
+                    // the degraded cluster could match).
+                    let k = self.cfg.hysteresis.min(self.recent.len());
+                    let must_beat =
+                        self.recent.iter().rev().take(k).sum::<f64>() / k as f64;
+                    self.state = State::Await { must_beat };
+                    Decision::Replan { must_beat }
+                } else {
+                    Decision::Steady
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mon() -> Monitor {
+        let mut m = Monitor::new(2, MonitorCfg::default());
+        m.set_plan(1.0, vec![0.6, 0.4], vec![1.0, 1.0]);
+        m
+    }
+
+    #[test]
+    fn small_gaps_never_fire() {
+        let mut m = mon();
+        for _ in 0..100 {
+            assert_eq!(m.observe(1.05, None), Decision::Steady);
+        }
+        assert!((m.gap() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn persistent_gap_fires_after_hysteresis_then_waits() {
+        let mut m = mon();
+        assert_eq!(m.observe(1.5, None), Decision::Steady);
+        // An in-threshold step resets the streak.
+        assert_eq!(m.observe(1.0, None), Decision::Steady);
+        assert_eq!(m.observe(1.5, None), Decision::Steady);
+        assert_eq!(m.observe(1.5, None), Decision::Steady);
+        let d = m.observe(1.5, None);
+        assert!(matches!(d, Decision::Replan { .. }), "3rd consecutive over-gap step: {d:?}");
+        // Awaiting the driver: no duplicate advice.
+        assert_eq!(m.observe(1.5, None), Decision::Steady);
+        // Dismissed advice cools down — the persisting gap stays quiet
+        // for cooldown_steps, then advice can fire again.
+        m.dismissed();
+        for _ in 0..MonitorCfg::default().cooldown_steps {
+            assert_eq!(m.observe(1.5, None), Decision::Steady);
+        }
+        let mut fired = false;
+        for _ in 0..MonitorCfg::default().hysteresis {
+            fired |= matches!(m.observe(1.5, None), Decision::Replan { .. });
+        }
+        assert!(fired, "advice re-fires after cooldown");
+    }
+
+    #[test]
+    fn probation_commits_good_switches_and_rolls_back_bad_ones() {
+        let cfg = MonitorCfg::default();
+        // Good switch: new plan delivers well under must_beat.
+        let mut m = mon();
+        for _ in 0..cfg.hysteresis {
+            m.observe(1.5, None);
+        }
+        m.switched(1.2, vec![0.7, 0.5], vec![1.25, 1.0]);
+        let mut last = Decision::Steady;
+        for _ in 0..cfg.probation_steps {
+            last = m.observe(1.2, None);
+        }
+        assert_eq!(last, Decision::Commit);
+
+        // Bad switch: the "better" plan is slower than the old mean.
+        let mut m = mon();
+        for _ in 0..cfg.hysteresis {
+            m.observe(1.5, None);
+        }
+        m.switched(1.2, vec![0.7, 0.5], vec![1.25, 1.0]);
+        let mut last = Decision::Steady;
+        for _ in 0..cfg.probation_steps {
+            last = m.observe(2.0, None);
+        }
+        assert_eq!(last, Decision::Rollback);
+        // Rollback put us in cooldown: quiet for a while.
+        assert_eq!(m.observe(2.0, None), Decision::Steady);
+    }
+
+    #[test]
+    fn rate_estimates_track_a_persistent_shift_via_median() {
+        let cfg = MonitorCfg::default();
+        let mut m = mon();
+        // Healthy samples first: estimates pinned at 1.0.
+        for _ in 0..5 {
+            m.observe(1.0, Some(&[0.6, 0.4]));
+        }
+        assert_eq!(m.rates(), &[1.0, 1.0]);
+        // Device 1 slows 2×: after `hysteresis` consistent samples the
+        // median flips — the same step the gap hysteresis confirms.
+        for _ in 0..cfg.hysteresis {
+            m.observe(1.4, Some(&[0.6, 0.8]));
+        }
+        assert!((m.rates()[1] - 2.0).abs() < 1e-12, "rates: {:?}", m.rates());
+        assert_eq!(m.rates()[0], 1.0);
+        // A single jitter spike is rejected outright.
+        m.observe(1.0, Some(&[3.0, 0.8]));
+        assert_eq!(m.rates()[0], 1.0, "median rejects one outlier");
+    }
+
+    #[test]
+    fn kill_remap_resets_estimation_dimensions() {
+        let mut m = mon();
+        m.observe(1.0, Some(&[0.6, 0.4]));
+        // Forced switch onto 3 devices (no Await state): cooldown, new
+        // windows sized for the new device space.
+        m.switched(2.0, vec![0.5, 0.5, 0.5], vec![1.0, 1.0, 1.5]);
+        assert_eq!(m.rates(), &[1.0, 1.0, 1.5]);
+        assert_eq!(m.observe(2.0, Some(&[0.5, 0.5, 0.5])), Decision::Steady);
+    }
+}

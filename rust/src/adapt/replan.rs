@@ -1,0 +1,179 @@
+//! The re-planner: warm-started incremental re-generation.
+//!
+//! A thin stateful wrapper over
+//! [`crate::generator::generate_with_cache`] that owns the two pieces
+//! of cross-re-plan state the generator deliberately leaves to its
+//! caller:
+//!
+//! - the persistent [`EvalCache`] — scores survive between re-plans
+//!   with the same evaluation context, so a re-plan that re-visits the
+//!   neighbourhood of the incumbent answers from the table;
+//! - the incumbent plan — each successful `plan()` becomes the warm
+//!   seed (and the migration-cost reference) of the next one.
+//!
+//! **Rate quantization.**  Monitor estimates move a little every step
+//! (medians of finite windows).  Feeding them to the generator raw
+//! would change the cache fingerprint on every re-plan, clearing the
+//! table exactly when it is most useful.  [`Replanner::quantize`]
+//! snaps estimates to a `1/64` grid (exact binary fractions — `1.0`
+//! stays bitwise `1.0`) with a floor at [`ReplanCfg::rate_floor`], and
+//! collapses an all-healthy vector to `None` so the unit-rate search
+//! stays on the generator's bit-pinned default path.
+//!
+//! When the device count changes (a kill dropped a device), the
+//! incumbent is structurally meaningless — it is discarded and the
+//! re-plan runs cold (the fingerprint change clears the cache anyway).
+
+use crate::generator::cache::{CacheStats, EvalCache};
+use crate::generator::{generate_with_cache, GenOptions, GenResult, Incumbent, MigrationCfg};
+use crate::profile::ProfiledData;
+
+/// Re-planner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplanCfg {
+    /// Migration pricing for the warm-started objective (and the
+    /// harness's switch-pause accounting).
+    pub migration: MigrationCfg,
+    /// Optional wall-clock budget per re-plan (passed through to
+    /// [`GenOptions::time_budget_s`]).
+    pub time_budget_s: Option<f64>,
+    /// Rate quantization grid (an exact binary fraction keeps
+    /// quantized healthy rates bitwise `1.0`).
+    pub quantum: f64,
+    /// Lower clamp on quantized rates (an estimate below this is
+    /// noise — no device credibly runs 4× faster than profiled).
+    pub rate_floor: f64,
+}
+
+impl Default for ReplanCfg {
+    fn default() -> ReplanCfg {
+        ReplanCfg {
+            migration: MigrationCfg::default(),
+            time_budget_s: None,
+            quantum: 1.0 / 64.0,
+            rate_floor: 0.25,
+        }
+    }
+}
+
+/// See the module docs.
+pub struct Replanner {
+    cfg: ReplanCfg,
+    cache: EvalCache,
+    last: Option<Incumbent>,
+    /// Total `plan()` calls served.
+    pub replans: usize,
+}
+
+impl Replanner {
+    pub fn new(cfg: ReplanCfg) -> Replanner {
+        assert!(cfg.quantum > 0.0 && cfg.rate_floor > 0.0);
+        Replanner { cfg, cache: EvalCache::new(), last: None, replans: 0 }
+    }
+
+    /// Snap rate estimates to the quantization grid; `None` when the
+    /// result is all-healthy (the generator's unit-rate path).
+    pub fn quantize(&self, rates: &[f64]) -> Option<Vec<f64>> {
+        let q: Vec<f64> = rates
+            .iter()
+            .map(|&r| ((r / self.cfg.quantum).round() * self.cfg.quantum).max(self.cfg.rate_floor))
+            .collect();
+        if q.iter().all(|&r| r == 1.0) {
+            None
+        } else {
+            Some(q)
+        }
+    }
+
+    /// Re-generate for `p` devices under the given rate estimates,
+    /// warm-started from the previous plan when the device space still
+    /// matches.  The result becomes the next call's incumbent.
+    pub fn plan(
+        &mut self,
+        profile: &ProfiledData,
+        p: usize,
+        nmb: usize,
+        rates: &[f64],
+    ) -> GenResult {
+        assert_eq!(rates.len(), p, "one rate estimate per (logical) device");
+        if self.last.as_ref().is_some_and(|inc| inc.placement.p != p) {
+            self.last = None;
+        }
+        let mut opts = GenOptions::new(p, nmb);
+        opts.rates = self.quantize(rates);
+        opts.time_budget_s = self.cfg.time_budget_s;
+        if let Some(inc) = &self.last {
+            opts.incumbent = Some(inc.clone());
+            opts.migration = Some(self.cfg.migration);
+        }
+        let res = generate_with_cache(profile, &opts, &mut self.cache);
+        self.last = Some(res.incumbent());
+        self.replans += 1;
+        res
+    }
+
+    /// Override the incumbent — the harness calls this after a
+    /// rollback so the next re-plan warm-starts from the plan that is
+    /// actually running, not the one that was abandoned.
+    pub fn set_incumbent(&mut self, inc: Incumbent) {
+        self.last = Some(inc);
+    }
+
+    pub fn incumbent(&self) -> Option<&Incumbent> {
+        self.last.as_ref()
+    }
+
+    /// Lifetime traffic of the persistent cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::model::build_model;
+
+    fn prof() -> ProfiledData {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        )
+    }
+
+    #[test]
+    fn quantization_snaps_floors_and_normalizes() {
+        let r = Replanner::new(ReplanCfg::default());
+        // Exactly representable grid points survive bitwise.
+        assert_eq!(r.quantize(&[1.0, 2.5, 1.0]), Some(vec![1.0, 2.5, 1.0]));
+        // Near-1 noise snaps back to the unit path.
+        assert_eq!(r.quantize(&[1.0000001, 0.9999999]), None);
+        // Off-grid estimates snap to the nearest 1/64.
+        let q = r.quantize(&[1.51, 1.0]).unwrap();
+        assert!((q[0] - 96.0 / 64.0).abs() < 1e-12 || (q[0] - 97.0 / 64.0).abs() < 1e-12);
+        // Implausibly fast estimates clamp at the floor.
+        assert_eq!(r.quantize(&[0.01, 1.0]), Some(vec![0.25, 1.0]));
+    }
+
+    #[test]
+    fn replans_warm_start_and_survive_device_loss() {
+        let p = prof();
+        let mut r = Replanner::new(ReplanCfg::default());
+        let cold = r.plan(&p, 4, 8, &[1.0; 4]);
+        assert!(r.incumbent().is_some());
+        // Same context: the second plan answers from the cache and the
+        // warm seed — a small fraction of the cold search.
+        let warm = r.plan(&p, 4, 8, &[1.0; 4]);
+        assert!(warm.cache.hits > 0);
+        assert!(warm.evals * 4 <= cold.evals, "warm {} vs cold {}", warm.evals, cold.evals);
+        assert_eq!(warm.report.total, cold.report.total, "re-plan of an unchanged world");
+        // Device count change: incumbent dropped, plan still produced.
+        let shrunk = r.plan(&p, 3, 8, &[1.0; 3]);
+        assert_eq!(shrunk.pipeline.placement.p, 3);
+        assert_eq!(r.incumbent().unwrap().placement.p, 3);
+        assert_eq!(r.replans, 3);
+    }
+}

@@ -1,0 +1,260 @@
+//! Fault & drift injection for the SimCluster — the adversary the
+//! elastic re-planning loop ([`crate::adapt`]) trains against.
+//!
+//! A [`FaultPlan`] describes how a cluster degrades over a run: smooth
+//! per-device drift (thermal throttling modeled as a slow sinusoid),
+//! small per-step jitter, step changes (stragglers appearing and
+//! disappearing), per-link slowdowns, and device deaths.  The view at
+//! any step — [`FaultPlan::view`] — is a *pure function* of
+//! `(plan, step)`: drift is closed-form, jitter is a counter-hash of
+//! `(seed, step, device)`, and events are explicit step ranges.  No
+//! sequential state means any step can be recomputed independently, so
+//! every scenario replays **bitwise** from its seed regardless of which
+//! steps a harness samples — the determinism the recovery tests in
+//! `tests/adapt_replan.rs` pin.
+//!
+//! Scales multiply *time*: `compute_scale = 2.0` means ops take twice
+//! as long (the device runs at half rate); `link_scale` likewise for
+//! transfer seconds on a directed device pair.  A dead device freezes —
+//! [`crate::cluster::sim::run_timed_faulted`] reports the resulting
+//! stall with the blocked peer identified.
+
+/// One discrete fault event.  Step ranges are `[from, until)`;
+/// `usize::MAX` means "forever".
+#[derive(Clone, Copy, Debug)]
+pub enum FaultEvent {
+    /// `device` computes `factor`× slower over the step range.
+    Straggler { device: usize, factor: f64, from: usize, until: usize },
+    /// Transfers on the directed link `src → dst` take `factor`× longer
+    /// over the step range.
+    LinkDelay { src: usize, dst: usize, factor: f64, from: usize, until: usize },
+    /// `device` dies at `step` (permanently).
+    Kill { device: usize, step: usize },
+}
+
+/// Smooth per-device drift: compute slows by up to `amplitude`
+/// (relative), following half a cosine hump per `period` steps, offset
+/// by `phase` (radians).  At `phase = 0` the drift is zero at step 0,
+/// so an initial plan starts accurate.
+#[derive(Clone, Copy, Debug)]
+pub struct Drift {
+    pub device: usize,
+    pub amplitude: f64,
+    pub period: f64,
+    pub phase: f64,
+}
+
+/// A deterministic fault schedule over `p` physical devices.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Physical devices covered by the plan.
+    pub p: usize,
+    /// Relative amplitude of per-step compute jitter (0 disables).
+    pub jitter: f64,
+    pub drift: Vec<Drift>,
+    pub events: Vec<FaultEvent>,
+}
+
+/// The materialized fault state at one step, in whatever device index
+/// space the caller built the plan for (the adapt harness remaps
+/// physical → logical before handing a view to the simulator).
+#[derive(Clone, Debug)]
+pub struct FaultView {
+    pub step: usize,
+    /// Per-device multiplier on op durations (≥ some small floor).
+    pub compute_scale: Vec<f64>,
+    /// Row-major `p×p` multiplier on transfer seconds for the directed
+    /// link `src·p + dst`.
+    pub link_scale: Vec<f64>,
+    pub alive: Vec<bool>,
+}
+
+impl FaultView {
+    /// The no-fault view (all scales 1, everyone alive).
+    pub fn healthy(p: usize) -> FaultView {
+        FaultView {
+            step: 0,
+            compute_scale: vec![1.0; p],
+            link_scale: vec![1.0; p * p],
+            alive: vec![true; p],
+        }
+    }
+
+    pub fn link(&self, src: usize, dst: usize) -> f64 {
+        self.link_scale[src * self.alive.len() + dst]
+    }
+
+    /// True when every scale is exactly 1 and everyone is alive — lets
+    /// the simulator take its unfaulted (bitwise-pinned) path.
+    pub fn is_healthy(&self) -> bool {
+        self.compute_scale.iter().all(|&s| s == 1.0)
+            && self.link_scale.iter().all(|&s| s == 1.0)
+            && self.alive.iter().all(|&a| a)
+    }
+}
+
+/// SplitMix64 finalizer — the same mixer [`crate::util::rng`] seeds
+/// with, used here as a counter hash so jitter at `(seed, step, device)`
+/// is stateless.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform in [0, 1) from a hash (53-bit mantissa fill).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// A fault-free plan (the control scenario).
+    pub fn healthy(p: usize) -> FaultPlan {
+        FaultPlan { seed: 0, p, jitter: 0.0, drift: Vec::new(), events: Vec::new() }
+    }
+
+    pub fn with_jitter(mut self, jitter: f64) -> FaultPlan {
+        self.jitter = jitter;
+        self
+    }
+
+    pub fn with_drift(mut self, d: Drift) -> FaultPlan {
+        self.drift.push(d);
+        self
+    }
+
+    pub fn with_event(mut self, e: FaultEvent) -> FaultPlan {
+        self.events.push(e);
+        self
+    }
+
+    /// First step at which any device is dead, if the plan kills one.
+    pub fn first_kill(&self) -> Option<usize> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::Kill { step, .. } => Some(*step),
+                _ => None,
+            })
+            .min()
+    }
+
+    /// First step at which any fault (drift aside) is active — used by
+    /// harnesses to anchor steps-to-recover.
+    pub fn first_onset(&self) -> Option<usize> {
+        self.events
+            .iter()
+            .map(|e| match e {
+                FaultEvent::Straggler { from, .. } => *from,
+                FaultEvent::LinkDelay { from, .. } => *from,
+                FaultEvent::Kill { step, .. } => *step,
+            })
+            .min()
+    }
+
+    /// Materialize the fault state at `step` — pure in `(self, step)`.
+    pub fn view(&self, step: usize) -> FaultView {
+        let mut v = FaultView::healthy(self.p);
+        v.step = step;
+        for d in &self.drift {
+            debug_assert!(d.device < self.p);
+            // Half-cosine hump: 0 at phase 0, peaks at `amplitude`.
+            let x = 2.0 * std::f64::consts::PI * (step as f64 / d.period) + d.phase;
+            let hump = 0.5 * (1.0 - x.cos());
+            v.compute_scale[d.device] *= 1.0 + d.amplitude * hump;
+        }
+        if self.jitter > 0.0 {
+            for dev in 0..self.p {
+                let h = mix64(
+                    self.seed ^ (step as u64).wrapping_mul(0x9e3779b97f4a7c15) ^ dev as u64,
+                );
+                // Symmetric multiplicative jitter in [1-j, 1+j).
+                v.compute_scale[dev] *= 1.0 + self.jitter * (2.0 * unit(h) - 1.0);
+            }
+        }
+        for e in &self.events {
+            match *e {
+                FaultEvent::Straggler { device, factor, from, until } => {
+                    if step >= from && step < until {
+                        v.compute_scale[device] *= factor;
+                    }
+                }
+                FaultEvent::LinkDelay { src, dst, factor, from, until } => {
+                    if step >= from && step < until {
+                        v.link_scale[src * self.p + dst] *= factor;
+                    }
+                }
+                FaultEvent::Kill { device, step: at } => {
+                    if step >= at {
+                        v.alive[device] = false;
+                    }
+                }
+            }
+        }
+        for s in &mut v.compute_scale {
+            *s = s.max(1e-3);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan { seed: 7, p: 4, jitter: 0.01, drift: Vec::new(), events: Vec::new() }
+            .with_drift(Drift { device: 1, amplitude: 0.3, period: 64.0, phase: 0.0 })
+            .with_event(FaultEvent::Straggler { device: 2, factor: 2.0, from: 10, until: 20 })
+            .with_event(FaultEvent::LinkDelay {
+                src: 0,
+                dst: 1,
+                factor: 3.0,
+                from: 5,
+                until: usize::MAX,
+            })
+            .with_event(FaultEvent::Kill { device: 3, step: 30 })
+    }
+
+    #[test]
+    fn views_replay_bitwise_and_statelessly() {
+        let p = plan();
+        // Same step twice, and out of order: bitwise identical.
+        let a = p.view(17);
+        let b = p.view(17);
+        assert_eq!(a.compute_scale, b.compute_scale);
+        assert_eq!(a.link_scale, b.link_scale);
+        assert_eq!(a.alive, b.alive);
+        let later = p.view(40);
+        let again = p.view(17);
+        assert_eq!(a.compute_scale, again.compute_scale);
+        assert!(!later.alive[3]);
+    }
+
+    #[test]
+    fn events_respect_their_ranges() {
+        let p = plan();
+        assert!(p.view(9).compute_scale[2] < 1.5, "straggler not yet active");
+        assert!(p.view(10).compute_scale[2] >= 2.0 * 0.99);
+        assert!(p.view(20).compute_scale[2] < 1.5, "straggler expired");
+        assert_eq!(p.view(4).link(0, 1), 1.0);
+        assert_eq!(p.view(5).link(0, 1), 3.0);
+        assert!(p.view(29).alive[3] && !p.view(30).alive[3]);
+        assert_eq!(p.first_kill(), Some(30));
+        assert_eq!(p.first_onset(), Some(5));
+    }
+
+    #[test]
+    fn drift_starts_at_zero_and_seeds_differ() {
+        let p = FaultPlan::healthy(2)
+            .with_drift(Drift { device: 0, amplitude: 0.5, period: 100.0, phase: 0.0 });
+        assert_eq!(p.view(0).compute_scale[0], 1.0, "phase-0 drift is 0 at step 0");
+        assert!(p.view(50).compute_scale[0] > 1.4, "hump peaks mid-period");
+        let a = FaultPlan { seed: 1, ..FaultPlan::healthy(2) }.with_jitter(0.05);
+        let b = FaultPlan { seed: 2, ..FaultPlan::healthy(2) }.with_jitter(0.05);
+        assert_ne!(a.view(3).compute_scale, b.view(3).compute_scale);
+        assert!(FaultPlan::healthy(3).view(12).is_healthy());
+    }
+}

@@ -5,11 +5,16 @@
 //! - [`sim`]: discrete-event simulator with rendezvous send semantics —
 //!   instruction-level timing (validates the executor's comm passes and
 //!   quantifies overlap/deadlock-repair effects);
+//! - [`fault`]: deterministic fault & drift injection for [`sim`] —
+//!   the scenario generator the elastic re-planning loop
+//!   ([`crate::adapt`]) is exercised against;
 //! - [`real`]: the message fabric for the thread-per-device RealCluster
 //!   (used by [`crate::trainer`] to run actual PJRT compute).
 
+pub mod fault;
 pub mod real;
 pub mod sim;
 pub mod spec;
 
+pub use fault::{Drift, FaultEvent, FaultPlan, FaultView};
 pub use spec::{ClusterSpec, DeviceSpec};

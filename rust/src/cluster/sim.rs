@@ -25,9 +25,18 @@
 //!
 //! Used for executor validation (Fig 11/12), the overlap ablation, and
 //! SimCluster traces.
+//!
+//! [`run_timed_faulted`] additionally threads a
+//! [`crate::cluster::fault::FaultView`] through both modes: compute
+//! scales multiply op durations per component (bitwise-compatible with
+//! rated stage tables, see [`crate::perfmodel::StageTable::rate_d`]),
+//! link scales stretch transfers, and dead devices freeze — producing
+//! the degraded/stalled step timings the elastic re-planning loop
+//! ([`crate::adapt`]) observes.
 
 use std::collections::HashMap;
 
+use crate::cluster::fault::FaultView;
 use crate::executor::{Chan, Program, Step};
 use crate::partition::Partition;
 use crate::perfmodel::engine::ready_at;
@@ -104,20 +113,95 @@ pub struct SimRun {
     pub events: Vec<TraceEvent>,
 }
 
-/// Deadlock during timed execution.
+/// Deadlock (or fault-induced stall) during timed execution, with
+/// enough context to act on: the blocked instruction, the channel it
+/// blocks on, and the peer device that failed to make it ready.
 #[derive(Debug)]
 pub struct SimDeadlock {
+    /// The reported blocked device (a live one when any live device is
+    /// blocked; the frozen device itself when only dead devices have
+    /// pending work).
     pub device: usize,
     pub pc: usize,
+    /// Debug rendering of the blocked instruction.
+    pub instr: String,
+    /// Channel the instruction blocks on (None only when the reported
+    /// device is dead and frozen on a compute).
+    pub chan: Option<Chan>,
+    /// The device on the far side of `chan`, when resolvable.
+    pub peer: Option<usize>,
+    /// The stall is fault-induced: the peer (or the reported device)
+    /// was killed by fault injection rather than by a program bug.
+    pub fault_stall: bool,
 }
 
 impl std::fmt::Display for SimDeadlock {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "sim deadlock: device {} at pc {}", self.device, self.pc)
+        write!(
+            f,
+            "sim {}: device {} blocked at pc {} on {}",
+            if self.fault_stall { "stall (fault-induced)" } else { "deadlock" },
+            self.device,
+            self.pc,
+            self.instr
+        )?;
+        if let Some((mb, from, to, kind)) = self.chan {
+            write!(f, " [chan {} mb{mb} s{from}->s{to}]", kind.name())?;
+        }
+        if let Some(p) = self.peer {
+            write!(f, " (peer device {p}{})", if self.fault_stall { ", dead" } else { "" })?;
+        }
+        Ok(())
     }
 }
 
 impl std::error::Error for SimDeadlock {}
+
+/// Build the actionable stall report: prefer a live blocked device
+/// (its instruction names the channel), fall back to a frozen dead one.
+/// Error path only — the O(instructions) stage→device scans don't touch
+/// successful runs.
+fn diagnose(prog: &Program, pc: &[usize], alive: &[bool]) -> SimDeadlock {
+    let pending = |d: usize| pc[d] < prog.per_device[d].len();
+    let dev_of_stage = |stage: u32| -> Option<usize> {
+        prog.per_device.iter().position(|list| {
+            list.iter()
+                .any(|i| matches!(i.step(), Step::Compute { stage: s, .. } if s == stage))
+        })
+    };
+    let chan_of = |d: usize| -> Option<Chan> {
+        match prog.per_device[d][pc[d]].step() {
+            Step::Send(c) | Step::Recv(c) | Step::Wait(c) => Some(c),
+            Step::Compute { .. } => None,
+        }
+    };
+    let peer_of = |d: usize| -> Option<usize> {
+        let (_, from, to, _) = chan_of(d)?;
+        let a = dev_of_stage(from);
+        let b = dev_of_stage(to);
+        if a == Some(d) {
+            b
+        } else {
+            a
+        }
+    };
+    // Prefer the live device blocked *directly* on a dead peer — the
+    // root of a fault-induced stall — then any live blocked device,
+    // then a frozen dead one.
+    let live: Vec<usize> = (0..prog.p).filter(|&d| alive[d] && pending(d)).collect();
+    let d = live
+        .iter()
+        .copied()
+        .find(|&d| peer_of(d).is_some_and(|p| !alive[p]))
+        .or_else(|| live.first().copied())
+        .or_else(|| (0..prog.p).find(|&d| pending(d)))
+        .unwrap_or(0);
+    let ins = prog.per_device[d][pc[d]];
+    let (chan, peer) = (chan_of(d), peer_of(d));
+    let fault_stall =
+        !alive[d] || peer.is_some_and(|p| !alive[p]) || alive.iter().any(|&a| !a);
+    SimDeadlock { device: d, pc: pc[d], instr: format!("{ins:?}"), chan, peer, fault_stall }
+}
 
 /// Execute `prog` in virtual time under the default **rendezvous**
 /// pricing (see module docs); [`run_timed_with`] selects the mode.
@@ -142,21 +226,47 @@ pub fn run_timed_with(
     prog: &Program,
     opts: SimOptions,
 ) -> Result<SimRun, SimDeadlock> {
+    run_timed_faulted(profile, partition, prog, opts, None)
+}
+
+/// [`run_timed_with`] under an injected [`FaultView`]: per-device
+/// compute scales multiply each op-duration *component* (so a faulted
+/// matched-mode run agrees bitwise with the performance model on a
+/// rated [`crate::perfmodel::StageTable`] built from the same scales),
+/// link scales multiply transfer seconds on the directed device pair,
+/// and dead devices freeze — the resulting stall is reported as an
+/// actionable [`SimDeadlock`] with `fault_stall` set.  `faults: None`
+/// (and a healthy view) take the exact unfaulted arithmetic.
+pub fn run_timed_faulted(
+    profile: &ProfiledData,
+    partition: &Partition,
+    prog: &Program,
+    opts: SimOptions,
+    faults: Option<&FaultView>,
+) -> Result<SimRun, SimDeadlock> {
+    if let Some(f) = faults {
+        assert_eq!(f.compute_scale.len(), prog.p, "fault view must cover every device");
+    }
     let s_n = partition.n_stages();
     // Identical Step-1 aggregation to `StageTable::build`, so matched
     // mode consumes bit-equal durations and comm terms.
     let costs: Vec<_> =
         (0..s_n).map(|s| profile.stage_cost(partition.stage_range(s))).collect();
-    let dur = |op: OpKind, s: usize| match op {
-        OpKind::F => costs[s].f,
+    // `x * 1.0` is a bitwise identity for the finite costs here, so the
+    // unfaulted path is unchanged bit-for-bit.
+    let cscale = |d: usize| faults.map_or(1.0, |f| f.compute_scale[d]);
+    let lscale =
+        |src: usize, dst: usize| faults.map_or(1.0, |f| f.link_scale[src * prog.p + dst]);
+    let dur = |op: OpKind, s: usize, cs: f64| match op {
+        OpKind::F => costs[s].f * cs,
         OpKind::B => {
             if prog.split_bw {
-                costs[s].b
+                costs[s].b * cs
             } else {
-                costs[s].b + costs[s].w
+                costs[s].b * cs + costs[s].w * cs
             }
         }
-        OpKind::W => costs[s].w,
+        OpKind::W => costs[s].w * cs,
     };
     // P2P seconds per channel: an F message carries the producer
     // stage's boundary bytes (`comm_f_in[to]`), a B message the
@@ -170,12 +280,17 @@ pub fn run_timed_with(
         }
     };
 
+    let alive: Vec<bool> = match faults {
+        Some(f) => f.alive.clone(),
+        None => vec![true; prog.p],
+    };
     let mut pc = vec![0usize; prog.p];
     let mut clock = vec![0.0f64; prog.p];
     let mut busy = vec![0.0f64; prog.p];
-    // Matched mode: send execution times.  Rendezvous mode: recv post
-    // (time, device), transfer arrivals, directed link next-free times.
-    let mut send_time: HashMap<Chan, f64> = HashMap::new();
+    // Matched mode: send execution (time, sender device).  Rendezvous
+    // mode: recv post (time, device), transfer arrivals, directed link
+    // next-free times.
+    let mut send_time: HashMap<Chan, (f64, usize)> = HashMap::new();
     let mut recv_post: HashMap<Chan, (f64, usize)> = HashMap::new();
     let mut arrival: HashMap<Chan, f64> = HashMap::new();
     let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
@@ -183,10 +298,14 @@ pub fn run_timed_with(
     loop {
         let mut progressed = false;
         for d in 0..prog.p {
+            if !alive[d] {
+                continue; // a dead device freezes mid-program
+            }
+            let cs = cscale(d);
             while let Some(ins) = prog.per_device[d].get(pc[d]) {
                 match ins.step() {
                     Step::Compute { op, mb, stage } => {
-                        let t = dur(op, stage as usize);
+                        let t = dur(op, stage as usize, cs);
                         if opts.collect_trace {
                             events.push(TraceEvent {
                                 name: format!("{}{}@s{}", op.name(), mb, stage),
@@ -214,7 +333,7 @@ pub fn run_timed_with(
                         if opts.matched {
                             // Eager transport: record the producer-side
                             // departure; the wait prices the transfer.
-                            send_time.insert(chan, clock[d]);
+                            send_time.insert(chan, (clock[d], d));
                         } else {
                             // Rendezvous: block until the peer posted.
                             let Some(&(r, rd)) = recv_post.get(&chan) else { break };
@@ -224,7 +343,7 @@ pub fn run_timed_with(
                                     link_free.get(&(d, rd)).copied().unwrap_or(0.0),
                                 );
                             }
-                            let t = comm_time(&chan);
+                            let t = comm_time(&chan) * lscale(d, rd);
                             arrival.insert(chan, start + t);
                             if opts.link_contention {
                                 link_free.insert((d, rd), start + t);
@@ -253,9 +372,9 @@ pub fn run_timed_with(
                     }
                     Step::Wait(chan) => {
                         if opts.matched {
-                            let Some(&dep) = send_time.get(&chan) else { break };
-                            clock[d] =
-                                ready_at(dep, comm_time(&chan), clock[d], prog.overlap_aware);
+                            let Some(&(dep, sd)) = send_time.get(&chan) else { break };
+                            let comm = comm_time(&chan) * lscale(sd, d);
+                            clock[d] = ready_at(dep, comm, clock[d], prog.overlap_aware);
                         } else {
                             let Some(&a) = arrival.get(&chan) else { break };
                             clock[d] = clock[d].max(a);
@@ -270,8 +389,7 @@ pub fn run_timed_with(
             break;
         }
         if !progressed {
-            let d = (0..prog.p).find(|&d| pc[d] < prog.per_device[d].len()).unwrap();
-            return Err(SimDeadlock { device: d, pc: pc[d] });
+            return Err(diagnose(prog, &pc, &alive));
         }
     }
     Ok(SimRun {
@@ -364,6 +482,116 @@ mod tests {
             d0.push(r);
         }
         assert!(run_timed(&prof, &part, &prog, false).is_err());
+    }
+
+    #[test]
+    fn deadlock_report_names_instruction_channel_and_peer() {
+        // Same broken program as above — the report must be actionable:
+        // blocked instruction, channel, and the peer on its far side.
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let sch = one_f_one_b(4, 4);
+        let mut prog =
+            lower(&sch, &pl, LowerOptions { repair_deadlocks: false, hoist_window: 0 });
+        let d0 = &mut prog.per_device[0];
+        let rpos = d0.iter().position(|i| i.is_recv()).unwrap();
+        let r = d0.remove(rpos);
+        d0.push(r);
+        let err = run_timed(&prof, &part, &prog, false).unwrap_err();
+        assert!(!err.instr.is_empty() && err.instr != "?");
+        let chan = err.chan.expect("blocked instruction must name a channel");
+        assert!(err.peer.is_some(), "peer device must be resolved");
+        assert_ne!(err.peer, Some(err.device));
+        assert!(!err.fault_stall, "a program bug is not a fault stall");
+        let msg = err.to_string();
+        assert!(msg.contains("deadlock") && msg.contains("chan"), "{msg}");
+        assert!((chan.1 as usize) < part.n_stages() && (chan.2 as usize) < part.n_stages());
+    }
+
+    #[test]
+    fn killed_device_stalls_with_dead_peer_report() {
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let sch = one_f_one_b(4, 8);
+        let prog = lower(&sch, &pl, LowerOptions::default());
+        let mut view = crate::cluster::fault::FaultView::healthy(4);
+        view.alive[2] = false;
+        let err = run_timed_faulted(&prof, &part, &prog, SimOptions::rendezvous(), Some(&view))
+            .unwrap_err();
+        assert!(err.fault_stall, "kill must be reported as a fault stall: {err}");
+        // The report points at a live device blocked on the dead one
+        // (device 2 owns stage 2 under the sequential placement).
+        assert_ne!(err.device, 2);
+        assert_eq!(err.peer, Some(2));
+    }
+
+    #[test]
+    fn healthy_fault_view_is_bitwise_inert() {
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let mut sch = one_f_one_b(4, 8);
+        sch.overlap_aware = true;
+        let prog = lower(&sch, &pl, LowerOptions::default());
+        let healthy = crate::cluster::fault::FaultView::healthy(4);
+        for opts in [SimOptions::matched(), SimOptions::rendezvous()] {
+            let base = run_timed_with(&prof, &part, &prog, opts).unwrap();
+            let faulted =
+                run_timed_faulted(&prof, &part, &prog, opts, Some(&healthy)).unwrap();
+            assert_eq!(base.makespan, faulted.makespan);
+            assert_eq!(base.t_d, faulted.t_d);
+            assert_eq!(base.busy_d, faulted.busy_d);
+        }
+    }
+
+    #[test]
+    fn faulted_matched_run_matches_rated_stage_table() {
+        // The fault view scales op durations per component, so a
+        // matched-mode faulted run must agree *bitwise* with the
+        // performance model on a stage table rated with the same
+        // per-device multipliers — the anchor that lets the elastic
+        // re-planner trust rated predictions.
+        use crate::memory::MemCaps;
+        use crate::perfmodel::{simulate_in, SimArena, StageTable};
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let rates = [1.0, 2.5, 1.0, 1.3];
+        for split in [false, true] {
+            let mut sch = if split { zb_h1(4, 8) } else { one_f_one_b(4, 8) };
+            sch.overlap_aware = true;
+            let prog = lower(&sch, &pl, LowerOptions::default());
+            let table = StageTable::build_rated(&prof, &part, &pl, &rates);
+            let caps = MemCaps::unbounded(4);
+            let mut arena = SimArena::new();
+            let pm = simulate_in(&mut arena, &table, &caps, &sch, false).unwrap();
+            let mut view = crate::cluster::fault::FaultView::healthy(4);
+            view.compute_scale.copy_from_slice(&rates);
+            let run =
+                run_timed_faulted(&prof, &part, &prog, SimOptions::matched(), Some(&view))
+                    .unwrap();
+            assert_eq!(run.makespan, pm.total, "split={split}");
+            assert_eq!(run.t_d, pm.t_d);
+            assert_eq!(run.busy_d, pm.busy_d);
+        }
+    }
+
+    #[test]
+    fn link_delay_slows_the_faulted_run() {
+        let (prof, part) = comm_heavy(4);
+        let mut sch = gpipe(4, 4);
+        sch.overlap_aware = true;
+        let prog = lower(&sch, &sequential(4), LowerOptions::default());
+        let base = run_timed(&prof, &part, &prog, false).unwrap();
+        let mut view = crate::cluster::fault::FaultView::healthy(4);
+        view.link_scale[6] = 4.0; // directed link 1 → 2 (src·p + dst)
+        let slowed =
+            run_timed_faulted(&prof, &part, &prog, SimOptions::rendezvous(), Some(&view))
+                .unwrap();
+        assert!(
+            slowed.makespan > base.makespan,
+            "link delay must slow the run ({} !> {})",
+            slowed.makespan,
+            base.makespan
+        );
     }
 
     /// One layer per stage with unit costs and a transfer five times

@@ -77,6 +77,7 @@ pub fn fig11(ctx: &Ctx) -> Result<String> {
             method,
             collect_trace: true,
             live_log: false,
+            monitor: None,
         };
         let r = train(store.clone(), &kinds, &opts)?;
         // Performance-model simulated trace (measured profile).
@@ -134,6 +135,7 @@ pub fn fig12(ctx: &Ctx) -> Result<String> {
             method,
             collect_trace: false,
             live_log: false,
+            monitor: None,
         };
         let r = train(store.clone(), &kinds, &opts)?;
         let pm = simulate(

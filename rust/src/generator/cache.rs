@@ -16,14 +16,34 @@
 //! score), which is what makes cache hits *provably* unable to change
 //! the search trajectory.
 //!
+//! The cache is **bounded** (default [`EvalCache::DEFAULT_CAPACITY`])
+//! with FIFO eviction: a long-lived elastic re-planning loop keeps one
+//! cache across hundreds of `generate()` calls, so unbounded growth
+//! would be a leak.  Eviction order is insertion order (a `VecDeque`
+//! of keys), *never* hash-map iteration order — the engine-agreement
+//! tests compare hit counters across runs, so eviction must be
+//! deterministic.  Hit/miss/evict counters ([`CacheStats`]) are
+//! surfaced per search in `GenResult`.
+//!
+//! Scores are only valid for the exact evaluation context — profile
+//! bits, caps, `nmb`, engine, per-device rates.  A caller-owned cache
+//! carried across re-plans declares its context via
+//! [`EvalCache::retarget`] (a fingerprint computed by
+//! `generator::generate_with_cache`): same fingerprint ⇒ entries
+//! survive (the warm re-plan fast path), any change ⇒ the cache clears
+//! itself rather than replay stale scores.
+//!
 //! [`PrepPool`] is the allocation side of the same story: move batches
 //! used to clone a fresh `StageTable` (a dozen `Vec`s) per candidate
 //! and drop them all at the end of the phase.  The pool recycles the
 //! tables instead — `clone_from`/`rebuild` overwrite every entry in
 //! place, so a recycled table is bit-identical to a fresh one while
-//! steady-state candidate construction allocates nothing.
+//! steady-state candidate construction allocates nothing.  A pool
+//! seeded with per-device rates ([`PrepPool::with_rates`]) builds every
+//! candidate table rated, which is how the re-planner prices the whole
+//! search under the monitor's drift estimates.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::partition::Partition;
 use crate::placement::Placement;
@@ -64,25 +84,111 @@ impl CandKey {
     }
 }
 
-/// Transposition table: structural candidate identity → score.  Lives
-/// for one `generate()` call (profile, caps, nmb and engine are fixed
-/// per search, so they are not part of the key).
-#[derive(Default)]
+/// Cumulative cache traffic counters (monotone over the cache's life;
+/// `GenResult` reports per-search deltas).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Component-wise `self - earlier` (for per-search deltas).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+        }
+    }
+}
+
+/// Transposition table: structural candidate identity → raw step
+/// makespan.  Per-search constants (profile, caps, nmb, engine, rates)
+/// are not part of the key; a cache reused across searches must be
+/// [`EvalCache::retarget`]ed to the new context's fingerprint first
+/// (done by `generate_with_cache`).  Bounded — see module docs.
 pub struct EvalCache {
     map: HashMap<CandKey, f64>,
+    /// Insertion-order queue driving FIFO eviction (deterministic,
+    /// unlike hash-map iteration order).
+    queue: VecDeque<CandKey>,
+    capacity: usize,
+    /// Evaluation-context fingerprint the entries are valid for.
+    epoch: Option<u64>,
+    stats: CacheStats,
+}
+
+impl Default for EvalCache {
+    fn default() -> EvalCache {
+        EvalCache::new()
+    }
 }
 
 impl EvalCache {
+    /// Generous default: a full cold search on paper-scale models
+    /// inserts a few thousand entries, so this never evicts within one
+    /// search while still bounding a long-lived re-planning loop.
+    pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
     pub fn new() -> EvalCache {
-        EvalCache::default()
+        EvalCache::with_capacity(Self::DEFAULT_CAPACITY)
     }
 
-    pub fn get(&self, key: &CandKey) -> Option<f64> {
-        self.map.get(key).copied()
+    pub fn with_capacity(capacity: usize) -> EvalCache {
+        assert!(capacity >= 1);
+        EvalCache {
+            map: HashMap::new(),
+            queue: VecDeque::new(),
+            capacity,
+            epoch: None,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Declare the evaluation context: entries survive iff the
+    /// fingerprint matches the one the cache was last retargeted to
+    /// (traffic counters always survive — they describe the cache, not
+    /// the entries).
+    pub fn retarget(&mut self, fingerprint: u64) {
+        if self.epoch != Some(fingerprint) {
+            self.map.clear();
+            self.queue.clear();
+            self.epoch = Some(fingerprint);
+        }
+    }
+
+    pub fn get(&mut self, key: &CandKey) -> Option<f64> {
+        let hit = self.map.get(key).copied();
+        match hit {
+            Some(_) => self.stats.hits += 1,
+            None => self.stats.misses += 1,
+        }
+        hit
     }
 
     pub fn insert(&mut self, key: CandKey, score: f64) {
+        if self.map.contains_key(&key) {
+            // Deterministic engines re-derive the same score; keep the
+            // original queue position (no duplicate queue entries).
+            return;
+        }
+        while self.map.len() >= self.capacity {
+            let old = self.queue.pop_front().expect("queue tracks every entry");
+            self.map.remove(&old);
+            self.stats.evictions += 1;
+        }
+        self.queue.push_back(key.clone());
         self.map.insert(key, score);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn len(&self) -> usize {
@@ -101,11 +207,21 @@ impl EvalCache {
 #[derive(Default)]
 pub struct PrepPool {
     free: Vec<StageTable>,
+    /// Per-device compute-time multipliers stamped into every built
+    /// table (empty = unit rates, the plain search).
+    rates: Vec<f64>,
 }
 
 impl PrepPool {
     pub fn new() -> PrepPool {
         PrepPool::default()
+    }
+
+    /// A pool whose [`PrepPool::build`] produces *rated* tables — the
+    /// re-planner's degraded-cluster pricing.  `take_like` is
+    /// unaffected (a clone inherits the source's rates).
+    pub fn with_rates(rates: Vec<f64>) -> PrepPool {
+        PrepPool { free: Vec::new(), rates }
     }
 
     /// A table equal to `src` (recycled buffers when available).
@@ -119,8 +235,8 @@ impl PrepPool {
         }
     }
 
-    /// A table built from scratch for `(part, plac)` (recycled buffers
-    /// when available).
+    /// A table built from scratch for `(part, plac)` under the pool's
+    /// rates (recycled buffers when available).
     pub fn build(
         &mut self,
         profile: &ProfiledData,
@@ -129,10 +245,10 @@ impl PrepPool {
     ) -> StageTable {
         match self.free.pop() {
             Some(mut t) => {
-                t.rebuild(profile, part, plac);
+                t.rebuild_rated(profile, part, plac, &self.rates);
                 t
             }
-            None => StageTable::build(profile, part, plac),
+            None => StageTable::build_rated(profile, part, plac, &self.rates),
         }
     }
 
@@ -198,6 +314,76 @@ mod tests {
         cache.insert(key.clone(), 42.0);
         assert_eq!(cache.get(&key), Some(42.0));
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_fifo_with_counters() {
+        let pr = prof();
+        let part = uniform(pr.n_layers(), 4);
+        let plac = sequential(4);
+        let key_i = |i: usize| {
+            CandKey::of(
+                &part,
+                &plac,
+                SchedKnobs { mem_cap_factor: 1.0 / (i as f64 + 1.0), ..SchedKnobs::default() },
+            )
+        };
+        let mut cache = EvalCache::with_capacity(4);
+        for i in 0..10 {
+            cache.insert(key_i(i), i as f64);
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats().evictions, 6);
+        // FIFO: the oldest entries went first, the newest survive.
+        assert_eq!(cache.get(&key_i(0)), None);
+        assert_eq!(cache.get(&key_i(9)), Some(9.0));
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        // Re-inserting an existing key neither grows nor evicts (and
+        // keeps the original score — deterministic engines can only
+        // re-derive the same number anyway).
+        cache.insert(key_i(9), 9.0);
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats().evictions, 6);
+        let delta = cache.stats().since(&st);
+        assert_eq!(delta, CacheStats { hits: 0, misses: 0, evictions: 0 });
+    }
+
+    #[test]
+    fn retarget_clears_only_on_context_change() {
+        let pr = prof();
+        let key =
+            CandKey::of(&uniform(pr.n_layers(), 4), &sequential(4), SchedKnobs::default());
+        let mut cache = EvalCache::new();
+        cache.retarget(0xabc);
+        cache.insert(key.clone(), 1.5);
+        cache.retarget(0xabc); // same context: entries survive
+        assert_eq!(cache.get(&key), Some(1.5));
+        cache.retarget(0xdef); // context changed: entries cleared
+        assert!(cache.is_empty());
+        assert_eq!(cache.get(&key), None);
+        // Traffic counters describe the cache, not the entries.
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn rated_pool_builds_rated_tables() {
+        let pr = prof();
+        let part = balanced(&pr, 4);
+        let plac = sequential(4);
+        let rates = vec![1.0, 2.0, 1.0, 1.0];
+        let mut pool = PrepPool::with_rates(rates.clone());
+        let built = pool.build(&pr, &part, &plac);
+        let fresh = StageTable::build_rated(&pr, &part, &plac, &rates);
+        assert_eq!(built.f, fresh.f);
+        assert_eq!(built.bw, fresh.bw);
+        assert_eq!(built.rate_d, fresh.rate_d);
+        // Recycling keeps producing rated tables.
+        pool.recycle(built);
+        let again = pool.build(&pr, &part, &plac);
+        assert_eq!(again.f, fresh.f);
+        assert_eq!(again.rate_d, fresh.rate_d);
     }
 
     #[test]

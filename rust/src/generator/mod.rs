@@ -67,6 +67,26 @@
 //! re-simulate with the O(slots·P) reference kernel, single-threaded) —
 //! the two engines produce identical pipelines at identical eval
 //! counts, which is what `benches/generator.rs` compares.
+//!
+//! **Elastic re-planning hooks** (DESIGN.md § Elastic re-planning;
+//! consumed by [`crate::adapt`]).  [`generate_with_cache`] runs the
+//! same search against a *caller-owned* [`cache::EvalCache`] that
+//! persists across re-plans — retargeted to a fingerprint of the
+//! evaluation context first, so a stale score can never replay.  On
+//! top of that, [`GenOptions`] grows four orthogonal knobs:
+//! [`GenOptions::incumbent`] replaces the seed grid with the
+//! currently-running plan (warm start — near a good optimum the loop
+//! converges in a handful of evaluations); [`GenOptions::rates`]
+//! prices every candidate under per-device compute slowdown estimates
+//! (rated stage tables, [`StageTable::build_rated`]);
+//! [`GenOptions::migration`] charges candidates an amortized
+//! weight+optimizer shipping cost for every layer whose owner changes
+//! relative to the incumbent (so a marginally-better plan that moves
+//! half the model loses to a slightly-worse plan that moves nothing);
+//! and [`GenOptions::time_budget_s`] bounds the tuning loop by wall
+//! clock, returning the best plan so far with
+//! [`GenResult::budget_exhausted`] set.  All four default off, and the
+//! default path is bit-identical to a plain [`generate`] call.
 
 pub mod cache;
 pub mod pool;
@@ -87,7 +107,8 @@ use crate::perfmodel::{
 use crate::profile::ProfiledData;
 use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
 
-use cache::{CandKey, EvalCache, PrepPool};
+use crate::memory::model::layer_migration_bytes;
+use cache::{CacheStats, CandKey, EvalCache, PrepPool};
 use pool::{EvalPool, Job};
 
 /// Acceptance epsilon: a move must beat the incumbent by more than
@@ -156,6 +177,26 @@ pub struct GenOptions {
     /// chosen pipeline is unchanged, pinned by
     /// `tests/perfmodel_collapse.rs`; default on).
     pub collapse: bool,
+    /// Warm start: seed the search from this plan *instead of* the
+    /// seed grid (the elastic re-planner passes the currently-running
+    /// pipeline).  Must cover the same `p` devices and layer count.
+    pub incumbent: Option<Incumbent>,
+    /// Charge candidates for weights/optimizer-state migration away
+    /// from [`GenOptions::incumbent`] (no effect without one).
+    pub migration: Option<MigrationCfg>,
+    /// Per-device compute-time multipliers (`> 1` = slower): every
+    /// candidate is priced on a rated [`StageTable`], so the search
+    /// optimizes the *degraded* cluster the monitor observes.  `None`
+    /// or all-`1.0` is bit-identical to the plain search.  Rates other
+    /// than 1.0 require [`EvalEngine::Fast`] (the reference engine
+    /// prices from the profile directly).
+    pub rates: Option<Vec<f64>>,
+    /// Wall-clock budget for the tuning loop, in seconds.  Seeds are
+    /// always evaluated (there must be *a* plan to return); once the
+    /// budget is spent the loop stops at the next phase boundary and
+    /// the best plan so far is returned with
+    /// [`GenResult::budget_exhausted`] set.
+    pub time_budget_s: Option<f64>,
 }
 
 impl GenOptions {
@@ -172,12 +213,35 @@ impl GenOptions {
             prune_bounds: true,
             memoize: true,
             collapse: true,
+            incumbent: None,
+            migration: None,
+            rates: None,
+            time_budget_s: None,
         }
     }
 
     /// Search under the given per-device memory capacities.
     pub fn with_mem_caps(mut self, caps: MemCaps) -> Self {
         self.mem_caps = Some(caps);
+        self
+    }
+
+    /// Warm-start from `incumbent`, charging migration per `cfg`.
+    pub fn with_incumbent(mut self, incumbent: Incumbent, cfg: MigrationCfg) -> Self {
+        self.incumbent = Some(incumbent);
+        self.migration = Some(cfg);
+        self
+    }
+
+    /// Price the search under per-device compute-time multipliers.
+    pub fn with_rates(mut self, rates: Vec<f64>) -> Self {
+        self.rates = Some(rates);
+        self
+    }
+
+    /// Bound the tuning loop by wall clock.
+    pub fn with_time_budget(mut self, seconds: f64) -> Self {
+        self.time_budget_s = Some(seconds);
         self
     }
 
@@ -198,6 +262,87 @@ impl GenOptions {
     pub fn no_collapse(mut self) -> Self {
         self.collapse = false;
         self
+    }
+}
+
+/// The currently-running plan, as a warm-start seed for the next
+/// re-generation ([`GenResult::incumbent`] packages one).
+#[derive(Clone, Debug)]
+pub struct Incumbent {
+    pub partition: Partition,
+    pub placement: Placement,
+    pub knobs: SchedKnobs,
+}
+
+/// How migration away from the incumbent is charged.  A switch ships
+/// weights + optimizer state for every layer whose owner changes
+/// ([`layer_migration_bytes`]); the one-off shipping time is amortized
+/// over `horizon_steps` future steps and added to each candidate's
+/// per-step objective — so a plan that is `ε` faster but moves half
+/// the model loses to one that is `ε` slower and moves nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationCfg {
+    /// Effective migration bandwidth (bytes/s) while the pipeline is
+    /// paused for the switch.
+    pub bw: f64,
+    /// Steps the new plan is expected to run before the next re-plan —
+    /// the amortization window.
+    pub horizon_steps: f64,
+}
+
+impl Default for MigrationCfg {
+    fn default() -> MigrationCfg {
+        MigrationCfg { bw: 25e9, horizon_steps: 200.0 }
+    }
+}
+
+/// Precomputed migration pricer: incumbent owner and shipping bytes
+/// per *layer*, so a candidate's penalty is one O(layers) scan
+/// regardless of how its stage boundaries differ from the incumbent's.
+struct MigScorer {
+    /// Incumbent owning device per layer.
+    inc_dev: Vec<u32>,
+    /// Weights + optimizer bytes per layer.
+    bytes: Vec<f64>,
+    bw: f64,
+    horizon: f64,
+}
+
+impl MigScorer {
+    fn new(profile: &ProfiledData, inc: &Incumbent, cfg: MigrationCfg) -> MigScorer {
+        assert!(cfg.bw > 0.0 && cfg.horizon_steps > 0.0, "migration cfg must be positive");
+        let n = profile.n_layers();
+        let mut inc_dev = vec![0u32; n];
+        for s in 0..inc.partition.n_stages() {
+            let d = inc.placement.device_of[s] as u32;
+            for l in inc.partition.stage_range(s) {
+                inc_dev[l] = d;
+            }
+        }
+        let bytes = (0..n).map(|l| layer_migration_bytes(profile, l)).collect();
+        MigScorer { inc_dev, bytes, bw: cfg.bw, horizon: cfg.horizon_steps }
+    }
+
+    /// One-off seconds to ship every layer that changes owner (0.0 —
+    /// exactly — when nothing moves, so the incumbent itself is never
+    /// penalized).
+    fn switch_seconds(&self, part: &Partition, plac: &Placement) -> f64 {
+        let mut total = 0.0;
+        for s in 0..part.n_stages() {
+            let d = plac.device_of[s] as u32;
+            for l in part.stage_range(s) {
+                if self.inc_dev[l] != d {
+                    total += self.bytes[l];
+                }
+            }
+        }
+        total / self.bw
+    }
+
+    /// Amortized per-step objective penalty (≥ 0, so adding it to an
+    /// analytic lower bound keeps the bound sound).
+    fn penalty(&self, part: &Partition, plac: &Placement) -> f64 {
+        self.switch_seconds(part, plac) / self.horizon
     }
 }
 
@@ -226,8 +371,29 @@ pub struct GenResult {
     /// Full evaluations in which the steady-state collapse layer
     /// replayed at least one micro-batch round (subset of `evals`).
     pub evals_collapsed: usize,
+    /// True iff [`GenOptions::time_budget_s`] ran out before the
+    /// tuning loop converged (the result is still the best plan seen).
+    pub budget_exhausted: bool,
+    /// Transposition-table traffic *during this search* (per-call
+    /// delta, even when the cache is shared across re-plans).
+    pub cache: CacheStats,
+    /// One-off switch time from the incumbent to the chosen plan
+    /// (0.0 without [`GenOptions::migration`], or when nothing moved).
+    pub migration_s: f64,
     pub elapsed_s: f64,
     pub log: Vec<GenLogEntry>,
+}
+
+impl GenResult {
+    /// Package the chosen plan as the warm-start seed for the next
+    /// re-generation.
+    pub fn incumbent(&self) -> Incumbent {
+        Incumbent {
+            partition: self.pipeline.partition.clone(),
+            placement: self.pipeline.placement.clone(),
+            knobs: self.knobs,
+        }
+    }
 }
 
 /// Candidate = (partition, placement, knobs); schedules are derived.
@@ -319,7 +485,11 @@ struct Evaluator<'a> {
     evals_collapsed: usize,
     arena: SimArena,
     scratch: BoundScratch,
-    cache: EvalCache,
+    /// Caller-owned transposition table (persists across re-plans; the
+    /// plain [`generate`] hands in a fresh one).
+    cache: &'a mut EvalCache,
+    /// Migration pricer (only under warm-started re-generation).
+    mig: Option<MigScorer>,
     /// Persistent worker pool, spawned lazily on the first batch large
     /// enough to amortise dispatch and reused for the whole search.
     pool: Option<EvalPool>,
@@ -327,37 +497,40 @@ struct Evaluator<'a> {
     // Per-batch bookkeeping, reused across batches.
     need: Vec<usize>,
     keys: Vec<Option<CandKey>>,
+    /// Per-batch migration penalties (empty when `mig` is off — the
+    /// scoring loop then adds exact zeros nowhere).
+    migs: Vec<f64>,
 }
 
 impl<'a> Evaluator<'a> {
     fn new(
         profile: &'a ProfiledData,
         caps: &'a MemCaps,
-        nmb: usize,
-        engine: EvalEngine,
-        prune: bool,
-        memoize: bool,
-        collapse: bool,
+        opts: &GenOptions,
+        cache: &'a mut EvalCache,
+        mig: Option<MigScorer>,
     ) -> Self {
         Evaluator {
             profile,
             caps,
-            nmb,
-            engine,
-            prune,
-            memoize,
-            collapse,
+            nmb: opts.nmb,
+            engine: opts.engine,
+            prune: opts.prune_bounds,
+            memoize: opts.memoize,
+            collapse: opts.collapse,
             evals: 0,
             evals_pruned: 0,
             evals_cached: 0,
             evals_collapsed: 0,
             arena: SimArena::new(),
             scratch: BoundScratch::default(),
-            cache: EvalCache::new(),
+            cache,
+            mig,
             pool: None,
             threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
             need: Vec::new(),
             keys: Vec::new(),
+            migs: Vec::new(),
         }
     }
 
@@ -366,13 +539,26 @@ impl<'a> Evaluator<'a> {
     /// downstream `(score, index)` selection is deterministic and
     /// identical to a serial, elision-free run.  Pruned candidates
     /// score `+inf` (their true score provably cannot be accepted).
+    ///
+    /// Under a migration pricer the objective is `makespan + penalty`;
+    /// the cache stores the *raw* makespan (independent of which plan
+    /// happens to be incumbent, so entries stay valid across re-plans)
+    /// and the penalty is added on the way out.  The penalty is ≥ 0,
+    /// so `bound + penalty` is a sound lower bound on the objective
+    /// and pruning still cannot change the argmin.
     fn scores(&mut self, batch: &mut [Prepared], best: f64) -> Vec<f64> {
         let n = batch.len();
         let mut out = vec![f64::INFINITY; n];
         self.need.clear();
         self.keys.clear();
         self.keys.resize_with(n, || None);
+        self.migs.clear();
+        if let Some(m) = &self.mig {
+            self.migs
+                .extend(batch.iter().map(|prep| m.penalty(&prep.cand.part, &prep.cand.plac)));
+        }
         for (i, prep) in batch.iter().enumerate() {
+            let mig_i = self.migs.get(i).copied().unwrap_or(0.0);
             if self.prune {
                 let bound = makespan_lower_bound_in(
                     &mut self.scratch,
@@ -384,7 +570,7 @@ impl<'a> Evaluator<'a> {
                 );
                 // Acceptance needs score < best − ε and score ≥ bound,
                 // so bound ≥ best − ε proves the eval cannot matter.
-                if bound >= best - ACCEPT_EPS {
+                if bound + mig_i >= best - ACCEPT_EPS {
                     self.evals_pruned += 1;
                     continue;
                 }
@@ -393,7 +579,7 @@ impl<'a> Evaluator<'a> {
                 let key = CandKey::of(&prep.cand.part, &prep.cand.plac, prep.cand.knobs);
                 if let Some(score) = self.cache.get(&key) {
                     self.evals_cached += 1;
-                    out[i] = score;
+                    out[i] = score + mig_i;
                     continue;
                 }
                 self.keys[i] = Some(key);
@@ -449,10 +635,16 @@ impl<'a> Evaluator<'a> {
             }
         }
         if self.memoize {
+            // Raw makespans — see the method docs.
             for &i in &self.need {
                 if let Some(key) = self.keys[i].take() {
                     self.cache.insert(key, out[i]);
                 }
+            }
+        }
+        if !self.migs.is_empty() {
+            for &i in &self.need {
+                out[i] += self.migs[i];
             }
         }
         out
@@ -487,8 +679,65 @@ impl<'a> Evaluator<'a> {
     }
 }
 
-/// Run the Pipeline Generator.
+/// Evaluation-context fingerprint for [`EvalCache::retarget`]: FNV-1a
+/// over everything a cached score depends on besides the candidate's
+/// own structure (profile bits, caps, `nmb`, `p`, engine, rates).
+/// Search-shape knobs (`max_iters`, phases, budget, incumbent,
+/// migration) deliberately excluded — they change which candidates get
+/// scored, never what a candidate scores.
+fn search_fingerprint(profile: &ProfiledData, caps: &MemCaps, opts: &GenOptions) -> u64 {
+    fn mix(h: &mut u64, x: u64) {
+        *h ^= x;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    mix(&mut h, profile.n_layers() as u64);
+    for c in &profile.layers {
+        for v in [c.f, c.b, c.w, c.mem_static, c.mem_act, c.mem_act_w, c.comm_bytes] {
+            mix(&mut h, v.to_bits());
+        }
+    }
+    for v in [profile.link_latency, profile.link_bw, profile.mem_capacity] {
+        mix(&mut h, v.to_bits());
+    }
+    for &c in caps.as_slice() {
+        mix(&mut h, c.to_bits());
+    }
+    mix(&mut h, opts.nmb as u64);
+    mix(&mut h, opts.p as u64);
+    mix(&mut h, match opts.engine {
+        EvalEngine::Fast => 1,
+        EvalEngine::Reference => 2,
+    });
+    match &opts.rates {
+        Some(r) => {
+            mix(&mut h, r.len() as u64 + 1);
+            for &x in r {
+                mix(&mut h, x.to_bits());
+            }
+        }
+        None => mix(&mut h, 0),
+    }
+    h
+}
+
+/// Run the Pipeline Generator (one-shot: a fresh transposition table
+/// per call — the elastic loop uses [`generate_with_cache`]).
 pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
+    generate_with_cache(profile, opts, &mut EvalCache::new())
+}
+
+/// [`generate`] against a caller-owned [`EvalCache`] that persists
+/// across calls.  The cache is retargeted to this call's evaluation
+/// context first (entries survive iff the context is unchanged), which
+/// is what makes a warm re-plan — same profile, same rates, incumbent
+/// seed — answer most of its candidates from the table instead of the
+/// simulator.  [`GenResult::cache`] reports this call's traffic.
+pub fn generate_with_cache(
+    profile: &ProfiledData,
+    opts: &GenOptions,
+    cache: &mut EvalCache,
+) -> GenResult {
     let t0 = Instant::now();
     let n_layers = profile.n_layers();
     let p = opts.p;
@@ -497,16 +746,29 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         .clone()
         .unwrap_or_else(|| MemCaps::uniform(p, profile.mem_capacity));
     assert_eq!(caps.p(), p, "mem_caps must cover every pipeline device");
-    let mut ev = Evaluator::new(
-        profile,
-        &caps,
-        opts.nmb,
-        opts.engine,
-        opts.prune_bounds,
-        opts.memoize,
-        opts.collapse,
-    );
-    let mut prep_pool = PrepPool::new();
+    let rates: &[f64] = opts.rates.as_deref().unwrap_or(&[]);
+    if !rates.is_empty() {
+        assert_eq!(rates.len(), p, "one compute rate per device");
+        if rates.iter().any(|&r| r != 1.0) {
+            assert_eq!(
+                opts.engine,
+                EvalEngine::Fast,
+                "per-device rates need the Fast engine (Reference prices from the profile)"
+            );
+        }
+    }
+    cache.retarget(search_fingerprint(profile, &caps, opts));
+    let stats0 = cache.stats();
+    let mig = match (&opts.incumbent, opts.migration) {
+        (Some(inc), Some(cfg)) => {
+            assert_eq!(inc.placement.p, p, "incumbent must cover the same devices");
+            assert_eq!(inc.partition.n_layers(), n_layers);
+            Some(MigScorer::new(profile, inc, cfg))
+        }
+        _ => None,
+    };
+    let mut ev = Evaluator::new(profile, &caps, opts, cache, mig);
+    let mut prep_pool = PrepPool::with_rates(rates.to_vec());
     let mut log = Vec::new();
 
     // ---- Seed selection --------------------------------------------------
@@ -523,7 +785,26 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         overlap_aware: false,
     };
     let mut seeds: Vec<Prepared> = Vec::new();
-    if opts.seed_s1f1b_only {
+    if let Some(inc) = &opts.incumbent {
+        // Warm start: the running plan replaces the whole seed grid.
+        // Near a good optimum the tuning loop re-proposes mostly
+        // already-cached moves and converges in a few evaluations; the
+        // grid's diversity is recovered by placement moves (which
+        // regenerate the interleave/wave layouts) if the incumbent has
+        // drifted far from optimal.
+        assert_eq!(inc.placement.p, p, "incumbent must cover the same devices");
+        assert_eq!(inc.partition.n_layers(), n_layers, "incumbent must cover every layer");
+        seeds.push(Prepared::fresh(
+            profile,
+            &mut prep_pool,
+            "incumbent seed".into(),
+            Cand {
+                part: Arc::new(inc.partition.clone()),
+                plac: Arc::new(inc.placement.clone()),
+                knobs: inc.knobs,
+            },
+        ));
+    } else if opts.seed_s1f1b_only {
         seeds.push(Prepared::fresh(
             profile,
             &mut prep_pool,
@@ -609,14 +890,27 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
     });
 
     // ---- Bottleneck-phase tuning loop ------------------------------------
+    // Wall-clock budget: checked at iteration and phase boundaries (the
+    // granularity of one move batch), never mid-batch — so a budgeted
+    // run's prefix is identical to the unbudgeted run's.
+    let over_budget = || opts.time_budget_s.is_some_and(|b| t0.elapsed().as_secs_f64() >= b);
+    let mut budget_exhausted = false;
     let mut cur_report = ev.report(&cur, &cur_table);
     let mut iter = 0;
-    while iter < opts.max_iters {
+    'tuning: while iter < opts.max_iters {
+        if over_budget() {
+            budget_exhausted = true;
+            break 'tuning;
+        }
         iter += 1;
         let mut improved = false;
 
         // Phase order: blame the phase with the strongest signal first.
         for phase in phase_order(cur_report.as_ref(), opts) {
+            if over_budget() {
+                budget_exhausted = true;
+                break 'tuning;
+            }
             let mut moves: Vec<Prepared> = match phase {
                 "partition" => partition_moves(
                     profile,
@@ -670,9 +964,10 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         }
     }
 
-    // Final artifacts (evaluated under the same caps as the search, so
-    // the reported OOM/headroom matches what the generator optimized).
-    let final_table = StageTable::build(profile, &cur.part, &cur.plac);
+    // Final artifacts (evaluated under the same caps and rates as the
+    // search, so the reported OOM/headroom/makespan matches what the
+    // generator optimized; with no rates this is the plain table).
+    let final_table = StageTable::build_rated(profile, &cur.part, &cur.plac, rates);
     let mut arena = SimArena::new();
     let mut schedule =
         greedy_schedule_in(&mut arena, &final_table, &caps, opts.nmb, cur.knobs);
@@ -704,6 +999,7 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
             }
         }
     }
+    let migration_s = ev.mig.as_ref().map_or(0.0, |m| m.switch_seconds(&cur.part, &cur.plac));
     GenResult {
         pipeline: Pipeline {
             name: "AdaPtis".into(),
@@ -718,6 +1014,9 @@ pub fn generate(profile: &ProfiledData, opts: &GenOptions) -> GenResult {
         evals_pruned: ev.evals_pruned,
         evals_cached: ev.evals_cached,
         evals_collapsed: ev.evals_collapsed,
+        budget_exhausted,
+        cache: ev.cache.stats().since(&stats0),
+        migration_s,
         elapsed_s: t0.elapsed().as_secs_f64(),
         log,
     }
@@ -1130,5 +1429,113 @@ mod tests {
         let res = generate(&prof, &opts);
         res.pipeline.schedule.validate(&res.pipeline.placement).unwrap();
         assert!(res.report.total >= 0.0);
+    }
+
+    #[test]
+    fn time_budget_zero_returns_best_seed() {
+        let prof = profile(Family::Gemma, 4, 8);
+        let full = generate(&prof, &GenOptions::new(4, 8));
+        assert!(!full.budget_exhausted);
+        // A zero budget is spent before the first tuning iteration:
+        // the best grid seed comes back, flagged, still valid.
+        let budgeted = generate(&prof, &GenOptions::new(4, 8).with_time_budget(0.0));
+        assert!(budgeted.budget_exhausted);
+        assert_eq!(budgeted.iters, 0);
+        budgeted.pipeline.schedule.validate(&budgeted.pipeline.placement).unwrap();
+        assert!(budgeted.report.total >= full.report.total - ACCEPT_EPS);
+    }
+
+    #[test]
+    fn warm_incumbent_replan_is_a_fraction_of_cold() {
+        let prof = profile(Family::NemotronH, 4, 16);
+        let mut cache = EvalCache::new();
+        let cold = generate_with_cache(&prof, &GenOptions::new(4, 16), &mut cache);
+        assert!(cold.cache.misses > 0, "a cold search must miss");
+        assert_eq!(cold.cache.hits, cold.evals_cached as u64, "hits = within-search reuse");
+        let warm_opts =
+            GenOptions::new(4, 16).with_incumbent(cold.incumbent(), MigrationCfg::default());
+        let warm = generate_with_cache(&prof, &warm_opts, &mut cache);
+        // Same evaluation context: the cold search's scores survived
+        // retargeting, so the warm re-plan answers its seed and most
+        // re-proposed moves from the table instead of the simulator.
+        assert!(warm.cache.hits > 0, "warm re-plan must hit the shared cache");
+        assert!(
+            warm.evals * 4 <= cold.evals,
+            "warm start should eval a small fraction: warm {} vs cold {}",
+            warm.evals,
+            cold.evals
+        );
+        // And it can never end up worse than the plan it started from.
+        assert!(warm.report.total <= cold.report.total + 1e-9);
+    }
+
+    #[test]
+    fn harsh_migration_pins_the_incumbent() {
+        let prof = profile(Family::Gemma, 4, 16);
+        // Deliberately bad incumbent: the static S-1F1B pipeline.
+        let inc = Incumbent {
+            partition: uniform(prof.n_layers(), 4),
+            placement: sequential(4),
+            knobs: SchedKnobs::default(),
+        };
+        // Near-zero amortization horizon: any layer move is charged
+        // (nearly) its full switch time every step, so no relocation
+        // can pay for itself.  Knob tuning moves nothing and stays
+        // free, so partition/placement — not knobs — must be pinned.
+        let harsh = MigrationCfg { bw: 25e9, horizon_steps: 1e-9 };
+        let pinned =
+            generate(&prof, &GenOptions::new(4, 16).with_incumbent(inc.clone(), harsh));
+        assert_eq!(pinned.pipeline.partition, inc.partition);
+        assert_eq!(pinned.pipeline.placement, inc.placement);
+        assert_eq!(pinned.migration_s, 0.0);
+        // A generous horizon frees the search to move layers again —
+        // monotone improvement from the incumbent seed, and the switch
+        // time is priced into the result.
+        let free = generate(
+            &prof,
+            &GenOptions::new(4, 16)
+                .with_incumbent(inc, MigrationCfg { bw: 25e9, horizon_steps: 1e12 }),
+        );
+        assert!(free.report.total <= free.log[0].total + 1e-9);
+        if free.pipeline.partition != uniform(prof.n_layers(), 4) {
+            assert!(free.migration_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn unit_rates_reproduce_the_plain_search_bitwise() {
+        let prof = profile(Family::Gemma, 4, 8);
+        let plain = generate(&prof, &GenOptions::new(4, 8));
+        let rated = generate(&prof, &GenOptions::new(4, 8).with_rates(vec![1.0; 4]));
+        assert_eq!(plain.report.total, rated.report.total);
+        assert_eq!(plain.pipeline.partition, rated.pipeline.partition);
+        assert_eq!(plain.pipeline.placement, rated.pipeline.placement);
+        assert_eq!(plain.evals, rated.evals);
+        assert_eq!(plain.evals_pruned, rated.evals_pruned);
+        assert_eq!(plain.evals_cached, rated.evals_cached);
+        assert_eq!(plain.cache.misses, rated.cache.misses);
+        assert_eq!(plain.migration_s, 0.0);
+    }
+
+    #[test]
+    fn rates_price_a_degraded_cluster() {
+        let prof = profile(Family::Gemma, 4, 16);
+        let healthy = generate(&prof, &GenOptions::new(4, 16));
+        let degraded =
+            generate(&prof, &GenOptions::new(4, 16).with_rates(vec![1.0, 1.0, 1.0, 3.0]));
+        // A 3× slower device makes the best achievable step slower
+        // (its remaining work is inflated; the others absorb the rest).
+        assert!(degraded.report.total > healthy.report.total);
+        // And the search never loads the throttled device *more* than
+        // the healthy search did.
+        let layers_on = |res: &GenResult, d: usize| {
+            let part = &res.pipeline.partition;
+            let plac = &res.pipeline.placement;
+            (0..part.n_stages())
+                .filter(|&s| plac.device_of[s] == d)
+                .map(|s| part.stage_range(s).len())
+                .sum::<usize>()
+        };
+        assert!(layers_on(&degraded, 3) <= layers_on(&healthy, 3));
     }
 }

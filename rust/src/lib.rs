@@ -32,7 +32,11 @@
 //!   validation (DESIGN.md §6);
 //! - [`cluster`]: simulated + real (threads & PJRT) clusters — the
 //!   timed SimCluster is a differential twin of [`perfmodel`]
-//!   (bitwise in matched-assumption mode, DESIGN.md §6);
+//!   (bitwise in matched-assumption mode, DESIGN.md §6); plus
+//!   deterministic fault/drift injection (`cluster::fault`);
+//! - [`adapt`]: the elastic re-planning loop — runtime monitor
+//!   (drift estimation, hysteresis, rollback), warm-started
+//!   re-generation, and the fault-scenario harness (DESIGN.md §7);
 //! - [`runtime`]: PJRT artifact loading/execution;
 //! - [`trainer`]: end-to-end pipeline training;
 //! - [`figures`]: one harness per paper table/figure.
@@ -44,6 +48,7 @@
 // index-loop style lint is opted out crate-wide.
 #![allow(clippy::needless_range_loop)]
 
+pub mod adapt;
 pub mod baselines;
 pub mod cluster;
 pub mod config;

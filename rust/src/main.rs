@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   figures <id|all> [--fast] [--out DIR] [--artifacts DIR]
-//!       regenerate a paper table/figure (see DESIGN.md §8)
+//!       regenerate a paper table/figure (see DESIGN.md §9)
 //!   generate --model <fam> --size <sz> --p N --nmb N [--t N] [--seq N]
 //!       run the Pipeline Generator and print the co-optimized pipeline
 //!   simulate --method <m> --model <fam> --size <sz> --p N --nmb N
@@ -302,6 +302,7 @@ fn cmd_train(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         method,
         collect_trace: flags.contains_key("trace"),
         live_log: true,
+        monitor: None,
     };
     let n_params: usize = kinds
         .iter()

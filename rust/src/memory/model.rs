@@ -69,6 +69,17 @@ pub fn stage_footprint(profile: &ProfiledData, range: std::ops::Range<usize>) ->
     }
 }
 
+/// Bytes that must move when layer `l` changes owner during a live
+/// re-plan: weights plus optimizer state.  The gradient accumulation
+/// buffer is *not* shipped — it is zeroed and re-accumulated on the new
+/// owner — so the fraction is `WEIGHTS_FRAC + OPTIMIZER_FRAC` (exact
+/// binary values; see the decomposition note above).  This is the
+/// per-layer unit of the generator's migration-cost term
+/// (`GenOptions::migration`) and of the adapt harness's switch charge.
+pub fn layer_migration_bytes(profile: &ProfiledData, l: usize) -> f64 {
+    profile.layers[l].mem_static * (WEIGHTS_FRAC + OPTIMIZER_FRAC)
+}
+
 /// Per-stage footprints plus the stage → device mapping: everything the
 /// memory side of Algorithm 1 needs.
 #[derive(Clone, Debug)]

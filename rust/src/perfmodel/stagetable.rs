@@ -51,6 +51,17 @@ pub struct StageTable {
     pub comm_b_in: Vec<f64>,
     /// Static memory aggregated per device.
     pub static_d: Vec<f64>,
+    /// Per-device compute-time multipliers the table was built under
+    /// (empty ⇒ 1.0 everywhere, the usual case).  `f`/`b`/`w`/`bw` are
+    /// scaled at build, so the whole scoring stack — analytic bounds,
+    /// fused kernel, evaluation pool — prices a degraded cluster with
+    /// no changes.  Comm terms are deliberately *not* scaled: rates
+    /// model compute throttling (thermal, stragglers); link faults are
+    /// priced by the executor's fault view ([`crate::cluster::fault`]).
+    /// Unit rates are normalized away (`rebuild_rated` with all-1.0
+    /// leaves this empty), so a rated build at rate 1.0 is bitwise
+    /// identical to [`StageTable::build`].
+    pub rate_d: Vec<f64>,
 }
 
 impl StageTable {
@@ -65,11 +76,55 @@ impl StageTable {
         t
     }
 
+    /// [`StageTable::build`] under per-device compute-time multipliers
+    /// (the elastic re-planner's view of a drifted/straggling cluster).
+    pub fn build_rated(
+        profile: &ProfiledData,
+        partition: &Partition,
+        placement: &Placement,
+        rates: &[f64],
+    ) -> StageTable {
+        let mut t = StageTable::default();
+        t.rebuild_rated(profile, partition, placement, rates);
+        t
+    }
+
     /// [`StageTable::build`] into `self`, reusing every buffer — the
     /// generator's `PrepPool` recycles tables across move batches so
     /// steady-state candidate construction allocates nothing.
     /// Bit-identical to a fresh `build` (every entry is overwritten).
     pub fn rebuild(
+        &mut self,
+        profile: &ProfiledData,
+        partition: &Partition,
+        placement: &Placement,
+    ) {
+        self.rate_d.clear();
+        self.rebuild_core(profile, partition, placement);
+    }
+
+    /// [`StageTable::rebuild`] under per-device compute-time
+    /// multipliers.  An empty or all-1.0 `rates` slice normalizes to
+    /// the unrated table (bitwise identical to [`StageTable::rebuild`]).
+    pub fn rebuild_rated(
+        &mut self,
+        profile: &ProfiledData,
+        partition: &Partition,
+        placement: &Placement,
+        rates: &[f64],
+    ) {
+        self.rate_d.clear();
+        if !rates.is_empty() {
+            assert_eq!(rates.len(), placement.p, "one compute rate per device");
+            assert!(rates.iter().all(|r| r.is_finite() && *r > 0.0), "rates must be finite > 0");
+            if rates.iter().any(|&r| r != 1.0) {
+                self.rate_d.extend_from_slice(rates);
+            }
+        }
+        self.rebuild_core(profile, partition, placement);
+    }
+
+    fn rebuild_core(
         &mut self,
         profile: &ProfiledData,
         partition: &Partition,
@@ -135,10 +190,20 @@ impl StageTable {
 
     fn set_stage(&mut self, profile: &ProfiledData, partition: &Partition, s: usize) {
         let c = profile.stage_cost(partition.stage_range(s));
-        self.f[s] = c.f;
-        self.b[s] = c.b;
-        self.w[s] = c.w;
-        self.bw[s] = c.b + c.w;
+        if self.rate_d.is_empty() {
+            self.f[s] = c.f;
+            self.b[s] = c.b;
+            self.w[s] = c.w;
+        } else {
+            // Scale each component *before* summing `bw` below, so a
+            // rated table matches a faulted matched-mode SimCluster run
+            // (which scales per component) bit-for-bit.
+            let r = self.rate_d[self.device[s]];
+            self.f[s] = c.f * r;
+            self.b[s] = c.b * r;
+            self.w[s] = c.w * r;
+        }
+        self.bw[s] = self.b[s] + self.w[s];
         self.act[s] = c.mem_act;
         self.act_w[s] = c.mem_act_w;
         self.mem_static[s] = c.mem_static;
@@ -234,6 +299,68 @@ mod tests {
         let t = StageTable::build(&p, &part, &sequential(4));
         for s in 0..4 {
             assert_eq!(t.bw[s], t.b[s] + t.w[s]);
+        }
+    }
+
+    #[test]
+    fn rated_build_scales_compute_only() {
+        let p = prof();
+        let part = uniform(p.n_layers(), 4);
+        let pl = sequential(4);
+        let base = StageTable::build(&p, &part, &pl);
+        let rates = [1.0, 2.0, 1.5, 1.0];
+        let rated = StageTable::build_rated(&p, &part, &pl, &rates);
+        for s in 0..4 {
+            let r = rates[base.device[s]];
+            assert_eq!(rated.f[s], base.f[s] * r);
+            assert_eq!(rated.b[s], base.b[s] * r);
+            assert_eq!(rated.w[s], base.w[s] * r);
+            assert_eq!(rated.bw[s], rated.b[s] + rated.w[s]);
+            // Memory and comm are rate-independent.
+            assert_eq!(rated.act[s], base.act[s]);
+            assert_eq!(rated.mem_static[s], base.mem_static[s]);
+            assert_eq!(rated.comm_f_in[s], base.comm_f_in[s]);
+            assert_eq!(rated.comm_b_in[s], base.comm_b_in[s]);
+        }
+        assert_eq!(rated.static_d, base.static_d);
+    }
+
+    #[test]
+    fn unit_rates_normalize_to_unrated_table() {
+        let p = prof();
+        let part = uniform(p.n_layers(), 4);
+        let pl = sequential(4);
+        let base = StageTable::build(&p, &part, &pl);
+        let rated = StageTable::build_rated(&p, &part, &pl, &[1.0; 4]);
+        assert!(rated.rate_d.is_empty(), "all-1.0 rates must normalize away");
+        assert_eq!(rated.f, base.f);
+        assert_eq!(rated.bw, base.bw);
+        // And a recycled rated table loses its rates on plain rebuild.
+        let mut t = StageTable::build_rated(&p, &part, &pl, &[2.0; 4]);
+        assert!(!t.rate_d.is_empty());
+        t.rebuild(&p, &part, &pl);
+        assert!(t.rate_d.is_empty());
+        assert_eq!(t.f, base.f);
+    }
+
+    #[test]
+    fn rated_incremental_update_is_bit_identical_to_rebuild() {
+        let p = prof();
+        let pl = interleaved(4, 2);
+        let rates = [1.25, 1.0, 3.0, 0.5];
+        let mut part = uniform(p.n_layers(), 8);
+        let mut t = StageTable::build_rated(&p, &part, &pl, &rates);
+        for (b, dir) in [(0usize, true), (3, false), (6, true)] {
+            if !part.shift_boundary(b, dir) {
+                continue;
+            }
+            t.update_boundary(&p, &part, b);
+            let fresh = StageTable::build_rated(&p, &part, &pl, &rates);
+            assert_eq!(t.f, fresh.f, "after shift {b}");
+            assert_eq!(t.b, fresh.b);
+            assert_eq!(t.w, fresh.w);
+            assert_eq!(t.bw, fresh.bw);
+            assert_eq!(t.rate_d, fresh.rate_d);
         }
     }
 

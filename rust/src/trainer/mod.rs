@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::adapt::{Decision, Monitor, MonitorCfg};
 use crate::baselines::{self, Method, Pipeline};
 use crate::cluster::real::{Fabric, Tag};
 use crate::config::ModelCfg;
@@ -51,6 +52,14 @@ pub struct TrainOptions {
     pub collect_trace: bool,
     /// Log each step to stderr as it completes (long runs).
     pub live_log: bool,
+    /// Attach an *advisory* drift monitor ([`crate::adapt`]): measured
+    /// step times feed a [`Monitor`] whose predicted step time
+    /// self-calibrates from the median of the first `window` steps
+    /// (wall-clock and model-seconds live on different scales, so the
+    /// plan's simulated makespan can't be used directly).  Re-plan
+    /// advice is recorded in [`TrainResult::replan_advice`] — the
+    /// RealCluster can't migrate weights, so nothing is acted on.
+    pub monitor: Option<MonitorCfg>,
 }
 
 impl Default for TrainOptions {
@@ -64,6 +73,7 @@ impl Default for TrainOptions {
             method: TrainMethod::AdaPtis,
             collect_trace: false,
             live_log: false,
+            monitor: None,
         }
     }
 }
@@ -79,6 +89,9 @@ pub struct TrainResult {
     /// The measured per-layer profile used for pipeline generation.
     pub profile: ProfiledData,
     pub pipeline: Pipeline,
+    /// Steps at which the advisory monitor recommended re-planning
+    /// (empty when [`TrainOptions::monitor`] is `None`).
+    pub replan_advice: Vec<usize>,
 }
 
 impl TrainResult {
@@ -271,6 +284,9 @@ pub fn train(
     let mut losses = Vec::with_capacity(opts.steps);
     let mut step_times = Vec::with_capacity(opts.steps);
     let mut trace = Vec::new();
+    let mut advisor: Option<Monitor> = None;
+    let mut warmup_times: Vec<f64> = Vec::new();
+    let mut replan_advice: Vec<usize> = Vec::new();
     for step in 0..opts.steps as u64 {
         let t0 = Instant::now();
         for mb in 0..opts.nmb as u32 {
@@ -293,6 +309,37 @@ pub fn train(
             }
         }
         step_times.push(t0.elapsed().as_secs_f64());
+        if let Some(mcfg) = opts.monitor {
+            let dt = *step_times.last().unwrap();
+            match &mut advisor {
+                None => {
+                    // Self-calibration: the predicted step time is the
+                    // median of the first `window` measured steps.
+                    warmup_times.push(dt);
+                    if warmup_times.len() >= mcfg.window {
+                        let mut s = warmup_times.clone();
+                        s.sort_by(|a, b| a.total_cmp(b));
+                        let n = s.len();
+                        let med =
+                            if n % 2 == 1 { s[n / 2] } else { 0.5 * (s[n / 2 - 1] + s[n / 2]) };
+                        let mut m = Monitor::new(opts.p, mcfg);
+                        m.set_plan(med.max(1e-9), vec![0.0; opts.p], vec![1.0; opts.p]);
+                        advisor = Some(m);
+                    }
+                }
+                Some(m) => {
+                    if let Decision::Replan { .. } = m.observe(dt, None) {
+                        replan_advice.push(step as usize);
+                        // Advisory only: dismiss so the monitor cools
+                        // down instead of awaiting a switch forever.
+                        m.dismissed();
+                        if opts.live_log {
+                            eprintln!("step {step:>4}  drift gap {:.0}% — re-plan advised", 100.0 * m.gap());
+                        }
+                    }
+                }
+            }
+        }
         if opts.live_log {
             eprintln!(
                 "step {step:>4}  loss {:.4}  ({:.2} s)",
@@ -313,6 +360,7 @@ pub fn train(
         trace,
         profile,
         pipeline,
+        replan_advice,
     })
 }
 

@@ -1,0 +1,224 @@
+//! Elastic re-planning: closed-loop recovery tests.
+//!
+//! The scenarios the adapt stack must survive (ISSUE: robustness):
+//! a monitor decision table driven with synthetic timings, and full
+//! Static/Elastic/Oracle harness runs over deterministic fault plans —
+//! straggler recovery, device-kill recovery, rollback of a sabotaged
+//! switch, and bitwise replay of every virtual quantity.
+
+use adaptis::adapt::{
+    run_scenario, throughput_retained, Decision, ElasticCfg, Monitor, MonitorCfg, Policy,
+    RunStats, Scenario,
+};
+use adaptis::cluster::fault::FaultPlan;
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::model::build_model;
+use adaptis::profile::ProfiledData;
+
+fn prof(p: usize, nmb: usize) -> ProfiledData {
+    let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+    ProfiledData::analytical(
+        &spec,
+        &HardwareCfg::default(),
+        &ParallelCfg::new(p, 2, nmb, 1, 4096),
+    )
+}
+
+/// The same virtual run must replay bitwise (wall-clock re-plan latency
+/// is the one legitimately nondeterministic field).
+fn assert_replays_bitwise(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.steps_done, b.steps_done);
+    assert_eq!(a.virtual_time_s.to_bits(), b.virtual_time_s.to_bits(), "virtual time drifted");
+    assert_eq!(a.step_times.len(), b.step_times.len());
+    for (x, y) in a.step_times.iter().zip(&b.step_times) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(a.replans.len(), b.replans.len());
+    for (x, y) in a.replans.iter().zip(&b.replans) {
+        assert_eq!((x.step, x.kind), (y.step, y.kind));
+        assert_eq!(x.switch_s.to_bits(), y.switch_s.to_bits());
+    }
+    assert_eq!(a.rollbacks, b.rollbacks);
+    assert_eq!(a.steps_to_recover, b.steps_to_recover);
+    assert_eq!(a.stalled_at, b.stalled_at);
+}
+
+// ---------------------------------------------------------------------
+// Monitor decision table (synthetic timings, no cluster)
+// ---------------------------------------------------------------------
+
+#[test]
+fn monitor_decision_table() {
+    let cfg = MonitorCfg::default();
+    let mk = || {
+        let mut m = Monitor::new(2, cfg);
+        m.set_plan(1.0, vec![0.6, 0.4], vec![1.0, 1.0]);
+        m
+    };
+    let count_replans = |m: &mut Monitor, series: &[f64]| {
+        let mut n = 0;
+        for &t in series {
+            if let Decision::Replan { .. } = m.observe(t, None) {
+                n += 1;
+                m.dismissed(); // advisory driver: decline, cool down
+            }
+        }
+        n
+    };
+
+    // 1. Drift below the gap threshold: never re-plan.
+    let below: Vec<f64> = (0..60).map(|i| 1.0 + 0.08 * (i as f64 / 60.0)).collect();
+    assert_eq!(count_replans(&mut mk(), &below), 0, "sub-threshold drift must stay quiet");
+
+    // 2. Single-step jitter spikes: hysteresis rejects them.
+    let spiky: Vec<f64> =
+        (0..60).map(|i| if i % 7 == 0 { 1.6 } else { 1.0 }).collect();
+    assert_eq!(count_replans(&mut mk(), &spiky), 0, "isolated spikes must not fire");
+
+    // 3. Persistent straggler: exactly one advice, then the cooldown
+    //    suppresses repeats for cooldown_steps.
+    let mut m = mk();
+    let mut first = None;
+    for i in 0..cfg.hysteresis + 2 {
+        if let Decision::Replan { .. } = m.observe(1.5, None) {
+            first = Some(i);
+            m.dismissed();
+        }
+    }
+    assert_eq!(first, Some(cfg.hysteresis - 1), "fires on the hysteresis-th over-gap step");
+    for _ in 0..cfg.cooldown_steps {
+        assert_eq!(m.observe(1.5, None), Decision::Steady, "cooldown suppresses repeats");
+    }
+
+    // 4. Regression after a switch: probation ends in Rollback.
+    let mut m = mk();
+    for _ in 0..cfg.hysteresis {
+        m.observe(1.5, None);
+    }
+    m.switched(1.1, vec![0.6, 0.5], vec![1.5, 1.0]);
+    let mut last = Decision::Steady;
+    for _ in 0..cfg.probation_steps {
+        last = m.observe(1.9, None); // worse than the degraded mean
+    }
+    assert_eq!(last, Decision::Rollback);
+
+    // 5. Improvement after a switch: probation ends in Commit.
+    let mut m = mk();
+    for _ in 0..cfg.hysteresis {
+        m.observe(1.5, None);
+    }
+    m.switched(1.1, vec![0.6, 0.5], vec![1.5, 1.0]);
+    let mut last = Decision::Steady;
+    for _ in 0..cfg.probation_steps {
+        last = m.observe(1.1, None);
+    }
+    assert_eq!(last, Decision::Commit);
+}
+
+// ---------------------------------------------------------------------
+// Closed-loop scenarios
+// ---------------------------------------------------------------------
+
+#[test]
+fn no_faults_elastic_matches_static_bitwise() {
+    let pr = prof(4, 8);
+    let sc = Scenario { name: "healthy", fault: FaultPlan::healthy(4), steps: 20 };
+    let cfg = ElasticCfg::default();
+    let st = run_scenario(&pr, &sc, 8, Policy::Static, &cfg);
+    let el = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+    let or = run_scenario(&pr, &sc, 8, Policy::Oracle, &cfg);
+    assert!(el.replans.is_empty() && el.rollbacks == 0);
+    assert_eq!(st.virtual_time_s.to_bits(), el.virtual_time_s.to_bits());
+    assert_eq!(throughput_retained(&el, &or), 1.0);
+}
+
+#[test]
+fn mild_drift_stays_on_the_static_plan() {
+    let pr = prof(4, 8);
+    let sc = Scenario::drift_mild(4, 1, 80);
+    let cfg = ElasticCfg::default();
+    let st = run_scenario(&pr, &sc, 8, Policy::Static, &cfg);
+    let el = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+    assert!(el.replans.is_empty(), "4% drift is below the 10% gap threshold");
+    assert_eq!(st.virtual_time_s.to_bits(), el.virtual_time_s.to_bits());
+}
+
+#[test]
+fn straggler_recovers_once_and_beats_static() {
+    let pr = prof(4, 8);
+    let sc = Scenario::straggler(4, 2, 2.5, 20, 160);
+    let cfg = ElasticCfg::default();
+    let st = run_scenario(&pr, &sc, 8, Policy::Static, &cfg);
+    let el = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+    let or = run_scenario(&pr, &sc, 8, Policy::Oracle, &cfg);
+
+    // Exactly one switch: hysteresis fires once, the committed plan
+    // matches the new regime, the cooldown and a zero steady-state gap
+    // keep everything quiet afterwards.
+    assert_eq!(el.replans.len(), 1, "replans: {:?}", el.replans);
+    assert_eq!(el.replans[0].kind, "drift");
+    assert!(el.replans[0].switch_s > 0.0, "rebalancing moves layers");
+    assert_eq!(el.rollbacks, 0);
+    let rec = el.steps_to_recover.expect("recovery must be recorded");
+    assert!(rec >= 1 && rec <= 6, "steps to recover: {rec}");
+    assert_eq!(el.steps_done, 160);
+
+    // Elastic retains most of the oracle's throughput; static decays.
+    let ret_el = throughput_retained(&el, &or);
+    let ret_st = throughput_retained(&st, &or);
+    assert!(ret_el > ret_st + 0.02, "elastic {ret_el:.3} vs static {ret_st:.3}");
+    assert!(ret_el > 0.7, "elastic retained only {ret_el:.3}");
+
+    // Deterministic: the whole virtual run replays bitwise.
+    let el2 = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+    assert_replays_bitwise(&el, &el2);
+}
+
+#[test]
+fn device_kill_stalls_static_but_not_elastic() {
+    let pr = prof(4, 8);
+    let sc = Scenario::kill(4, 3, 30, 120);
+    let cfg = ElasticCfg::default();
+    let st = run_scenario(&pr, &sc, 8, Policy::Static, &cfg);
+    let el = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+    let or = run_scenario(&pr, &sc, 8, Policy::Oracle, &cfg);
+
+    assert_eq!(st.stalled_at, Some(30), "static cannot outlive its devices");
+    assert_eq!(st.steps_done, 30);
+
+    assert_eq!(el.steps_done, 120, "elastic finishes on the survivors");
+    assert_eq!(el.stalled_at, None);
+    assert!(el.replans.iter().any(|r| r.kind == "kill"), "replans: {:?}", el.replans);
+    assert!(el.replans.iter().all(|r| r.step == 30 || r.kind != "kill"));
+
+    let ret_el = throughput_retained(&el, &or);
+    let ret_st = throughput_retained(&st, &or);
+    assert!(ret_st < 0.5, "a stalled run forfeits its remaining steps: {ret_st:.3}");
+    assert!(ret_el > 0.7, "elastic retained only {ret_el:.3}");
+    assert!(ret_el > ret_st);
+
+    let el2 = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+    assert_replays_bitwise(&el, &el2);
+}
+
+#[test]
+fn sabotaged_switch_rolls_back_then_recovers() {
+    let pr = prof(4, 8);
+    let sc = Scenario::straggler(4, 2, 2.5, 20, 160);
+    let cfg = ElasticCfg { sabotage_first_replan: true, ..ElasticCfg::default() };
+    let el = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+
+    // The sabotaged switch fails probation, the incumbent is restored,
+    // and — after the cooldown — a genuine re-plan lands and sticks.
+    assert_eq!(el.rollbacks, 1, "replans: {:?}", el.replans);
+    let kinds: Vec<&str> = el.replans.iter().map(|r| r.kind).collect();
+    assert_eq!(kinds, ["drift", "rollback", "drift"], "switch, restore, re-switch");
+    assert_eq!(el.steps_done, 160, "the loop survives its own bad decision");
+
+    // Rollback must restore the *incumbent*: the restore pause equals
+    // the sabotage switch pause (same layers move back).
+    assert_eq!(el.replans[0].switch_s.to_bits(), el.replans[1].switch_s.to_bits());
+
+    let el2 = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+    assert_replays_bitwise(&el, &el2);
+}

@@ -26,13 +26,18 @@ import os
 import shutil
 import sys
 
-ARTIFACTS = ["BENCH_perfmodel.json", "BENCH_generator.json", "BENCH_executor.json"]
+ARTIFACTS = [
+    "BENCH_perfmodel.json",
+    "BENCH_generator.json",
+    "BENCH_executor.json",
+    "BENCH_replan.json",
+]
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CUR_DIR = os.path.join(REPO, "rust")
 BASE_DIR = os.path.join(REPO, "scripts", "bench_baseline")
 
 # Fields that identify a row rather than measure it.
-ID_FIELDS = ("size", "p", "nmb", "schedule", "kernel")
+ID_FIELDS = ("size", "p", "nmb", "schedule", "kernel", "scenario", "steps")
 
 
 def load(path):

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 verification plus bench smoke runs (perfmodel + generator +
-# executor).
+# executor + replan).
 #   scripts/verify.sh          build + test + bench smoke
 #   scripts/verify.sh --fast   build + test only
 set -euo pipefail
@@ -26,6 +26,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   cargo bench --bench generator -- --smoke
   echo "== executor bench smoke (writes rust/BENCH_executor.json) =="
   cargo bench --bench executor -- --smoke
+  echo "== replan bench smoke (writes rust/BENCH_replan.json) =="
+  cargo bench --bench replan -- --smoke
   if command -v python3 >/dev/null 2>&1; then
     echo "== bench drift vs committed baseline (report-only) =="
     python3 ../scripts/bench_diff.py || true
