@@ -1,0 +1,350 @@
+//! Planner-service closed-loop bench (DESIGN.md §8).
+//!
+//! Phase 1 pins the service's deterministic contracts in-process:
+//!
+//! - (a) an exact repeat is answered from the plan cache — no search;
+//! - (b) identical concurrent requests coalesce to one search;
+//! - (c) a near-miss warm-started plan is never worse than the cold
+//!   plan for the same request;
+//! - (d) a seeded request stream replays with bitwise-identical plans
+//!   and provenance counters on a fresh service.
+//!
+//! Phase 2 drives a closed loop — C client threads × K requests drawn
+//! from a seeded variant pool, retrying on admission-control
+//! rejections — and reports throughput (plans/s), latency p50/p99 and
+//! the cold/warm/cached/coalesced/rejected mix.
+//!
+//! Emits `BENCH_service.json`; `--smoke` shrinks the closed loop for
+//! CI.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use adaptis::config::{Family, ParallelCfg, Size};
+use adaptis::generator::{generate, GenOptions};
+use adaptis::service::{PlanRequest, Provenance, Service, ServiceCfg, ServiceStats};
+use adaptis::util::json::{arr, num, obj, s, Json};
+use adaptis::util::rng::Rng;
+use adaptis::util::stats::percentile;
+
+const P: usize = 4;
+
+fn base_req(nmb: usize, iters: usize) -> PlanRequest {
+    let mut req =
+        PlanRequest::table5(Family::Gemma, Size::Small, &ParallelCfg::new(P, 2, nmb, 1, 4096));
+    req.max_iters = iters;
+    req
+}
+
+/// Deterministic request pool: a handful of base shapes plus seeded
+/// cost-drift variants of each (±5%, within the near-miss bound), so
+/// a closed loop exercises every provenance path.
+fn request_pool(rng: &mut Rng, iters: usize) -> Vec<PlanRequest> {
+    let mut pool = Vec::new();
+    for nmb in [8, 16] {
+        let base = base_req(nmb, iters);
+        pool.push(base.clone());
+        for _ in 0..3 {
+            let mut v = base.clone();
+            let layer = rng.below(v.profile.n_layers());
+            let scale = 0.95 + 0.10 * rng.f64();
+            v.profile.layers[layer].f *= scale;
+            v.profile.layers[layer].b *= scale;
+            v.profile.rebuild_table();
+            pool.push(v);
+        }
+    }
+    pool
+}
+
+fn held_cfg() -> ServiceCfg {
+    ServiceCfg {
+        search_workers: 1,
+        pool_threads: 2,
+        queue_capacity: 32,
+        cache_capacity: 64,
+        near_miss_max_drift: 0.25,
+        default_budget_s: None,
+        hold: true,
+    }
+}
+
+/// Phase-1 contracts; returns rows for the "determinism" section.
+fn deterministic_phase() -> (Vec<Json>, Json) {
+    let mut rows = Vec::new();
+
+    // (a) + (b): coalescing then caching on one held wave.
+    let svc = Service::new(held_cfg());
+    let tickets: Vec<_> =
+        (0..4).map(|_| svc.submit(base_req(8, 8)).expect("admitted")).collect();
+    svc.release();
+    let responses: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    svc.drain();
+    let provs: Vec<_> = responses.iter().map(|r| r.provenance).collect();
+    assert_eq!(
+        provs,
+        [
+            Provenance::Cold,
+            Provenance::Coalesced,
+            Provenance::Coalesced,
+            Provenance::Coalesced,
+        ],
+        "identical concurrent requests must coalesce to one search"
+    );
+    assert!(responses.windows(2).all(|w| Arc::ptr_eq(&w[0].outcome, &w[1].outcome)));
+    assert_eq!(svc.stats().searches, 1);
+    let repeat = svc.call(base_req(8, 8)).expect("admitted");
+    assert_eq!(repeat.provenance, Provenance::Cached, "exact repeat must not re-search");
+    assert_eq!(svc.stats().searches, 1, "cache hit ran a search");
+    assert!(Arc::ptr_eq(&repeat.outcome, &responses[0].outcome));
+    println!(
+        "  coalesce: 4 submissions -> 1 search; repeat served from cache \
+         (makespan {:.6} s)",
+        repeat.outcome.makespan
+    );
+    rows.push(obj(vec![
+        ("scenario", s("cache_and_coalesce")),
+        ("submissions", num(5.0)),
+        ("searches", num(svc.stats().searches as f64)),
+        ("coalesced", num(svc.stats().coalesced as f64)),
+        ("cached", num(svc.stats().cached as f64)),
+    ]));
+
+    // (c) warm ≤ cold.  The budget-variant pair shares its geometry
+    // with the cached plan (near-miss distance 0) so the warm search
+    // starts from the cold optimum and can only improve on it.
+    let cold = &responses[0];
+    let mut variant = base_req(8, 8);
+    variant.budget_s = Some(1e6);
+    let warm = svc.call(variant).expect("admitted");
+    svc.drain();
+    assert_eq!(warm.provenance, Provenance::Warm);
+    assert_eq!(warm.outcome.near_miss_distance, Some(0.0));
+    assert!(
+        warm.outcome.makespan <= cold.outcome.makespan + 1e-9,
+        "warm {} must not be worse than cold {}",
+        warm.outcome.makespan,
+        cold.outcome.makespan
+    );
+    // Cross-check the cold path against the generator run directly.
+    let req = base_req(8, 8);
+    let mut opts = GenOptions::new(P, req.nmb);
+    opts.max_iters = req.max_iters;
+    opts.mem_caps = Some(req.cluster.mem_caps());
+    let direct = generate(&req.profile, &opts);
+    assert_eq!(cold.outcome.makespan, direct.report.total, "service == generator");
+    // A drifted near-miss also warm-starts; its quality is reported,
+    // not asserted (a drifted donor carries no monotone guarantee).
+    let mut drifted = base_req(8, 8);
+    drifted.profile.layers[0].f *= 1.02;
+    drifted.profile.rebuild_table();
+    let dr = svc.call(drifted).expect("admitted");
+    svc.drain();
+    assert_eq!(dr.provenance, Provenance::Warm);
+    let d = dr.outcome.near_miss_distance.expect("warm carries its drift");
+    assert!(d > 0.0 && d < 0.25, "drift {d} out of band");
+    println!(
+        "  warm-start: zero-drift warm {:.6} s <= cold {:.6} s; drifted warm \
+         (d={d:.4}) evals {} vs cold {}",
+        warm.outcome.makespan,
+        cold.outcome.makespan,
+        dr.outcome.evals,
+        cold.outcome.evals,
+    );
+    rows.push(obj(vec![
+        ("scenario", s("warm_vs_cold")),
+        ("cold_makespan_s", num(cold.outcome.makespan)),
+        ("warm_makespan_s", num(warm.outcome.makespan)),
+        ("warm_evals", num(warm.outcome.evals as f64)),
+        ("cold_evals", num(cold.outcome.evals as f64)),
+        ("drifted_distance", num(d)),
+        ("drifted_makespan_s", num(dr.outcome.makespan)),
+    ]));
+
+    // (d) seeded stream replay: same stream, fresh service, bitwise
+    // identical responses and counters.
+    let run_stream = || {
+        let svc = Service::new(held_cfg());
+        let mut rng = Rng::new(0x5e41ce);
+        let pool = request_pool(&mut rng, 6);
+        let mut log: Vec<(Provenance, u64, Vec<usize>, Vec<usize>)> = Vec::new();
+        let mut stats = ServiceStats::default();
+        for _wave in 0..3 {
+            svc.hold();
+            let tickets: Vec<_> = (0..6)
+                .map(|_| {
+                    let req = pool[rng.below(pool.len())].clone();
+                    svc.submit(req).expect("admitted")
+                })
+                .collect();
+            svc.release();
+            for t in tickets {
+                let r = t.wait();
+                log.push((
+                    r.provenance,
+                    r.outcome.makespan.to_bits(),
+                    r.outcome.pipeline.partition.bounds.clone(),
+                    r.outcome.pipeline.placement.device_of.clone(),
+                ));
+            }
+            svc.drain();
+            stats = svc.stats();
+        }
+        (log, stats)
+    };
+    let (log_a, stats_a) = run_stream();
+    let (log_b, stats_b) = run_stream();
+    assert_eq!(log_a, log_b, "seeded stream must replay bitwise");
+    assert_eq!(stats_a, stats_b, "provenance counters must replay");
+    println!(
+        "  replay: 18 requests x2 runs identical (cold {} warm {} cached {} \
+         coalesced {})",
+        stats_a.cold, stats_a.warm, stats_a.cached, stats_a.coalesced
+    );
+    rows.push(obj(vec![
+        ("scenario", s("seeded_replay")),
+        ("requests", num(stats_a.requests as f64)),
+        ("cold", num(stats_a.cold as f64)),
+        ("warm", num(stats_a.warm as f64)),
+        ("cached", num(stats_a.cached as f64)),
+        ("coalesced", num(stats_a.coalesced as f64)),
+        ("searches", num(stats_a.searches as f64)),
+    ]));
+
+    // Admission control under a deliberately tiny queue.
+    let mut tiny = held_cfg();
+    tiny.queue_capacity = 1;
+    let svc = Service::new(tiny);
+    let t0 = svc.submit(base_req(8, 8)).expect("fills the slot");
+    let mut rejections = 0u64;
+    for nmb in [16, 24, 32] {
+        if let Err(rej) = svc.submit(base_req(nmb, 8)) {
+            assert!(rej.retry_after_s > 0.0);
+            rejections += 1;
+        }
+    }
+    assert_eq!(rejections, 3, "distinct requests beyond the slot must be rejected");
+    svc.release();
+    t0.wait();
+    svc.drain();
+    rows.push(obj(vec![
+        ("scenario", s("admission_control")),
+        ("queue_capacity", num(1.0)),
+        ("rejected", num(rejections as f64)),
+    ]));
+
+    let warm_row = obj(vec![
+        ("cold_makespan_s", num(cold.outcome.makespan)),
+        ("warm_makespan_s", num(warm.outcome.makespan)),
+        ("eval_ratio", num(warm.outcome.evals as f64 / cold.outcome.evals.max(1) as f64)),
+    ]);
+    (rows, warm_row)
+}
+
+/// Phase 2: closed loop, C client threads × K requests each.
+fn closed_loop(clients: usize, per_client: usize, iters: usize) -> Json {
+    let svc = Arc::new(Service::new(ServiceCfg {
+        search_workers: 2,
+        pool_threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2),
+        queue_capacity: 16,
+        cache_capacity: 64,
+        near_miss_max_drift: 0.25,
+        default_budget_s: None,
+        hold: false,
+    }));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xc11e47 + c as u64);
+                let pool = request_pool(&mut rng, iters);
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let req = pool[rng.below(pool.len())].clone();
+                    let t = Instant::now();
+                    loop {
+                        match svc.call(req.clone()) {
+                            Ok(_) => break,
+                            Err(rej) => {
+                                // Back off as told, capped so a smoke
+                                // run never sleeps long.
+                                std::thread::sleep(std::time::Duration::from_secs_f64(
+                                    rej.retry_after_s.min(0.05),
+                                ));
+                            }
+                        }
+                    }
+                    lat.push(t.elapsed().as_secs_f64());
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::new();
+    for h in handles {
+        lat.extend(h.join().expect("client thread"));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = svc.stats();
+    let served = (clients * per_client) as f64;
+    let plans_per_s = served / wall_s;
+    let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+    println!(
+        "  {clients} clients x {per_client}: {plans_per_s:.1} plans/s, \
+         p50 {:.1} ms p99 {:.1} ms (cold {} warm {} cached {} coalesced {} \
+         rejected {})",
+        p50 * 1e3,
+        p99 * 1e3,
+        stats.cold,
+        stats.warm,
+        stats.cached,
+        stats.coalesced,
+        stats.rejected,
+    );
+    assert_eq!(
+        stats.cold + stats.warm + stats.cached + stats.coalesced,
+        served as u64,
+        "every request must resolve to exactly one provenance"
+    );
+    obj(vec![
+        ("scenario", s("closed_loop")),
+        ("p", num(P as f64)),
+        ("nmb", num(8.0)),
+        ("clients", num(clients as f64)),
+        ("requests", num(served)),
+        ("wall_s", num(wall_s)),
+        ("plans_per_s", num(plans_per_s)),
+        ("latency_p50_s", num(p50)),
+        ("latency_p99_s", num(p99)),
+        ("cold", num(stats.cold as f64)),
+        ("warm", num(stats.warm as f64)),
+        ("cached", num(stats.cached as f64)),
+        ("coalesced", num(stats.coalesced as f64)),
+        ("rejected", num(stats.rejected as f64)),
+        ("searches", num(stats.searches as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("== planner service: deterministic contracts ==");
+    let (det_rows, warm_row) = deterministic_phase();
+
+    println!("== planner service: closed loop ==");
+    let (clients, per_client, iters) = if smoke { (3, 5, 6) } else { (6, 25, 12) };
+    let load_rows = vec![closed_loop(clients, per_client, iters)];
+
+    let out = obj(vec![
+        ("bench", s("service")),
+        ("smoke", Json::Bool(smoke)),
+        ("determinism", arr(det_rows)),
+        ("warm_vs_cold", warm_row),
+        ("load", arr(load_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_service.json");
+    match std::fs::write(path, out.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -9,7 +9,11 @@
 //!   with the same evaluation context, so a re-plan that re-visits the
 //!   neighbourhood of the incumbent answers from the table;
 //! - the incumbent plan — each successful `plan()` becomes the warm
-//!   seed (and the migration-cost reference) of the next one.
+//!   seed (and the migration-cost reference) of the next one;
+//! - a persistent shared [`EvalPool`] — workers spawn once per
+//!   `Replanner` and park between re-plans, so a re-plan no longer
+//!   pays thread-spawn latency on its critical path (scores are
+//!   bit-identical either way; see `generator/pool.rs`).
 //!
 //! **Rate quantization.**  Monitor estimates move a little every step
 //! (medians of finite windows).  Feeding them to the generator raw
@@ -24,7 +28,10 @@
 //! incumbent is structurally meaningless — it is discarded and the
 //! re-plan runs cold (the fingerprint change clears the cache anyway).
 
+use std::sync::Arc;
+
 use crate::generator::cache::{CacheStats, EvalCache};
+use crate::generator::pool::EvalPool;
 use crate::generator::{generate_with_cache, GenOptions, GenResult, Incumbent, MigrationCfg};
 use crate::profile::ProfiledData;
 
@@ -60,6 +67,8 @@ impl Default for ReplanCfg {
 pub struct Replanner {
     cfg: ReplanCfg,
     cache: EvalCache,
+    /// Long-lived evaluation workers shared by every re-plan.
+    pool: Arc<EvalPool>,
     last: Option<Incumbent>,
     /// Total `plan()` calls served.
     pub replans: usize,
@@ -68,7 +77,15 @@ pub struct Replanner {
 impl Replanner {
     pub fn new(cfg: ReplanCfg) -> Replanner {
         assert!(cfg.quantum > 0.0 && cfg.rate_floor > 0.0);
-        Replanner { cfg, cache: EvalCache::new(), last: None, replans: 0 }
+        let threads =
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        Replanner {
+            cfg,
+            cache: EvalCache::new(),
+            pool: Arc::new(EvalPool::new(threads)),
+            last: None,
+            replans: 0,
+        }
     }
 
     /// Snap rate estimates to the quantization grid; `None` when the
@@ -102,6 +119,7 @@ impl Replanner {
         let mut opts = GenOptions::new(p, nmb);
         opts.rates = self.quantize(rates);
         opts.time_budget_s = self.cfg.time_budget_s;
+        opts.shared_pool = Some(Arc::clone(&self.pool));
         if let Some(inc) = &self.last {
             opts.incumbent = Some(inc.clone());
             opts.migration = Some(self.cfg.migration);

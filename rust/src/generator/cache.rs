@@ -350,6 +350,75 @@ mod tests {
     }
 
     #[test]
+    fn capacity_one_cache_evicts_deterministically() {
+        let pr = prof();
+        let part = uniform(pr.n_layers(), 4);
+        let plac = sequential(4);
+        let key_i = |i: usize| {
+            CandKey::of(
+                &part,
+                &plac,
+                SchedKnobs { mem_cap_factor: 1.0 / (i as f64 + 1.0), ..SchedKnobs::default() },
+            )
+        };
+        // Degenerate bound: every insert of a new key evicts the sole
+        // occupant, in exactly insertion order, never leaving the
+        // cache empty or above capacity.
+        let mut cache = EvalCache::with_capacity(1);
+        for i in 0..5 {
+            cache.insert(key_i(i), i as f64);
+            assert_eq!(cache.len(), 1, "capacity-1 cache holds exactly one entry");
+            assert_eq!(cache.get(&key_i(i)), Some(i as f64), "newest survives");
+            if i > 0 {
+                assert_eq!(cache.get(&key_i(i - 1)), None, "previous evicted");
+            }
+        }
+        assert_eq!(cache.stats().evictions, 4);
+        // Re-inserting the occupant is idempotent — no self-eviction.
+        cache.insert(key_i(4), 4.0);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 4);
+        assert_eq!(cache.get(&key_i(4)), Some(4.0));
+    }
+
+    #[test]
+    fn retarget_fingerprint_change_drops_stale_scores() {
+        let pr = prof();
+        let key =
+            CandKey::of(&uniform(pr.n_layers(), 4), &sequential(4), SchedKnobs::default());
+        let mut cache = EvalCache::new();
+        // Search 1 under context A: one miss, one insert, one hit.
+        cache.retarget(0xa);
+        let s0 = cache.stats();
+        assert_eq!(cache.get(&key), None);
+        cache.insert(key.clone(), 1.0);
+        assert_eq!(cache.get(&key), Some(1.0));
+        assert_eq!(cache.stats().since(&s0), CacheStats { hits: 1, misses: 1, evictions: 0 });
+        // Context changes (e.g. new rates ⇒ new fingerprint): the same
+        // structural key must MISS, not replay the stale 1.0 — a
+        // replay would silently price candidates under the old
+        // context.
+        cache.retarget(0xb);
+        let s1 = cache.stats();
+        assert!(cache.is_empty(), "fingerprint change clears every entry");
+        assert_eq!(cache.get(&key), None, "stale score is dropped, not replayed");
+        cache.insert(key.clone(), 2.0);
+        assert_eq!(cache.get(&key), Some(2.0), "fresh score for the new context");
+        // Per-search accounting resets cleanly through the snapshot:
+        // the new search's delta counts only its own traffic (this is
+        // how `generate_with_cache` reports `GenResult::cache`), while
+        // lifetime counters keep accumulating monotonically.
+        assert_eq!(cache.stats().since(&s1), CacheStats { hits: 1, misses: 1, evictions: 0 });
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 2, evictions: 0 });
+        // Flipping back to A does NOT resurrect A's entries — clearing
+        // is irreversible, so A⇒B⇒A can never replay generation-A
+        // scores.
+        cache.retarget(0xa);
+        assert!(cache.is_empty());
+        assert_eq!(cache.get(&key), None);
+    }
+
+    #[test]
     fn retarget_clears_only_on_context_change() {
         let pr = prof();
         let key =

@@ -53,9 +53,12 @@
 //!    are bitwise-unchanged while the per-eval cost becomes (nearly)
 //!    independent of `nmb` ([`GenResult::evals_collapsed`] counts the
 //!    evaluations it fired in).  Batches large enough to amortise
-//!    dispatch run on a persistent [`pool::EvalPool`] (threads spawned
-//!    once per search, channel-fed); results merge by `(score,
-//!    index)`, so the outcome is bit-identical to a serial run.
+//!    dispatch run on a persistent [`pool::EvalPool`] — either a
+//!    process-wide pool shared across searches
+//!    ([`GenOptions::shared_pool`], used by the elastic re-planner and
+//!    the planner service) or a private pool spawned lazily for this
+//!    search; results merge by `(score, index)`, so the outcome is
+//!    bit-identical to a serial run either way.
 //!
 //! Both elisions only skip evaluations that cannot change the argmin —
 //! the bound is a true lower bound and cache hits replay exact scores —
@@ -109,7 +112,7 @@ use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
 
 use crate::memory::model::layer_migration_bytes;
 use cache::{CacheStats, CandKey, EvalCache, PrepPool};
-use pool::{EvalPool, Job};
+use pool::{EvalCtx, EvalPool, Job, PoolClient};
 
 /// Acceptance epsilon: a move must beat the incumbent by more than
 /// this to be kept.  The bound pruner reuses the same threshold, which
@@ -197,6 +200,12 @@ pub struct GenOptions {
     /// the best plan so far is returned with
     /// [`GenResult::budget_exhausted`] set.
     pub time_budget_s: Option<f64>,
+    /// Evaluate move batches on this process-wide pool instead of
+    /// spawning a private one — workers park between searches and
+    /// multiplex concurrent searches fairly.  Scores are pure
+    /// functions of their jobs and merge positionally, so results are
+    /// bit-identical to a private-pool (or serial) run.
+    pub shared_pool: Option<Arc<EvalPool>>,
 }
 
 impl GenOptions {
@@ -217,6 +226,7 @@ impl GenOptions {
             migration: None,
             rates: None,
             time_budget_s: None,
+            shared_pool: None,
         }
     }
 
@@ -242,6 +252,13 @@ impl GenOptions {
     /// Bound the tuning loop by wall clock.
     pub fn with_time_budget(mut self, seconds: f64) -> Self {
         self.time_budget_s = Some(seconds);
+        self
+    }
+
+    /// Evaluate on a process-wide shared pool (see
+    /// [`GenOptions::shared_pool`]).
+    pub fn with_shared_pool(mut self, pool: Arc<EvalPool>) -> Self {
+        self.shared_pool = Some(pool);
         self
     }
 
@@ -490,9 +507,15 @@ struct Evaluator<'a> {
     cache: &'a mut EvalCache,
     /// Migration pricer (only under warm-started re-generation).
     mig: Option<MigScorer>,
-    /// Persistent worker pool, spawned lazily on the first batch large
-    /// enough to amortise dispatch and reused for the whole search.
-    pool: Option<EvalPool>,
+    /// This search's handle into an evaluation pool, opened lazily on
+    /// the first batch large enough to amortise dispatch and reused
+    /// for the whole search.
+    client: Option<PoolClient>,
+    /// Process-wide pool shared across searches
+    /// ([`GenOptions::shared_pool`]); when absent a private pool is
+    /// spawned lazily instead.
+    shared: Option<Arc<EvalPool>>,
+    own_pool: Option<EvalPool>,
     threads: usize,
     // Per-batch bookkeeping, reused across batches.
     need: Vec<usize>,
@@ -526,7 +549,9 @@ impl<'a> Evaluator<'a> {
             scratch: BoundScratch::default(),
             cache,
             mig,
-            pool: None,
+            client: None,
+            shared: opts.shared_pool.clone(),
+            own_pool: None,
             threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
             need: Vec::new(),
             keys: Vec::new(),
@@ -594,26 +619,36 @@ impl<'a> Evaluator<'a> {
         // either way.
         let work_per_eval =
             batch.first().map_or(0, |prep| prep.table.n_stages * self.nmb);
+        let pool_threads = self.shared.as_ref().map_or(self.threads, |p| p.threads());
         let use_pool = self.engine == EvalEngine::Fast
-            && self.threads > 1
+            && pool_threads > 1
             && self.need.len() >= 4
             && work_per_eval >= 256;
         if use_pool {
-            if self.pool.is_none() {
-                self.pool = Some(EvalPool::new(
-                    self.threads,
-                    self.caps.clone(),
-                    self.nmb,
-                    self.collapse,
-                ));
+            if self.client.is_none() {
+                let ctx = EvalCtx {
+                    caps: self.caps.clone(),
+                    nmb: self.nmb,
+                    collapse: self.collapse,
+                };
+                let pool = match &self.shared {
+                    Some(p) => p.as_ref(),
+                    None => {
+                        if self.own_pool.is_none() {
+                            self.own_pool = Some(EvalPool::new(self.threads));
+                        }
+                        self.own_pool.as_ref().expect("just created")
+                    }
+                };
+                self.client = Some(pool.client(ctx));
             }
-            let pool = self.pool.as_ref().expect("just created");
+            let client = self.client.as_ref().expect("just created");
             for &i in &self.need {
                 let table = std::mem::take(&mut batch[i].table);
-                pool.submit(Job { idx: i, table, knobs: batch[i].cand.knobs });
+                client.submit(Job { idx: i, table, knobs: batch[i].cand.knobs });
             }
             for _ in 0..self.need.len() {
-                let done = pool.collect();
+                let done = client.collect();
                 assert!(!done.score.is_nan(), "pooled candidate evaluation panicked");
                 out[done.idx] = done.score;
                 self.evals_collapsed += usize::from(done.collapsed);

@@ -1,32 +1,46 @@
-//! Persistent candidate-evaluation pool (DESIGN.md § Search
-//! acceleration).
+//! Process-wide candidate-evaluation pool (DESIGN.md §4, §8).
 //!
 //! PR 1 parallelised move batches with `std::thread::scope`, which
-//! spawns and joins a fresh set of OS threads for *every* batch — tens
-//! of microseconds of overhead per batch, paid hundreds of times per
-//! `generate()` call.  This pool spawns its workers once per search
-//! and feeds them over channels instead:
+//! spawns and joins a fresh set of OS threads for *every* batch.  PR 3
+//! replaced that with a pool spawned once per `generate()` call.  This
+//! revision lifts the pool to process scope so one set of workers can
+//! serve *many* searches — sequential re-plans (the elastic loop) and
+//! concurrent planner-service requests alike:
 //!
-//! - jobs carry an owned [`StageTable`] + [`SchedKnobs`] (everything a
-//!   fused evaluation reads besides the per-search constants), so no
-//!   borrows cross the thread boundary and the workers outlive any
-//!   batch;
-//! - each worker owns one [`SimArena`] for its whole lifetime —
-//!   steady-state evaluation allocates nothing;
-//! - results return `(index, score, table)`; the caller writes scores
-//!   by index and puts tables back, so the merged score vector is
+//! - the pool itself is context-free (`EvalPool::new(threads)`); each
+//!   search registers a [`PoolClient`] carrying its own [`EvalCtx`]
+//!   (mem caps, micro-batch count, collapse flag), so searches with
+//!   different contexts can share workers;
+//! - dispatch is **fair round-robin across clients**: workers pull one
+//!   job from the next non-empty client queue in registration order,
+//!   so a search submitting a huge batch cannot starve a concurrent
+//!   search's small batch;
+//! - workers are **idle-safe**: between searches they park on a
+//!   condvar, consuming no CPU, and wake when any client submits;
+//! - jobs carry an owned [`StageTable`] + [`SchedKnobs`], so no
+//!   borrows cross the thread boundary; each worker owns one
+//!   [`SimArena`] for its whole lifetime — steady-state evaluation
+//!   allocates nothing;
+//! - results return `(index, score, table)` on a per-client channel;
+//!   the caller merges scores by index, so the merged vector is
 //!   positionally identical to a serial evaluation.  Workers race only
 //!   for *which job they pull* — every score is a pure function of its
 //!   job — which is the pool's determinism argument: the `(score,
 //!   index)` selection downstream sees bit-identical inputs regardless
-//!   of scheduling.
+//!   of scheduling, sharing, or reuse.
 //!
 //! The pool evaluates the **Fast** engine only (fused scoring needs no
 //! `ProfiledData`); the Reference engine stays serial by design — it
 //! is the elision-free baseline the benches compare against.
+//!
+//! Lifetime rules: a `PoolClient` must not outlive its `EvalPool` with
+//! jobs still in flight (collect would block forever once the workers
+//! are gone).  `Evaluator` and the planner service both hold the pool
+//! in an `Arc` that outlives every client.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::memory::MemCaps;
@@ -52,80 +66,194 @@ pub struct Done {
     pub table: StageTable,
 }
 
-/// Long-lived worker pool; see module docs.  Dropping the pool closes
-/// the job queue and joins every worker.
+/// Per-search evaluation context: everything a fused evaluation reads
+/// besides the job itself.  Fixed for the lifetime of one client.
+#[derive(Clone, Debug)]
+pub struct EvalCtx {
+    pub caps: MemCaps,
+    pub nmb: usize,
+    /// Steady-state collapse on/off (`GenOptions::collapse`).
+    pub collapse: bool,
+}
+
+struct ClientState {
+    ctx: Arc<EvalCtx>,
+    jobs: VecDeque<Job>,
+    done: Sender<Done>,
+}
+
+struct Dispatch {
+    clients: HashMap<u64, ClientState>,
+    /// Round-robin ring of client ids; the fairness cursor is the
+    /// ring's front.  Stale ids (dropped clients) are purged lazily.
+    ring: VecDeque<u64>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+impl Dispatch {
+    /// Pull one job fairly: rotate the ring, taking the first job
+    /// found; the serving client moves to the back either way.
+    fn next_job(&mut self) -> Option<(Job, Arc<EvalCtx>, Sender<Done>)> {
+        for _ in 0..self.ring.len() {
+            let id = self.ring.pop_front().expect("ring non-empty in loop");
+            let Some(client) = self.clients.get_mut(&id) else {
+                continue; // client dropped: purge its ring slot
+            };
+            let job = client.jobs.pop_front();
+            let ctx = Arc::clone(&client.ctx);
+            let done = client.done.clone();
+            self.ring.push_back(id);
+            if let Some(job) = job {
+                return Some((job, ctx, done));
+            }
+        }
+        None
+    }
+}
+
+struct Shared {
+    m: Mutex<Dispatch>,
+    cv: Condvar,
+}
+
+/// Long-lived, context-free worker pool; see module docs.  Dropping
+/// the pool wakes and joins every worker (any still-queued jobs are
+/// discarded).
 pub struct EvalPool {
-    jobs: Option<Sender<Job>>,
-    done: Receiver<Done>,
+    shared: Arc<Shared>,
+    threads: usize,
     workers: Vec<JoinHandle<()>>,
 }
 
+impl std::fmt::Debug for EvalPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "EvalPool({} threads)", self.threads)
+    }
+}
+
 impl EvalPool {
-    /// Spawn `threads` workers scoring against `caps` with `nmb`
-    /// micro-batches (both fixed for one `generate()` call), with
-    /// steady-state collapse on or off (`GenOptions::collapse`).
-    pub fn new(threads: usize, caps: MemCaps, nmb: usize, collapse: bool) -> EvalPool {
+    /// Spawn `threads` idle workers.  Context comes per-client.
+    pub fn new(threads: usize) -> EvalPool {
         assert!(threads >= 1);
-        let (jobs, job_rx) = channel::<Job>();
-        let job_rx = Arc::new(Mutex::new(job_rx));
-        let (done_tx, done) = channel::<Done>();
+        let shared = Arc::new(Shared {
+            m: Mutex::new(Dispatch {
+                clients: HashMap::new(),
+                ring: VecDeque::new(),
+                next_id: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
         let workers = (0..threads)
             .map(|_| {
-                let rx = Arc::clone(&job_rx);
-                let tx = done_tx.clone();
-                let caps = caps.clone();
-                std::thread::spawn(move || {
-                    let mut arena = SimArena::new();
-                    loop {
-                        // The guard is a statement temporary: the lock
-                        // is released as soon as `recv` returns, so
-                        // workers only serialise on dequeue, not work.
-                        let job = rx.lock().unwrap().recv();
-                        let Ok(job) = job else { break };
-                        // Same gate as the serial path: plans no
-                        // schedule could fit are never simulated.  A
-                        // panicking evaluation (unreachable for valid
-                        // candidates) is reported as a NaN sentinel so
-                        // the caller fails loudly instead of waiting
-                        // forever for a result that never comes.
-                        let (score, collapsed) = std::panic::catch_unwind(
-                            std::panic::AssertUnwindSafe(|| {
-                                if !fits_lower_bound(&job.table, &caps) {
-                                    (f64::INFINITY, false)
-                                } else if collapse {
-                                    let (score, stats) = fused_score_collapsed(
-                                        &job.table, &caps, nmb, job.knobs, &mut arena,
-                                    );
-                                    (score, stats.fired)
-                                } else {
-                                    (
-                                        fused_score(
-                                            &job.table, &caps, nmb, job.knobs, &mut arena,
-                                        ),
-                                        false,
-                                    )
-                                }
-                            }),
-                        )
-                        .unwrap_or((f64::NAN, false));
-                        let out = Done { idx: job.idx, score, collapsed, table: job.table };
-                        if tx.send(out).is_err() {
-                            break;
-                        }
-                    }
-                })
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker(&shared))
             })
             .collect();
-        EvalPool { jobs: Some(jobs), done, workers }
+        EvalPool { shared, threads, workers }
     }
 
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Register a search with its evaluation context.  The client gets
+    /// a private job queue and completion channel; dropping it
+    /// unregisters (outstanding jobs are discarded, finished ones
+    /// simply never read).
+    pub fn client(&self, ctx: EvalCtx) -> PoolClient {
+        let (done_tx, done_rx) = channel::<Done>();
+        let mut d = self.shared.m.lock().unwrap();
+        let id = d.next_id;
+        d.next_id += 1;
+        d.clients.insert(
+            id,
+            ClientState { ctx: Arc::new(ctx), jobs: VecDeque::new(), done: done_tx },
+        );
+        d.ring.push_back(id);
+        drop(d);
+        PoolClient { shared: Arc::clone(&self.shared), id, done: done_rx }
+    }
+}
+
+impl Drop for EvalPool {
+    fn drop(&mut self) {
+        self.shared.m.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker(shared: &Shared) {
+    let mut arena = SimArena::new();
+    loop {
+        // Park until a job exists or the pool shuts down; the lock is
+        // held only across dequeue, never across evaluation.
+        let (job, ctx, done) = {
+            let mut d = shared.m.lock().unwrap();
+            loop {
+                if d.shutdown {
+                    return;
+                }
+                if let Some(next) = d.next_job() {
+                    break next;
+                }
+                d = shared.cv.wait(d).unwrap();
+            }
+        };
+        // Same gate as the serial path: plans no schedule could fit
+        // are never simulated.  A panicking evaluation (unreachable
+        // for valid candidates) is reported as a NaN sentinel so the
+        // caller fails loudly instead of waiting forever for a result
+        // that never comes.
+        let (score, collapsed) =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if !fits_lower_bound(&job.table, &ctx.caps) {
+                    (f64::INFINITY, false)
+                } else if ctx.collapse {
+                    let (score, stats) = fused_score_collapsed(
+                        &job.table,
+                        &ctx.caps,
+                        ctx.nmb,
+                        job.knobs,
+                        &mut arena,
+                    );
+                    (score, stats.fired)
+                } else {
+                    (
+                        fused_score(&job.table, &ctx.caps, ctx.nmb, job.knobs, &mut arena),
+                        false,
+                    )
+                }
+            }))
+            .unwrap_or((f64::NAN, false));
+        // A dropped client means nobody wants the result — fine.
+        let _ = done.send(Done { idx: job.idx, score, collapsed, table: job.table });
+    }
+}
+
+/// One search's handle into a shared [`EvalPool`].
+pub struct PoolClient {
+    shared: Arc<Shared>,
+    id: u64,
+    done: Receiver<Done>,
+}
+
+impl PoolClient {
     /// Enqueue one evaluation.
     pub fn submit(&self, job: Job) {
-        self.jobs
-            .as_ref()
-            .expect("pool not shut down")
-            .send(job)
-            .expect("evaluation workers alive");
+        let mut d = self.shared.m.lock().unwrap();
+        assert!(!d.shutdown, "pool not shut down");
+        d.clients
+            .get_mut(&self.id)
+            .expect("client registered until dropped")
+            .jobs
+            .push_back(job);
+        drop(d);
+        self.shared.cv.notify_one();
     }
 
     /// Block for one finished evaluation (any order; merge by `idx`).
@@ -134,13 +262,10 @@ impl EvalPool {
     }
 }
 
-impl Drop for EvalPool {
+impl Drop for PoolClient {
     fn drop(&mut self) {
-        // Closing the job channel ends every worker's recv loop.
-        self.jobs.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        let mut d = self.shared.m.lock().unwrap();
+        d.clients.remove(&self.id);
     }
 }
 
@@ -153,8 +278,7 @@ mod tests {
     use crate::placement::sequential;
     use crate::profile::ProfiledData;
 
-    #[test]
-    fn pool_scores_match_serial_fused_eval() {
+    fn fixture() -> (ProfiledData, MemCaps, Vec<StageTable>, Vec<SchedKnobs>, Vec<f64>) {
         let spec = build_model(&ModelCfg::table5(Family::NemotronH, Size::Small));
         let prof = ProfiledData::analytical(
             &spec,
@@ -163,7 +287,7 @@ mod tests {
         );
         let caps = MemCaps::uniform(4, prof.mem_capacity);
         let plac = sequential(4);
-        let knob_grid = [
+        let knob_grid = vec![
             SchedKnobs::default(),
             SchedKnobs { split_bw: false, ..SchedKnobs::default() },
             SchedKnobs { w_fill: false, ..SchedKnobs::default() },
@@ -181,17 +305,25 @@ mod tests {
             serial.push(fused_score(&table, &caps, 8, *knobs, &mut arena));
             tables.push(table);
         }
+        (prof, caps, tables, knob_grid, serial)
+    }
 
-        let pool = EvalPool::new(3, caps.clone(), 8, false);
+    #[test]
+    fn pool_scores_match_serial_fused_eval() {
+        let (_prof, caps, tables, knob_grid, serial) = fixture();
+
+        let pool = EvalPool::new(3);
+        let client =
+            pool.client(EvalCtx { caps: caps.clone(), nmb: 8, collapse: false });
         for (idx, (table, knobs)) in
             tables.into_iter().zip(knob_grid.iter()).enumerate()
         {
-            pool.submit(Job { idx, table, knobs: *knobs });
+            client.submit(Job { idx, table, knobs: *knobs });
         }
         let mut pooled = vec![f64::NAN; knob_grid.len()];
         let mut returned = Vec::new();
         for _ in 0..knob_grid.len() {
-            let done = pool.collect();
+            let done = client.collect();
             pooled[done.idx] = done.score;
             // Returned tables are intact (recyclable).
             assert_eq!(done.table.n_stages, 4);
@@ -199,19 +331,47 @@ mod tests {
             returned.push((done.idx, done.table));
         }
         assert_eq!(pooled, serial, "pool must be positionally bit-identical");
-        drop(pool); // joins workers without hanging
+        drop(client);
 
-        // Collapse-enabled workers must return the exact same scores
-        // (bitwise) whether or not the cycle replay fires.
-        let pool = EvalPool::new(3, caps, 8, true);
+        // Collapse-enabled evaluation on the SAME (reused) pool must
+        // return the exact same scores (bitwise) whether or not the
+        // cycle replay fires — the second client exercises worker
+        // survival between searches.
+        let client = pool.client(EvalCtx { caps, nmb: 8, collapse: true });
         for (idx, table) in returned {
-            pool.submit(Job { idx, table, knobs: knob_grid[idx] });
+            client.submit(Job { idx, table, knobs: knob_grid[idx] });
         }
         let mut collapsed = vec![f64::NAN; knob_grid.len()];
         for _ in 0..knob_grid.len() {
-            let done = pool.collect();
+            let done = client.collect();
             collapsed[done.idx] = done.score;
         }
         assert_eq!(collapsed, serial, "collapsed pool must be bit-identical");
+        drop(client);
+        drop(pool); // joins workers without hanging
+    }
+
+    #[test]
+    fn concurrent_clients_multiplex_one_pool() {
+        let (_prof, caps, tables, knob_grid, serial) = fixture();
+        let pool = EvalPool::new(2);
+        // Two clients with different contexts interleave on the same
+        // workers; each still sees its own positionally-exact scores.
+        let a = pool.client(EvalCtx { caps: caps.clone(), nmb: 8, collapse: false });
+        let b = pool.client(EvalCtx { caps, nmb: 8, collapse: true });
+        let n = tables.len();
+        for (idx, table) in tables.into_iter().enumerate() {
+            a.submit(Job { idx, table: table.clone(), knobs: knob_grid[idx] });
+            b.submit(Job { idx, table, knobs: knob_grid[idx] });
+        }
+        let (mut sa, mut sb) = (vec![f64::NAN; n], vec![f64::NAN; n]);
+        for _ in 0..n {
+            let da = a.collect();
+            sa[da.idx] = da.score;
+            let db = b.collect();
+            sb[db.idx] = db.score;
+        }
+        assert_eq!(sa, serial, "client A bit-identical under multiplexing");
+        assert_eq!(sb, serial, "client B (collapse) bit-identical");
     }
 }

@@ -37,6 +37,10 @@
 //! - [`adapt`]: the elastic re-planning loop — runtime monitor
 //!   (drift estimation, hysteresis, rollback), warm-started
 //!   re-generation, and the fault-scenario harness (DESIGN.md §7);
+//! - [`service`]: planner-as-a-service — a long-running daemon with a
+//!   cross-request plan cache (exact + near-miss warm starts), a
+//!   shared evaluation pool, admission control and request
+//!   coalescing, fronted by `adaptis serve` (DESIGN.md §8);
 //! - [`runtime`]: PJRT artifact loading/execution;
 //! - [`trainer`]: end-to-end pipeline training;
 //! - [`figures`]: one harness per paper table/figure.
@@ -65,5 +69,6 @@ pub mod placement;
 pub mod profile;
 pub mod runtime;
 pub mod schedule;
+pub mod service;
 pub mod trainer;
 pub mod util;

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   figures <id|all> [--fast] [--out DIR] [--artifacts DIR]
-//!       regenerate a paper table/figure (see DESIGN.md §9)
+//!       regenerate a paper table/figure (see DESIGN.md §10)
 //!   generate --model <fam> --size <sz> --p N --nmb N [--t N] [--seq N]
 //!       run the Pipeline Generator and print the co-optimized pipeline
 //!   simulate --method <m> --model <fam> --size <sz> --p N --nmb N
@@ -10,8 +10,13 @@
 //!   train --tag <micro|fidelity|e2e100m> --p N --nmb N --steps N
 //!         [--method <m|adaptis>] [--lr F] [--trace FILE]
 //!       real pipeline training over PJRT artifacts (RealCluster)
+//!   serve [--workers N] [--queue N] [--cache N] [--drift F]
+//!       long-running planner daemon, NDJSON over stdin/stdout
 //!
 //! Flags are `--key value` pairs; defaults are printed in --help.
+//! Unknown subcommands, unknown flags and stray positional arguments
+//! are usage errors (one-line message + usage, exit 2) — pinned by the
+//! `parse_cli` unit tests below.
 
 use std::collections::BTreeMap;
 
@@ -23,6 +28,7 @@ use adaptis::model::build_model;
 use adaptis::perfmodel::simulate;
 use adaptis::profile::ProfiledData;
 use adaptis::runtime::ArtifactStore;
+use adaptis::service::{ndjson, Service, ServiceCfg};
 use adaptis::trainer::{self, train, TrainMethod, TrainOptions};
 use adaptis::util::trace::{ascii_timeline, to_chrome_trace};
 use adaptis::util::{fmt_si, fmt_time};
@@ -47,7 +53,44 @@ SUBCOMMANDS
                      flags: --tag micro|fidelity|e2e100m --p N --nmb N
                             --steps N --lr F --seed N
                             --method s1f1b|...|adaptis --trace FILE
+  serve              long-running planner daemon: newline-delimited JSON
+                     requests on stdin, one JSON response per line on
+                     stdout (plan + makespan/headroom + provenance)
+                     flags: --workers N --pool-threads N --queue N
+                            --cache N --drift F --budget SECONDS
 ";
+
+/// Per-subcommand grammar: `(name, known flags, max positionals)`.
+/// Anything outside this table is a usage error.
+const SUBCOMMANDS: &[(&str, &[&str], usize)] = &[
+    ("figures", &["fast", "out", "artifacts"], 1),
+    ("generate", &["model", "size", "p", "t", "d", "nmb", "seq", "iters"], 0),
+    ("simulate", &["model", "size", "p", "t", "d", "nmb", "seq", "method", "trace"], 0),
+    ("train", &["tag", "artifacts", "p", "nmb", "steps", "lr", "seed", "method", "trace"], 0),
+    ("serve", &["workers", "pool-threads", "queue", "cache", "drift", "budget"], 0),
+];
+
+/// Validate `<subcommand> [args]` against [`SUBCOMMANDS`].
+fn parse_cli(
+    args: &[String],
+) -> Result<(String, Vec<String>, BTreeMap<String, String>), String> {
+    let sub = args.first().ok_or_else(|| "missing subcommand".to_string())?;
+    let Some((_, known, max_pos)) =
+        SUBCOMMANDS.iter().find(|(name, _, _)| *name == sub.as_str())
+    else {
+        return Err(format!("unknown subcommand {sub:?}"));
+    };
+    let (pos, flags) = parse_flags(&args[1..]);
+    for key in flags.keys() {
+        if !known.contains(&key.as_str()) {
+            return Err(format!("unknown flag --{key} for {sub:?}"));
+        }
+    }
+    if pos.len() > *max_pos {
+        return Err(format!("unexpected argument {:?} for {sub:?}", pos[*max_pos]));
+    }
+    Ok((sub.clone(), pos, flags))
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -55,17 +98,20 @@ fn main() {
         print!("{HELP}");
         return;
     }
-    let sub = args[0].clone();
-    let (positional, flags) = parse_flags(&args[1..]);
+    let (sub, positional, flags) = match parse_cli(&args) {
+        Ok(parsed) => parsed,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
     let r = match sub.as_str() {
         "figures" => cmd_figures(&positional, &flags),
         "generate" => cmd_generate(&flags),
         "simulate" => cmd_simulate(&flags),
         "train" => cmd_train(&flags),
-        other => {
-            eprintln!("unknown subcommand {other:?}\n{HELP}");
-            std::process::exit(2);
-        }
+        "serve" => cmd_serve(&flags),
+        _ => unreachable!("parse_cli admits only known subcommands"),
     };
     if let Err(e) = r {
         eprintln!("error: {e:#}");
@@ -284,6 +330,39 @@ fn cmd_simulate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let defaults = ServiceCfg::default();
+    let cfg = ServiceCfg {
+        search_workers: flag_usize(flags, "workers", defaults.search_workers),
+        pool_threads: flag_usize(flags, "pool-threads", defaults.pool_threads),
+        queue_capacity: flag_usize(flags, "queue", defaults.queue_capacity),
+        cache_capacity: flag_usize(flags, "cache", defaults.cache_capacity),
+        near_miss_max_drift: flags
+            .get("drift")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(defaults.near_miss_max_drift),
+        default_budget_s: flags.get("budget").and_then(|v| v.parse().ok()),
+        hold: false,
+    };
+    let service = Service::new(cfg);
+    eprintln!(
+        "adaptis serve: {} search workers, {} eval threads, queue {}, plan cache {}, near-miss drift {} — one JSON request per stdin line (see DESIGN.md §8)",
+        cfg.search_workers,
+        service.pool_threads(),
+        cfg.queue_capacity,
+        cfg.cache_capacity,
+        cfg.near_miss_max_drift,
+    );
+    let out = std::sync::Arc::new(std::sync::Mutex::new(std::io::stdout()));
+    ndjson::serve(&service, std::io::stdin().lock(), &out)?;
+    let st = service.stats();
+    eprintln!(
+        "adaptis serve: {} requests ({} cold, {} warm, {} cached, {} coalesced, {} rejected)",
+        st.requests, st.cold, st.warm, st.cached, st.coalesced, st.rejected,
+    );
+    Ok(())
+}
+
 fn cmd_train(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let tag = flag(flags, "tag", "micro");
     let dir = std::path::Path::new(flag(flags, "artifacts", "artifacts")).join(tag);
@@ -335,4 +414,63 @@ fn cmd_train(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_splits_positionals_pairs_and_booleans() {
+        let (pos, flags) =
+            parse_flags(&args(&["fig8", "--fast", "--out", "dir", "--p", "4"]));
+        assert_eq!(pos, vec!["fig8".to_string()]);
+        assert_eq!(flags.get("fast").map(String::as_str), Some("true"));
+        assert_eq!(flags.get("out").map(String::as_str), Some("dir"));
+        assert_eq!(flags.get("p").map(String::as_str), Some("4"));
+        // A flag followed by another flag is boolean, not a value.
+        let (_, flags) = parse_flags(&args(&["--fast", "--out", "dir"]));
+        assert_eq!(flags.get("fast").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn parse_cli_accepts_every_documented_subcommand() {
+        for &(name, known, _) in SUBCOMMANDS {
+            let (sub, pos, flags) = parse_cli(&args(&[name])).expect("bare subcommand");
+            assert_eq!(sub, name);
+            assert!(pos.is_empty() && flags.is_empty());
+            // Every documented flag is accepted with a value.
+            for k in known {
+                let a = args(&[name, &format!("--{k}"), "1"]);
+                assert!(parse_cli(&a).is_ok(), "{name} --{k} must parse");
+            }
+        }
+        let (_, pos, flags) =
+            parse_cli(&args(&["figures", "fig8", "--fast"])).expect("figures takes an id");
+        assert_eq!(pos, vec!["fig8".to_string()]);
+        assert!(flags.contains_key("fast"));
+    }
+
+    #[test]
+    fn parse_cli_rejects_unknown_subcommands_flags_and_positionals() {
+        let err = parse_cli(&args(&["servee"])).unwrap_err();
+        assert!(err.contains("unknown subcommand"), "{err}");
+        let err = parse_cli(&args(&["generate", "--modle", "gemma"])).unwrap_err();
+        assert!(err.contains("unknown flag --modle"), "{err}");
+        let err = parse_cli(&args(&["serve", "--fast"])).unwrap_err();
+        assert!(err.contains("unknown flag --fast"), "{err}");
+        let err = parse_cli(&args(&["generate", "stray"])).unwrap_err();
+        assert!(err.contains("unexpected argument"), "{err}");
+        let err = parse_cli(&args(&["figures", "fig8", "extra"])).unwrap_err();
+        assert!(err.contains("unexpected argument"), "{err}");
+        assert_eq!(parse_cli(&[]).unwrap_err(), "missing subcommand");
+        // One-line messages: main() prints them above the usage block.
+        for bad in [&["servee"][..], &["generate", "--modle", "x"][..]] {
+            assert!(!parse_cli(&args(bad)).unwrap_err().contains('\n'));
+        }
+    }
 }

@@ -1,0 +1,125 @@
+//! The cross-request plan cache (DESIGN.md §8).
+//!
+//! [`PlanCache`] maps exact request identities ([`ReqKey`]) to
+//! completed search outcomes, with the same bounded-FIFO discipline as
+//! the candidate-level `EvalCache` (insertion-order eviction, never
+//! hash-map iteration order, so a replayed request stream evicts —
+//! and therefore hits — identically every run).
+//!
+//! On an exact miss, [`PlanCache::nearest`] scans entries in insertion
+//! order for the structurally-compatible outcome with the smallest
+//! [`near_miss_distance`], tie-broken toward the *oldest* entry —
+//! both rules exist for replay determinism, not quality.  A hit under
+//! the caller's drift bound warm-starts the new search from the
+//! cached plan; it never short-circuits it.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use super::fingerprint::{near_miss_distance, ReqKey, Sketch};
+use super::PlanOutcome;
+
+/// Lifetime traffic counters for one [`PlanCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Exact-key hits (request answered without any search).
+    pub hits: u64,
+    /// Near-miss hits (search ran, warm-started).
+    pub near_hits: u64,
+    /// Exact-key misses.
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+/// Bounded exact-plus-nearest plan store; see module docs.
+pub struct PlanCache {
+    map: HashMap<ReqKey, Arc<PlanOutcome>>,
+    /// Insertion-order queue: FIFO eviction *and* the deterministic
+    /// scan order for `nearest`.
+    queue: VecDeque<ReqKey>,
+    capacity: usize,
+    stats: PlanCacheStats,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity >= 1);
+        PlanCache {
+            map: HashMap::new(),
+            queue: VecDeque::new(),
+            capacity,
+            stats: PlanCacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        self.stats
+    }
+
+    /// Exact lookup (counted).
+    pub fn get(&mut self, key: &ReqKey) -> Option<Arc<PlanOutcome>> {
+        match self.map.get(key) {
+            Some(out) => {
+                self.stats.hits += 1;
+                Some(Arc::clone(out))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Nearest structurally-compatible outcome within `max_drift`
+    /// (counted as a near-hit when found).  Insertion-order scan with
+    /// strict-less selection ⇒ oldest entry wins ties, so a replayed
+    /// stream warm-starts from the same donor every run.
+    pub fn nearest(
+        &mut self,
+        sketch: &Sketch,
+        max_drift: f64,
+    ) -> Option<(Arc<PlanOutcome>, f64)> {
+        let mut best: Option<(&ReqKey, f64)> = None;
+        for key in &self.queue {
+            let Some(out) = self.map.get(key) else { continue };
+            let Some(d) = near_miss_distance(sketch, &out.sketch) else { continue };
+            if d <= max_drift && best.is_none_or(|(_, bd)| d < bd) {
+                best = Some((key, d));
+            }
+        }
+        let (key, d) = best?;
+        let out = Arc::clone(&self.map[key]);
+        self.stats.near_hits += 1;
+        Some((out, d))
+    }
+
+    /// Insert a completed search outcome.  Re-inserting an existing
+    /// key keeps the original entry (deterministic searches can only
+    /// re-derive the same outcome) and does not evict.
+    pub fn insert(&mut self, key: ReqKey, outcome: Arc<PlanOutcome>) {
+        if self.map.contains_key(&key) {
+            return;
+        }
+        while self.map.len() >= self.capacity {
+            let oldest = self.queue.pop_front().expect("queue tracks every entry");
+            self.map.remove(&oldest);
+            self.stats.evictions += 1;
+        }
+        self.queue.push_back(key.clone());
+        self.map.insert(key, outcome);
+        self.stats.inserts += 1;
+    }
+}

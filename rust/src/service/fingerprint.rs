@@ -1,0 +1,212 @@
+//! Whole-request identity and the near-miss metric (DESIGN.md §8).
+//!
+//! The per-candidate transposition table keys on `CandKey` and scopes
+//! entries to one evaluation context via `search_fingerprint`
+//! (`generator/cache.rs`).  The planner service generalizes both to
+//! whole requests:
+//!
+//! - [`ReqKey`] is the **exact** structural identity of a plan
+//!   request: layer-kind sequence, every per-layer cost component *to
+//!   the bit* (f64 bit patterns, so a single flipped cost bit is a
+//!   different request), link parameters, per-device caps, `nmb`,
+//!   rates, iteration/time budgets.  It is a real `Eq + Hash` key —
+//!   a hash collision falls back to structural equality, never to
+//!   serving someone else's plan.  Identical `ReqKey`s are what the
+//!   service coalesces and answers from the plan cache.
+//! - [`Sketch`] is the request's **geometry** for near-miss reuse:
+//!   the same components as *values* rather than bits, minus the
+//!   knobs that a cached plan transfers across trivially (`nmb` and
+//!   budgets — a pipeline plan is a (partition, placement, knobs)
+//!   triple, none of which encode the micro-batch count).
+//!   [`near_miss_distance`] compares two sketches: incompatible
+//!   shapes (different layer-kind sequences, device counts) never
+//!   match; compatible ones score the worst relative drift over every
+//!   component.  The metric is symmetric (`rel` is) and zero iff the
+//!   sketches are value-identical.
+//!
+//! A near-miss hit only *seeds* the search ([`crate::generator::GenOptions::incumbent`])
+//! — acceptance still goes through the Evaluator — so a wrong notion
+//! of "near" can cost time, never correctness.
+
+use crate::model::LayerKind;
+
+use super::PlanRequest;
+
+/// Exact request identity; see module docs.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ReqKey {
+    kinds: Vec<LayerKind>,
+    /// Per-layer cost components, 7 per layer, as f64 bit patterns.
+    cost_bits: Vec<u64>,
+    /// `link_latency`, `link_bw`, `mem_capacity` bit patterns.
+    link_bits: [u64; 3],
+    /// Per-device capacity bit patterns (cluster order).
+    cap_bits: Vec<u64>,
+    /// Per-device rate multipliers (empty = healthy/unit).
+    rate_bits: Vec<u64>,
+    nmb: u64,
+    max_iters: u64,
+    /// `u64::MAX` encodes "no wall-clock budget".
+    budget_bits: u64,
+}
+
+impl ReqKey {
+    pub fn of(req: &PlanRequest) -> ReqKey {
+        let mut cost_bits = Vec::with_capacity(req.profile.layers.len() * 7);
+        for l in &req.profile.layers {
+            for v in [l.f, l.b, l.w, l.mem_static, l.mem_act, l.mem_act_w, l.comm_bytes] {
+                cost_bits.push(v.to_bits());
+            }
+        }
+        ReqKey {
+            kinds: req.kinds.clone(),
+            cost_bits,
+            link_bits: [
+                req.profile.link_latency.to_bits(),
+                req.profile.link_bw.to_bits(),
+                req.profile.mem_capacity.to_bits(),
+            ],
+            cap_bits: req.cluster.devices.iter().map(|d| d.mem_bytes.to_bits()).collect(),
+            rate_bits: req.rates.iter().map(|r| r.to_bits()).collect(),
+            nmb: req.nmb as u64,
+            max_iters: req.max_iters as u64,
+            budget_bits: req.budget_s.map_or(u64::MAX, f64::to_bits),
+        }
+    }
+
+    /// 64-bit digest for logs and the wire protocol (FNV-1a, stable
+    /// across runs).  Identity decisions never use this — they compare
+    /// whole keys.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        for k in &self.kinds {
+            mix(*k as u64);
+        }
+        mix(u64::MAX); // section separators guard against concatenation aliasing
+        for &b in &self.cost_bits {
+            mix(b);
+        }
+        for &b in &self.link_bits {
+            mix(b);
+        }
+        mix(u64::MAX);
+        for &b in &self.cap_bits {
+            mix(b);
+        }
+        mix(u64::MAX);
+        for &b in &self.rate_bits {
+            mix(b);
+        }
+        mix(self.nmb);
+        mix(self.max_iters);
+        mix(self.budget_bits);
+        h
+    }
+}
+
+/// Request geometry for near-miss reuse; see module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sketch {
+    pub kinds: Vec<LayerKind>,
+    pub p: usize,
+    /// Flattened per-layer cost components (7 per layer, layer order).
+    pub costs: Vec<f64>,
+    /// `link_latency`, `link_bw`, `mem_capacity`.
+    pub link: [f64; 3],
+    /// Per-device capacities.
+    pub caps: Vec<f64>,
+    /// Per-device rates, expanded to length `p` (unit when the request
+    /// carries none) so healthy and explicitly-rated requests stay
+    /// comparable.
+    pub rates: Vec<f64>,
+}
+
+impl Sketch {
+    pub fn of(req: &PlanRequest) -> Sketch {
+        let mut costs = Vec::with_capacity(req.profile.layers.len() * 7);
+        for l in &req.profile.layers {
+            costs.extend_from_slice(&[
+                l.f,
+                l.b,
+                l.w,
+                l.mem_static,
+                l.mem_act,
+                l.mem_act_w,
+                l.comm_bytes,
+            ]);
+        }
+        let p = req.cluster.p();
+        let rates =
+            if req.rates.is_empty() { vec![1.0; p] } else { req.rates.clone() };
+        Sketch {
+            kinds: req.kinds.clone(),
+            p,
+            costs,
+            link: [req.profile.link_latency, req.profile.link_bw, req.profile.mem_capacity],
+            caps: req.cluster.devices.iter().map(|d| d.mem_bytes).collect(),
+            rates,
+        }
+    }
+}
+
+/// Symmetric relative drift of one component: 0 for bitwise-equal
+/// values (including equal infinities — unbounded caps), else
+/// `|x−y| / max(|x|,|y|)`; any one-sided non-finite pair is infinitely
+/// far.
+fn rel(x: f64, y: f64) -> f64 {
+    if x == y {
+        0.0
+    } else if !x.is_finite() || !y.is_finite() {
+        f64::INFINITY
+    } else {
+        (x - y).abs() / x.abs().max(y.abs())
+    }
+}
+
+/// Distance between two request geometries: `None` when structurally
+/// incompatible (a cached plan could not even seed the search), else
+/// the worst per-component relative drift.  Symmetric; zero iff the
+/// sketches carry identical values.
+pub fn near_miss_distance(a: &Sketch, b: &Sketch) -> Option<f64> {
+    if a.kinds != b.kinds || a.p != b.p || a.rates.len() != b.rates.len() {
+        return None;
+    }
+    debug_assert_eq!(a.costs.len(), b.costs.len());
+    debug_assert_eq!(a.caps.len(), b.caps.len());
+    let mut d: f64 = 0.0;
+    for (x, y) in a.costs.iter().zip(&b.costs) {
+        d = d.max(rel(*x, *y));
+    }
+    for (x, y) in a.link.iter().zip(&b.link) {
+        d = d.max(rel(*x, *y));
+    }
+    for (x, y) in a.caps.iter().zip(&b.caps) {
+        d = d.max(rel(*x, *y));
+    }
+    for (x, y) in a.rates.iter().zip(&b.rates) {
+        d = d.max(rel(*x, *y));
+    }
+    Some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_is_symmetric_and_scale_free() {
+        assert_eq!(rel(1.0, 1.0), 0.0);
+        assert_eq!(rel(f64::INFINITY, f64::INFINITY), 0.0);
+        assert_eq!(rel(1.0, f64::INFINITY), f64::INFINITY);
+        let d = rel(1.0, 1.25);
+        assert_eq!(d, rel(1.25, 1.0));
+        assert!((d - 0.2).abs() < 1e-15, "drift is relative to the larger value");
+        assert_eq!(rel(2.0, 2.5), d, "scale-free");
+    }
+}

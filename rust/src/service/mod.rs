@@ -1,0 +1,597 @@
+//! Planner-as-a-service (DESIGN.md §8).
+//!
+//! PRs 1–6 made one search fast; this subsystem makes *many* searches
+//! a long-running daemon.  A request is the full search input —
+//! `(layer kinds, profiled costs, ClusterSpec, nmb, rates, budget)` —
+//! and a response is `(plan, predicted makespan, headroom,
+//! provenance)`.  Four pieces:
+//!
+//! - **[`cache::PlanCache`]** — a bounded cross-request plan store.
+//!   Exact hits ([`fingerprint::ReqKey`]) answer without any search;
+//!   near-miss hits ([`fingerprint::near_miss_distance`] within
+//!   [`ServiceCfg::near_miss_max_drift`]) warm-start the search from
+//!   the cached plan via [`GenOptions::incumbent`].  Warm starts only
+//!   *seed* the incumbent — every candidate still goes through the
+//!   Evaluator's acceptance gates — so reuse can save time, never
+//!   change correctness.
+//! - **shared [`EvalPool`]** — one process-wide worker pool
+//!   multiplexes every concurrent search's move batches with fair
+//!   round-robin interleaving (`generator/pool.rs`).
+//! - **admission control + coalescing** — a bounded request queue
+//!   rejects with a retry-after estimate when full; a request
+//!   identical to one already in flight attaches to that search and
+//!   the result fans out to every waiter.
+//! - **front ends** — the in-process [`Service`] API (used by
+//!   `benches/service.rs`) and the newline-delimited-JSON loop in
+//!   [`ndjson`] behind `adaptis serve`.
+//!
+//! **Determinism.**  Searches are pure functions of their requests
+//! (scores merge positionally whatever the pool does), and every
+//! cache/coalesce/provenance decision happens at *submission* time
+//! under one lock — never at completion time — so a scripted stream
+//! submitted in waves ([`Service::hold`] / [`Service::release`] /
+//! [`Service::drain`]) replays bitwise: same plans, same provenance
+//! counters, run after run.  Each search gets a fresh per-search
+//! `EvalCache` (an exact repeat would have hit the plan cache
+//! instead), keeping even eval counts replayable.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod ndjson;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::baselines::Pipeline;
+use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use crate::cluster::ClusterSpec;
+use crate::generator::cache::EvalCache;
+use crate::generator::pool::EvalPool;
+use crate::generator::{generate_with_cache, GenOptions, Incumbent};
+use crate::model::{build_model, LayerKind};
+use crate::profile::ProfiledData;
+use crate::schedule::greedy::SchedKnobs;
+
+use cache::{PlanCache, PlanCacheStats};
+use fingerprint::{ReqKey, Sketch};
+
+/// One plan request: everything a cold search reads.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    /// Layer-kind sequence (the model's structural fingerprint; the
+    /// near-miss metric only ever matches identical sequences).
+    pub kinds: Vec<LayerKind>,
+    /// Per-layer costs + link parameters.
+    pub profile: ProfiledData,
+    /// Devices and their memory capacities.
+    pub cluster: ClusterSpec,
+    /// Micro-batches per step.
+    pub nmb: usize,
+    /// Per-device rate multipliers (empty = healthy cluster).
+    pub rates: Vec<f64>,
+    /// Wall-clock search budget; `None` falls back to
+    /// [`ServiceCfg::default_budget_s`].
+    pub budget_s: Option<f64>,
+    /// Tuning-iteration cap (the generator default is 64).
+    pub max_iters: usize,
+}
+
+impl PlanRequest {
+    pub fn new(
+        kinds: Vec<LayerKind>,
+        profile: ProfiledData,
+        cluster: ClusterSpec,
+        nmb: usize,
+    ) -> PlanRequest {
+        assert_eq!(kinds.len(), profile.n_layers(), "one kind per profiled layer");
+        assert!(nmb >= 1);
+        PlanRequest {
+            kinds,
+            profile,
+            cluster,
+            nmb,
+            rates: Vec::new(),
+            budget_s: None,
+            max_iters: 64,
+        }
+    }
+
+    /// Convenience: an analytically-profiled Table-5 model on a
+    /// homogeneous cluster of `par.p` devices.
+    pub fn table5(family: Family, size: Size, par: &ParallelCfg) -> PlanRequest {
+        let hw = HardwareCfg::default();
+        let spec = build_model(&ModelCfg::table5(family, size));
+        let profile = ProfiledData::analytical(&spec, &hw, par);
+        let cluster = ClusterSpec::uniform(par.p, &hw);
+        PlanRequest::new(spec.layers, profile, cluster, par.nmb)
+    }
+
+    /// Exact identity (cache key, coalescing key).
+    pub fn key(&self) -> ReqKey {
+        ReqKey::of(self)
+    }
+
+    /// Geometry for near-miss matching.
+    pub fn sketch(&self) -> Sketch {
+        Sketch::of(self)
+    }
+}
+
+/// How a response was produced, per *requester*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// A search ran from the seed grid.
+    Cold,
+    /// A search ran, warm-started from a near-miss cached plan.
+    Warm,
+    /// Served from the plan cache; no search ran.
+    Cached,
+    /// Attached to an identical in-flight request's search.
+    Coalesced,
+}
+
+impl Provenance {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Provenance::Cold => "cold",
+            Provenance::Warm => "warm",
+            Provenance::Cached => "cached",
+            Provenance::Coalesced => "coalesced",
+        }
+    }
+}
+
+/// A completed search, shared by every waiter and the plan cache.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    pub pipeline: Pipeline,
+    pub knobs: SchedKnobs,
+    /// Predicted per-step makespan (seconds).
+    pub makespan: f64,
+    /// Worst per-device memory headroom (bytes; negative = OOM).
+    pub headroom: f64,
+    pub bubble_ratio: f64,
+    /// [`Provenance::Cold`] or [`Provenance::Warm`] — how the
+    /// *search* started (waiters may still see `Cached`/`Coalesced`).
+    pub searched: Provenance,
+    /// Drift to the warm-start donor (`None` for cold searches).
+    pub near_miss_distance: Option<f64>,
+    pub evals: usize,
+    pub iters: usize,
+    pub budget_exhausted: bool,
+    /// Generator wall time (seconds).
+    pub search_s: f64,
+    /// Request digest, echoed on the wire.
+    pub fingerprint: u64,
+    /// The request geometry — future requests match against this.
+    pub sketch: Sketch,
+}
+
+impl PlanOutcome {
+    /// Package this plan as a warm-start seed.
+    pub fn incumbent(&self) -> Incumbent {
+        Incumbent {
+            partition: self.pipeline.partition.clone(),
+            placement: self.pipeline.placement.clone(),
+            knobs: self.knobs,
+        }
+    }
+}
+
+/// What a waiter receives: the shared outcome plus this requester's
+/// own provenance.
+#[derive(Clone, Debug)]
+pub struct PlanResponse {
+    pub outcome: Arc<PlanOutcome>,
+    pub provenance: Provenance,
+}
+
+/// Admission-control rejection: the request queue is full.
+#[derive(Clone, Copy, Debug)]
+pub struct Rejected {
+    pub queue_len: usize,
+    /// Estimated seconds until a slot frees up (mean recent search
+    /// time × backlog / workers).
+    pub retry_after_s: f64,
+}
+
+/// Claim on an admitted request; [`Ticket::wait`] blocks for the
+/// response.
+pub struct Ticket {
+    rx: Receiver<PlanResponse>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.  Panics if the service is
+    /// dropped with this request still pending (drain first).
+    pub fn wait(self) -> PlanResponse {
+        self.rx.recv().expect("service delivers one response per admitted request")
+    }
+}
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceCfg {
+    /// Concurrent searches (each drives the shared pool via its own
+    /// client).
+    pub search_workers: usize,
+    /// Evaluation threads in the shared [`EvalPool`].
+    pub pool_threads: usize,
+    /// Admission bound: queued-but-unstarted requests beyond this are
+    /// rejected.  Coalesced attaches and cache hits never occupy a
+    /// slot.
+    pub queue_capacity: usize,
+    /// Plan-cache entries ([`cache::PlanCache`] FIFO bound).
+    pub cache_capacity: usize,
+    /// Near-miss warm-start threshold (worst-component relative
+    /// drift); `0.0` disables warm starts entirely.
+    pub near_miss_max_drift: f64,
+    /// Search budget for requests that don't carry their own.
+    pub default_budget_s: Option<f64>,
+    /// Start with dequeueing held (see [`Service::hold`]) — lets a
+    /// deterministic harness script its first wave before any search
+    /// starts.
+    pub hold: bool,
+}
+
+impl Default for ServiceCfg {
+    fn default() -> ServiceCfg {
+        ServiceCfg {
+            search_workers: 2,
+            pool_threads: std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1),
+            queue_capacity: 64,
+            cache_capacity: 256,
+            near_miss_max_drift: 0.25,
+            default_budget_s: None,
+            hold: false,
+        }
+    }
+}
+
+/// Lifetime request counters (all monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Every submission, including rejected ones.
+    pub requests: u64,
+    /// Admitted as a fresh cold search.
+    pub cold: u64,
+    /// Admitted as a warm-started search.
+    pub warm: u64,
+    /// Answered from the plan cache without a search.
+    pub cached: u64,
+    /// Attached to an identical in-flight search.
+    pub coalesced: u64,
+    /// Turned away by admission control.
+    pub rejected: u64,
+    /// Searches completed.
+    pub searches: u64,
+}
+
+enum WaiterTx {
+    Plain(Sender<PlanResponse>),
+    /// `(tag, shared channel)` — the NDJSON loop multiplexes every
+    /// response onto one channel.
+    Tagged(u64, Sender<(u64, PlanResponse)>),
+}
+
+impl WaiterTx {
+    fn send(self, resp: PlanResponse) {
+        // A vanished waiter (dropped ticket / closed connection) is
+        // not the service's problem.
+        match self {
+            WaiterTx::Plain(tx) => drop(tx.send(resp)),
+            WaiterTx::Tagged(tag, tx) => drop(tx.send((tag, resp))),
+        }
+    }
+}
+
+struct Waiter {
+    tx: WaiterTx,
+    provenance: Provenance,
+}
+
+struct QueuedReq {
+    key: ReqKey,
+    req: PlanRequest,
+    /// Warm-start seed + its near-miss distance (decided at
+    /// submission, under the lock — see module docs).
+    warm: Option<(Incumbent, f64)>,
+}
+
+struct State {
+    queue: VecDeque<QueuedReq>,
+    /// Key → waiters of the search that will serve them.  An entry
+    /// exists from admission to completion; identical submissions
+    /// attach here.
+    inflight: HashMap<ReqKey, Vec<Waiter>>,
+    cache: PlanCache,
+    stats: ServiceStats,
+    held: bool,
+    shutdown: bool,
+    /// Searches currently running on workers.
+    active: usize,
+    /// Recent search wall times (seconds) for retry-after estimates.
+    recent_s: VecDeque<f64>,
+}
+
+struct Inner {
+    cfg: ServiceCfg,
+    m: Mutex<State>,
+    /// Work available / released / shutdown.
+    work_cv: Condvar,
+    /// A search completed (drain listens here).
+    idle_cv: Condvar,
+}
+
+/// The long-running planner daemon; see module docs.
+pub struct Service {
+    inner: Arc<Inner>,
+    pool: Arc<EvalPool>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    pub fn new(cfg: ServiceCfg) -> Service {
+        assert!(cfg.search_workers >= 1);
+        assert!(cfg.queue_capacity >= 1);
+        assert!(cfg.near_miss_max_drift >= 0.0);
+        let pool = Arc::new(EvalPool::new(cfg.pool_threads.max(1)));
+        let inner = Arc::new(Inner {
+            cfg,
+            m: Mutex::new(State {
+                queue: VecDeque::new(),
+                inflight: HashMap::new(),
+                cache: PlanCache::new(cfg.cache_capacity),
+                stats: ServiceStats::default(),
+                held: cfg.hold,
+                shutdown: false,
+                active: 0,
+                recent_s: VecDeque::new(),
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+        });
+        let workers = (0..cfg.search_workers)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || worker(&inner, &pool))
+            })
+            .collect();
+        Service { inner, pool, workers }
+    }
+
+    /// Submit a request; `Ok` is a claim on exactly one response.
+    pub fn submit(&self, req: PlanRequest) -> Result<Ticket, Rejected> {
+        let (tx, rx) = channel();
+        self.enqueue(req, WaiterTx::Plain(tx))?;
+        Ok(Ticket { rx })
+    }
+
+    /// Submit with the response routed to a shared channel under
+    /// `tag` — the NDJSON front end's many-requests-one-writer shape.
+    pub fn submit_tagged(
+        &self,
+        req: PlanRequest,
+        tag: u64,
+        tx: Sender<(u64, PlanResponse)>,
+    ) -> Result<(), Rejected> {
+        self.enqueue(req, WaiterTx::Tagged(tag, tx))
+    }
+
+    /// Submit and block for the response (rejections pass through).
+    pub fn call(&self, req: PlanRequest) -> Result<PlanResponse, Rejected> {
+        self.submit(req).map(Ticket::wait)
+    }
+
+    fn enqueue(&self, req: PlanRequest, tx: WaiterTx) -> Result<(), Rejected> {
+        assert_eq!(req.kinds.len(), req.profile.n_layers());
+        assert!(req.nmb >= 1 && req.cluster.p() >= 1);
+        assert!(
+            req.rates.is_empty() || req.rates.len() == req.cluster.p(),
+            "one rate per device"
+        );
+        let key = req.key();
+        let mut guard = self.inner.m.lock().unwrap();
+        let st = &mut *guard;
+        st.stats.requests += 1;
+        // Fast path: an identical request already completed.
+        if let Some(out) = st.cache.get(&key) {
+            st.stats.cached += 1;
+            drop(guard);
+            tx.send(PlanResponse { outcome: out, provenance: Provenance::Cached });
+            return Ok(());
+        }
+        // Coalesce: an identical request is already being searched
+        // (or queued) — attach, occupying no queue slot.
+        if let Some(waiters) = st.inflight.get_mut(&key) {
+            st.stats.coalesced += 1;
+            waiters.push(Waiter { tx, provenance: Provenance::Coalesced });
+            return Ok(());
+        }
+        // Admission control.
+        if st.queue.len() >= self.inner.cfg.queue_capacity {
+            st.stats.rejected += 1;
+            return Err(Rejected {
+                queue_len: st.queue.len(),
+                retry_after_s: retry_after(st, &self.inner.cfg),
+            });
+        }
+        // Near-miss probe — decided here, against the cache as of
+        // submission, so provenance is a pure function of the stream.
+        let warm = if self.inner.cfg.near_miss_max_drift > 0.0 {
+            st.cache
+                .nearest(&req.sketch(), self.inner.cfg.near_miss_max_drift)
+                .map(|(out, d)| (out.incumbent(), d))
+        } else {
+            None
+        };
+        let provenance = if warm.is_some() {
+            st.stats.warm += 1;
+            Provenance::Warm
+        } else {
+            st.stats.cold += 1;
+            Provenance::Cold
+        };
+        st.inflight.insert(key.clone(), vec![Waiter { tx, provenance }]);
+        st.queue.push_back(QueuedReq { key, req, warm });
+        drop(guard);
+        self.inner.work_cv.notify_one();
+        Ok(())
+    }
+
+    /// Pause dequeueing: admitted requests queue up but no new search
+    /// starts.  With [`Service::release`] this makes wave-structured
+    /// streams fully deterministic (every submission in a wave sees
+    /// the same cache/in-flight state on every replay).
+    pub fn hold(&self) {
+        self.inner.m.lock().unwrap().held = true;
+    }
+
+    /// Resume dequeueing.
+    pub fn release(&self) {
+        self.inner.m.lock().unwrap().held = false;
+        self.inner.work_cv.notify_all();
+    }
+
+    /// Block until no request is queued or in flight.  Call
+    /// [`Service::release`] first — draining a held queue would wait
+    /// forever, so that is a panic, not a hang.
+    pub fn drain(&self) {
+        let mut st = self.inner.m.lock().unwrap();
+        while !(st.queue.is_empty() && st.inflight.is_empty()) {
+            assert!(
+                !(st.held && !st.queue.is_empty()),
+                "drain() on a held service with queued work"
+            );
+            st = self.inner.idle_cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.inner.m.lock().unwrap().stats
+    }
+
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        self.inner.m.lock().unwrap().cache.stats()
+    }
+
+    /// Evaluation threads backing every search.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.m.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Backlog-proportional retry estimate, floored so callers never busy
+/// spin on a zero.
+fn retry_after(st: &State, cfg: &ServiceCfg) -> f64 {
+    let mean_s = if st.recent_s.is_empty() {
+        0.05
+    } else {
+        st.recent_s.iter().sum::<f64>() / st.recent_s.len() as f64
+    };
+    let backlog = (st.queue.len() + st.active + 1) as f64;
+    (mean_s * backlog / cfg.search_workers as f64).max(1e-3)
+}
+
+fn worker(inner: &Inner, pool: &Arc<EvalPool>) {
+    loop {
+        let job = {
+            let mut st = inner.m.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if !st.held {
+                    if let Some(job) = st.queue.pop_front() {
+                        st.active += 1;
+                        break job;
+                    }
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        };
+        let t0 = Instant::now();
+        let outcome = Arc::new(run_search(&job, &inner.cfg, pool));
+        let wall_s = t0.elapsed().as_secs_f64();
+        {
+            let mut st = inner.m.lock().unwrap();
+            st.cache.insert(job.key.clone(), Arc::clone(&outcome));
+            st.stats.searches += 1;
+            st.active -= 1;
+            st.recent_s.push_back(wall_s);
+            if st.recent_s.len() > 32 {
+                st.recent_s.pop_front();
+            }
+            // Everything below happens under the same lock as the
+            // cache insert, so a late identical submission either
+            // attaches here or hits the cache — there is no window
+            // where it would start a duplicate search.
+            let waiters = st.inflight.remove(&job.key).expect("admitted ⇒ in flight");
+            for w in waiters {
+                w.tx.send(PlanResponse {
+                    outcome: Arc::clone(&outcome),
+                    provenance: w.provenance,
+                });
+            }
+        }
+        inner.idle_cv.notify_all();
+    }
+}
+
+/// One search, exactly as the batch CLI would run it — plus the
+/// shared pool and (for warm requests) the near-miss incumbent seed.
+fn run_search(job: &QueuedReq, cfg: &ServiceCfg, pool: &Arc<EvalPool>) -> PlanOutcome {
+    let req = &job.req;
+    let caps = req.cluster.mem_caps();
+    let mut opts = GenOptions::new(caps.p(), req.nmb);
+    opts.max_iters = req.max_iters;
+    opts.mem_caps = Some(caps);
+    if !req.rates.is_empty() {
+        opts.rates = Some(req.rates.clone());
+    }
+    opts.time_budget_s = req.budget_s.or(cfg.default_budget_s);
+    opts.shared_pool = Some(Arc::clone(pool));
+    if let Some((inc, _)) = &job.warm {
+        // Seed only — no migration pricing: a plan request is for a
+        // job that is not running yet, so nothing would migrate.
+        opts.incumbent = Some(inc.clone());
+    }
+    // Fresh per-search EvalCache: cross-request memoization would only
+    // ever help exact repeats, and those hit the plan cache instead.
+    let mut ecache = EvalCache::new();
+    let res = generate_with_cache(&req.profile, &opts, &mut ecache);
+    PlanOutcome {
+        makespan: res.report.total,
+        headroom: res.report.min_headroom(),
+        bubble_ratio: res.report.bubble_ratio(),
+        knobs: res.knobs,
+        pipeline: res.pipeline,
+        searched: if job.warm.is_some() { Provenance::Warm } else { Provenance::Cold },
+        near_miss_distance: job.warm.as_ref().map(|(_, d)| *d),
+        evals: res.evals,
+        iters: res.iters,
+        budget_exhausted: res.budget_exhausted,
+        search_s: res.elapsed_s,
+        fingerprint: job.key.fingerprint(),
+        sketch: req.sketch(),
+    }
+}

@@ -1,0 +1,274 @@
+//! Newline-delimited-JSON front end for the planner service
+//! (DESIGN.md §8) — what `adaptis serve` speaks over
+//! stdin/stdout.
+//!
+//! One request per input line, one response per output line (compact
+//! [`Json::to_string_compact`] framing; responses may arrive out of
+//! request order and are correlated by the echoed `id`):
+//!
+//! ```text
+//! {"id":"r1","model":"gemma","size":"small","p":4,"t":2,"nmb":16,
+//!  "seq":4096,"budget_s":0.5,"iters":64,
+//!  "rates":[1,1,1.5,1],"mem_caps":[8e10,8e10,8e10,8e10],
+//!  "cost_scale":[{"layer":3,"f":1.1,"b":1.05}]}
+//! ```
+//!
+//! `model` is required; everything else defaults (`size` small, `p` 4,
+//! `t` 2, `nmb` 8, `seq` 4096).  `cost_scale` multiplies per-layer
+//! profiled costs (keys `f`, `b`, `w`, `comm_bytes`), which is how a
+//! client expresses "the same model, measured a little differently" —
+//! the near-miss reuse path.  Responses:
+//!
+//! ```text
+//! {"id":"r1","ok":true,"provenance":"cold","fingerprint":"ab12…",
+//!  "makespan_s":…,"headroom_bytes":…,"bubble_ratio":…,
+//!  "near_miss_distance":null,"partition":[…],"placement":[…],
+//!  "knobs":{…},"evals":…,"iters":…,"budget_exhausted":false,
+//!  "search_s":…}
+//! {"id":"r9","ok":false,"error":"overloaded","retry_after_s":0.2,"queue_len":64}
+//! {"id":"","ok":false,"error":"parse: …"}
+//! ```
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::ClusterSpec;
+use crate::config::{Family, ParallelCfg, Size};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::{PlanRequest, PlanResponse, Rejected, Service};
+
+/// A request line the service cannot act on; `id` is best-effort.
+#[derive(Clone, Debug)]
+pub struct ParseErr {
+    pub id: String,
+    pub msg: String,
+}
+
+pub fn parse_family(name: &str) -> Result<Family, String> {
+    match name.to_lowercase().as_str() {
+        "gemma" => Ok(Family::Gemma),
+        "deepseek" => Ok(Family::DeepSeek),
+        "nemotron" | "nemotron-h" | "nemotronh" => Ok(Family::NemotronH),
+        "llama2" | "llama-2" | "llama" => Ok(Family::Llama2),
+        other => Err(format!("unknown model family {other:?}")),
+    }
+}
+
+pub fn parse_size(name: &str) -> Result<Size, String> {
+    match name.to_lowercase().as_str() {
+        "small" | "s" => Ok(Size::Small),
+        "medium" | "m" => Ok(Size::Medium),
+        "large" | "l" => Ok(Size::Large),
+        other => Err(format!("unknown size {other:?}")),
+    }
+}
+
+fn f64_list(v: &Json, what: &str) -> Result<Vec<f64>, String> {
+    let items = v.as_arr().ok_or_else(|| format!("{what} must be an array"))?;
+    items
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| format!("{what} entries must be numbers")))
+        .collect()
+}
+
+/// Parse one request line.  See the module docs for the schema.
+pub fn parse_request(line: &str) -> Result<(String, PlanRequest), ParseErr> {
+    let v = Json::parse(line)
+        .map_err(|e| ParseErr { id: String::new(), msg: format!("parse: {e}") })?;
+    let id = v.get("id").and_then(Json::as_str).unwrap_or("").to_string();
+    let fail = |msg: String| ParseErr { id: id.clone(), msg };
+    if v.as_obj().is_none() {
+        return Err(fail("request must be a JSON object".into()));
+    }
+    let family = parse_family(
+        v.get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| fail("missing \"model\"".into()))?,
+    )
+    .map_err(&fail)?;
+    let size =
+        parse_size(v.get("size").and_then(Json::as_str).unwrap_or("small")).map_err(&fail)?;
+    let p = v.get("p").and_then(Json::as_usize).unwrap_or(4);
+    let t = v.get("t").and_then(Json::as_usize).unwrap_or(2);
+    let nmb = v.get("nmb").and_then(Json::as_usize).unwrap_or(8);
+    let seq = v.get("seq").and_then(Json::as_usize).unwrap_or(4096);
+    if p < 1 || nmb < 1 {
+        return Err(fail("\"p\" and \"nmb\" must be ≥ 1".into()));
+    }
+    let mut req = PlanRequest::table5(family, size, &ParallelCfg::new(p, t, nmb, 1, seq));
+    if let Some(caps) = v.get("mem_caps") {
+        let caps = f64_list(caps, "\"mem_caps\"").map_err(&fail)?;
+        if caps.len() != p {
+            return Err(fail(format!("\"mem_caps\" needs {p} entries")));
+        }
+        req.cluster = ClusterSpec::with_caps(caps);
+    }
+    if let Some(rates) = v.get("rates") {
+        let rates = f64_list(rates, "\"rates\"").map_err(&fail)?;
+        if rates.len() != p {
+            return Err(fail(format!("\"rates\" needs {p} entries")));
+        }
+        // An all-healthy vector is the same request as no vector.
+        if rates.iter().any(|&r| r != 1.0) {
+            req.rates = rates;
+        }
+    }
+    if let Some(b) = v.get("budget_s").and_then(Json::as_f64) {
+        req.budget_s = Some(b);
+    }
+    if let Some(iters) = v.get("iters").and_then(Json::as_usize) {
+        req.max_iters = iters;
+    }
+    if let Some(scales) = v.get("cost_scale") {
+        let entries =
+            scales.as_arr().ok_or_else(|| fail("\"cost_scale\" must be an array".into()))?;
+        for e in entries {
+            let layer = e
+                .get("layer")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| fail("cost_scale entry needs \"layer\"".into()))?;
+            if layer >= req.profile.n_layers() {
+                return Err(fail(format!("cost_scale layer {layer} out of range")));
+            }
+            let l = &mut req.profile.layers[layer];
+            for (key, slot) in [
+                ("f", &mut l.f),
+                ("b", &mut l.b),
+                ("w", &mut l.w),
+                ("comm_bytes", &mut l.comm_bytes),
+            ] {
+                if let Some(factor) = e.get(key).and_then(Json::as_f64) {
+                    *slot *= factor;
+                }
+            }
+        }
+        req.profile.rebuild_table();
+    }
+    Ok((id, req))
+}
+
+/// One successful response line (no trailing newline).
+pub fn response_line(id: &str, resp: &PlanResponse) -> String {
+    let out = &resp.outcome;
+    obj(vec![
+        ("id", s(id)),
+        ("ok", Json::Bool(true)),
+        ("provenance", s(resp.provenance.name())),
+        ("fingerprint", s(&format!("{:016x}", out.fingerprint))),
+        ("makespan_s", num(out.makespan)),
+        ("headroom_bytes", num(out.headroom)),
+        ("bubble_ratio", num(out.bubble_ratio)),
+        (
+            "near_miss_distance",
+            out.near_miss_distance.map_or(Json::Null, num),
+        ),
+        (
+            "partition",
+            arr(out.pipeline.partition.bounds.iter().map(|&b| num(b as f64)).collect()),
+        ),
+        (
+            "placement",
+            arr(out.pipeline.placement.device_of.iter().map(|&d| num(d as f64)).collect()),
+        ),
+        (
+            "knobs",
+            obj(vec![
+                ("split_bw", Json::Bool(out.knobs.split_bw)),
+                ("w_fill", Json::Bool(out.knobs.w_fill)),
+                ("mem_cap_factor", num(out.knobs.mem_cap_factor)),
+                ("overlap_aware", Json::Bool(out.knobs.overlap_aware)),
+            ]),
+        ),
+        ("evals", num(out.evals as f64)),
+        ("iters", num(out.iters as f64)),
+        ("budget_exhausted", Json::Bool(out.budget_exhausted)),
+        ("search_s", num(out.search_s)),
+    ])
+    .to_string_compact()
+}
+
+/// One admission-control rejection line.
+pub fn rejected_line(id: &str, rej: &Rejected) -> String {
+    obj(vec![
+        ("id", s(id)),
+        ("ok", Json::Bool(false)),
+        ("error", s("overloaded")),
+        ("retry_after_s", num(rej.retry_after_s)),
+        ("queue_len", num(rej.queue_len as f64)),
+    ])
+    .to_string_compact()
+}
+
+/// One malformed-request line.
+pub fn error_line(err: &ParseErr) -> String {
+    obj(vec![
+        ("id", s(&err.id)),
+        ("ok", Json::Bool(false)),
+        ("error", s(&err.msg)),
+    ])
+    .to_string_compact()
+}
+
+/// Run the request/response loop until `input` is exhausted, then
+/// wait for every in-flight response to be written.  Responses are
+/// written by a dedicated thread as searches complete (out of order
+/// under concurrency — correlate by `id`); rejections and parse
+/// errors are written inline.  Generic over the streams so tests can
+/// drive it without a process boundary.
+pub fn serve<R, W>(
+    service: &Service,
+    input: R,
+    output: &Arc<Mutex<W>>,
+) -> std::io::Result<()>
+where
+    R: BufRead,
+    W: Write + Send + 'static,
+{
+    let (tx, rx) = channel::<(u64, PlanResponse)>();
+    let ids: Arc<Mutex<HashMap<u64, String>>> = Arc::new(Mutex::new(HashMap::new()));
+    let writer = {
+        let out = Arc::clone(output);
+        let ids = Arc::clone(&ids);
+        std::thread::spawn(move || {
+            for (tag, resp) in rx {
+                let id = ids.lock().unwrap().remove(&tag).unwrap_or_default();
+                let mut w = out.lock().unwrap();
+                let _ = writeln!(w, "{}", response_line(&id, &resp));
+                let _ = w.flush();
+            }
+        })
+    };
+    let mut tag = 0u64;
+    for line in input.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_request(line) {
+            Err(e) => {
+                let mut w = output.lock().unwrap();
+                writeln!(w, "{}", error_line(&e))?;
+                w.flush()?;
+            }
+            Ok((id, req)) => {
+                tag += 1;
+                ids.lock().unwrap().insert(tag, id.clone());
+                if let Err(rej) = service.submit_tagged(req, tag, tx.clone()) {
+                    ids.lock().unwrap().remove(&tag);
+                    let mut w = output.lock().unwrap();
+                    writeln!(w, "{}", rejected_line(&id, &rej))?;
+                    w.flush()?;
+                }
+            }
+        }
+    }
+    // In-flight waiters hold sender clones; once the last response is
+    // fanned out the channel closes and the writer drains and exits.
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}

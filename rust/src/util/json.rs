@@ -89,6 +89,15 @@ impl Json {
         out
     }
 
+    /// Single-line emission (no newlines or indentation) — the
+    /// newline-delimited-JSON framing `adaptis serve` speaks, where
+    /// one value must be exactly one line.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.emit(&mut out, 0, false);
+        out
+    }
+
     fn emit(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {

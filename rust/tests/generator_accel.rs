@@ -196,3 +196,23 @@ fn accel_matches_elision_free_under_tight_caps() {
         "tight caps: candidates conserved"
     );
 }
+
+#[test]
+fn shared_pool_reuse_is_bit_identical() {
+    // A process-wide EvalPool (the planner service's configuration)
+    // must be a pure transport: reusing one pool across generate()
+    // calls — and mixing it with private-pool runs — changes nothing.
+    use adaptis::generator::pool::EvalPool;
+    use std::sync::Arc;
+
+    let prof = table5_profile(Family::NemotronH, 4, 64);
+    let pool = Arc::new(EvalPool::new(3));
+    let shared = GenOptions::new(4, 64).with_shared_pool(Arc::clone(&pool));
+    let first = generate(&prof, &shared);
+    let second = generate(&prof, &shared);
+    let private = generate(&prof, &GenOptions::new(4, 64));
+    assert_same_search(&first, &second, "shared pool, first vs second use");
+    assert_same_search(&first, &private, "shared pool vs private pool");
+    assert_eq!(first.evals, second.evals, "reuse must not change elision");
+    assert_eq!(first.evals, private.evals, "pool choice must not change elision");
+}

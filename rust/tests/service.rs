@@ -1,0 +1,316 @@
+//! Planner-service suite (DESIGN.md §8): request
+//! fingerprinting, plan-cache/coalescing behavior, the warm-start
+//! guarantee, admission control, and the NDJSON front end.
+
+use std::io::Cursor;
+use std::sync::{Arc, Mutex};
+
+use adaptis::config::{Family, ParallelCfg, Size};
+use adaptis::generator::generate;
+use adaptis::service::fingerprint::near_miss_distance;
+use adaptis::service::{ndjson, PlanRequest, Provenance, Service, ServiceCfg};
+
+fn par(p: usize, nmb: usize) -> ParallelCfg {
+    ParallelCfg::new(p, 2, nmb, 1, 4096)
+}
+
+fn small_req(nmb: usize) -> PlanRequest {
+    let mut req = PlanRequest::table5(Family::Gemma, Size::Small, &par(4, nmb));
+    req.max_iters = 4;
+    req
+}
+
+/// A service sized for fast, fully deterministic tests: one search
+/// worker (serial searches), starting held so every wave is scripted.
+fn test_cfg() -> ServiceCfg {
+    ServiceCfg {
+        search_workers: 1,
+        pool_threads: 2,
+        queue_capacity: 8,
+        cache_capacity: 16,
+        near_miss_max_drift: 0.25,
+        default_budget_s: None,
+        hold: true,
+    }
+}
+
+// ---------------------------------------------------------------- keys
+
+#[test]
+fn identical_requests_share_a_key_and_fingerprint() {
+    let a = small_req(8);
+    let b = small_req(8);
+    assert_eq!(a.key(), b.key());
+    assert_eq!(a.key().fingerprint(), b.key().fingerprint());
+    assert_eq!(near_miss_distance(&a.sketch(), &b.sketch()), Some(0.0));
+}
+
+#[test]
+fn single_cost_bit_flip_changes_the_key() {
+    let a = small_req(8);
+    let mut b = small_req(8);
+    // One ULP on one forward cost of one layer: different request.
+    b.profile.layers[3].f = f64::from_bits(b.profile.layers[3].f.to_bits() + 1);
+    assert_ne!(a.key(), b.key());
+    assert_ne!(a.key().fingerprint(), b.key().fingerprint());
+}
+
+#[test]
+fn nmb_and_budget_variants_are_distinct_keys_but_zero_drift() {
+    // Different exact identity (no cache hit, no coalescing) …
+    let a = small_req(8);
+    let mut b = small_req(16);
+    b.budget_s = Some(30.0);
+    assert_ne!(a.key(), b.key());
+    // … yet the geometry is identical, so a near-miss warm start sees
+    // drift 0 — the premise of the warm ≤ cold guarantee.
+    assert_eq!(near_miss_distance(&a.sketch(), &b.sketch()), Some(0.0));
+}
+
+#[test]
+fn near_miss_metric_is_symmetric_and_reports_worst_drift() {
+    let a = small_req(8);
+    let mut b = small_req(8);
+    b.profile.layers[0].f *= 1.25; // rel drift 0.2 relative to the larger
+    b.profile.layers[1].b *= 1.10;
+    b.profile.rebuild_table();
+    let d_ab = near_miss_distance(&a.sketch(), &b.sketch()).expect("compatible");
+    let d_ba = near_miss_distance(&b.sketch(), &a.sketch()).expect("compatible");
+    assert_eq!(d_ab, d_ba, "metric must be symmetric");
+    assert!((d_ab - 0.2).abs() < 1e-12, "worst component wins: {d_ab}");
+}
+
+#[test]
+fn different_layer_kind_sequences_never_match() {
+    let a = small_req(8);
+    let b = PlanRequest::table5(Family::NemotronH, Size::Small, &par(4, 8));
+    assert_ne!(a.key(), b.key());
+    assert_eq!(near_miss_distance(&a.sketch(), &b.sketch()), None);
+    // Same family, different device count: also incompatible.
+    let c = PlanRequest::table5(Family::Gemma, Size::Small, &par(2, 8));
+    assert_eq!(near_miss_distance(&a.sketch(), &c.sketch()), None);
+}
+
+// ------------------------------------------------------------- service
+
+#[test]
+fn identical_inflight_requests_coalesce_to_one_search() {
+    let svc = Service::new(test_cfg());
+    // Submit 3 identical requests while dequeueing is held: the first
+    // is admitted cold, the rest attach to it.
+    let tickets: Vec<_> =
+        (0..3).map(|_| svc.submit(small_req(8)).expect("admitted")).collect();
+    svc.release();
+    let responses: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    svc.drain();
+    let provs: Vec<_> = responses.iter().map(|r| r.provenance).collect();
+    assert_eq!(
+        provs,
+        [Provenance::Cold, Provenance::Coalesced, Provenance::Coalesced]
+    );
+    // Every waiter got the very same outcome object.
+    assert!(Arc::ptr_eq(&responses[0].outcome, &responses[1].outcome));
+    assert!(Arc::ptr_eq(&responses[0].outcome, &responses[2].outcome));
+    let stats = svc.stats();
+    assert_eq!(stats.searches, 1, "coalescing must not duplicate the search");
+    assert_eq!((stats.cold, stats.coalesced, stats.cached), (1, 2, 0));
+}
+
+#[test]
+fn repeated_request_is_served_from_the_plan_cache() {
+    let svc = Service::new(test_cfg());
+    svc.release();
+    let first = svc.call(small_req(8)).expect("admitted");
+    svc.drain();
+    let again = svc.call(small_req(8)).expect("admitted");
+    assert_eq!(first.provenance, Provenance::Cold);
+    assert_eq!(again.provenance, Provenance::Cached);
+    assert!(
+        Arc::ptr_eq(&first.outcome, &again.outcome),
+        "a cache hit returns the stored outcome, it does not re-search"
+    );
+    assert_eq!(svc.stats().searches, 1);
+    assert_eq!(svc.plan_cache_stats().hits, 1);
+}
+
+#[test]
+fn near_miss_warm_start_is_never_worse_than_cold() {
+    // The budget-variant pair: identical geometry (drift 0), distinct
+    // exact key.  The warm search seeds the incumbent with the cached
+    // plan and tunes under the *same* evaluation context, and tuning
+    // only ever accepts improvements — so warm ≤ cold is structural,
+    // not statistical.
+    let svc = Service::new(test_cfg());
+    svc.release();
+    let cold = svc.call(small_req(8)).expect("admitted");
+    svc.drain();
+    let mut variant = small_req(8);
+    variant.budget_s = Some(1e6); // effectively unlimited, but a new key
+    let warm = svc.call(variant).expect("admitted");
+    svc.drain();
+    assert_eq!(cold.provenance, Provenance::Cold);
+    assert_eq!(warm.provenance, Provenance::Warm);
+    assert_eq!(warm.outcome.near_miss_distance, Some(0.0));
+    assert!(
+        warm.outcome.makespan <= cold.outcome.makespan + 1e-9,
+        "warm {} > cold {}",
+        warm.outcome.makespan,
+        cold.outcome.makespan
+    );
+    // And the cold search itself matches a direct generator run with
+    // the same request — the service adds routing, not search policy.
+    let req = small_req(8);
+    let mut opts = adaptis::generator::GenOptions::new(4, req.nmb);
+    opts.max_iters = req.max_iters;
+    opts.mem_caps = Some(req.cluster.mem_caps());
+    let direct = generate(&req.profile, &opts);
+    assert_eq!(cold.outcome.makespan, direct.report.total);
+    assert_eq!(cold.outcome.pipeline.partition, direct.pipeline.partition);
+}
+
+#[test]
+fn full_queue_rejects_with_retry_after() {
+    let mut cfg = test_cfg();
+    cfg.queue_capacity = 1;
+    let svc = Service::new(cfg); // held: nothing dequeues yet
+    let t0 = svc.submit(small_req(8)).expect("fills the one slot");
+    // A *different* request (no coalescing) must now be rejected.
+    let rej = svc.submit(small_req(16)).expect_err("queue is full");
+    assert_eq!(rej.queue_len, 1);
+    assert!(rej.retry_after_s > 0.0, "retry-after must never be zero");
+    let stats = svc.stats();
+    assert_eq!(stats.rejected, 1);
+    // Identical-to-queued requests still coalesce — they take no slot.
+    let t1 = svc.submit(small_req(8)).expect("coalesces despite full queue");
+    svc.release();
+    assert_eq!(t0.wait().provenance, Provenance::Cold);
+    assert_eq!(t1.wait().provenance, Provenance::Coalesced);
+    svc.drain();
+}
+
+#[test]
+fn scripted_stream_replays_bitwise() {
+    // Two fresh services, the same wave-structured stream: every
+    // response (plan bits + provenance) and every counter must agree.
+    let run = || {
+        let svc = Service::new(test_cfg());
+        let mut log = Vec::new();
+        // Wave 1: two distinct requests plus one duplicate.
+        let wave1 = vec![small_req(8), small_req(16), small_req(8)];
+        let tickets: Vec<_> =
+            wave1.into_iter().map(|r| svc.submit(r).expect("admitted")).collect();
+        svc.release();
+        for t in tickets {
+            let resp = t.wait();
+            log.push((
+                resp.provenance,
+                resp.outcome.makespan.to_bits(),
+                resp.outcome.pipeline.partition.bounds.clone(),
+                resp.outcome.pipeline.placement.device_of.clone(),
+                resp.outcome.evals,
+            ));
+        }
+        svc.drain();
+        // Wave 2: an exact repeat and a near-miss variant.
+        svc.hold();
+        let mut variant = small_req(8);
+        variant.profile.layers[0].f *= 1.02;
+        variant.profile.rebuild_table();
+        let tickets: Vec<_> = [small_req(8), variant]
+            .into_iter()
+            .map(|r| svc.submit(r).expect("admitted"))
+            .collect();
+        svc.release();
+        for t in tickets {
+            let resp = t.wait();
+            log.push((
+                resp.provenance,
+                resp.outcome.makespan.to_bits(),
+                resp.outcome.pipeline.partition.bounds.clone(),
+                resp.outcome.pipeline.placement.device_of.clone(),
+                resp.outcome.evals,
+            ));
+        }
+        svc.drain();
+        (log, svc.stats(), svc.plan_cache_stats())
+    };
+    let (log_a, stats_a, cache_a) = run();
+    let (log_b, stats_b, cache_b) = run();
+    assert_eq!(log_a, log_b, "responses must replay bitwise");
+    assert_eq!(stats_a, stats_b, "provenance counters must replay");
+    assert_eq!(cache_a, cache_b, "cache traffic must replay");
+    // Sanity on the stream's shape: wave 1 = cold, cold, coalesced;
+    // wave 2 = cached repeat + warm near-miss.
+    let provs: Vec<_> = log_a.iter().map(|e| e.0).collect();
+    assert_eq!(
+        provs,
+        [
+            Provenance::Cold,
+            Provenance::Cold,
+            Provenance::Coalesced,
+            Provenance::Cached,
+            Provenance::Warm,
+        ]
+    );
+}
+
+// -------------------------------------------------------------- ndjson
+
+#[test]
+fn parse_request_round_trips_the_schema() {
+    let line = r#"{"id":"r1","model":"gemma","size":"small","p":4,"nmb":16,
+        "budget_s":0.5,"iters":12,"rates":[1,1,1.5,1],
+        "cost_scale":[{"layer":0,"f":1.5}]}"#
+        .replace('\n', " ");
+    let (id, req) = ndjson::parse_request(&line).expect("valid request");
+    assert_eq!(id, "r1");
+    assert_eq!((req.nmb, req.max_iters), (16, 12));
+    assert_eq!(req.budget_s, Some(0.5));
+    assert_eq!(req.rates, vec![1.0, 1.0, 1.5, 1.0]);
+    let plain = PlanRequest::table5(Family::Gemma, Size::Small, &par(4, 16));
+    assert_eq!(req.profile.layers[0].f, plain.profile.layers[0].f * 1.5);
+    assert_eq!(req.profile.layers[1].f, plain.profile.layers[1].f);
+
+    for bad in [
+        "not json",
+        r#"{"id":"x"}"#,                               // missing model
+        r#"{"model":"warp-drive"}"#,                   // unknown family
+        r#"{"model":"gemma","rates":[1,2]}"#,          // wrong arity
+        r#"{"model":"gemma","cost_scale":[{"f":2}]}"#, // entry without layer
+    ] {
+        assert!(ndjson::parse_request(bad).is_err(), "must reject: {bad}");
+    }
+    // All-unit rates normalize away: same exact key as no rates at all.
+    let (_, a) = ndjson::parse_request(r#"{"model":"gemma","rates":[1,1,1,1]}"#).unwrap();
+    let (_, b) = ndjson::parse_request(r#"{"model":"gemma"}"#).unwrap();
+    assert_eq!(a.key(), b.key());
+}
+
+#[test]
+fn ndjson_serve_answers_and_flags_garbage() {
+    let mut cfg = test_cfg();
+    cfg.hold = false;
+    let svc = Service::new(cfg);
+    let input = "\n{\"id\":\"a\",\"model\":\"gemma\",\"nmb\":8,\"iters\":4}\n\
+                 this is not json\n\
+                 {\"id\":\"b\",\"model\":\"gemma\",\"nmb\":8,\"iters\":4}\n";
+    let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+    ndjson::serve(&svc, Cursor::new(input), &out).expect("io on in-memory streams");
+    svc.drain();
+    let text = String::from_utf8(out.lock().unwrap().clone()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "one response per non-empty line:\n{text}");
+    let err = lines.iter().find(|l| l.contains("\"ok\":false")).expect("garbage flagged");
+    assert!(err.contains("parse:"), "{err}");
+    for id in ["\"id\":\"a\"", "\"id\":\"b\""] {
+        let line = lines
+            .iter()
+            .find(|l| l.contains(id) && l.contains("\"ok\":true"))
+            .unwrap_or_else(|| panic!("missing success line for {id}:\n{text}"));
+        assert!(line.contains("\"provenance\":"), "{line}");
+        assert!(line.contains("\"partition\":["), "{line}");
+        assert!(line.contains("\"fingerprint\":\""), "{line}");
+    }
+    // b is an exact repeat of a: exactly one search ran.
+    assert_eq!(svc.stats().searches, 1);
+}

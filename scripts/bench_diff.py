@@ -31,6 +31,7 @@ ARTIFACTS = [
     "BENCH_generator.json",
     "BENCH_executor.json",
     "BENCH_replan.json",
+    "BENCH_service.json",
 ]
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CUR_DIR = os.path.join(REPO, "rust")

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 verification plus bench smoke runs (perfmodel + generator +
-# executor + replan).
+# executor + replan + service).
 #   scripts/verify.sh          build + test + bench smoke
 #   scripts/verify.sh --fast   build + test only
 set -euo pipefail
@@ -28,6 +28,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   cargo bench --bench executor -- --smoke
   echo "== replan bench smoke (writes rust/BENCH_replan.json) =="
   cargo bench --bench replan -- --smoke
+  echo "== service bench smoke (writes rust/BENCH_service.json) =="
+  cargo bench --bench service -- --smoke
   if command -v python3 >/dev/null 2>&1; then
     echo "== bench drift vs committed baseline (report-only) =="
     python3 ../scripts/bench_diff.py || true
