@@ -14,6 +14,10 @@
 //! rejections — and reports throughput (plans/s), latency p50/p99 and
 //! the cold/warm/cached/coalesced/rejected mix.
 //!
+//! Phase 3 measures the fault-tolerance layer (ISSUE 8): degraded
+//! fallback latency on an expired deadline, response-time ceiling
+//! under a tight deadline, and cold-start journal replay latency.
+//!
 //! Emits `BENCH_service.json`; `--smoke` shrinks the closed loop for
 //! CI.
 
@@ -22,7 +26,9 @@ use std::time::Instant;
 
 use adaptis::config::{Family, ParallelCfg, Size};
 use adaptis::generator::{generate, GenOptions};
-use adaptis::service::{PlanRequest, Provenance, Service, ServiceCfg, ServiceStats};
+use adaptis::service::{
+    PlanRequest, Provenance, Service, ServiceCfg, ServiceError, ServiceStats,
+};
 use adaptis::util::json::{arr, num, obj, s, Json};
 use adaptis::util::rng::Rng;
 use adaptis::util::stats::percentile;
@@ -65,6 +71,7 @@ fn held_cfg() -> ServiceCfg {
         cache_capacity: 64,
         near_miss_max_drift: 0.25,
         default_budget_s: None,
+        default_deadline_s: None,
         hold: true,
     }
 }
@@ -78,7 +85,8 @@ fn deterministic_phase() -> (Vec<Json>, Json) {
     let tickets: Vec<_> =
         (0..4).map(|_| svc.submit(base_req(8, 8)).expect("admitted")).collect();
     svc.release();
-    let responses: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    let responses: Vec<_> =
+        tickets.into_iter().map(|t| t.wait().expect("one response each")).collect();
     svc.drain();
     let provs: Vec<_> = responses.iter().map(|r| r.provenance).collect();
     assert_eq!(
@@ -179,7 +187,7 @@ fn deterministic_phase() -> (Vec<Json>, Json) {
                 .collect();
             svc.release();
             for t in tickets {
-                let r = t.wait();
+                let r = t.wait().expect("response");
                 log.push((
                     r.provenance,
                     r.outcome.makespan.to_bits(),
@@ -225,7 +233,7 @@ fn deterministic_phase() -> (Vec<Json>, Json) {
     }
     assert_eq!(rejections, 3, "distinct requests beyond the slot must be rejected");
     svc.release();
-    t0.wait();
+    t0.wait().expect("response");
     svc.drain();
     rows.push(obj(vec![
         ("scenario", s("admission_control")),
@@ -250,6 +258,7 @@ fn closed_loop(clients: usize, per_client: usize, iters: usize) -> Json {
         cache_capacity: 64,
         near_miss_max_drift: 0.25,
         default_budget_s: None,
+        default_deadline_s: None,
         hold: false,
     }));
     let t0 = Instant::now();
@@ -266,13 +275,14 @@ fn closed_loop(clients: usize, per_client: usize, iters: usize) -> Json {
                     loop {
                         match svc.call(req.clone()) {
                             Ok(_) => break,
-                            Err(rej) => {
+                            Err(ServiceError::Overloaded(rej)) => {
                                 // Back off as told, capped so a smoke
                                 // run never sleeps long.
                                 std::thread::sleep(std::time::Duration::from_secs_f64(
                                     rej.retry_after_s.min(0.05),
                                 ));
                             }
+                            Err(e) => panic!("closed loop hit a fault: {e}"),
                         }
                     }
                     lat.push(t.elapsed().as_secs_f64());
@@ -326,6 +336,120 @@ fn closed_loop(clients: usize, per_client: usize, iters: usize) -> Json {
     ])
 }
 
+/// Phase 3: the fault-tolerance layer's costs (ISSUE 8) — degraded
+/// fallback latency, tight-deadline response ceiling, and cold-start
+/// journal replay.  Each row asserts its own contract in-bench so a
+/// regression fails the run, not just the diff.
+fn fault_tolerance_phase() -> Vec<Json> {
+    let mut rows = Vec::new();
+    let mut cfg = held_cfg();
+    cfg.hold = false;
+
+    // Expired deadline: the deterministic fallback, not an error.
+    let svc = Service::new(cfg);
+    let mut req = base_req(8, 8);
+    req.deadline_s = Some(0.0);
+    let t = Instant::now();
+    let resp = svc.call(req).expect("degradation is not an error");
+    let fallback_s = t.elapsed().as_secs_f64();
+    assert_eq!(resp.provenance, Provenance::Degraded);
+    assert!(resp.outcome.deadline_hit && resp.outcome.evals == 0);
+    let st = svc.stats();
+    assert_eq!((st.degraded, st.deadline_hits), (1, 1));
+    println!(
+        "  degraded fallback: {:.3} ms, makespan {:.6} s",
+        fallback_s * 1e3,
+        resp.outcome.makespan
+    );
+    rows.push(obj(vec![
+        ("scenario", s("deadline_degraded")),
+        ("degraded", num(st.degraded as f64)),
+        ("deadline_hits", num(st.deadline_hits as f64)),
+        ("fallback_latency_s", num(fallback_s)),
+        ("fallback_makespan_s", num(resp.outcome.makespan)),
+    ]));
+
+    // Tight-but-live deadline on a deliberately heavy search.  The
+    // hard contract is the response-time ceiling; whether the cut
+    // actually fired is reported (a fast machine may converge first —
+    // that, too, honors the deadline).
+    const DEADLINE_S: f64 = 0.25;
+    const SLACK_S: f64 = 2.0; // generous: CI schedulers stall threads
+    let mut req = PlanRequest::table5(
+        Family::Gemma,
+        Size::Medium,
+        &ParallelCfg::new(8, 2, 64, 1, 4096),
+    );
+    const HEAVY_ITERS: usize = 100_000;
+    req.max_iters = HEAVY_ITERS;
+    req.deadline_s = Some(DEADLINE_S);
+    let t = Instant::now();
+    let resp = svc.call(req).expect("cut search still answers");
+    let wall_s = t.elapsed().as_secs_f64();
+    assert!(
+        wall_s <= DEADLINE_S + SLACK_S,
+        "deadline ignored: {wall_s:.3} s for a {DEADLINE_S} s deadline"
+    );
+    assert!(
+        resp.outcome.deadline_hit || resp.outcome.iters < HEAVY_ITERS,
+        "neither cut nor converged — the deadline did nothing"
+    );
+    println!(
+        "  deadline cut: answered in {:.0} ms against a {:.0} ms deadline \
+         (hit={}, {} iters ran)",
+        wall_s * 1e3,
+        DEADLINE_S * 1e3,
+        resp.outcome.deadline_hit,
+        resp.outcome.iters
+    );
+    rows.push(obj(vec![
+        ("scenario", s("deadline_cut")),
+        ("deadline_s", num(DEADLINE_S)),
+        ("wall_s", num(wall_s)),
+        ("iters_ran", num(resp.outcome.iters as f64)),
+        ("deadline_hit", num(u64::from(resp.outcome.deadline_hit) as f64)),
+        ("degraded", num(u64::from(resp.provenance == Provenance::Degraded) as f64)),
+    ]));
+    drop(svc);
+
+    // Journal replay latency: M committed plans, cold restart.
+    const M: usize = 8;
+    let path = std::env::temp_dir()
+        .join(format!("adaptis-bench-journal-{}.jnl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    {
+        let svc = Service::with_journal(cfg, &path).expect("fresh journal");
+        for i in 0..M {
+            svc.call(base_req(4 + 2 * i, 4)).expect("searched");
+        }
+        assert!(svc.flush_journal());
+    }
+    let t = Instant::now();
+    let svc = Service::with_journal(cfg, &path).expect("replay");
+    let replay_s = t.elapsed().as_secs_f64();
+    let st = svc.stats();
+    assert_eq!((st.journal_recovered, st.journal_torn), (M as u64, 0));
+    assert_eq!(
+        svc.call(base_req(4, 4)).expect("hit").provenance,
+        Provenance::Cached,
+        "replayed journal must serve from cache"
+    );
+    println!(
+        "  journal replay: {M} plans in {:.3} ms ({:.3} ms/plan)",
+        replay_s * 1e3,
+        replay_s * 1e3 / M as f64
+    );
+    rows.push(obj(vec![
+        ("scenario", s("journal_replay")),
+        ("plans", num(M as f64)),
+        ("replay_s", num(replay_s)),
+        ("replay_per_plan_s", num(replay_s / M as f64)),
+    ]));
+    drop(svc);
+    let _ = std::fs::remove_file(&path);
+    rows
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!("== planner service: deterministic contracts ==");
@@ -335,12 +459,16 @@ fn main() {
     let (clients, per_client, iters) = if smoke { (3, 5, 6) } else { (6, 25, 12) };
     let load_rows = vec![closed_loop(clients, per_client, iters)];
 
+    println!("== planner service: fault tolerance ==");
+    let ft_rows = fault_tolerance_phase();
+
     let out = obj(vec![
         ("bench", s("service")),
         ("smoke", Json::Bool(smoke)),
         ("determinism", arr(det_rows)),
         ("warm_vs_cold", warm_row),
         ("load", arr(load_rows)),
+        ("fault_tolerance", arr(ft_rows)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_service.json");
     match std::fs::write(path, out.to_string_pretty()) {

@@ -32,7 +32,9 @@ use std::sync::Arc;
 
 use crate::generator::cache::{CacheStats, EvalCache};
 use crate::generator::pool::EvalPool;
-use crate::generator::{generate_with_cache, GenOptions, GenResult, Incumbent, MigrationCfg};
+use crate::generator::{
+    generate_with_cache, CancelToken, GenOptions, GenResult, Incumbent, MigrationCfg,
+};
 use crate::profile::ProfiledData;
 
 /// Re-planner configuration.
@@ -112,6 +114,34 @@ impl Replanner {
         nmb: usize,
         rates: &[f64],
     ) -> GenResult {
+        self.plan_inner(profile, p, nmb, rates, None)
+    }
+
+    /// [`Replanner::plan`] under a cooperative deadline: the token is
+    /// checked at the generator's budget boundaries, so a re-plan
+    /// racing a recovery deadline returns its best-so-far plan (prefix
+    /// bitwise-identical to the unbounded run) instead of overrunning
+    /// the stall it is trying to fix.  A cut re-plan still updates the
+    /// incumbent — it is the plan the harness will switch to.
+    pub fn plan_with_cancel(
+        &mut self,
+        profile: &ProfiledData,
+        p: usize,
+        nmb: usize,
+        rates: &[f64],
+        cancel: &CancelToken,
+    ) -> GenResult {
+        self.plan_inner(profile, p, nmb, rates, Some(cancel.clone()))
+    }
+
+    fn plan_inner(
+        &mut self,
+        profile: &ProfiledData,
+        p: usize,
+        nmb: usize,
+        rates: &[f64],
+        cancel: Option<CancelToken>,
+    ) -> GenResult {
         assert_eq!(rates.len(), p, "one rate estimate per (logical) device");
         if self.last.as_ref().is_some_and(|inc| inc.placement.p != p) {
             self.last = None;
@@ -119,6 +149,7 @@ impl Replanner {
         let mut opts = GenOptions::new(p, nmb);
         opts.rates = self.quantize(rates);
         opts.time_budget_s = self.cfg.time_budget_s;
+        opts.cancel = cancel;
         opts.shared_pool = Some(Arc::clone(&self.pool));
         if let Some(inc) = &self.last {
             opts.incumbent = Some(inc.clone());
@@ -193,5 +224,29 @@ mod tests {
         assert_eq!(shrunk.pipeline.placement.p, 3);
         assert_eq!(r.incumbent().unwrap().placement.p, 3);
         assert_eq!(r.replans, 3);
+    }
+
+    #[test]
+    fn deadline_cut_replan_still_yields_a_plan() {
+        let p = prof();
+        let mut r = Replanner::new(ReplanCfg::default());
+        // Pre-fired token: the tuning loop exits at its first check,
+        // but the seed grid already produced a valid incumbent plan.
+        let token = CancelToken::new();
+        token.cancel();
+        let res = r.plan_with_cancel(&p, 4, 8, &[1.0; 4], &token);
+        assert!(res.cancelled);
+        assert_eq!(res.iters, 0, "cut before the first tuning iteration");
+        assert!(res.pipeline.partition.is_valid());
+        assert!(r.incumbent().is_some(), "cut plan still seeds the next re-plan");
+        // An inert token changes nothing bitwise.
+        let mut fresh = Replanner::new(ReplanCfg::default());
+        let plain = fresh.plan(&p, 4, 8, &[1.0; 4]);
+        let mut fresh2 = Replanner::new(ReplanCfg::default());
+        let inert =
+            fresh2.plan_with_cancel(&p, 4, 8, &[1.0; 4], &CancelToken::new());
+        assert!(!inert.cancelled);
+        assert_eq!(inert.report.total.to_bits(), plain.report.total.to_bits());
+        assert_eq!(inert.evals, plain.evals);
     }
 }

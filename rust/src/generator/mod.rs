@@ -95,6 +95,7 @@ pub mod cache;
 pub mod pool;
 pub mod searchspace;
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -118,6 +119,51 @@ use pool::{EvalCtx, EvalPool, Job, PoolClient};
 /// this to be kept.  The bound pruner reuses the same threshold, which
 /// is what makes pruning unable to change the argmin.
 const ACCEPT_EPS: f64 = 1e-12;
+
+/// Cooperative cancellation handle ([`GenOptions::cancel`]).
+///
+/// A token fires either explicitly ([`CancelToken::cancel`], e.g. the
+/// planner service when every waiter for a request disconnects) or by
+/// an absolute wall-clock deadline fixed at construction.  The search
+/// polls it at the **exact** iteration/phase boundaries where
+/// [`GenOptions::time_budget_s`] is checked — never mid-batch — so a
+/// cancelled run's tuning-log prefix is bitwise-identical to the
+/// uncancelled run's, and the returned plan is the best one seen so
+/// far ([`GenResult::cancelled`] reports the cut).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only fires on an explicit [`CancelToken::cancel`].
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that also fires once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken { flag: Arc::new(AtomicBool::new(false)), deadline: Some(deadline) }
+    }
+
+    /// Request cancellation; all clones observe it.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// True once cancelled explicitly or past the deadline.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+            || self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// True iff the token carries a deadline and it has passed
+    /// (explicit cancellation does not count).
+    pub fn deadline_expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
 
 /// Which phases the generator may tune (Fig 10 ablation masks).
 #[derive(Clone, Copy, Debug)]
@@ -206,6 +252,13 @@ pub struct GenOptions {
     /// functions of their jobs and merge positionally, so results are
     /// bit-identical to a private-pool (or serial) run.
     pub shared_pool: Option<Arc<EvalPool>>,
+    /// Cooperative cancellation: polled at the same iteration/phase
+    /// boundaries as [`GenOptions::time_budget_s`], so a cancelled
+    /// run's prefix is bitwise-identical to the uncancelled run and
+    /// the best plan so far comes back with [`GenResult::cancelled`]
+    /// set.  The planner service uses this for per-request deadlines
+    /// and client disconnects.
+    pub cancel: Option<CancelToken>,
 }
 
 impl GenOptions {
@@ -227,6 +280,7 @@ impl GenOptions {
             rates: None,
             time_budget_s: None,
             shared_pool: None,
+            cancel: None,
         }
     }
 
@@ -259,6 +313,13 @@ impl GenOptions {
     /// [`GenOptions::shared_pool`]).
     pub fn with_shared_pool(mut self, pool: Arc<EvalPool>) -> Self {
         self.shared_pool = Some(pool);
+        self
+    }
+
+    /// Poll `cancel` at iteration/phase boundaries (see
+    /// [`GenOptions::cancel`]).
+    pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
+        self.cancel = Some(cancel);
         self
     }
 
@@ -391,6 +452,10 @@ pub struct GenResult {
     /// True iff [`GenOptions::time_budget_s`] ran out before the
     /// tuning loop converged (the result is still the best plan seen).
     pub budget_exhausted: bool,
+    /// True iff [`GenOptions::cancel`] fired (explicitly or via its
+    /// deadline) before the tuning loop converged — the result is
+    /// still the best plan seen so far.
+    pub cancelled: bool,
     /// Transposition-table traffic *during this search* (per-call
     /// delta, even when the cache is shared across re-plans).
     pub cache: CacheStats,
@@ -648,8 +713,16 @@ impl<'a> Evaluator<'a> {
                 client.submit(Job { idx: i, table, knobs: batch[i].cand.knobs });
             }
             for _ in 0..self.need.len() {
-                let done = client.collect();
-                assert!(!done.score.is_nan(), "pooled candidate evaluation panicked");
+                // A lost evaluation (worker thread died → NaN sentinel
+                // from its guard, or the pool itself vanished) aborts
+                // this search with a *typed* panic payload: the
+                // planner service catches it and fails exactly one
+                // request (`ServiceError::WorkerLost`); direct callers
+                // observe a panic, as the old assert gave them.
+                let done = match client.collect() {
+                    Ok(done) if !done.score.is_nan() => done,
+                    Ok(_) | Err(_) => std::panic::panic_any(pool::EvalAborted),
+                };
                 out[done.idx] = done.score;
                 self.evals_collapsed += usize::from(done.collapsed);
                 batch[done.idx].table = done.table;
@@ -925,16 +998,21 @@ pub fn generate_with_cache(
     });
 
     // ---- Bottleneck-phase tuning loop ------------------------------------
-    // Wall-clock budget: checked at iteration and phase boundaries (the
-    // granularity of one move batch), never mid-batch — so a budgeted
-    // run's prefix is identical to the unbudgeted run's.
+    // Wall-clock budget and cooperative cancellation: both checked at
+    // iteration and phase boundaries (the granularity of one move
+    // batch), never mid-batch — so a budgeted/cancelled run's prefix
+    // is identical to the unbounded run's.
     let over_budget = || opts.time_budget_s.is_some_and(|b| t0.elapsed().as_secs_f64() >= b);
+    let cancel_fired = || opts.cancel.as_ref().is_some_and(CancelToken::is_cancelled);
     let mut budget_exhausted = false;
+    let mut cancelled = false;
     let mut cur_report = ev.report(&cur, &cur_table);
     let mut iter = 0;
     'tuning: while iter < opts.max_iters {
-        if over_budget() {
-            budget_exhausted = true;
+        let (ob, cc) = (over_budget(), cancel_fired());
+        if ob || cc {
+            budget_exhausted = ob;
+            cancelled = cc;
             break 'tuning;
         }
         iter += 1;
@@ -942,8 +1020,10 @@ pub fn generate_with_cache(
 
         // Phase order: blame the phase with the strongest signal first.
         for phase in phase_order(cur_report.as_ref(), opts) {
-            if over_budget() {
-                budget_exhausted = true;
+            let (ob, cc) = (over_budget(), cancel_fired());
+            if ob || cc {
+                budget_exhausted = ob;
+                cancelled = cc;
                 break 'tuning;
             }
             let mut moves: Vec<Prepared> = match phase {
@@ -1050,6 +1130,7 @@ pub fn generate_with_cache(
         evals_cached: ev.evals_cached,
         evals_collapsed: ev.evals_collapsed,
         budget_exhausted,
+        cancelled,
         cache: ev.cache.stats().since(&stats0),
         migration_s,
         elapsed_s: t0.elapsed().as_secs_f64(),
@@ -1478,6 +1559,33 @@ mod tests {
         assert_eq!(budgeted.iters, 0);
         budgeted.pipeline.schedule.validate(&budgeted.pipeline.placement).unwrap();
         assert!(budgeted.report.total >= full.report.total - ACCEPT_EPS);
+    }
+
+    #[test]
+    fn cancel_token_cuts_like_a_budget_and_is_inert_otherwise() {
+        let prof = profile(Family::Gemma, 4, 8);
+        // Pre-fired token: spent before the first tuning iteration —
+        // the best grid seed comes back, flagged as cancelled (not as
+        // budget-exhausted), still valid.
+        let token = CancelToken::new();
+        token.cancel();
+        let cut = generate(&prof, &GenOptions::new(4, 8).with_cancel(token));
+        assert!(cut.cancelled && !cut.budget_exhausted);
+        assert_eq!(cut.iters, 0);
+        cut.pipeline.schedule.validate(&cut.pipeline.placement).unwrap();
+        // A far-future deadline token never fires: the search is
+        // bitwise-identical to one with no token at all.
+        let far = CancelToken::with_deadline(
+            Instant::now() + std::time::Duration::from_secs(3600),
+        );
+        let free = generate(&prof, &GenOptions::new(4, 8).with_cancel(far));
+        let plain = generate(&prof, &GenOptions::new(4, 8));
+        assert!(!free.cancelled && !free.budget_exhausted);
+        assert_eq!(free.report.total, plain.report.total);
+        assert_eq!(free.pipeline.partition, plain.pipeline.partition);
+        assert_eq!(free.pipeline.placement, plain.pipeline.placement);
+        assert_eq!(free.evals, plain.evals);
+        assert_eq!(free.log.len(), plain.log.len());
     }
 
     #[test]

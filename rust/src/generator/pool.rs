@@ -37,10 +37,21 @@
 //! jobs still in flight (collect would block forever once the workers
 //! are gone).  `Evaluator` and the planner service both hold the pool
 //! in an `Arc` that outlives every client.
+//!
+//! Fault containment (DESIGN.md §8, fault tolerance): a panic *inside*
+//! an evaluation is caught per-job and reported as a NaN sentinel.  A
+//! panic *outside* that catch kills the worker thread itself — for
+//! that case every worker carries a [`WorkerGuard`] whose unwind path
+//! (a) delivers a NaN sentinel for the job the dying worker held, so
+//! no collector waits forever, and (b) respawns a replacement worker,
+//! so the pool never shrinks.  All dispatch locking is poison-tolerant
+//! (`lock_dispatch`): a worker that dies while holding the lock leaves
+//! `Dispatch` consistent (every critical section is a single-step
+//! queue operation), so survivors simply keep going.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
 use crate::memory::MemCaps;
@@ -48,6 +59,36 @@ use crate::perfmodel::{
     fits_lower_bound, fused_score, fused_score_collapsed, SimArena, StageTable,
 };
 use crate::schedule::greedy::SchedKnobs;
+
+/// Every sender for a client's completion channel is gone: the pool
+/// (and its respawn machinery) was torn down with this client still
+/// waiting.  Surfaced by [`PoolClient::collect`] instead of a panic so
+/// the planner service can fail one request, not the process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolLost;
+
+impl std::fmt::Display for PoolLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "evaluation pool gone (all workers and dispatch state dropped)")
+    }
+}
+
+/// Typed panic payload raised by `Evaluator::scores` when a pooled
+/// evaluation is lost (the worker thread died, or the evaluation
+/// panicked and came back as the NaN sentinel).  The planner service
+/// catches it with `catch_unwind` and surfaces
+/// `ServiceError::WorkerLost`; direct `generate()` callers observe a
+/// panic, exactly as before this type existed.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalAborted;
+
+/// Poison-tolerant dispatch lock: a worker that panics while holding
+/// the mutex leaves `Dispatch` consistent (single-step queue edits
+/// only), so poisoning downgrades to "take the data as is" instead of
+/// cascading the panic into every other search sharing the pool.
+fn lock_dispatch(shared: &Shared) -> MutexGuard<'_, Dispatch> {
+    shared.m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One candidate evaluation: score `table` under `knobs`.
 pub struct Job {
@@ -89,6 +130,13 @@ struct Dispatch {
     ring: VecDeque<u64>,
     next_id: u64,
     shutdown: bool,
+    /// Test hook: how many upcoming dequeues should hard-abort their
+    /// worker thread (outside the per-job panic catch).
+    abort_next: usize,
+    /// Workers that died and were replaced by their [`WorkerGuard`].
+    workers_lost: u64,
+    /// Join handles of replacement workers, joined at pool drop.
+    respawned: Vec<JoinHandle<()>>,
 }
 
 impl Dispatch {
@@ -142,13 +190,16 @@ impl EvalPool {
                 ring: VecDeque::new(),
                 next_id: 0,
                 shutdown: false,
+                abort_next: 0,
+                workers_lost: 0,
+                respawned: Vec::new(),
             }),
             cv: Condvar::new(),
         });
         let workers = (0..threads)
             .map(|_| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker(&shared))
+                std::thread::spawn(move || worker(shared))
             })
             .collect();
         EvalPool { shared, threads, workers }
@@ -156,6 +207,20 @@ impl EvalPool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Test hook: make the next `n` dequeued jobs hard-abort their
+    /// worker thread *outside* the per-job panic catch, exercising
+    /// death detection, sentinel delivery, and respawn.
+    #[doc(hidden)]
+    pub fn inject_worker_abort(&self, n: usize) {
+        lock_dispatch(&self.shared).abort_next += n;
+    }
+
+    /// Workers lost to hard aborts over the pool's lifetime (each one
+    /// was replaced, so capacity never shrank).
+    pub fn workers_lost(&self) -> u64 {
+        lock_dispatch(&self.shared).workers_lost
     }
 
     /// Register a search with its evaluation context.  The client gets
@@ -179,31 +244,89 @@ impl EvalPool {
 
 impl Drop for EvalPool {
     fn drop(&mut self) {
-        self.shared.m.lock().unwrap().shutdown = true;
+        lock_dispatch(&self.shared).shutdown = true;
         self.shared.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Guards only respawn while `shutdown` is false, and both the
+        // spawn and this drain hold the dispatch lock, so every
+        // replacement handle is visible here; loop in case a
+        // respawned worker itself died and respawned while draining.
+        loop {
+            let respawned = std::mem::take(&mut lock_dispatch(&self.shared).respawned);
+            if respawned.is_empty() {
+                break;
+            }
+            for w in respawned {
+                let _ = w.join();
+            }
+        }
     }
 }
 
-fn worker(shared: &Shared) {
+/// Unwind watchdog carried by every worker thread; see module docs.
+struct WorkerGuard {
+    shared: Arc<Shared>,
+    /// The job the worker is currently evaluating, if any: its batch
+    /// index and completion channel.
+    inflight: Option<(usize, Sender<Done>)>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return; // orderly shutdown
+        }
+        // Deliver the NaN sentinel for the job that died with us so no
+        // collector blocks forever on a result that will never come.
+        if let Some((idx, done)) = self.inflight.take() {
+            let _ = done.send(Done {
+                idx,
+                score: f64::NAN,
+                collapsed: false,
+                table: StageTable::default(),
+            });
+        }
+        let mut d = lock_dispatch(&self.shared);
+        d.workers_lost += 1;
+        if !d.shutdown {
+            let shared = Arc::clone(&self.shared);
+            d.respawned.push(std::thread::spawn(move || worker(shared)));
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut guard = WorkerGuard { shared: Arc::clone(&shared), inflight: None };
     let mut arena = SimArena::new();
     loop {
         // Park until a job exists or the pool shuts down; the lock is
         // held only across dequeue, never across evaluation.
-        let (job, ctx, done) = {
-            let mut d = shared.m.lock().unwrap();
+        let (job, ctx, done, abort) = {
+            let mut d = lock_dispatch(&shared);
             loop {
                 if d.shutdown {
                     return;
                 }
-                if let Some(next) = d.next_job() {
-                    break next;
+                if let Some((job, ctx, done)) = d.next_job() {
+                    let abort = d.abort_next > 0;
+                    if abort {
+                        d.abort_next -= 1;
+                    }
+                    break (job, ctx, done, abort);
                 }
-                d = shared.cv.wait(d).unwrap();
+                d = shared.cv.wait(d).unwrap_or_else(PoisonError::into_inner);
             }
         };
+        // Register the in-flight job *before* anything can panic so
+        // the guard covers the whole evaluation window.
+        guard.inflight = Some((job.idx, done.clone()));
+        if abort {
+            // Test hook: die outside the per-job catch, as a real bug
+            // in the dequeue/return path would.
+            panic!("injected evaluation-worker abort (test hook)");
+        }
         // Same gate as the serial path: plans no schedule could fit
         // are never simulated.  A panicking evaluation (unreachable
         // for valid candidates) is reported as a NaN sentinel so the
@@ -230,6 +353,7 @@ fn worker(shared: &Shared) {
                 }
             }))
             .unwrap_or((f64::NAN, false));
+        guard.inflight = None;
         // A dropped client means nobody wants the result — fine.
         let _ = done.send(Done { idx: job.idx, score, collapsed, table: job.table });
     }
@@ -245,7 +369,7 @@ pub struct PoolClient {
 impl PoolClient {
     /// Enqueue one evaluation.
     pub fn submit(&self, job: Job) {
-        let mut d = self.shared.m.lock().unwrap();
+        let mut d = lock_dispatch(&self.shared);
         assert!(!d.shutdown, "pool not shut down");
         d.clients
             .get_mut(&self.id)
@@ -257,15 +381,17 @@ impl PoolClient {
     }
 
     /// Block for one finished evaluation (any order; merge by `idx`).
-    pub fn collect(&self) -> Done {
-        self.done.recv().expect("evaluation workers alive")
+    /// `Err(PoolLost)` means every completion sender is gone — the
+    /// pool was torn down with this client still waiting, which the
+    /// respawn guard makes unreachable in normal operation.
+    pub fn collect(&self) -> Result<Done, PoolLost> {
+        self.done.recv().map_err(|_| PoolLost)
     }
 }
 
 impl Drop for PoolClient {
     fn drop(&mut self) {
-        let mut d = self.shared.m.lock().unwrap();
-        d.clients.remove(&self.id);
+        lock_dispatch(&self.shared).clients.remove(&self.id);
     }
 }
 
@@ -323,7 +449,7 @@ mod tests {
         let mut pooled = vec![f64::NAN; knob_grid.len()];
         let mut returned = Vec::new();
         for _ in 0..knob_grid.len() {
-            let done = client.collect();
+            let done = client.collect().expect("pool alive");
             pooled[done.idx] = done.score;
             // Returned tables are intact (recyclable).
             assert_eq!(done.table.n_stages, 4);
@@ -343,7 +469,7 @@ mod tests {
         }
         let mut collapsed = vec![f64::NAN; knob_grid.len()];
         for _ in 0..knob_grid.len() {
-            let done = client.collect();
+            let done = client.collect().expect("pool alive");
             collapsed[done.idx] = done.score;
         }
         assert_eq!(collapsed, serial, "collapsed pool must be bit-identical");
@@ -366,12 +492,64 @@ mod tests {
         }
         let (mut sa, mut sb) = (vec![f64::NAN; n], vec![f64::NAN; n]);
         for _ in 0..n {
-            let da = a.collect();
+            let da = a.collect().expect("pool alive");
             sa[da.idx] = da.score;
-            let db = b.collect();
+            let db = b.collect().expect("pool alive");
             sb[db.idx] = db.score;
         }
         assert_eq!(sa, serial, "client A bit-identical under multiplexing");
         assert_eq!(sb, serial, "client B (collapse) bit-identical");
+    }
+
+    /// Satellite regression (ISSUE 8): a worker thread hard-aborted
+    /// outside the per-job catch loses exactly its in-flight job (NaN
+    /// sentinel, no hang), is respawned, and the next batch on the
+    /// same pool is served completely and bit-identically.
+    #[test]
+    fn aborted_worker_is_respawned_and_loses_only_its_job() {
+        let (_prof, caps, tables, knob_grid, serial) = fixture();
+        let n = tables.len();
+        let pool = EvalPool::new(2);
+        pool.inject_worker_abort(1);
+
+        let client =
+            pool.client(EvalCtx { caps: caps.clone(), nmb: 8, collapse: false });
+        for (idx, table) in tables.iter().cloned().enumerate() {
+            client.submit(Job { idx, table, knobs: knob_grid[idx] });
+        }
+        let mut scores = vec![f64::NAN; n];
+        let mut lost = 0usize;
+        for _ in 0..n {
+            let done = client.collect().expect("sentinel covers the dead worker");
+            if done.score.is_nan() {
+                lost += 1;
+            } else {
+                scores[done.idx] = done.score;
+            }
+        }
+        assert_eq!(lost, 1, "exactly the aborted job is lost");
+        assert_eq!(
+            scores.iter().filter(|s| !s.is_nan()).count(),
+            n - 1,
+            "every other job completes"
+        );
+        for (s, want) in scores.iter().zip(&serial) {
+            assert!(s.is_nan() || s == want, "survivors stay bit-identical");
+        }
+        assert_eq!(pool.workers_lost(), 1);
+        drop(client);
+
+        // The respawned worker restores full capacity: a fresh batch
+        // on the same pool completes with serial-identical scores.
+        let client = pool.client(EvalCtx { caps, nmb: 8, collapse: false });
+        for (idx, table) in tables.into_iter().enumerate() {
+            client.submit(Job { idx, table, knobs: knob_grid[idx] });
+        }
+        let mut again = vec![f64::NAN; n];
+        for _ in 0..n {
+            let done = client.collect().expect("pool alive after respawn");
+            again[done.idx] = done.score;
+        }
+        assert_eq!(again, serial, "post-respawn batch is bit-identical");
     }
 }

@@ -11,7 +11,10 @@
 //!         [--method <m|adaptis>] [--lr F] [--trace FILE]
 //!       real pipeline training over PJRT artifacts (RealCluster)
 //!   serve [--workers N] [--queue N] [--cache N] [--drift F]
-//!       long-running planner daemon, NDJSON over stdin/stdout
+//!         [--journal FILE] [--deadline-s F]
+//!       long-running planner daemon, NDJSON over stdin/stdout;
+//!       stdin EOF or SIGTERM drains in-flight work, fsyncs the
+//!       journal and exits 0
 //!
 //! Flags are `--key value` pairs; defaults are printed in --help.
 //! Unknown subcommands, unknown flags and stray positional arguments
@@ -55,9 +58,15 @@ SUBCOMMANDS
                             --method s1f1b|...|adaptis --trace FILE
   serve              long-running planner daemon: newline-delimited JSON
                      requests on stdin, one JSON response per line on
-                     stdout (plan + makespan/headroom + provenance)
+                     stdout (plan + makespan/headroom + provenance);
+                     stdin EOF or SIGTERM stops admissions, finishes
+                     in-flight requests, fsyncs the journal, exits 0
                      flags: --workers N --pool-threads N --queue N
                             --cache N --drift F --budget SECONDS
+                            --journal FILE   crash-safe plan journal,
+                                             replayed at startup
+                            --deadline-s F   default per-request
+                                             response deadline
 ";
 
 /// Per-subcommand grammar: `(name, known flags, max positionals)`.
@@ -67,7 +76,11 @@ const SUBCOMMANDS: &[(&str, &[&str], usize)] = &[
     ("generate", &["model", "size", "p", "t", "d", "nmb", "seq", "iters"], 0),
     ("simulate", &["model", "size", "p", "t", "d", "nmb", "seq", "method", "trace"], 0),
     ("train", &["tag", "artifacts", "p", "nmb", "steps", "lr", "seed", "method", "trace"], 0),
-    ("serve", &["workers", "pool-threads", "queue", "cache", "drift", "budget"], 0),
+    (
+        "serve",
+        &["workers", "pool-threads", "queue", "cache", "drift", "budget", "journal", "deadline-s"],
+        0,
+    ),
 ];
 
 /// Validate `<subcommand> [args]` against [`SUBCOMMANDS`].
@@ -330,6 +343,33 @@ fn cmd_simulate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Flipped by the SIGTERM handler; polled by the `serve` loop.
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Async-signal-safe SIGTERM hook: the handler only stores a flag —
+/// the drain/fsync work happens on the main thread once `serve`'s
+/// admission loop observes it.  No libc crate: `signal(2)` declared
+/// directly (glibc's `signal` is the SysV-free BSD semantics with
+/// SA_RESTART, which is why the serve loop polls a reader thread
+/// instead of relying on EINTR).
+#[cfg(unix)]
+fn install_sigterm() {
+    use std::os::raw::c_int;
+    extern "C" fn on_sigterm(_sig: c_int) {
+        SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+    }
+    const SIGTERM: c_int = 15;
+    unsafe {
+        let _ = signal(SIGTERM, on_sigterm);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigterm() {}
+
 fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let defaults = ServiceCfg::default();
     let cfg = ServiceCfg {
@@ -342,9 +382,14 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
             .and_then(|v| v.parse().ok())
             .unwrap_or(defaults.near_miss_max_drift),
         default_budget_s: flags.get("budget").and_then(|v| v.parse().ok()),
+        default_deadline_s: flags.get("deadline-s").and_then(|v| v.parse().ok()),
         hold: false,
     };
-    let service = Service::new(cfg);
+    let service = match flags.get("journal") {
+        Some(path) => Service::with_journal(cfg, std::path::Path::new(path))?,
+        None => Service::new(cfg),
+    };
+    install_sigterm();
     eprintln!(
         "adaptis serve: {} search workers, {} eval threads, queue {}, plan cache {}, near-miss drift {} — one JSON request per stdin line (see DESIGN.md §8)",
         cfg.search_workers,
@@ -353,13 +398,45 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         cfg.cache_capacity,
         cfg.near_miss_max_drift,
     );
+    let st0 = service.stats();
+    if flags.contains_key("journal") {
+        eprintln!(
+            "adaptis serve: journal replayed {} plan{} ({} torn tail record{} dropped)",
+            st0.journal_recovered,
+            if st0.journal_recovered == 1 { "" } else { "s" },
+            st0.journal_torn,
+            if st0.journal_torn == 1 { "" } else { "s" },
+        );
+    }
+    if let Some(d) = cfg.default_deadline_s {
+        eprintln!("adaptis serve: default response deadline {d}s (degraded fallback past it)");
+    }
     let out = std::sync::Arc::new(std::sync::Mutex::new(std::io::stdout()));
-    ndjson::serve(&service, std::io::stdin().lock(), &out)?;
+    // Reader-thread-friendly stdin (StdinLock is !Send); EOF or the
+    // SIGTERM flag both take the same drain + fsync path inside serve.
+    ndjson::serve(
+        &service,
+        std::io::BufReader::new(std::io::stdin()),
+        &out,
+        Some(&SHUTDOWN),
+    )?;
     let st = service.stats();
     eprintln!(
-        "adaptis serve: {} requests ({} cold, {} warm, {} cached, {} coalesced, {} rejected)",
-        st.requests, st.cold, st.warm, st.cached, st.coalesced, st.rejected,
+        "adaptis serve: {} requests ({} cold, {} warm, {} cached, {} coalesced, {} rejected, {} degraded, {} deadline-hit, {} failed, {} abandoned)",
+        st.requests,
+        st.cold,
+        st.warm,
+        st.cached,
+        st.coalesced,
+        st.rejected,
+        st.degraded,
+        st.deadline_hits,
+        st.failed,
+        st.abandoned,
     );
+    if st.journal_errors > 0 {
+        eprintln!("adaptis serve: WARNING: {} journal IO errors", st.journal_errors);
+    }
     Ok(())
 }
 

@@ -28,7 +28,9 @@
 //! — acceptance still goes through the Evaluator — so a wrong notion
 //! of "near" can cost time, never correctness.
 
-use crate::model::LayerKind;
+use crate::cluster::ClusterSpec;
+use crate::model::{LayerCost, LayerKind};
+use crate::profile::ProfiledData;
 
 use super::PlanRequest;
 
@@ -48,6 +50,10 @@ pub struct ReqKey {
     max_iters: u64,
     /// `u64::MAX` encodes "no wall-clock budget".
     budget_bits: u64,
+    /// `u64::MAX` encodes "no deadline".  Part of the exact identity:
+    /// a deadlined request must not be answered from (or coalesced
+    /// with) an un-deadlined one whose search it could not afford.
+    deadline_bits: u64,
 }
 
 impl ReqKey {
@@ -71,6 +77,7 @@ impl ReqKey {
             nmb: req.nmb as u64,
             max_iters: req.max_iters as u64,
             budget_bits: req.budget_s.map_or(u64::MAX, f64::to_bits),
+            deadline_bits: req.deadline_s.map_or(u64::MAX, f64::to_bits),
         }
     }
 
@@ -106,7 +113,216 @@ impl ReqKey {
         mix(self.nmb);
         mix(self.max_iters);
         mix(self.budget_bits);
+        mix(self.deadline_bits);
         h
+    }
+
+    /// Journal wire form (little-endian, length-prefixed sections).
+    /// The layout is the field order of the struct; [`ReqKey::from_bytes`]
+    /// inverts it exactly.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            16 + self.kinds.len()
+                + 8 * (self.cost_bits.len() + 3 + self.cap_bits.len() + self.rate_bits.len())
+                + 4 * 4
+                + 8 * 4,
+        );
+        put_u32(&mut b, self.kinds.len() as u32);
+        for k in &self.kinds {
+            b.push(kind_tag(*k));
+        }
+        put_u32(&mut b, self.cost_bits.len() as u32);
+        for &v in &self.cost_bits {
+            put_u64(&mut b, v);
+        }
+        for &v in &self.link_bits {
+            put_u64(&mut b, v);
+        }
+        put_u32(&mut b, self.cap_bits.len() as u32);
+        for &v in &self.cap_bits {
+            put_u64(&mut b, v);
+        }
+        put_u32(&mut b, self.rate_bits.len() as u32);
+        for &v in &self.rate_bits {
+            put_u64(&mut b, v);
+        }
+        put_u64(&mut b, self.nmb);
+        put_u64(&mut b, self.max_iters);
+        put_u64(&mut b, self.budget_bits);
+        put_u64(&mut b, self.deadline_bits);
+        b
+    }
+
+    /// Inverse of [`ReqKey::to_bytes`].  `None` on any structural
+    /// violation (short buffer, trailing bytes, unknown kind tag,
+    /// inconsistent section lengths) — the journal treats that as a
+    /// corrupt record, never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Option<ReqKey> {
+        let mut r = ByteReader::new(bytes);
+        let n_kinds = r.u32()? as usize;
+        if n_kinds == 0 || n_kinds > 1 << 20 {
+            return None;
+        }
+        let mut kinds = Vec::with_capacity(n_kinds);
+        for _ in 0..n_kinds {
+            kinds.push(kind_of_tag(r.u8()?)?);
+        }
+        let n_cost = r.u32()? as usize;
+        if n_cost != n_kinds * 7 {
+            return None;
+        }
+        let mut cost_bits = Vec::with_capacity(n_cost);
+        for _ in 0..n_cost {
+            cost_bits.push(r.u64()?);
+        }
+        let link_bits = [r.u64()?, r.u64()?, r.u64()?];
+        let n_caps = r.u32()? as usize;
+        if n_caps == 0 || n_caps > 1 << 16 {
+            return None;
+        }
+        let mut cap_bits = Vec::with_capacity(n_caps);
+        for _ in 0..n_caps {
+            cap_bits.push(r.u64()?);
+        }
+        let n_rates = r.u32()? as usize;
+        if n_rates != 0 && n_rates != n_caps {
+            return None;
+        }
+        let mut rate_bits = Vec::with_capacity(n_rates);
+        for _ in 0..n_rates {
+            rate_bits.push(r.u64()?);
+        }
+        let nmb = r.u64()?;
+        let max_iters = r.u64()?;
+        let budget_bits = r.u64()?;
+        let deadline_bits = r.u64()?;
+        if nmb == 0 || !r.done() {
+            return None;
+        }
+        Some(ReqKey {
+            kinds,
+            cost_bits,
+            link_bits,
+            cap_bits,
+            rate_bits,
+            nmb,
+            max_iters,
+            budget_bits,
+            deadline_bits,
+        })
+    }
+
+    /// Rebuild the full [`PlanRequest`] this key identifies.  Exact by
+    /// construction: `ReqKey::of(&key.materialize()) == key`, which is
+    /// what lets the journal store keys instead of requests and still
+    /// re-derive (and verify) a replayed plan's schedule.
+    pub fn materialize(&self) -> PlanRequest {
+        let layers: Vec<LayerCost> = self
+            .cost_bits
+            .chunks_exact(7)
+            .map(|c| LayerCost {
+                f: f64::from_bits(c[0]),
+                b: f64::from_bits(c[1]),
+                w: f64::from_bits(c[2]),
+                mem_static: f64::from_bits(c[3]),
+                mem_act: f64::from_bits(c[4]),
+                mem_act_w: f64::from_bits(c[5]),
+                comm_bytes: f64::from_bits(c[6]),
+            })
+            .collect();
+        let profile = ProfiledData::from_measured(
+            layers,
+            f64::from_bits(self.link_bits[0]),
+            f64::from_bits(self.link_bits[1]),
+            f64::from_bits(self.link_bits[2]),
+        );
+        let cluster = ClusterSpec::with_caps(
+            self.cap_bits.iter().map(|&b| f64::from_bits(b)).collect(),
+        );
+        PlanRequest {
+            kinds: self.kinds.clone(),
+            profile,
+            cluster,
+            nmb: self.nmb as usize,
+            rates: self.rate_bits.iter().map(|&b| f64::from_bits(b)).collect(),
+            budget_s: (self.budget_bits != u64::MAX)
+                .then(|| f64::from_bits(self.budget_bits)),
+            max_iters: self.max_iters as usize,
+            deadline_s: (self.deadline_bits != u64::MAX)
+                .then(|| f64::from_bits(self.deadline_bits)),
+        }
+    }
+}
+
+/// Stable on-disk tags for [`LayerKind`] — explicit, so reordering the
+/// enum can never silently re-interpret an old journal.
+fn kind_tag(k: LayerKind) -> u8 {
+    match k {
+        LayerKind::Embed => 0,
+        LayerKind::Sa => 1,
+        LayerKind::Mla => 2,
+        LayerKind::Mamba => 3,
+        LayerKind::Ffn => 4,
+        LayerKind::Moe => 5,
+        LayerKind::Head => 6,
+    }
+}
+
+fn kind_of_tag(t: u8) -> Option<LayerKind> {
+    Some(match t {
+        0 => LayerKind::Embed,
+        1 => LayerKind::Sa,
+        2 => LayerKind::Mla,
+        3 => LayerKind::Mamba,
+        4 => LayerKind::Ffn,
+        5 => LayerKind::Moe,
+        6 => LayerKind::Head,
+        _ => return None,
+    })
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian cursor shared with the journal
+/// decoder; every read is `Option`al so corrupt bytes can never panic.
+pub(crate) struct ByteReader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(bytes: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { bytes, at: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.at.checked_add(n)?;
+        let s = self.bytes.get(self.at..end)?;
+        self.at = end;
+        Some(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    /// True iff the whole buffer was consumed.
+    pub(crate) fn done(&self) -> bool {
+        self.at == self.bytes.len()
     }
 }
 
@@ -198,6 +414,45 @@ pub fn near_miss_distance(a: &Sketch, b: &Sketch) -> Option<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{Family, ParallelCfg, Size};
+
+    #[test]
+    fn key_round_trips_through_bytes_and_materialize() {
+        let mut req = PlanRequest::table5(
+            Family::Gemma,
+            Size::Small,
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        );
+        req.rates = vec![1.0, 0.5, 1.0, 1.0];
+        req.budget_s = Some(0.25);
+        req.deadline_s = Some(1.5);
+        let key = req.key();
+        let decoded = ReqKey::from_bytes(&key.to_bytes()).expect("wire form decodes");
+        assert_eq!(decoded, key, "byte round trip is exact");
+        assert_eq!(decoded.fingerprint(), key.fingerprint());
+        assert_eq!(
+            ReqKey::of(&key.materialize()),
+            key,
+            "materialize() rebuilds the identical request identity"
+        );
+
+        // Deadline is part of the exact identity…
+        let mut other = req.clone();
+        other.deadline_s = None;
+        assert_ne!(other.key(), key);
+        // …but not of the reuse geometry.
+        assert_eq!(
+            near_miss_distance(&other.sketch(), &req.sketch()),
+            Some(0.0)
+        );
+
+        // Corrupt bytes degrade to None, never a panic.
+        let mut bytes = key.to_bytes();
+        assert!(ReqKey::from_bytes(&bytes[..bytes.len() - 1]).is_none(), "truncated");
+        bytes[4] = 250; // unknown layer-kind tag
+        assert!(ReqKey::from_bytes(&bytes).is_none(), "unknown tag");
+        assert!(ReqKey::from_bytes(&[]).is_none(), "empty");
+    }
 
     #[test]
     fn rel_is_symmetric_and_scale_free() {

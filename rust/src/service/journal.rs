@@ -1,0 +1,492 @@
+//! Crash-safe plan journal (DESIGN.md §8, "Fault tolerance").
+//!
+//! An append-only log of committed plan-cache entries.  Every cache
+//! insert appends one record; a restarted service replays the log and
+//! starts with a [`super::cache::PlanCache`] bitwise-equal to the
+//! pre-crash committed state (same entries, same FIFO/eviction order —
+//! replay re-runs the exact insert sequence through the same
+//! deterministic FIFO policy).
+//!
+//! ## File format
+//!
+//! ```text
+//! magic  "ADPTJNL1"                                      (8 bytes)
+//! record u32 payload_len | payload | u64 fnv1a(payload)  (repeated)
+//! ```
+//!
+//! Everything is little-endian.  The payload is:
+//!
+//! ```text
+//! u32 key_len | ReqKey::to_bytes            request identity
+//! u32 name_len | UTF-8 pipeline name
+//! u32 n_bounds | u64 …                      partition stage bounds
+//! u32 p | u32 n_stages | u32 …              placement device_of
+//! u8  knob bits (split_bw|w_fill<<1|overlap_aware<<2) | u64 mem_cap_factor
+//! u8  searched (0=Cold, 1=Warm)
+//! u8  near-miss flag | [u64 distance]
+//! u64 evals | u64 iters | u8 flags (budget_exhausted)
+//! u64 search_s | u64 makespan | u64 headroom | u64 bubble_ratio
+//! u64 fingerprint
+//! ```
+//!
+//! The plan's **schedule is not stored**: `(partition, placement,
+//! knobs)` plus the materialized request re-derive it exactly
+//! (`greedy_schedule_in` is deterministic — the same derivation the
+//! generator's final-build step uses), and the recomputed makespan /
+//! headroom / bubble-ratio **bit patterns must equal the stored ones**
+//! or the record is rejected.  That turns the simulator into an
+//! end-to-end checksum of the whole decode.
+//!
+//! ## Recovery rules
+//!
+//! Records are validated in order; the first failure — short header,
+//! oversized length, checksum mismatch, undecodable payload, or
+//! re-simulation mismatch — ends the committed prefix.  Whatever
+//! follows is a torn tail from a mid-append crash: it is counted
+//! ([`Replayed::torn`]), the file is truncated back to the last good
+//! record, and appending resumes from there.  Degraded and
+//! deadline-cut outcomes are never journaled (see `service::worker`),
+//! so a replayed cache is a pure function of the committed request
+//! stream, exactly like the live cache.
+
+use std::fs::OpenOptions;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::baselines::Pipeline;
+use crate::partition::Partition;
+use crate::perfmodel::{simulate_in, SimArena, StageTable};
+use crate::placement::Placement;
+use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
+
+use super::fingerprint::{ByteReader, ReqKey};
+use super::{PlanOutcome, Provenance};
+
+const MAGIC: &[u8; 8] = b"ADPTJNL1";
+/// Sanity bound on one record's payload — far above any real plan,
+/// far below anything that could OOM replay on garbage lengths.
+const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Replay outcome counters, surfaced as
+/// `ServiceStats::{journal_recovered, journal_torn}`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Replayed {
+    /// Records replayed into the cache.
+    pub recovered: usize,
+    /// 1 if a torn/corrupt tail was dropped, else 0 (append-only logs
+    /// tear only at the end; everything after the first bad byte is
+    /// one tail).
+    pub torn: usize,
+}
+
+/// Open handle to the journal file; see module docs.
+#[derive(Debug)]
+pub struct Journal {
+    file: std::fs::File,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, replay its committed
+    /// prefix, truncate any torn tail, and leave the handle positioned
+    /// for appending.
+    pub fn open(path: &Path) -> std::io::Result<(Journal, Vec<(ReqKey, PlanOutcome)>, Replayed)> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+
+        let mut entries = Vec::new();
+        let mut replay = Replayed::default();
+        let mut good_end: u64;
+        if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+            // Empty file, or a crash before even the magic landed:
+            // (re)initialize.  A non-empty unrecognized prefix counts
+            // as torn.
+            replay.torn = usize::from(!bytes.is_empty());
+            file.set_len(0)?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(MAGIC)?;
+            good_end = MAGIC.len() as u64;
+        } else {
+            let mut at = MAGIC.len();
+            good_end = at as u64;
+            loop {
+                let Some((record, next)) = split_record(&bytes, at) else {
+                    replay.torn = usize::from(at < bytes.len());
+                    break;
+                };
+                let Some(entry) = decode_record(record) else {
+                    replay.torn = 1;
+                    break;
+                };
+                entries.push(entry);
+                replay.recovered += 1;
+                at = next;
+                good_end = at as u64;
+            }
+            file.set_len(good_end)?;
+        }
+        file.seek(SeekFrom::Start(good_end))?;
+        Ok((Journal { file }, entries, replay))
+    }
+
+    /// Append one committed cache entry.  The record is assembled in
+    /// memory and written with a single `write_all`, so a crash leaves
+    /// either the whole record or a (detectable, truncatable) torn
+    /// tail — never a silently half-applied commit.
+    pub fn append(&mut self, key: &ReqKey, out: &PlanOutcome) -> std::io::Result<()> {
+        let payload = encode_record(key, out);
+        let mut rec = Vec::with_capacity(payload.len() + 12);
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&payload);
+        rec.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        self.file.write_all(&rec)?;
+        self.file.flush()
+    }
+
+    /// Force the journal to stable storage (fsync).
+    pub fn sync(&mut self) -> std::io::Result<()> {
+        self.file.sync_all()
+    }
+}
+
+/// FNV-1a over raw bytes — the same constants as
+/// [`ReqKey::fingerprint`], applied per record.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Carve `(payload, next_offset)` for the record starting at `at`,
+/// verifying length sanity and checksum.  `None` = torn tail.
+fn split_record(bytes: &[u8], at: usize) -> Option<(&[u8], usize)> {
+    let len_bytes = bytes.get(at..at + 4)?;
+    let len = u32::from_le_bytes(len_bytes.try_into().unwrap());
+    if len == 0 || len > MAX_PAYLOAD {
+        return None;
+    }
+    let body = at + 4;
+    let payload = bytes.get(body..body + len as usize)?;
+    let sum_bytes = bytes.get(body + len as usize..body + len as usize + 8)?;
+    if u64::from_le_bytes(sum_bytes.try_into().unwrap()) != fnv1a(payload) {
+        return None;
+    }
+    Some((payload, body + len as usize + 8))
+}
+
+fn encode_record(key: &ReqKey, out: &PlanOutcome) -> Vec<u8> {
+    debug_assert!(
+        out.searched != Provenance::Degraded && !out.deadline_hit,
+        "degraded/deadline-cut outcomes are never journaled"
+    );
+    let mut b = Vec::with_capacity(256);
+    let key_bytes = key.to_bytes();
+    b.extend_from_slice(&(key_bytes.len() as u32).to_le_bytes());
+    b.extend_from_slice(&key_bytes);
+    let name = out.pipeline.name.as_bytes();
+    b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    b.extend_from_slice(name);
+    let bounds = &out.pipeline.partition.bounds;
+    b.extend_from_slice(&(bounds.len() as u32).to_le_bytes());
+    for &v in bounds {
+        b.extend_from_slice(&(v as u64).to_le_bytes());
+    }
+    b.extend_from_slice(&(out.pipeline.placement.p as u32).to_le_bytes());
+    let device_of = &out.pipeline.placement.device_of;
+    b.extend_from_slice(&(device_of.len() as u32).to_le_bytes());
+    for &d in device_of {
+        b.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    b.push(
+        u8::from(out.knobs.split_bw)
+            | u8::from(out.knobs.w_fill) << 1
+            | u8::from(out.knobs.overlap_aware) << 2,
+    );
+    b.extend_from_slice(&out.knobs.mem_cap_factor.to_bits().to_le_bytes());
+    b.push(match out.searched {
+        Provenance::Warm => 1,
+        _ => 0,
+    });
+    match out.near_miss_distance {
+        Some(d) => {
+            b.push(1);
+            b.extend_from_slice(&d.to_bits().to_le_bytes());
+        }
+        None => b.push(0),
+    }
+    b.extend_from_slice(&(out.evals as u64).to_le_bytes());
+    b.extend_from_slice(&(out.iters as u64).to_le_bytes());
+    b.push(u8::from(out.budget_exhausted));
+    for v in [out.search_s, out.makespan, out.headroom, out.bubble_ratio] {
+        b.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    b.extend_from_slice(&out.fingerprint.to_le_bytes());
+    b
+}
+
+/// Decode + verify one checksummed payload.  `None` on any structural
+/// or semantic violation — including the re-simulation cross-check —
+/// never a panic.
+fn decode_record(payload: &[u8]) -> Option<(ReqKey, PlanOutcome)> {
+    let mut r = ByteReader::new(payload);
+    let key_len = r.u32()? as usize;
+    let key = ReqKey::from_bytes(r.take(key_len)?)?;
+    let name_len = r.u32()? as usize;
+    if name_len > 1 << 10 {
+        return None;
+    }
+    let name = std::str::from_utf8(r.take(name_len)?).ok()?.to_string();
+    let n_bounds = r.u32()? as usize;
+    if n_bounds < 2 || n_bounds > 1 << 20 {
+        return None;
+    }
+    let mut bounds = Vec::with_capacity(n_bounds);
+    for _ in 0..n_bounds {
+        bounds.push(usize::try_from(r.u64()?).ok()?);
+    }
+    let p = r.u32()? as usize;
+    let n_stages = r.u32()? as usize;
+    if p == 0 || n_stages == 0 || n_stages > 1 << 20 {
+        return None;
+    }
+    let mut device_of = Vec::with_capacity(n_stages);
+    for _ in 0..n_stages {
+        device_of.push(r.u32()? as usize);
+    }
+    let knob_bits = r.u8()?;
+    if knob_bits > 0b111 {
+        return None;
+    }
+    let mem_cap_factor = f64::from_bits(r.u64()?);
+    let searched = match r.u8()? {
+        0 => Provenance::Cold,
+        1 => Provenance::Warm,
+        _ => return None,
+    };
+    let near_miss_distance = match r.u8()? {
+        0 => None,
+        1 => Some(f64::from_bits(r.u64()?)),
+        _ => return None,
+    };
+    let evals = usize::try_from(r.u64()?).ok()?;
+    let iters = usize::try_from(r.u64()?).ok()?;
+    let flags = r.u8()?;
+    if flags > 1 {
+        return None;
+    }
+    let budget_exhausted = flags & 1 != 0;
+    let search_s = f64::from_bits(r.u64()?);
+    let makespan_bits = r.u64()?;
+    let headroom_bits = r.u64()?;
+    let bubble_bits = r.u64()?;
+    let fingerprint = r.u64()?;
+    if !r.done() {
+        return None;
+    }
+
+    // Semantic validation before touching the scheduler: every panic
+    // an adversarial-but-checksummed record could trigger is a reject
+    // here instead.
+    if fingerprint != key.fingerprint() {
+        return None;
+    }
+    if !(mem_cap_factor.is_finite() && mem_cap_factor > 0.0 && mem_cap_factor <= 1.0) {
+        return None;
+    }
+    let req = key.materialize();
+    let partition = Partition { bounds };
+    let placement = Placement { p, device_of };
+    if !partition.is_valid()
+        || partition.n_layers() != req.profile.n_layers()
+        || !placement.is_valid()
+        || placement.n_stages() != partition.n_stages()
+        || placement.p != req.cluster.p()
+    {
+        return None;
+    }
+    if !req.rates.is_empty()
+        && (req.rates.len() != req.cluster.p()
+            || req.rates.iter().any(|v| !v.is_finite() || *v <= 0.0))
+    {
+        return None;
+    }
+
+    // Re-derive the schedule exactly as the generator's final-build
+    // step does, then demand bit-equality with the stored metrics —
+    // the simulator acts as a semantic checksum over the whole record.
+    let caps = req.cluster.mem_caps();
+    let knobs = SchedKnobs {
+        split_bw: knob_bits & 1 != 0,
+        w_fill: knob_bits & 2 != 0,
+        mem_cap_factor,
+        overlap_aware: knob_bits & 4 != 0,
+    };
+    let table = StageTable::build_rated(&req.profile, &partition, &placement, &req.rates);
+    let mut arena = SimArena::new();
+    let schedule = greedy_schedule_in(&mut arena, &table, &caps, req.nmb, knobs);
+    let report = simulate_in(&mut arena, &table, &caps, &schedule, false).ok()?;
+    if report.total.to_bits() != makespan_bits
+        || report.min_headroom().to_bits() != headroom_bits
+        || report.bubble_ratio().to_bits() != bubble_bits
+    {
+        return None;
+    }
+
+    let sketch = req.sketch();
+    let outcome = PlanOutcome {
+        pipeline: Pipeline { name, partition, placement, schedule },
+        knobs,
+        makespan: f64::from_bits(makespan_bits),
+        headroom: f64::from_bits(headroom_bits),
+        bubble_ratio: f64::from_bits(bubble_bits),
+        searched,
+        near_miss_distance,
+        evals,
+        iters,
+        budget_exhausted,
+        deadline_hit: false,
+        search_s,
+        fingerprint,
+        sketch,
+    };
+    Some((key, outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Family, ParallelCfg, Size};
+    use crate::partition::uniform;
+    use crate::placement::sequential;
+    use crate::service::PlanRequest;
+
+    fn fixture() -> (ReqKey, PlanOutcome) {
+        let req = PlanRequest::table5(
+            Family::Gemma,
+            Size::Small,
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        );
+        let key = req.key();
+        let caps = req.cluster.mem_caps();
+        let partition = uniform(req.profile.n_layers(), 4);
+        let placement = sequential(4);
+        let knobs = SchedKnobs {
+            split_bw: true,
+            w_fill: true,
+            mem_cap_factor: 1.0,
+            overlap_aware: false,
+        };
+        let table =
+            StageTable::build_rated(&req.profile, &partition, &placement, &req.rates);
+        let mut arena = SimArena::new();
+        let schedule = greedy_schedule_in(&mut arena, &table, &caps, req.nmb, knobs);
+        let report =
+            simulate_in(&mut arena, &table, &caps, &schedule, false).expect("simulates");
+        let outcome = PlanOutcome {
+            pipeline: Pipeline {
+                name: "AdaPtis".into(),
+                partition,
+                placement,
+                schedule,
+            },
+            knobs,
+            makespan: report.total,
+            headroom: report.min_headroom(),
+            bubble_ratio: report.bubble_ratio(),
+            searched: Provenance::Cold,
+            near_miss_distance: None,
+            evals: 17,
+            iters: 3,
+            budget_exhausted: false,
+            deadline_hit: false,
+            search_s: 0.125,
+            fingerprint: key.fingerprint(),
+            sketch: req.sketch(),
+        };
+        (key, outcome)
+    }
+
+    #[test]
+    fn record_round_trips_bitwise() {
+        let (key, out) = fixture();
+        let payload = encode_record(&key, &out);
+        let (dkey, dout) = decode_record(&payload).expect("decodes");
+        assert_eq!(dkey, key);
+        assert_eq!(dout.pipeline.partition, out.pipeline.partition);
+        assert_eq!(dout.pipeline.placement, out.pipeline.placement);
+        assert_eq!(dout.pipeline.name, out.pipeline.name);
+        assert_eq!(dout.knobs, out.knobs);
+        assert_eq!(dout.makespan.to_bits(), out.makespan.to_bits());
+        assert_eq!(dout.headroom.to_bits(), out.headroom.to_bits());
+        assert_eq!(dout.bubble_ratio.to_bits(), out.bubble_ratio.to_bits());
+        assert_eq!((dout.evals, dout.iters), (out.evals, out.iters));
+        assert_eq!(dout.search_s.to_bits(), out.search_s.to_bits());
+        assert_eq!(dout.fingerprint, out.fingerprint);
+        assert_eq!(dout.sketch, out.sketch);
+        // The re-derived schedule simulates to the same bits, which is
+        // the definition of equality the cache consumers rely on.
+        assert_eq!(
+            format!("{:?}", dout.pipeline.schedule),
+            format!("{:?}", out.pipeline.schedule)
+        );
+    }
+
+    #[test]
+    fn corrupt_payloads_are_rejected_not_panics() {
+        let (key, out) = fixture();
+        let payload = encode_record(&key, &out);
+        assert!(decode_record(&payload[..payload.len() - 1]).is_none(), "truncated");
+        let mut flipped = payload.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0xff;
+        // A mid-payload flip either fails structural decode or the
+        // re-simulation cross-check — never panics.  (It cannot decode
+        // to a *different valid* plan: metrics bits would mismatch.)
+        let _ = decode_record(&flipped);
+        assert!(decode_record(&[]).is_none(), "empty");
+    }
+
+    #[test]
+    fn open_replays_and_truncates_torn_tail() {
+        let path = std::env::temp_dir()
+            .join(format!("adaptis-journal-unit-{}.jnl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let (key, out) = fixture();
+        {
+            let (mut j, entries, replay) = Journal::open(&path).expect("create");
+            assert!(entries.is_empty());
+            assert_eq!(replay, Replayed::default());
+            j.append(&key, &out).expect("append 1");
+            j.append(&key, &out).expect("append 2");
+            j.append(&key, &out).expect("append 3");
+            j.sync().expect("fsync");
+        }
+        // Simulate a crash mid-append: tear the last record.
+        let len = std::fs::metadata(&path).expect("meta").len();
+        let f = OpenOptions::new().write(true).open(&path).expect("reopen");
+        f.set_len(len - 3).expect("tear");
+        drop(f);
+        {
+            let (_j, entries, replay) = Journal::open(&path).expect("recover");
+            assert_eq!(replay, Replayed { recovered: 2, torn: 1 });
+            assert_eq!(entries.len(), 2);
+            assert_eq!(entries[0].0, key);
+            assert_eq!(entries[0].1.makespan.to_bits(), out.makespan.to_bits());
+        }
+        // The torn tail was truncated away: a third open is clean.
+        {
+            let (_j, entries, replay) = Journal::open(&path).expect("clean reopen");
+            assert_eq!(replay, Replayed { recovered: 2, torn: 0 });
+            assert_eq!(entries.len(), 2);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -4,7 +4,7 @@
 //! a long-running daemon.  A request is the full search input —
 //! `(layer kinds, profiled costs, ClusterSpec, nmb, rates, budget)` —
 //! and a response is `(plan, predicted makespan, headroom,
-//! provenance)`.  Four pieces:
+//! provenance)`.  Five pieces:
 //!
 //! - **[`cache::PlanCache`]** — a bounded cross-request plan store.
 //!   Exact hits ([`fingerprint::ReqKey`]) answer without any search;
@@ -21,6 +21,16 @@
 //!   rejects with a retry-after estimate when full; a request
 //!   identical to one already in flight attaches to that search and
 //!   the result fans out to every waiter.
+//! - **fault tolerance** (DESIGN.md §8, "Fault tolerance") — requests
+//!   carry deadlines ([`PlanRequest::deadline_s`]) enforced by a
+//!   [`CancelToken`] at the generator's exact budget-check boundaries
+//!   (bitwise-identical prefix; best-so-far result); a deadline that
+//!   expires before any candidate is accepted returns a deterministic
+//!   fallback plan tagged [`Provenance::Degraded`], never an error; a
+//!   dead evaluation worker fails exactly one request with
+//!   [`ServiceError::WorkerLost`] while the pool respawns the thread;
+//!   every mutex-poison path recovers; and an optional [`journal`]
+//!   makes cache commits crash-safe.
 //! - **front ends** — the in-process [`Service`] API (used by
 //!   `benches/service.rs`) and the newline-delimited-JSON loop in
 //!   [`ndjson`] behind `adaptis serve`.
@@ -33,30 +43,40 @@
 //! [`Service::drain`]) replays bitwise: same plans, same provenance
 //! counters, run after run.  Each search gets a fresh per-search
 //! `EvalCache` (an exact repeat would have hit the plan cache
-//! instead), keeping even eval counts replayable.
+//! instead), keeping even eval counts replayable.  Degraded and
+//! deadline-cut outcomes are never cached or journaled — what a
+//! deadline truncates depends on wall clock, so keeping it out of the
+//! cache keeps the *cache* a pure function of the request stream.
 
 pub mod cache;
 pub mod fingerprint;
+pub mod journal;
 pub mod ndjson;
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::baselines::Pipeline;
 use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
 use crate::cluster::ClusterSpec;
 use crate::generator::cache::EvalCache;
-use crate::generator::pool::EvalPool;
-use crate::generator::{generate_with_cache, GenOptions, Incumbent};
+use crate::generator::pool::{EvalAborted, EvalPool};
+use crate::generator::{generate_with_cache, CancelToken, GenOptions, Incumbent};
 use crate::model::{build_model, LayerKind};
+use crate::partition::uniform;
+use crate::perfmodel::{simulate_in, SimArena, StageTable};
+use crate::placement::sequential;
 use crate::profile::ProfiledData;
-use crate::schedule::greedy::SchedKnobs;
+use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
 
 use cache::{PlanCache, PlanCacheStats};
 use fingerprint::{ReqKey, Sketch};
+use journal::Journal;
 
 /// One plan request: everything a cold search reads.
 #[derive(Clone, Debug)]
@@ -77,6 +97,15 @@ pub struct PlanRequest {
     pub budget_s: Option<f64>,
     /// Tuning-iteration cap (the generator default is 64).
     pub max_iters: usize,
+    /// Response deadline in seconds from submission; `None` falls back
+    /// to [`ServiceCfg::default_deadline_s`].  The absolute instant is
+    /// fixed at submission (coalesced waiters share the first
+    /// submission's deadline).  When it passes mid-search the best
+    /// plan so far comes back with [`PlanOutcome::deadline_hit`] set;
+    /// when it passes before any candidate was accepted, the
+    /// deterministic fallback plan comes back as
+    /// [`Provenance::Degraded`] — a deadline is never an error.
+    pub deadline_s: Option<f64>,
 }
 
 impl PlanRequest {
@@ -96,6 +125,7 @@ impl PlanRequest {
             rates: Vec::new(),
             budget_s: None,
             max_iters: 64,
+            deadline_s: None,
         }
     }
 
@@ -131,6 +161,10 @@ pub enum Provenance {
     Cached,
     /// Attached to an identical in-flight request's search.
     Coalesced,
+    /// The deadline expired with zero accepted candidates: the
+    /// deterministic heuristic fallback (uniform partition, sequential
+    /// placement, 1F1B knobs), not a searched plan.  Never cached.
+    Degraded,
 }
 
 impl Provenance {
@@ -140,6 +174,7 @@ impl Provenance {
             Provenance::Warm => "warm",
             Provenance::Cached => "cached",
             Provenance::Coalesced => "coalesced",
+            Provenance::Degraded => "degraded",
         }
     }
 }
@@ -154,14 +189,19 @@ pub struct PlanOutcome {
     /// Worst per-device memory headroom (bytes; negative = OOM).
     pub headroom: f64,
     pub bubble_ratio: f64,
-    /// [`Provenance::Cold`] or [`Provenance::Warm`] — how the
-    /// *search* started (waiters may still see `Cached`/`Coalesced`).
+    /// [`Provenance::Cold`], [`Provenance::Warm`] or
+    /// [`Provenance::Degraded`] — how the *plan* was produced (waiters
+    /// may still see `Cached`/`Coalesced`).
     pub searched: Provenance,
     /// Drift to the warm-start donor (`None` for cold searches).
     pub near_miss_distance: Option<f64>,
     pub evals: usize,
     pub iters: usize,
     pub budget_exhausted: bool,
+    /// True iff the request's deadline cut the tuning loop short (the
+    /// plan is the best found so far) or forced the degraded fallback.
+    /// Such outcomes are never cached or journaled.
+    pub deadline_hit: bool,
     /// Generator wall time (seconds).
     pub search_s: f64,
     /// Request digest, echoed on the wire.
@@ -198,17 +238,96 @@ pub struct Rejected {
     pub retry_after_s: f64,
 }
 
+/// Structured failure taxonomy for [`Ticket::wait`] /
+/// [`Service::call`].  Deadlines are deliberately *not* here — an
+/// expired deadline returns a degraded or best-so-far plan, never an
+/// error (see [`Provenance::Degraded`]).
+#[derive(Clone, Debug)]
+pub enum ServiceError {
+    /// Admission control turned the request away; retry later.
+    Overloaded(Rejected),
+    /// An evaluation worker thread died mid-search.  The pool
+    /// respawned the worker; only this request failed, and an
+    /// immediate resubmission will run on the restored pool.
+    WorkerLost(String),
+    /// The search itself panicked (a planner bug); contained to this
+    /// request, with the payload's message preserved.
+    SearchPanicked(String),
+    /// The service was dropped with this request still pending.
+    Shutdown,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Overloaded(r) => write!(
+                f,
+                "overloaded: queue_len {} retry_after_s {:.3}",
+                r.queue_len, r.retry_after_s
+            ),
+            ServiceError::WorkerLost(m) => write!(f, "evaluation worker lost: {m}"),
+            ServiceError::SearchPanicked(m) => write!(f, "search panicked: {m}"),
+            ServiceError::Shutdown => {
+                write!(f, "service shut down with the request pending")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Disconnect detector for an abandoned [`Ticket`]: dropping the
+/// ticket without waiting decrements its flight's live-waiter count
+/// and, at zero, fires the flight's [`CancelToken`] — a search nobody
+/// is waiting for stops at the next phase boundary (or is skipped
+/// entirely if still queued).  The epoch check makes a stale guard
+/// (same key, later flight) a no-op.
+struct AbandonGuard {
+    inner: Arc<Inner>,
+    key: ReqKey,
+    epoch: u64,
+    armed: bool,
+}
+
+impl Drop for AbandonGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = lock(&self.inner.m);
+        if let Some(fl) = st.inflight.get_mut(&self.key) {
+            if fl.epoch == self.epoch {
+                fl.live = fl.live.saturating_sub(1);
+                if fl.live == 0 {
+                    fl.cancel.cancel();
+                }
+            }
+        }
+    }
+}
+
 /// Claim on an admitted request; [`Ticket::wait`] blocks for the
-/// response.
+/// response.  Dropping the ticket unwaited counts as a client
+/// disconnect and cooperatively cancels the search once *every*
+/// waiter for it is gone.
 pub struct Ticket {
-    rx: Receiver<PlanResponse>,
+    rx: Receiver<Result<PlanResponse, ServiceError>>,
+    /// `None` when the response was already delivered at submission
+    /// (cache hit) — nothing in flight to abandon.
+    guard: Option<AbandonGuard>,
 }
 
 impl Ticket {
-    /// Block until the response arrives.  Panics if the service is
-    /// dropped with this request still pending (drain first).
-    pub fn wait(self) -> PlanResponse {
-        self.rx.recv().expect("service delivers one response per admitted request")
+    /// Block until the response arrives (or the request fails with a
+    /// structured [`ServiceError`] — never a panic, never a hang: a
+    /// dead worker fails the request, and service drop fails pending
+    /// tickets with [`ServiceError::Shutdown`]).
+    pub fn wait(mut self) -> Result<PlanResponse, ServiceError> {
+        let resp = self.rx.recv().unwrap_or(Err(ServiceError::Shutdown));
+        if let Some(g) = self.guard.as_mut() {
+            g.armed = false;
+        }
+        resp
     }
 }
 
@@ -231,6 +350,9 @@ pub struct ServiceCfg {
     pub near_miss_max_drift: f64,
     /// Search budget for requests that don't carry their own.
     pub default_budget_s: Option<f64>,
+    /// Deadline for requests that don't carry their own `deadline_s`
+    /// (see [`PlanRequest::deadline_s`]); `None` = no deadline.
+    pub default_deadline_s: Option<f64>,
     /// Start with dequeueing held (see [`Service::hold`]) — lets a
     /// deterministic harness script its first wave before any search
     /// starts.
@@ -248,6 +370,7 @@ impl Default for ServiceCfg {
             cache_capacity: 256,
             near_miss_max_drift: 0.25,
             default_budget_s: None,
+            default_deadline_s: None,
             hold: false,
         }
     }
@@ -268,19 +391,38 @@ pub struct ServiceStats {
     pub coalesced: u64,
     /// Turned away by admission control.
     pub rejected: u64,
-    /// Searches completed.
+    /// Searches completed (excludes degraded fallbacks, which run no
+    /// search).
     pub searches: u64,
+    /// Requests answered with the deterministic degraded fallback.
+    pub degraded: u64,
+    /// Requests whose deadline fired (degraded fallbacks *and*
+    /// best-so-far cuts).
+    pub deadline_hits: u64,
+    /// Requests failed with a structured [`ServiceError`]
+    /// (worker lost / search panicked).
+    pub failed: u64,
+    /// Requests discarded because every waiter disconnected before the
+    /// response was ready.
+    pub abandoned: u64,
+    /// Plans replayed from the journal at startup.
+    pub journal_recovered: u64,
+    /// Torn/corrupt journal tail records dropped at startup.
+    pub journal_torn: u64,
+    /// Journal append/sync IO failures (the service keeps running;
+    /// durability of the affected commits is lost).
+    pub journal_errors: u64,
 }
 
 enum WaiterTx {
-    Plain(Sender<PlanResponse>),
+    Plain(Sender<Result<PlanResponse, ServiceError>>),
     /// `(tag, shared channel)` — the NDJSON loop multiplexes every
     /// response onto one channel.
-    Tagged(u64, Sender<(u64, PlanResponse)>),
+    Tagged(u64, Sender<(u64, Result<PlanResponse, ServiceError>)>),
 }
 
 impl WaiterTx {
-    fn send(self, resp: PlanResponse) {
+    fn send(self, resp: Result<PlanResponse, ServiceError>) {
         // A vanished waiter (dropped ticket / closed connection) is
         // not the service's problem.
         match self {
@@ -295,22 +437,41 @@ struct Waiter {
     provenance: Provenance,
 }
 
+/// One admitted request's waiters plus its cancellation state.
+struct Flight {
+    waiters: Vec<Waiter>,
+    /// Shared with the queued job; fires on deadline expiry or when
+    /// `live` reaches zero.
+    cancel: CancelToken,
+    /// Waiters that can still abandon (plain tickets; tagged NDJSON
+    /// waiters are torn down by `serve`'s drain instead).
+    live: usize,
+    /// Guards against a stale [`AbandonGuard`] touching a *later*
+    /// flight for the same key.
+    epoch: u64,
+}
+
 struct QueuedReq {
     key: ReqKey,
     req: PlanRequest,
     /// Warm-start seed + its near-miss distance (decided at
     /// submission, under the lock — see module docs).
     warm: Option<(Incumbent, f64)>,
+    /// The flight's token (deadline fixed at submission).
+    cancel: CancelToken,
 }
 
 struct State {
     queue: VecDeque<QueuedReq>,
-    /// Key → waiters of the search that will serve them.  An entry
-    /// exists from admission to completion; identical submissions
-    /// attach here.
-    inflight: HashMap<ReqKey, Vec<Waiter>>,
+    /// Key → flight of the search that will serve it.  An entry exists
+    /// from admission to completion; identical submissions attach
+    /// here.
+    inflight: HashMap<ReqKey, Flight>,
     cache: PlanCache,
     stats: ServiceStats,
+    /// Crash-safe commit log mirroring `cache` inserts (optional).
+    journal: Option<Journal>,
+    next_epoch: u64,
     held: bool,
     shutdown: bool,
     /// Searches currently running on workers.
@@ -328,6 +489,15 @@ struct Inner {
     idle_cv: Condvar,
 }
 
+/// Poison-tolerant state lock: every critical section is a short,
+/// straight-line queue/map edit that cannot be observed half-done, so
+/// a thread that panics while holding the lock leaves `State`
+/// consistent — poisoning downgrades to "take the data as is" instead
+/// of wedging every subsequent request.
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// The long-running planner daemon; see module docs.
 pub struct Service {
     inner: Arc<Inner>,
@@ -337,17 +507,48 @@ pub struct Service {
 
 impl Service {
     pub fn new(cfg: ServiceCfg) -> Service {
+        Service::build(cfg, None).expect("journal-less construction does no IO")
+    }
+
+    /// [`Service::new`] plus a crash-safe plan journal at `path`:
+    /// committed records are replayed into the plan cache (in commit
+    /// order, so contents *and* FIFO/eviction state are bitwise-equal
+    /// to the pre-crash committed state), torn or corrupt tail records
+    /// are dropped and counted ([`ServiceStats::journal_torn`]), and
+    /// every future cache commit is appended before the response fans
+    /// out.
+    pub fn with_journal(cfg: ServiceCfg, path: &Path) -> std::io::Result<Service> {
+        Service::build(cfg, Some(path))
+    }
+
+    fn build(cfg: ServiceCfg, journal_path: Option<&Path>) -> std::io::Result<Service> {
         assert!(cfg.search_workers >= 1);
         assert!(cfg.queue_capacity >= 1);
         assert!(cfg.near_miss_max_drift >= 0.0);
+        let mut cache = PlanCache::new(cfg.cache_capacity);
+        let mut stats = ServiceStats::default();
+        let journal = match journal_path {
+            Some(path) => {
+                let (journal, entries, replay) = Journal::open(path)?;
+                for (key, outcome) in entries {
+                    cache.insert(key, Arc::new(outcome));
+                }
+                stats.journal_recovered = replay.recovered as u64;
+                stats.journal_torn = replay.torn as u64;
+                Some(journal)
+            }
+            None => None,
+        };
         let pool = Arc::new(EvalPool::new(cfg.pool_threads.max(1)));
         let inner = Arc::new(Inner {
             cfg,
             m: Mutex::new(State {
                 queue: VecDeque::new(),
                 inflight: HashMap::new(),
-                cache: PlanCache::new(cfg.cache_capacity),
-                stats: ServiceStats::default(),
+                cache,
+                stats,
+                journal,
+                next_epoch: 0,
                 held: cfg.hold,
                 shutdown: false,
                 active: 0,
@@ -363,33 +564,46 @@ impl Service {
                 std::thread::spawn(move || worker(&inner, &pool))
             })
             .collect();
-        Service { inner, pool, workers }
+        Ok(Service { inner, pool, workers })
     }
 
     /// Submit a request; `Ok` is a claim on exactly one response.
     pub fn submit(&self, req: PlanRequest) -> Result<Ticket, Rejected> {
         let (tx, rx) = channel();
-        self.enqueue(req, WaiterTx::Plain(tx))?;
-        Ok(Ticket { rx })
+        let guard = self.enqueue(req, WaiterTx::Plain(tx))?.map(|(key, epoch)| {
+            AbandonGuard { inner: Arc::clone(&self.inner), key, epoch, armed: true }
+        });
+        Ok(Ticket { rx, guard })
     }
 
     /// Submit with the response routed to a shared channel under
     /// `tag` — the NDJSON front end's many-requests-one-writer shape.
+    /// Tagged waiters never abandon (the NDJSON loop drains instead).
     pub fn submit_tagged(
         &self,
         req: PlanRequest,
         tag: u64,
-        tx: Sender<(u64, PlanResponse)>,
+        tx: Sender<(u64, Result<PlanResponse, ServiceError>)>,
     ) -> Result<(), Rejected> {
-        self.enqueue(req, WaiterTx::Tagged(tag, tx))
+        self.enqueue(req, WaiterTx::Tagged(tag, tx)).map(|_| ())
     }
 
-    /// Submit and block for the response (rejections pass through).
-    pub fn call(&self, req: PlanRequest) -> Result<PlanResponse, Rejected> {
-        self.submit(req).map(Ticket::wait)
+    /// Submit and block for the response.
+    pub fn call(&self, req: PlanRequest) -> Result<PlanResponse, ServiceError> {
+        match self.submit(req) {
+            Ok(ticket) => ticket.wait(),
+            Err(rej) => Err(ServiceError::Overloaded(rej)),
+        }
     }
 
-    fn enqueue(&self, req: PlanRequest, tx: WaiterTx) -> Result<(), Rejected> {
+    /// Returns the admitted request's `(key, epoch)` for disconnect
+    /// tracking, or `None` when the response was already delivered
+    /// from the cache.
+    fn enqueue(
+        &self,
+        req: PlanRequest,
+        tx: WaiterTx,
+    ) -> Result<Option<(ReqKey, u64)>, Rejected> {
         assert_eq!(req.kinds.len(), req.profile.n_layers());
         assert!(req.nmb >= 1 && req.cluster.p() >= 1);
         assert!(
@@ -397,22 +611,24 @@ impl Service {
             "one rate per device"
         );
         let key = req.key();
-        let mut guard = self.inner.m.lock().unwrap();
+        let mut guard = lock(&self.inner.m);
         let st = &mut *guard;
         st.stats.requests += 1;
         // Fast path: an identical request already completed.
         if let Some(out) = st.cache.get(&key) {
             st.stats.cached += 1;
             drop(guard);
-            tx.send(PlanResponse { outcome: out, provenance: Provenance::Cached });
-            return Ok(());
+            tx.send(Ok(PlanResponse { outcome: out, provenance: Provenance::Cached }));
+            return Ok(None);
         }
         // Coalesce: an identical request is already being searched
-        // (or queued) — attach, occupying no queue slot.
-        if let Some(waiters) = st.inflight.get_mut(&key) {
+        // (or queued) — attach, occupying no queue slot.  The flight
+        // keeps its original deadline.
+        if let Some(fl) = st.inflight.get_mut(&key) {
             st.stats.coalesced += 1;
-            waiters.push(Waiter { tx, provenance: Provenance::Coalesced });
-            return Ok(());
+            fl.waiters.push(Waiter { tx, provenance: Provenance::Coalesced });
+            fl.live += 1;
+            return Ok(Some((key, fl.epoch)));
         }
         // Admission control.
         if st.queue.len() >= self.inner.cfg.queue_capacity {
@@ -438,11 +654,32 @@ impl Service {
             st.stats.cold += 1;
             Provenance::Cold
         };
-        st.inflight.insert(key.clone(), vec![Waiter { tx, provenance }]);
-        st.queue.push_back(QueuedReq { key, req, warm });
+        // Deadline → absolute instant, fixed now.  Non-finite or
+        // negative values never panic the service: they just mean "no
+        // deadline" / "already expired" respectively; huge values are
+        // clamped below `Duration::from_secs_f64`'s overflow.
+        let deadline_s = req.deadline_s.or(self.inner.cfg.default_deadline_s);
+        let cancel = match deadline_s {
+            Some(d) if d.is_finite() && d >= 0.0 => CancelToken::with_deadline(
+                Instant::now() + Duration::from_secs_f64(d.min(1e9)),
+            ),
+            _ => CancelToken::new(),
+        };
+        let epoch = st.next_epoch;
+        st.next_epoch += 1;
+        st.inflight.insert(
+            key.clone(),
+            Flight {
+                waiters: vec![Waiter { tx, provenance }],
+                cancel: cancel.clone(),
+                live: 1,
+                epoch,
+            },
+        );
+        st.queue.push_back(QueuedReq { key: key.clone(), req, warm, cancel });
         drop(guard);
         self.inner.work_cv.notify_one();
-        Ok(())
+        Ok(Some((key, epoch)))
     }
 
     /// Pause dequeueing: admitted requests queue up but no new search
@@ -450,12 +687,12 @@ impl Service {
     /// streams fully deterministic (every submission in a wave sees
     /// the same cache/in-flight state on every replay).
     pub fn hold(&self) {
-        self.inner.m.lock().unwrap().held = true;
+        lock(&self.inner.m).held = true;
     }
 
     /// Resume dequeueing.
     pub fn release(&self) {
-        self.inner.m.lock().unwrap().held = false;
+        lock(&self.inner.m).held = false;
         self.inner.work_cv.notify_all();
     }
 
@@ -463,39 +700,89 @@ impl Service {
     /// [`Service::release`] first — draining a held queue would wait
     /// forever, so that is a panic, not a hang.
     pub fn drain(&self) {
-        let mut st = self.inner.m.lock().unwrap();
+        let mut st = lock(&self.inner.m);
         while !(st.queue.is_empty() && st.inflight.is_empty()) {
             assert!(
                 !(st.held && !st.queue.is_empty()),
                 "drain() on a held service with queued work"
             );
-            st = self.inner.idle_cv.wait(st).unwrap();
+            st = self
+                .inner
+                .idle_cv
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Flush + fsync the journal; `true` on success (trivially so
+    /// without a journal).  Failures are also counted in
+    /// [`ServiceStats::journal_errors`].
+    pub fn flush_journal(&self) -> bool {
+        let mut st = lock(&self.inner.m);
+        match st.journal.as_mut() {
+            Some(j) => match j.sync() {
+                Ok(()) => true,
+                Err(_) => {
+                    st.stats.journal_errors += 1;
+                    false
+                }
+            },
+            None => true,
         }
     }
 
     pub fn stats(&self) -> ServiceStats {
-        self.inner.m.lock().unwrap().stats
+        lock(&self.inner.m).stats
     }
 
     pub fn plan_cache_stats(&self) -> PlanCacheStats {
-        self.inner.m.lock().unwrap().cache.stats()
+        lock(&self.inner.m).cache.stats()
+    }
+
+    /// Entries currently in the plan cache (recovery accounting).
+    pub fn plan_cache_len(&self) -> usize {
+        lock(&self.inner.m).cache.len()
     }
 
     /// Evaluation threads backing every search.
     pub fn pool_threads(&self) -> usize {
         self.pool.threads()
     }
+
+    /// Test hook: hard-abort the next `n` evaluation-worker dequeues
+    /// (see `EvalPool::inject_worker_abort`).
+    #[doc(hidden)]
+    pub fn inject_eval_abort(&self, n: usize) {
+        self.pool.inject_worker_abort(n);
+    }
+
+    /// Evaluation workers lost (and respawned) so far.
+    pub fn eval_workers_lost(&self) -> u64 {
+        self.pool.workers_lost()
+    }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
         {
-            let mut st = self.inner.m.lock().unwrap();
+            let mut st = lock(&self.inner.m);
             st.shutdown = true;
         }
         self.inner.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // Never strand a pending `Ticket::wait`: fail whatever was
+        // still queued or in flight, then make the journal durable.
+        let mut st = lock(&self.inner.m);
+        st.queue.clear();
+        for (_, fl) in st.inflight.drain() {
+            for w in fl.waiters {
+                w.tx.send(Err(ServiceError::Shutdown));
+            }
+        }
+        if let Some(j) = st.journal.as_mut() {
+            let _ = j.sync();
         }
     }
 }
@@ -512,30 +799,73 @@ fn retry_after(st: &State, cfg: &ServiceCfg) -> f64 {
     (mean_s * backlog / cfg.search_workers as f64).max(1e-3)
 }
 
+/// Map a caught search panic to the error taxonomy: the typed
+/// [`EvalAborted`] payload (raised by the generator when a pooled
+/// evaluation is lost) becomes [`ServiceError::WorkerLost`]; anything
+/// else is a planner bug, surfaced with its message.
+fn classify_panic(payload: &(dyn std::any::Any + Send)) -> ServiceError {
+    if payload.downcast_ref::<EvalAborted>().is_some() {
+        return ServiceError::WorkerLost(
+            "pooled evaluation lost (worker thread died or the evaluation panicked)"
+                .into(),
+        );
+    }
+    let msg = payload
+        .downcast_ref::<&'static str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into());
+    ServiceError::SearchPanicked(msg)
+}
+
 fn worker(inner: &Inner, pool: &Arc<EvalPool>) {
     loop {
         let job = {
-            let mut st = inner.m.lock().unwrap();
+            let mut st = lock(&inner.m);
             loop {
                 if st.shutdown {
                     return;
                 }
                 if !st.held {
                     if let Some(job) = st.queue.pop_front() {
+                        // Every waiter already disconnected: skip the
+                        // search entirely.
+                        if !st.inflight.get(&job.key).is_some_and(|fl| fl.live > 0) {
+                            st.inflight.remove(&job.key);
+                            st.stats.abandoned += 1;
+                            inner.idle_cv.notify_all();
+                            continue;
+                        }
                         st.active += 1;
                         break job;
                     }
                 }
-                st = inner.work_cv.wait(st).unwrap();
+                st = inner
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
             }
         };
         let t0 = Instant::now();
-        let outcome = Arc::new(run_search(&job, &inner.cfg, pool));
+        // Panic containment: the service worker thread itself never
+        // dies.  A panicking search (dead eval worker, planner bug, a
+        // degenerate request the fallback cannot schedule) fails
+        // exactly this request with a structured error.
+        let result: Result<Arc<PlanOutcome>, ServiceError> =
+            catch_unwind(AssertUnwindSafe(|| {
+                if job.cancel.deadline_expired() {
+                    // Expired before any candidate could be accepted:
+                    // deterministic fallback, never an error.
+                    degraded_outcome(&job)
+                } else {
+                    run_search(&job, &inner.cfg, pool)
+                }
+            }))
+            .map(Arc::new)
+            .map_err(|p| classify_panic(p.as_ref()));
         let wall_s = t0.elapsed().as_secs_f64();
         {
-            let mut st = inner.m.lock().unwrap();
-            st.cache.insert(job.key.clone(), Arc::clone(&outcome));
-            st.stats.searches += 1;
+            let mut st = lock(&inner.m);
             st.active -= 1;
             st.recent_s.push_back(wall_s);
             if st.recent_s.len() > 32 {
@@ -545,12 +875,48 @@ fn worker(inner: &Inner, pool: &Arc<EvalPool>) {
             // cache insert, so a late identical submission either
             // attaches here or hits the cache — there is no window
             // where it would start a duplicate search.
-            let waiters = st.inflight.remove(&job.key).expect("admitted ⇒ in flight");
-            for w in waiters {
-                w.tx.send(PlanResponse {
-                    outcome: Arc::clone(&outcome),
-                    provenance: w.provenance,
-                });
+            let fl = st.inflight.remove(&job.key).expect("admitted ⇒ in flight");
+            if fl.live == 0 {
+                // Abandoned mid-search: the (possibly cancel-cut)
+                // outcome must not reach the cache, and there is
+                // nobody to send it to.
+                st.stats.abandoned += 1;
+            } else {
+                match &result {
+                    Ok(out) => {
+                        let degraded = out.searched == Provenance::Degraded;
+                        st.stats.searches += u64::from(!degraded);
+                        st.stats.degraded += u64::from(degraded);
+                        st.stats.deadline_hits += u64::from(out.deadline_hit);
+                        // Deadline-dependent outcomes are wall-clock
+                        // functions, not request functions — caching
+                        // them would make cache contents timing-
+                        // dependent (journal commit mirrors cache).
+                        if !out.deadline_hit {
+                            st.cache.insert(job.key.clone(), Arc::clone(out));
+                            if let Some(j) = st.journal.as_mut() {
+                                if j.append(&job.key, out).is_err() {
+                                    st.stats.journal_errors += 1;
+                                }
+                            }
+                        }
+                    }
+                    Err(_) => st.stats.failed += 1,
+                }
+                for w in fl.waiters {
+                    let resp = match &result {
+                        Ok(out) => Ok(PlanResponse {
+                            outcome: Arc::clone(out),
+                            provenance: if out.searched == Provenance::Degraded {
+                                Provenance::Degraded
+                            } else {
+                                w.provenance
+                            },
+                        }),
+                        Err(e) => Err(e.clone()),
+                    };
+                    w.tx.send(resp);
+                }
             }
         }
         inner.idle_cv.notify_all();
@@ -558,7 +924,8 @@ fn worker(inner: &Inner, pool: &Arc<EvalPool>) {
 }
 
 /// One search, exactly as the batch CLI would run it — plus the
-/// shared pool and (for warm requests) the near-miss incumbent seed.
+/// shared pool, the request's cancel token, and (for warm requests)
+/// the near-miss incumbent seed.
 fn run_search(job: &QueuedReq, cfg: &ServiceCfg, pool: &Arc<EvalPool>) -> PlanOutcome {
     let req = &job.req;
     let caps = req.cluster.mem_caps();
@@ -570,6 +937,7 @@ fn run_search(job: &QueuedReq, cfg: &ServiceCfg, pool: &Arc<EvalPool>) -> PlanOu
     }
     opts.time_budget_s = req.budget_s.or(cfg.default_budget_s);
     opts.shared_pool = Some(Arc::clone(pool));
+    opts.cancel = Some(job.cancel.clone());
     if let Some((inc, _)) = &job.warm {
         // Seed only — no migration pricing: a plan request is for a
         // job that is not running yet, so nothing would migrate.
@@ -590,7 +958,56 @@ fn run_search(job: &QueuedReq, cfg: &ServiceCfg, pool: &Arc<EvalPool>) -> PlanOu
         evals: res.evals,
         iters: res.iters,
         budget_exhausted: res.budget_exhausted,
+        // Explicitly-cancelled (abandoned) outcomes are discarded at
+        // completion, so an observable `deadline_hit` always means the
+        // deadline fired.
+        deadline_hit: res.cancelled,
         search_s: res.elapsed_s,
+        fingerprint: job.key.fingerprint(),
+        sketch: req.sketch(),
+    }
+}
+
+/// Deterministic heuristic fallback for a deadline that expired with
+/// zero accepted candidates: uniform partition over sequential
+/// devices, scheduled 1F1B-style (no B/W split, no W-fill, no overlap
+/// awareness).  Pure arithmetic — no search, no wall-clock reads — so
+/// every degraded response for a given request is bitwise identical.
+fn degraded_outcome(job: &QueuedReq) -> PlanOutcome {
+    let req = &job.req;
+    let caps = req.cluster.mem_caps();
+    let p = caps.p();
+    let partition = uniform(req.profile.n_layers(), p);
+    let placement = sequential(p);
+    let knobs = SchedKnobs {
+        split_bw: false,
+        w_fill: false,
+        mem_cap_factor: 1.0,
+        overlap_aware: false,
+    };
+    let table = StageTable::build_rated(&req.profile, &partition, &placement, &req.rates);
+    let mut arena = SimArena::new();
+    let schedule = greedy_schedule_in(&mut arena, &table, &caps, req.nmb, knobs);
+    let report = simulate_in(&mut arena, &table, &caps, &schedule, false)
+        .expect("fallback pipeline must simulate");
+    PlanOutcome {
+        pipeline: Pipeline {
+            name: "AdaPtis-fallback".into(),
+            partition,
+            placement,
+            schedule,
+        },
+        knobs,
+        makespan: report.total,
+        headroom: report.min_headroom(),
+        bubble_ratio: report.bubble_ratio(),
+        searched: Provenance::Degraded,
+        near_miss_distance: None,
+        evals: 0,
+        iters: 0,
+        budget_exhausted: false,
+        deadline_hit: true,
+        search_s: 0.0,
         fingerprint: job.key.fingerprint(),
         sketch: req.sketch(),
     }

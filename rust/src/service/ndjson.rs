@@ -8,7 +8,7 @@
 //!
 //! ```text
 //! {"id":"r1","model":"gemma","size":"small","p":4,"t":2,"nmb":16,
-//!  "seq":4096,"budget_s":0.5,"iters":64,
+//!  "seq":4096,"budget_s":0.5,"deadline_s":2.0,"iters":64,
 //!  "rates":[1,1,1.5,1],"mem_caps":[8e10,8e10,8e10,8e10],
 //!  "cost_scale":[{"layer":3,"f":1.1,"b":1.05}]}
 //! ```
@@ -17,28 +17,55 @@
 //! `t` 2, `nmb` 8, `seq` 4096).  `cost_scale` multiplies per-layer
 //! profiled costs (keys `f`, `b`, `w`, `comm_bytes`), which is how a
 //! client expresses "the same model, measured a little differently" —
-//! the near-miss reuse path.  Responses:
+//! the near-miss reuse path.  `deadline_s` bounds the *response* time:
+//! an expired deadline returns the best plan so far
+//! (`"deadline_hit":true`) or the deterministic fallback
+//! (`"provenance":"degraded"`) — never an error.  Responses:
 //!
 //! ```text
 //! {"id":"r1","ok":true,"provenance":"cold","fingerprint":"ab12…",
 //!  "makespan_s":…,"headroom_bytes":…,"bubble_ratio":…,
 //!  "near_miss_distance":null,"partition":[…],"placement":[…],
 //!  "knobs":{…},"evals":…,"iters":…,"budget_exhausted":false,
-//!  "search_s":…}
+//!  "deadline_hit":false,"search_s":…}
 //! {"id":"r9","ok":false,"error":"overloaded","retry_after_s":0.2,"queue_len":64}
+//! {"id":"r4","ok":false,"error":"worker_lost","detail":"…"}
 //! {"id":"","ok":false,"error":"parse: …"}
 //! ```
+//!
+//! **Robustness contract** (exercised by `tests/service_fuzz.rs`): any
+//! byte sequence on a line — invalid UTF-8, megabyte blobs, truncated
+//! JSON, duplicate/missing fields, NaN/Inf numbers, absurd sizes —
+//! yields exactly one `"ok":false` line and never panics or kills the
+//! loop.  Numeric fields are bounds-checked here so a hostile line
+//! cannot make the *search* allocate absurdly either.
+//!
+//! **Shutdown**: [`serve`] stops admitting on stdin EOF or when the
+//! caller's shutdown flag flips (SIGTERM in `adaptis serve`), finishes
+//! every in-flight request, writes its responses, drains the service,
+//! and flushes + fsyncs the journal before returning.
 
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
-use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
 
 use crate::cluster::ClusterSpec;
 use crate::config::{Family, ParallelCfg, Size};
 use crate::util::json::{arr, num, obj, s, Json};
 
-use super::{PlanRequest, PlanResponse, Rejected, Service};
+use super::{PlanRequest, PlanResponse, Rejected, Service, ServiceError};
+
+/// Input bounds: a request outside these is a parse error, not an
+/// allocation.  Generous relative to every real configuration in the
+/// repo (benches top out at p=16, nmb=256).
+const MAX_P: usize = 64;
+const MAX_NMB: usize = 4096;
+const MAX_ITERS: usize = 100_000;
+const MAX_SEQ: usize = 1_000_000;
+const MAX_T: usize = 64;
 
 /// A request line the service cannot act on; `id` is best-effort.
 #[derive(Clone, Debug)]
@@ -74,7 +101,8 @@ fn f64_list(v: &Json, what: &str) -> Result<Vec<f64>, String> {
         .collect()
 }
 
-/// Parse one request line.  See the module docs for the schema.
+/// Parse one request line.  See the module docs for the schema and
+/// bounds.
 pub fn parse_request(line: &str) -> Result<(String, PlanRequest), ParseErr> {
     let v = Json::parse(line)
         .map_err(|e| ParseErr { id: String::new(), msg: format!("parse: {e}") })?;
@@ -95,14 +123,33 @@ pub fn parse_request(line: &str) -> Result<(String, PlanRequest), ParseErr> {
     let t = v.get("t").and_then(Json::as_usize).unwrap_or(2);
     let nmb = v.get("nmb").and_then(Json::as_usize).unwrap_or(8);
     let seq = v.get("seq").and_then(Json::as_usize).unwrap_or(4096);
-    if p < 1 || nmb < 1 {
-        return Err(fail("\"p\" and \"nmb\" must be ≥ 1".into()));
+    if p < 1 || p > MAX_P {
+        return Err(fail(format!("\"p\" must be in 1..={MAX_P}")));
+    }
+    if nmb < 1 || nmb > MAX_NMB {
+        return Err(fail(format!("\"nmb\" must be in 1..={MAX_NMB}")));
+    }
+    if t < 1 || t > MAX_T {
+        return Err(fail(format!("\"t\" must be in 1..={MAX_T}")));
+    }
+    if seq < 1 || seq > MAX_SEQ {
+        return Err(fail(format!("\"seq\" must be in 1..={MAX_SEQ}")));
     }
     let mut req = PlanRequest::table5(family, size, &ParallelCfg::new(p, t, nmb, 1, seq));
+    if req.profile.n_layers() < p {
+        return Err(fail(format!(
+            "\"p\" = {p} exceeds the model's {} layers",
+            req.profile.n_layers()
+        )));
+    }
     if let Some(caps) = v.get("mem_caps") {
         let caps = f64_list(caps, "\"mem_caps\"").map_err(&fail)?;
         if caps.len() != p {
             return Err(fail(format!("\"mem_caps\" needs {p} entries")));
+        }
+        // +∞ = unbounded device is legal; NaN / non-positive is not.
+        if caps.iter().any(|&c| c.is_nan() || c <= 0.0) {
+            return Err(fail("\"mem_caps\" entries must be > 0".into()));
         }
         req.cluster = ClusterSpec::with_caps(caps);
     }
@@ -111,15 +158,30 @@ pub fn parse_request(line: &str) -> Result<(String, PlanRequest), ParseErr> {
         if rates.len() != p {
             return Err(fail(format!("\"rates\" needs {p} entries")));
         }
+        if rates.iter().any(|&r| !r.is_finite() || r <= 0.0) {
+            return Err(fail("\"rates\" entries must be finite and > 0".into()));
+        }
         // An all-healthy vector is the same request as no vector.
         if rates.iter().any(|&r| r != 1.0) {
             req.rates = rates;
         }
     }
     if let Some(b) = v.get("budget_s").and_then(Json::as_f64) {
+        if !b.is_finite() || b <= 0.0 {
+            return Err(fail("\"budget_s\" must be finite and > 0".into()));
+        }
         req.budget_s = Some(b);
     }
+    if let Some(d) = v.get("deadline_s").and_then(Json::as_f64) {
+        if !d.is_finite() || d < 0.0 {
+            return Err(fail("\"deadline_s\" must be finite and ≥ 0".into()));
+        }
+        req.deadline_s = Some(d);
+    }
     if let Some(iters) = v.get("iters").and_then(Json::as_usize) {
+        if iters > MAX_ITERS {
+            return Err(fail(format!("\"iters\" must be ≤ {MAX_ITERS}")));
+        }
         req.max_iters = iters;
     }
     if let Some(scales) = v.get("cost_scale") {
@@ -141,6 +203,11 @@ pub fn parse_request(line: &str) -> Result<(String, PlanRequest), ParseErr> {
                 ("comm_bytes", &mut l.comm_bytes),
             ] {
                 if let Some(factor) = e.get(key).and_then(Json::as_f64) {
+                    if !factor.is_finite() || factor <= 0.0 {
+                        return Err(fail(format!(
+                            "cost_scale \"{key}\" must be finite and > 0"
+                        )));
+                    }
                     *slot *= factor;
                 }
             }
@@ -185,6 +252,7 @@ pub fn response_line(id: &str, resp: &PlanResponse) -> String {
         ("evals", num(out.evals as f64)),
         ("iters", num(out.iters as f64)),
         ("budget_exhausted", Json::Bool(out.budget_exhausted)),
+        ("deadline_hit", Json::Bool(out.deadline_hit)),
         ("search_s", num(out.search_s)),
     ])
     .to_string_compact()
@@ -202,6 +270,33 @@ pub fn rejected_line(id: &str, rej: &Rejected) -> String {
     .to_string_compact()
 }
 
+/// One structured-failure line ([`ServiceError`] taxonomy).
+pub fn failure_line(id: &str, err: &ServiceError) -> String {
+    match err {
+        ServiceError::Overloaded(rej) => rejected_line(id, rej),
+        ServiceError::WorkerLost(detail) => obj(vec![
+            ("id", s(id)),
+            ("ok", Json::Bool(false)),
+            ("error", s("worker_lost")),
+            ("detail", s(detail)),
+        ])
+        .to_string_compact(),
+        ServiceError::SearchPanicked(detail) => obj(vec![
+            ("id", s(id)),
+            ("ok", Json::Bool(false)),
+            ("error", s("search_panicked")),
+            ("detail", s(detail)),
+        ])
+        .to_string_compact(),
+        ServiceError::Shutdown => obj(vec![
+            ("id", s(id)),
+            ("ok", Json::Bool(false)),
+            ("error", s("shutdown")),
+        ])
+        .to_string_compact(),
+    }
+}
+
 /// One malformed-request line.
 pub fn error_line(err: &ParseErr) -> String {
     obj(vec![
@@ -212,63 +307,121 @@ pub fn error_line(err: &ParseErr) -> String {
     .to_string_compact()
 }
 
-/// Run the request/response loop until `input` is exhausted, then
-/// wait for every in-flight response to be written.  Responses are
+/// Poison-tolerant lock (same argument as `service::lock`: the guarded
+/// sections are short, straight-line writes).
+fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Run the request/response loop until `input` is exhausted or
+/// `shutdown` flips, then finish in-flight work, write its responses,
+/// drain the service, and flush + fsync the journal.  Responses are
 /// written by a dedicated thread as searches complete (out of order
-/// under concurrency — correlate by `id`); rejections and parse
-/// errors are written inline.  Generic over the streams so tests can
-/// drive it without a process boundary.
+/// under concurrency — correlate by `id`); rejections and parse errors
+/// are written inline.  Input is read on its own thread so a shutdown
+/// signal interrupts the loop even while a read blocks; invalid UTF-8
+/// is replaced lossily and then rejected as a parse error rather than
+/// killing the stream.  Generic over the streams so tests can drive it
+/// without a process boundary.
 pub fn serve<R, W>(
     service: &Service,
     input: R,
     output: &Arc<Mutex<W>>,
+    shutdown: Option<&AtomicBool>,
 ) -> std::io::Result<()>
 where
-    R: BufRead,
+    R: BufRead + Send + 'static,
     W: Write + Send + 'static,
 {
-    let (tx, rx) = channel::<(u64, PlanResponse)>();
+    let (tx, rx) = channel::<(u64, Result<PlanResponse, ServiceError>)>();
     let ids: Arc<Mutex<HashMap<u64, String>>> = Arc::new(Mutex::new(HashMap::new()));
     let writer = {
         let out = Arc::clone(output);
         let ids = Arc::clone(&ids);
         std::thread::spawn(move || {
             for (tag, resp) in rx {
-                let id = ids.lock().unwrap().remove(&tag).unwrap_or_default();
-                let mut w = out.lock().unwrap();
-                let _ = writeln!(w, "{}", response_line(&id, &resp));
+                let id = plock(&ids).remove(&tag).unwrap_or_default();
+                let line = match &resp {
+                    Ok(resp) => response_line(&id, resp),
+                    Err(err) => failure_line(&id, err),
+                };
+                let mut w = plock(&out);
+                let _ = writeln!(w, "{line}");
                 let _ = w.flush();
             }
         })
     };
+    // Reader thread: `read_until` keeps raw bytes (no UTF-8 gate on
+    // the transport), and decoupling it from the admission loop lets a
+    // SIGTERM take effect while a read blocks.  The handle is dropped
+    // (detached) on the signal path for the same reason.
+    let (line_tx, line_rx) = channel::<std::io::Result<Vec<u8>>>();
+    let _reader = std::thread::spawn(move || {
+        let mut input = input;
+        loop {
+            let mut raw = Vec::new();
+            match input.read_until(b'\n', &mut raw) {
+                Ok(0) => break,
+                Ok(_) => {
+                    if line_tx.send(Ok(raw)).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = line_tx.send(Err(e));
+                    break;
+                }
+            }
+        }
+    });
     let mut tag = 0u64;
-    for line in input.lines() {
-        let line = line?;
+    let mut io_err: Option<std::io::Error> = None;
+    loop {
+        if shutdown.is_some_and(|f| f.load(Ordering::SeqCst)) {
+            break;
+        }
+        let raw = match line_rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(Ok(raw)) => raw,
+            Ok(Err(e)) => {
+                io_err = Some(e);
+                break;
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break, // EOF
+        };
+        let line = String::from_utf8_lossy(&raw);
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
         match parse_request(line) {
             Err(e) => {
-                let mut w = output.lock().unwrap();
+                let mut w = plock(output);
                 writeln!(w, "{}", error_line(&e))?;
                 w.flush()?;
             }
             Ok((id, req)) => {
                 tag += 1;
-                ids.lock().unwrap().insert(tag, id.clone());
+                plock(&ids).insert(tag, id.clone());
                 if let Err(rej) = service.submit_tagged(req, tag, tx.clone()) {
-                    ids.lock().unwrap().remove(&tag);
-                    let mut w = output.lock().unwrap();
+                    plock(&ids).remove(&tag);
+                    let mut w = plock(output);
                     writeln!(w, "{}", rejected_line(&id, &rej))?;
                     w.flush()?;
                 }
             }
         }
     }
-    // In-flight waiters hold sender clones; once the last response is
-    // fanned out the channel closes and the writer drains and exits.
+    // Graceful drain: no new admissions past this point.  In-flight
+    // waiters hold sender clones; once the last response is fanned out
+    // the channel closes and the writer drains and exits — so joining
+    // it *is* waiting for in-flight work.
     drop(tx);
     let _ = writer.join();
-    Ok(())
+    service.drain();
+    service.flush_journal();
+    match io_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }

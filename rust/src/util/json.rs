@@ -20,7 +20,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, String> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -190,9 +190,16 @@ pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }
 
+/// Nesting cap: the parser is recursive, so pathological inputs (a
+/// line of 100k `[`s, say, from a hostile or broken NDJSON client)
+/// would otherwise overflow the stack — an abort, not a catchable
+/// error.  Nothing we produce or consume nests beyond single digits.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -204,8 +211,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, String> {
         match self.b.get(self.i) {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nest(Parser::object),
+            Some(b'[') => self.nest(Parser::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -213,6 +220,19 @@ impl<'a> Parser<'a> {
             Some(_) => self.number(),
             None => Err("unexpected eof".into()),
         }
+    }
+
+    fn nest(
+        &mut self,
+        inner: fn(&mut Parser<'a>) -> Result<Json, String>,
+    ) -> Result<Json, String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        let v = inner(self);
+        self.depth -= 1;
+        v
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
@@ -384,5 +404,14 @@ mod tests {
     fn rejects_garbage() {
         assert!(Json::parse("{oops}").is_err());
         assert!(Json::parse("[1,").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        // …but reasonable nesting is untouched.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
     }
 }

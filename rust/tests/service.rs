@@ -1,6 +1,7 @@
 //! Planner-service suite (DESIGN.md §8): request
 //! fingerprinting, plan-cache/coalescing behavior, the warm-start
-//! guarantee, admission control, and the NDJSON front end.
+//! guarantee, admission control, fault tolerance (deadlines, degraded
+//! fallback, worker loss, abandonment), and the NDJSON front end.
 
 use std::io::Cursor;
 use std::sync::{Arc, Mutex};
@@ -8,7 +9,9 @@ use std::sync::{Arc, Mutex};
 use adaptis::config::{Family, ParallelCfg, Size};
 use adaptis::generator::generate;
 use adaptis::service::fingerprint::near_miss_distance;
-use adaptis::service::{ndjson, PlanRequest, Provenance, Service, ServiceCfg};
+use adaptis::service::{
+    ndjson, PlanRequest, Provenance, Service, ServiceCfg, ServiceError,
+};
 
 fn par(p: usize, nmb: usize) -> ParallelCfg {
     ParallelCfg::new(p, 2, nmb, 1, 4096)
@@ -30,6 +33,7 @@ fn test_cfg() -> ServiceCfg {
         cache_capacity: 16,
         near_miss_max_drift: 0.25,
         default_budget_s: None,
+        default_deadline_s: None,
         hold: true,
     }
 }
@@ -101,7 +105,8 @@ fn identical_inflight_requests_coalesce_to_one_search() {
     let tickets: Vec<_> =
         (0..3).map(|_| svc.submit(small_req(8)).expect("admitted")).collect();
     svc.release();
-    let responses: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    let responses: Vec<_> =
+        tickets.into_iter().map(|t| t.wait().expect("one response each")).collect();
     svc.drain();
     let provs: Vec<_> = responses.iter().map(|r| r.provenance).collect();
     assert_eq!(
@@ -183,8 +188,8 @@ fn full_queue_rejects_with_retry_after() {
     // Identical-to-queued requests still coalesce — they take no slot.
     let t1 = svc.submit(small_req(8)).expect("coalesces despite full queue");
     svc.release();
-    assert_eq!(t0.wait().provenance, Provenance::Cold);
-    assert_eq!(t1.wait().provenance, Provenance::Coalesced);
+    assert_eq!(t0.wait().expect("response").provenance, Provenance::Cold);
+    assert_eq!(t1.wait().expect("response").provenance, Provenance::Coalesced);
     svc.drain();
 }
 
@@ -201,7 +206,7 @@ fn scripted_stream_replays_bitwise() {
             wave1.into_iter().map(|r| svc.submit(r).expect("admitted")).collect();
         svc.release();
         for t in tickets {
-            let resp = t.wait();
+            let resp = t.wait().expect("one response per admitted request");
             log.push((
                 resp.provenance,
                 resp.outcome.makespan.to_bits(),
@@ -222,7 +227,7 @@ fn scripted_stream_replays_bitwise() {
             .collect();
         svc.release();
         for t in tickets {
-            let resp = t.wait();
+            let resp = t.wait().expect("one response per admitted request");
             log.push((
                 resp.provenance,
                 resp.outcome.makespan.to_bits(),
@@ -295,7 +300,7 @@ fn ndjson_serve_answers_and_flags_garbage() {
                  this is not json\n\
                  {\"id\":\"b\",\"model\":\"gemma\",\"nmb\":8,\"iters\":4}\n";
     let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
-    ndjson::serve(&svc, Cursor::new(input), &out).expect("io on in-memory streams");
+    ndjson::serve(&svc, Cursor::new(input), &out, None).expect("io on in-memory streams");
     svc.drain();
     let text = String::from_utf8(out.lock().unwrap().clone()).unwrap();
     let lines: Vec<&str> = text.lines().collect();
@@ -313,4 +318,96 @@ fn ndjson_serve_answers_and_flags_garbage() {
     }
     // b is an exact repeat of a: exactly one search ran.
     assert_eq!(svc.stats().searches, 1);
+}
+
+// ----------------------------------------------------- fault tolerance
+
+/// An already-expired deadline never becomes an error: the service
+/// answers with the deterministic heuristic fallback plan, tags it
+/// `Degraded`, and keeps it out of the plan cache (a repeat degrades
+/// again, bitwise identically).
+#[test]
+fn expired_deadline_degrades_to_fallback_plan() {
+    let mut cfg = test_cfg();
+    cfg.hold = false;
+    let svc = Service::new(cfg);
+    let mut req = small_req(8);
+    req.deadline_s = Some(0.0);
+
+    let first = svc.call(req.clone()).expect("degradation is not an error");
+    assert_eq!(first.provenance, Provenance::Degraded);
+    assert_eq!(first.outcome.searched, Provenance::Degraded);
+    assert!(first.outcome.deadline_hit);
+    assert_eq!((first.outcome.evals, first.outcome.iters), (0, 0));
+    assert_eq!(first.outcome.pipeline.name, "AdaPtis-fallback");
+    assert!(first.outcome.pipeline.partition.is_valid());
+    assert_eq!(first.outcome.pipeline.placement.device_of, vec![0, 1, 2, 3]);
+    assert!(first.outcome.makespan.is_finite() && first.outcome.makespan > 0.0);
+
+    // Degraded plans are never cached: the repeat runs the same
+    // deterministic fallback, not a cache read.
+    let second = svc.call(req).expect("still not an error");
+    assert_eq!(second.provenance, Provenance::Degraded);
+    assert_eq!(
+        second.outcome.makespan.to_bits(),
+        first.outcome.makespan.to_bits(),
+        "fallback must be deterministic"
+    );
+    let stats = svc.stats();
+    assert_eq!((stats.degraded, stats.deadline_hits), (2, 2));
+    assert_eq!(stats.searches, 0, "fallbacks are not searches");
+    assert_eq!(svc.plan_cache_len(), 0, "degraded outcomes stay out of the cache");
+
+    // Without the deadline the very same request searches normally.
+    let clean = svc.call(small_req(8)).expect("plain search");
+    assert_eq!(clean.provenance, Provenance::Cold);
+    assert!(!clean.outcome.deadline_hit);
+}
+
+/// Killing an eval-pool worker mid-search fails exactly the request it
+/// was serving — with a structured [`ServiceError::WorkerLost`], not a
+/// hang or a poisoned lock — and the respawned worker serves the next
+/// request on the same pool.
+#[test]
+fn aborted_eval_worker_fails_one_request_then_recovers() {
+    let mut cfg = test_cfg();
+    cfg.hold = false;
+    cfg.pool_threads = 2; // pooled evaluation path
+    let svc = Service::new(cfg);
+    // Large nmb so per-candidate work clears the pool-dispatch
+    // threshold (n_stages * nmb >= 256) and evals actually go through
+    // the shared pool where the abort is injected.
+    let mut req = small_req(64);
+    req.max_iters = 2;
+
+    svc.inject_eval_abort(1);
+    let err = svc.call(req.clone()).expect_err("aborted worker must surface");
+    assert!(
+        matches!(err, ServiceError::WorkerLost(_)),
+        "expected WorkerLost, got: {err:?}"
+    );
+    assert_eq!(svc.stats().failed, 1);
+    assert!(svc.eval_workers_lost() >= 1, "the dead worker was counted");
+
+    // Same pool, next request: the respawned worker picks up the slack.
+    let resp = svc.call(req).expect("pool recovered");
+    assert_eq!(resp.provenance, Provenance::Cold);
+    let stats = svc.stats();
+    assert_eq!((stats.searches, stats.failed), (1, 1));
+}
+
+/// Dropping a ticket before waiting abandons the request: a held queue
+/// entry whose every waiter is gone is skipped (and its search
+/// cancelled) instead of burning a full search nobody will read.
+#[test]
+fn abandoned_request_is_cancelled_not_searched() {
+    let svc = Service::new(test_cfg()); // hold: true
+    let ticket = svc.submit(small_req(8)).expect("admitted");
+    drop(ticket); // last waiter gone before any worker dequeues
+    svc.release();
+    svc.drain();
+    let stats = svc.stats();
+    assert_eq!(stats.abandoned, 1, "the orphaned flight was dropped");
+    assert_eq!(stats.searches, 0, "no search ran for it");
+    assert_eq!(svc.plan_cache_len(), 0);
 }

@@ -1,0 +1,211 @@
+//! NDJSON front-end robustness fuzz (ISSUE 8 satellite, DESIGN.md §8
+//! fault tolerance).
+//!
+//! A deterministic, seeded corpus of hostile input lines — random
+//! bytes, invalid UTF-8, truncated JSON, megabyte blobs, duplicate and
+//! missing fields, NaN/Inf and absurd numerics, pathological nesting —
+//! is pushed through [`ndjson::serve`] end to end.  The contract under
+//! test:
+//!
+//! - the loop never panics and never exits early;
+//! - every line that is non-empty after (lossy) trimming gets exactly
+//!   one response line, `"ok":false` with an error for garbage,
+//!   `"ok":true` for the few valid requests seeded into the corpus;
+//! - every response line is itself valid single-line JSON.
+//!
+//! The corpus is a pure function of a fixed seed (`util::rng::Rng` is
+//! the repo's deterministic splitmix/xorshift), so a failure here is
+//! reproducible byte-for-byte — no fuzzer state to capture.
+
+use std::io::Cursor;
+use std::sync::{Arc, Mutex};
+
+use adaptis::service::{ndjson, Service, ServiceCfg};
+use adaptis::util::json::Json;
+use adaptis::util::rng::Rng;
+
+/// Bytes for one corpus line (no trailing newline; never contains
+/// 0x0A so one entry stays one transport line).
+type Line = Vec<u8>;
+
+fn random_bytes_line(rng: &mut Rng) -> Line {
+    let n = 1 + rng.below(200);
+    // Leading 'x' guarantees the line is non-empty after trimming no
+    // matter what whitespace the tail rolls.
+    let mut out = vec![b'x'];
+    for _ in 0..n {
+        let mut b = (rng.next_u64() & 0xFF) as u8;
+        if b == b'\n' {
+            b = b'\\';
+        }
+        out.push(b);
+    }
+    out
+}
+
+fn valid_request_line(i: usize, iters: usize) -> Line {
+    format!("{{\"id\":\"ok{i}\",\"model\":\"gemma\",\"nmb\":4,\"iters\":{iters}}}")
+        .into_bytes()
+}
+
+/// The seeded corpus: a Vec of lines, plus how many of them are valid
+/// requests (everything else must come back `"ok":false`).
+fn corpus(seed: u64) -> (Vec<Line>, usize) {
+    let mut rng = Rng::new(seed);
+    let mut lines: Vec<Line> = Vec::new();
+
+    // Raw random bytes (usually invalid UTF-8, never valid JSON).
+    for _ in 0..50 {
+        lines.push(random_bytes_line(&mut rng));
+    }
+    // Truncated valid requests: cut a well-formed line mid-token.
+    let whole = valid_request_line(999, 1);
+    for _ in 0..20 {
+        let cut = 1 + rng.below(whole.len() - 1);
+        lines.push(whole[..cut].to_vec());
+    }
+    // Megabyte blobs: an unterminated object and an absurd string.
+    let mut blob = b"{\"model\":\"".to_vec();
+    blob.extend(std::iter::repeat(b'a').take(1 << 20));
+    lines.push(blob);
+    let mut blob = b"{\"id\":\"".to_vec();
+    blob.extend(std::iter::repeat(b'b').take(1 << 20));
+    blob.extend_from_slice(b"\",\"model\":\"warp-drive\"}");
+    lines.push(blob);
+    // Duplicate fields: last one wins in the map, so this is a *valid*
+    // llama-2 request (counted below) — dup keys must not trip parsing.
+    lines.push(b"{\"model\":\"gemma\",\"model\":\"llama-2\",\"nmb\":4,\"nmb\":2,\"iters\":0,\"iters\":0}".to_vec());
+    for _ in 0..8 {
+        lines.push(format!("{{\"id\":\"m{}\"}}", rng.below(100)).into_bytes());
+    }
+    lines.push(b"[1,2,3]".to_vec());
+    lines.push(b"\"just a string\"".to_vec());
+    lines.push(b"42".to_vec());
+    lines.push(b"null".to_vec());
+    // NaN / Inf / overflow-to-inf / absurd and negative numerics.
+    for tok in [
+        "{\"model\":\"gemma\",\"budget_s\":NaN}",
+        "{\"model\":\"gemma\",\"budget_s\":Infinity}",
+        "{\"model\":\"gemma\",\"budget_s\":1e999}",
+        "{\"model\":\"gemma\",\"deadline_s\":-1}",
+        "{\"model\":\"gemma\",\"deadline_s\":1e999}",
+        "{\"model\":\"gemma\",\"p\":-1}",
+        "{\"model\":\"gemma\",\"p\":1000000000}",
+        "{\"model\":\"gemma\",\"nmb\":999999999999}",
+        "{\"model\":\"gemma\",\"seq\":0}",
+        "{\"model\":\"gemma\",\"iters\":100000000}",
+        "{\"model\":\"gemma\",\"rates\":[0,1,1,1]}",
+        "{\"model\":\"gemma\",\"rates\":[1e999,1,1,1]}",
+        "{\"model\":\"gemma\",\"mem_caps\":[-1,1,1,1]}",
+        "{\"model\":\"gemma\",\"cost_scale\":[{\"layer\":0,\"f\":-2}]}",
+        "{\"model\":\"gemma\",\"cost_scale\":[{\"layer\":99999,\"f\":2}]}",
+    ] {
+        lines.push(tok.as_bytes().to_vec());
+    }
+    // Pathological nesting: must be a parse error, not a stack
+    // overflow (the JSON parser carries an explicit depth cap).
+    lines.push(b"[".repeat(50_000));
+    lines.push({
+        let mut v = b"{\"model\":".to_vec();
+        v.extend(b"[".repeat(40_000));
+        v
+    });
+    // Invalid UTF-8 embedded in otherwise plausible JSON.
+    lines.push(b"{\"model\":\"gem\xFF\xFEma\"}".to_vec());
+    // Whitespace-only lines: skipped by the framing, no response.
+    lines.push(b"   \t  \r".to_vec());
+    lines.push(b"\r".to_vec());
+    // A handful of *valid* requests interleaved, proving garbage never
+    // wedges the loop for well-behaved clients.  Two are identical so
+    // the cache path runs under fire too.  (+1 for the duplicate-field
+    // llama-2 line above, which parses to a legal request.)
+    let valid = 5usize + 1;
+    lines.push(valid_request_line(0, 0));
+    lines.push(valid_request_line(1, 1));
+    lines.push(valid_request_line(2, 0));
+    lines.push(valid_request_line(0, 0)); // exact repeat → cached
+    lines.push(b"{\"id\":\"ok-deadline\",\"model\":\"gemma\",\"nmb\":4,\"iters\":0,\"deadline_s\":0}".to_vec());
+
+    // Shuffle deterministically so garbage and valid requests
+    // interleave in seed-dependent order.
+    rng.shuffle(&mut lines);
+    (lines, valid)
+}
+
+#[test]
+fn hostile_ndjson_corpus_never_panics_and_answers_every_line() {
+    let (lines, valid) = corpus(0xC0FFEE);
+    let mut input: Vec<u8> = Vec::new();
+    let mut expected = 0usize;
+    for l in &lines {
+        if !String::from_utf8_lossy(l).trim().is_empty() {
+            expected += 1;
+        }
+        input.extend_from_slice(l);
+        input.push(b'\n');
+    }
+
+    let svc = Service::new(ServiceCfg {
+        search_workers: 1,
+        pool_threads: 1,
+        queue_capacity: 64,
+        cache_capacity: 16,
+        near_miss_max_drift: 0.25,
+        default_budget_s: None,
+        default_deadline_s: None,
+        hold: false,
+    });
+    let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+    ndjson::serve(&svc, Cursor::new(input), &out, None)
+        .expect("in-memory streams cannot fail");
+
+    let text = String::from_utf8(out.lock().unwrap().clone())
+        .expect("responses are always valid UTF-8");
+    let responses: Vec<&str> = text.lines().collect();
+    assert_eq!(
+        responses.len(),
+        expected,
+        "exactly one response per non-blank input line"
+    );
+    let mut ok = 0usize;
+    for line in &responses {
+        let v = Json::parse(line)
+            .unwrap_or_else(|e| panic!("unparseable response {line:?}: {e}"));
+        match v.get("ok") {
+            Some(Json::Bool(true)) => ok += 1,
+            Some(Json::Bool(false)) => {
+                assert!(
+                    v.get("error").is_some(),
+                    "failure lines carry an error field: {line}"
+                );
+            }
+            other => panic!("response without ok flag ({other:?}): {line}"),
+        }
+    }
+    assert_eq!(ok, valid, "every valid request answered ok despite the garbage");
+    // The service survives the corpus in working order: a clean
+    // request afterwards still plans.
+    let text_after = {
+        let out2: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        ndjson::serve(
+            &svc,
+            Cursor::new(valid_request_line(7, 1).into_iter().chain([b'\n']).collect::<Vec<u8>>()),
+            &out2,
+            None,
+        )
+        .expect("io");
+        String::from_utf8(out2.lock().unwrap().clone()).unwrap()
+    };
+    assert!(text_after.contains("\"ok\":true"), "{text_after}");
+}
+
+/// The same seed must reproduce the same corpus — the property that
+/// makes any failure of the test above directly replayable.
+#[test]
+fn corpus_is_deterministic_in_its_seed() {
+    let (a, _) = corpus(0xC0FFEE);
+    let (b, _) = corpus(0xC0FFEE);
+    assert_eq!(a, b);
+    let (c, _) = corpus(0xBADF00D);
+    assert_ne!(a, c, "different seeds explore different corpora");
+}

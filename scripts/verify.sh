@@ -12,6 +12,12 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# Fault-tolerance suites (ISSUE 8) by name, so a wedged service loop
+# shows up as *these* targets hanging rather than a generic test stall:
+# the NDJSON robustness fuzz and the journal kill-and-restart tests.
+echo "== fault tolerance: cargo test --test service_fuzz --test service_recovery =="
+cargo test -q --test service_fuzz --test service_recovery
+
 if cargo clippy --version >/dev/null 2>&1; then
   echo "== lint: cargo clippy --all-targets -- -D warnings =="
   cargo clippy --all-targets -- -D warnings
