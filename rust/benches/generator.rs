@@ -20,6 +20,12 @@
 //! log, asserted; `evals_collapsed` counts how many evaluations the
 //! cycle replay actually accelerated).
 //!
+//! A fourth axis, `block search`, toggles the schedule-synthesis IR
+//! knob on heterogeneous Table-5 profiles: the knob-off run is
+//! asserted block-free and bit-deterministic, and the knob-on run
+//! reports `block_evals`, the winning block family, and the makespan
+//! delta the fourth knob buys.
+//!
 //! Emits machine-readable `BENCH_generator.json` (evals/s, elision
 //! counters, collapse counters, speedups per config, distribution
 //! blocks with iters/min/max) next to `BENCH_perfmodel.json`, same
@@ -210,11 +216,87 @@ fn main() {
         ]));
     }
 
+    // ---- block-search knob: fourth phase on vs off ---------------------
+    // Heterogeneous Table-5 profiles, where the V-family blocks the IR
+    // adds are the ones the greedy list scheduler cannot express.  The
+    // knob-off run is asserted block-free (zero block candidates, no
+    // block family in the result) and bit-deterministic — the mechanism
+    // by which `block_search = false` stays bit-identical to the
+    // pre-IR search.
+    println!("== block-search knob (schedule-synthesis IR) ==");
+    let block_cfgs: &[(Family, usize, usize)] = if smoke {
+        &[(Family::Gemma, 4, 16)]
+    } else {
+        &[(Family::Gemma, 4, 32), (Family::DeepSeek, 8, 32), (Family::NemotronH, 8, 64)]
+    };
+    let mut block_rows: Vec<Json> = Vec::new();
+    for &(family, p, nmb) in block_cfgs {
+        let cfg = ModelCfg::table5(family, Size::Small);
+        let par = ParallelCfg::new(p, 2, nmb, 1, 4096);
+        let prof =
+            ProfiledData::analytical(&build_model(&cfg), &HardwareCfg::default(), &par);
+        let mut off_opts = GenOptions::new(p, nmb);
+        off_opts.max_iters = 16;
+        let on_opts = off_opts.clone().with_block_search();
+
+        let off = generate(&prof, &off_opts);
+        let off2 = generate(&prof, &off_opts);
+        assert_eq!(off.block_evals, 0, "knob off must build no block candidates");
+        assert!(off.block_family.is_none(), "knob off must keep the greedy schedule");
+        assert_eq!(off.report.total, off2.report.total, "knob off must be deterministic");
+        assert_eq!(off.pipeline.partition, off2.pipeline.partition, "knob off determinism");
+        assert_eq!(off.log.len(), off2.log.len(), "knob off determinism");
+        assert_eq!(off.evals, off2.evals, "knob off determinism");
+        let on = generate(&prof, &on_opts);
+        assert!(on.block_evals > 0, "knob on must evaluate block candidates");
+
+        let label = format!("generate[block-off] {} P={p} nmb={nmb}", family.name());
+        let t_off = bench(&label, 1, 0.0, || {
+            let g = generate(&prof, &off_opts);
+            std::hint::black_box((g.evals, g.report.total));
+        });
+        let label = format!("generate[block-on]  {} P={p} nmb={nmb}", family.name());
+        let t_on = bench(&label, 1, 0.0, || {
+            let g = generate(&prof, &on_opts);
+            std::hint::black_box((g.block_evals, g.report.total));
+        });
+        let delta = off.report.total - on.report.total;
+        println!(
+            "      block_evals {} best_family {} makespan {:.4} -> {:.4} ({:+.2}%)",
+            on.block_evals,
+            on.block_family.as_deref().unwrap_or("greedy"),
+            off.report.total,
+            on.report.total,
+            -100.0 * delta / off.report.total
+        );
+        block_rows.push(obj(vec![
+            ("family", s(family.name())),
+            ("p", num(p as f64)),
+            ("nmb", num(nmb as f64)),
+            ("evals_off", num(off.evals as f64)),
+            ("evals_on", num(on.evals as f64)),
+            ("block_evals", num(on.block_evals as f64)),
+            (
+                "best_family",
+                on.block_family.as_deref().map_or(Json::Null, s),
+            ),
+            ("makespan_off", num(off.report.total)),
+            ("makespan_on", num(on.report.total)),
+            ("makespan_delta", num(delta)),
+            ("makespan_delta_pct", num(100.0 * delta / off.report.total)),
+            ("off_s_per_gen", num(t_off.median)),
+            ("on_s_per_gen", num(t_on.median)),
+            ("off_stats", t_off.json()),
+            ("on_stats", t_on.json()),
+        ]));
+    }
+
     let out = obj(vec![
         ("bench", s("generator")),
         ("smoke", Json::Bool(smoke)),
         ("configs", arr(rows)),
         ("nmb_sweep", arr(sweep_rows)),
+        ("block_search", arr(block_rows)),
     ]);
     // Anchor to the package dir so the artifact lands at
     // rust/BENCH_generator.json regardless of the invoking CWD.

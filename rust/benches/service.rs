@@ -1,4 +1,4 @@
-//! Planner-service closed-loop bench (DESIGN.md §8).
+//! Planner-service closed-loop bench (DESIGN.md §9).
 //!
 //! Phase 1 pins the service's deterministic contracts in-process:
 //!

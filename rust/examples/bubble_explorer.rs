@@ -3,7 +3,7 @@
 //! handy for building intuition about where bubbles come from.  Ends
 //! with a worked memory-cap example: the throughput winner gets
 //! rejected for OOM under a tightened per-device cap and the generator
-//! surfaces the feasible runner-up instead (DESIGN.md §5).
+//! surfaces the feasible runner-up instead (DESIGN.md §6).
 //!
 //!     cargo run --release --example bubble_explorer [gemma|deepseek|nemotron|llama2]
 

@@ -1,11 +1,13 @@
-//! Design-choice ablations (DESIGN.md §12) — beyond the paper's own
+//! Design-choice ablations (DESIGN.md §13) — beyond the paper's own
 //! figures, these quantify the executor/generator mechanisms this repo
 //! implements:
 //!
 //! - overlap-aware scheduling + receive hoisting on/off;
 //! - deadlock-repair pass (validity, not speed — repaired programs must
 //!   execute; unrepaired ones stall);
-//! - ZB-style B/W split vs fused backward;
+//! - ZB-style B/W split vs fused backward, including the block IR's
+//!   ZB-V and memory-lean V instances (shapes the list scheduler
+//!   cannot express);
 //! - placement granularity (virtual-stage chunks v = 1, 2, 4);
 //! - bottleneck-phase tuning vs exhaustive per-iteration move search.
 
@@ -22,10 +24,11 @@ use crate::partition::uniform;
 use crate::placement::{interleaved, sequential};
 use crate::perfmodel::simulate;
 use crate::profile::ProfiledData;
+use crate::schedule::block::{v_mem, v_placement, zb_v};
 use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
 
 pub fn ablations(ctx: &Ctx) -> String {
-    let mut out = String::from("## Ablations (design choices, DESIGN.md §12)\n\n");
+    let mut out = String::from("## Ablations (design choices, DESIGN.md §13)\n\n");
     let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 16, mbs: 1, seq: 4096 };
     let cfg = ModelCfg::table5(Family::NemotronH, Size::Small);
     let prof = ProfiledData::analytical(&build_model(&cfg), &ctx.hw, &par);
@@ -74,6 +77,28 @@ pub fn ablations(ctx: &Ctx) -> String {
             format!("{:.2}", r.total * 1e3),
             format!("{:.1}", r.peak_mem() / 1e9),
         ]);
+    }
+    // The block IR's V family (DESIGN.md §5): split-backward shapes the
+    // greedy list scheduler cannot express — ZB-V's depth-(2p−1) warmup
+    // over the wave(p, 2) placement, and the memory-controllable
+    // lifespan-1 variant that trades its bubbles back for stash.
+    {
+        let plac_v = v_placement(par.p);
+        let part_v = crate::partition::balanced(&prof, plac_v.n_stages());
+        for (name, block) in [
+            ("ZB-V block (v_mem, lifespan 2p)", zb_v(par.p, par.nmb)),
+            ("V block (v_mem, lifespan 1)", v_mem(par.p, par.nmb, 1)),
+        ] {
+            let (sch, _) = block
+                .compile_on(&plac_v.device_of, par.p, par.nmb)
+                .expect("the V family compiles at any (p, nmb)");
+            let r = simulate(&prof, &part_v, &plac_v, &sch, false).unwrap();
+            t.row(vec![
+                name.into(),
+                format!("{:.2}", r.total * 1e3),
+                format!("{:.1}", r.peak_mem() / 1e9),
+            ]);
+        }
     }
     let _ = write!(out, "### Backward splitting\n\n{}\n", t.render());
 

@@ -49,6 +49,7 @@ use crate::partition::Partition;
 use crate::placement::Placement;
 use crate::perfmodel::StageTable;
 use crate::profile::ProfiledData;
+use crate::schedule::block::BlockIr;
 use crate::schedule::greedy::SchedKnobs;
 
 /// Structural identity of a candidate: everything the (deterministic)
@@ -67,10 +68,28 @@ pub struct CandKey {
     /// produces it by deterministic arithmetic, so bitwise identity is
     /// the right equivalence).
     mem_cap_bits: u64,
+    /// Block-IR parameter words ([`BlockIr::key_bits`]); empty for
+    /// greedy-scheduled candidates.  Folding the block into the
+    /// structural identity is what keeps candidates that differ *only*
+    /// in block parameters from ever sharing a cached score — `key_bits`
+    /// is injective over the IR, and the empty vector is unreachable
+    /// from it, so greedy and block candidates can never alias either.
+    block_bits: Vec<u32>,
 }
 
 impl CandKey {
     pub fn of(part: &Partition, plac: &Placement, knobs: SchedKnobs) -> CandKey {
+        CandKey::of_cand(part, plac, knobs, None)
+    }
+
+    /// Full structural identity including the optional block IR (the
+    /// fourth search knob).
+    pub fn of_cand(
+        part: &Partition,
+        plac: &Placement,
+        knobs: SchedKnobs,
+        block: Option<&BlockIr>,
+    ) -> CandKey {
         debug_assert!(part.n_layers() < u32::MAX as usize);
         debug_assert!(plac.p <= u16::MAX as usize);
         CandKey {
@@ -80,6 +99,7 @@ impl CandKey {
                 | u8::from(knobs.w_fill) << 1
                 | u8::from(knobs.overlap_aware) << 2,
             mem_cap_bits: knobs.mem_cap_factor.to_bits(),
+            block_bits: block.map_or_else(Vec::new, BlockIr::key_bits),
         }
     }
 }
@@ -302,6 +322,50 @@ mod tests {
                 SchedKnobs { mem_cap_factor: 0.75, ..knobs }
             )
         );
+    }
+
+    /// Satellite regression (ISSUE 9): candidates that differ *only*
+    /// in block parameters must never share a `CandKey` — a collision
+    /// would replay one family's makespan for the other.
+    #[test]
+    fn key_distinguishes_block_parameters() {
+        use crate::schedule::block::{zb_v, Pattern, StashRule};
+        let pr = prof();
+        let n = pr.n_layers();
+        let (part, plac) = (uniform(n, 8), interleaved(4, 2));
+        let knobs = SchedKnobs::default();
+        let base_ir = zb_v(4, 8);
+        let base = CandKey::of_cand(&part, &plac, knobs, Some(&base_ir));
+        // Same everything ⇒ equal key (the memoization contract).
+        assert_eq!(base, CandKey::of_cand(&part, &plac, knobs, Some(&zb_v(4, 8))));
+        // Greedy (no block) and block candidates can never alias.
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, None));
+        assert_ne!(base, CandKey::of(&part, &plac, knobs));
+        // Every individual block parameter is distinguishing.
+        let mut ir = base_ir.clone();
+        ir.pattern = Pattern::BThenF;
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, Some(&ir)));
+        let mut ir = base_ir.clone();
+        ir.split_bw = !ir.split_bw;
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, Some(&ir)));
+        let mut ir = base_ir.clone();
+        ir.group += 1;
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, Some(&ir)));
+        let mut ir = base_ir.clone();
+        ir.offsets[2] += 1;
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, Some(&ir)));
+        let mut ir = base_ir.clone();
+        ir.lag[1] += 1;
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, Some(&ir)));
+        let mut ir = base_ir.clone();
+        ir.stash = StashRule::Fixed(3);
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, Some(&ir)));
+        // The stash rule carries its own discriminant word, so even the
+        // extreme Fixed budget cannot alias Warmup (they compile to
+        // different W retirement orders).
+        let mut ir = base_ir.clone();
+        ir.stash = StashRule::Fixed(u32::MAX);
+        assert_ne!(base, CandKey::of_cand(&part, &plac, knobs, Some(&ir)));
     }
 
     #[test]

@@ -105,10 +105,11 @@ use crate::partition::{balanced, memory_balanced, uniform, Partition};
 use crate::placement::{interleaved, sequential, wave, Placement};
 use crate::perfmodel::{
     fits_lower_bound, fused_eval, fused_score, fused_score_collapsed,
-    makespan_lower_bound_in, simulate_in, simulate_reference_in, BoundScratch,
-    PerfReport, SimArena, StageTable,
+    makespan_lower_bound_in, simulate_in, simulate_in_opts, simulate_reference_in,
+    BoundScratch, EngineOpts, PerfReport, SimArena, StageTable,
 };
 use crate::profile::ProfiledData;
+use crate::schedule::block::{BlockIr, StashRule};
 use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
 
 use crate::memory::model::layer_migration_bytes;
@@ -259,6 +260,19 @@ pub struct GenOptions {
     /// set.  The planner service uses this for per-request deadlines
     /// and client disconnects.
     pub cancel: Option<CancelToken>,
+    /// Fourth search knob (schedule-synthesis block IR): add a "block"
+    /// tuning phase whose moves introduce [`BlockIr`] families (ZB-V,
+    /// memory-controllable V, an exact-search-synthesized seed) and
+    /// then step their parameters (per-device offsets, chunk lag,
+    /// F/B pattern, unit grouping, stash budgets).  Default **off** —
+    /// with it off no block candidate is ever constructed and the
+    /// search is bit-identical to the pre-IR generator (pinned by
+    /// `block_search_off_is_bit_identical`).
+    pub block_search: bool,
+    /// Stash budget hint for block moves: seeds the `Fixed(k)` stash
+    /// steps of the block phase (`None` derives steps from `nmb`).
+    /// No effect without [`GenOptions::block_search`].
+    pub block_stash: Option<u32>,
 }
 
 impl GenOptions {
@@ -281,7 +295,15 @@ impl GenOptions {
             time_budget_s: None,
             shared_pool: None,
             cancel: None,
+            block_search: false,
+            block_stash: None,
         }
+    }
+
+    /// Enable the schedule-synthesis block phase (fourth search knob).
+    pub fn with_block_search(mut self) -> Self {
+        self.block_search = true;
+        self
     }
 
     /// Search under the given per-device memory capacities.
@@ -464,6 +486,13 @@ pub struct GenResult {
     pub migration_s: f64,
     pub elapsed_s: f64,
     pub log: Vec<GenLogEntry>,
+    /// Block-IR candidates fully evaluated (compiled + simulated;
+    /// subset of `evals`, 0 unless [`GenOptions::block_search`]).
+    pub block_evals: usize,
+    /// [`BlockIr::family`] label of the winning candidate when the
+    /// search settled on a block-synthesized schedule (`None` when the
+    /// greedy knob schedules won, or with block search off).
+    pub block_family: Option<String>,
 }
 
 impl GenResult {
@@ -478,13 +507,41 @@ impl GenResult {
     }
 }
 
-/// Candidate = (partition, placement, knobs); schedules are derived.
-/// Components are `Arc`-shared: a move clones only what it changes.
+/// Candidate = (partition, placement, knobs, optional block IR);
+/// schedules are derived.  Components are `Arc`-shared: a move clones
+/// only what it changes.  With `block` set the schedule comes from
+/// [`BlockIr::compile`] instead of the greedy knob scheduler (the
+/// knobs ride along untouched so knob moves can leave the family).
 #[derive(Clone)]
 struct Cand {
     part: Arc<Partition>,
     plac: Arc<Placement>,
     knobs: SchedKnobs,
+    block: Option<Arc<BlockIr>>,
+}
+
+/// Score a block-IR candidate: compile over the table's stage→device
+/// map, then run the reusable-arena engine.  `+inf` on compile
+/// rejection, OOM or deadlock (Eq. 2), mirroring the greedy paths.
+/// Shared verbatim by the serial evaluator and the pool workers, which
+/// is what keeps pooled block scores bit-identical to serial ones.
+pub(crate) fn block_score_in(
+    arena: &mut SimArena,
+    table: &StageTable,
+    caps: &MemCaps,
+    nmb: usize,
+    block: &BlockIr,
+    collapse: bool,
+) -> (f64, bool) {
+    let Ok((sch, _)) = block.compile_on(&table.device, table.p, nmb) else {
+        return (f64::INFINITY, false);
+    };
+    let opts = EngineOpts { collapse, ..EngineOpts::default() };
+    let (res, stats) = simulate_in_opts(arena, table, caps, &sch, opts);
+    match res {
+        Ok(rep) if !rep.oom => (rep.total, stats.fired),
+        _ => (f64::INFINITY, false),
+    }
 }
 
 /// A candidate bundled with its stage-cost table, ready to score.
@@ -523,6 +580,30 @@ fn eval_candidate(
 ) -> (f64, bool) {
     if !fits_lower_bound(&prep.table, caps) {
         return (f64::INFINITY, false);
+    }
+    if let Some(block) = &prep.cand.block {
+        return match engine {
+            EvalEngine::Fast => {
+                block_score_in(arena, &prep.table, caps, nmb, block, collapse)
+            }
+            EvalEngine::Reference => {
+                let score = match block.compile(&prep.cand.plac, nmb) {
+                    Ok(sch) => match simulate_reference_in(
+                        profile,
+                        caps,
+                        &prep.cand.part,
+                        &prep.cand.plac,
+                        &sch,
+                        false,
+                    ) {
+                        Ok(r) if !r.oom => r.total,
+                        _ => f64::INFINITY,
+                    },
+                    Err(_) => f64::INFINITY,
+                };
+                (score, false)
+            }
+        };
     }
     match engine {
         EvalEngine::Fast => {
@@ -565,6 +646,8 @@ struct Evaluator<'a> {
     evals_pruned: usize,
     evals_cached: usize,
     evals_collapsed: usize,
+    /// Block-IR candidates among `evals`.
+    block_evals: usize,
     arena: SimArena,
     scratch: BoundScratch,
     /// Caller-owned transposition table (persists across re-plans; the
@@ -610,6 +693,7 @@ impl<'a> Evaluator<'a> {
             evals_pruned: 0,
             evals_cached: 0,
             evals_collapsed: 0,
+            block_evals: 0,
             arena: SimArena::new(),
             scratch: BoundScratch::default(),
             cache,
@@ -649,7 +733,12 @@ impl<'a> Evaluator<'a> {
         }
         for (i, prep) in batch.iter().enumerate() {
             let mig_i = self.migs.get(i).copied().unwrap_or(0.0);
-            if self.prune {
+            // Block-IR candidates skip bound pruning: the makespan
+            // bound is documented only over greedy list-scheduler
+            // outputs, and a compiled block schedule is not one.  The
+            // schedule-independent `fits_lower_bound` gate still runs
+            // inside the eval itself.
+            if self.prune && prep.cand.block.is_none() {
                 let bound = makespan_lower_bound_in(
                     &mut self.scratch,
                     &prep.table,
@@ -666,7 +755,12 @@ impl<'a> Evaluator<'a> {
                 }
             }
             if self.memoize {
-                let key = CandKey::of(&prep.cand.part, &prep.cand.plac, prep.cand.knobs);
+                let key = CandKey::of_cand(
+                    &prep.cand.part,
+                    &prep.cand.plac,
+                    prep.cand.knobs,
+                    prep.cand.block.as_deref(),
+                );
                 if let Some(score) = self.cache.get(&key) {
                     self.evals_cached += 1;
                     out[i] = score + mig_i;
@@ -677,6 +771,8 @@ impl<'a> Evaluator<'a> {
             self.need.push(i);
         }
         self.evals += self.need.len();
+        self.block_evals +=
+            self.need.iter().filter(|&&i| batch[i].cand.block.is_some()).count();
 
         // Dispatch heuristic: fan out only when the batch carries
         // enough simulated ops to amortise channel round-trips; the
@@ -710,7 +806,12 @@ impl<'a> Evaluator<'a> {
             let client = self.client.as_ref().expect("just created");
             for &i in &self.need {
                 let table = std::mem::take(&mut batch[i].table);
-                client.submit(Job { idx: i, table, knobs: batch[i].cand.knobs });
+                client.submit(Job {
+                    idx: i,
+                    table,
+                    knobs: batch[i].cand.knobs,
+                    block: batch[i].cand.block.clone(),
+                });
             }
             for _ in 0..self.need.len() {
                 // A lost evaluation (worker thread died → NaN sentinel
@@ -761,6 +862,26 @@ impl<'a> Evaluator<'a> {
     /// Full report for the current pipeline (bottleneck attribution).
     fn report(&mut self, cand: &Cand, table: &StageTable) -> Option<PerfReport> {
         self.evals += 1;
+        if let Some(block) = &cand.block {
+            self.block_evals += 1;
+            let Ok((sch, _)) = block.compile_on(&table.device, table.p, self.nmb) else {
+                return None;
+            };
+            return match self.engine {
+                EvalEngine::Fast => {
+                    simulate_in(&mut self.arena, table, self.caps, &sch, false).ok()
+                }
+                EvalEngine::Reference => simulate_reference_in(
+                    self.profile,
+                    self.caps,
+                    &cand.part,
+                    &cand.plac,
+                    &sch,
+                    false,
+                )
+                .ok(),
+            };
+        }
         match self.engine {
             EvalEngine::Fast => Some(fused_eval(
                 table,
@@ -910,6 +1031,7 @@ pub fn generate_with_cache(
                 part: Arc::new(inc.partition.clone()),
                 plac: Arc::new(inc.placement.clone()),
                 knobs: inc.knobs,
+                block: None,
             },
         ));
     } else if opts.seed_s1f1b_only {
@@ -921,6 +1043,7 @@ pub fn generate_with_cache(
                 part: Arc::new(uniform(n_layers, p)),
                 plac: Arc::new(sequential(p)),
                 knobs: knobs_1f1b,
+                block: None,
             },
         ));
     } else {
@@ -946,7 +1069,12 @@ pub fn generate_with_cache(
                         profile,
                         &mut prep_pool,
                         "seed".into(),
-                        Cand { part: Arc::clone(&part), plac: Arc::clone(&plac), knobs },
+                        Cand {
+                            part: Arc::clone(&part),
+                            plac: Arc::clone(&plac),
+                            knobs,
+                            block: None,
+                        },
                     ));
                 }
             }
@@ -966,7 +1094,12 @@ pub fn generate_with_cache(
                 profile,
                 &mut prep_pool,
                 "memory-balanced seed".into(),
-                Cand { part: Arc::clone(&part), plac: Arc::clone(&plac), knobs },
+                Cand {
+                    part: Arc::clone(&part),
+                    plac: Arc::clone(&plac),
+                    knobs,
+                    block: None,
+                },
             ));
         }
     }
@@ -1036,6 +1169,13 @@ pub fn generate_with_cache(
                 ),
                 "placement" => placement_moves(profile, &mut prep_pool, &cur, opts),
                 "schedule" => schedule_moves(&mut prep_pool, &cur, &cur_table),
+                "block" => searchspace::block_moves(
+                    profile,
+                    &mut prep_pool,
+                    &cur,
+                    &cur_table,
+                    opts,
+                ),
                 _ => unreachable!(),
             };
             // Memory-violating moves are pruned by the same feasibility
@@ -1084,8 +1224,16 @@ pub fn generate_with_cache(
     // generator optimized; with no rates this is the plain table).
     let final_table = StageTable::build_rated(profile, &cur.part, &cur.plac, rates);
     let mut arena = SimArena::new();
-    let mut schedule =
-        greedy_schedule_in(&mut arena, &final_table, &caps, opts.nmb, cur.knobs);
+    let block_family = cur.block.as_ref().map(|b| b.family());
+    let mut schedule = match &cur.block {
+        Some(block) => {
+            block
+                .compile_on(&final_table.device, final_table.p, opts.nmb)
+                .expect("accepted block must compile on its own placement")
+                .0
+        }
+        None => greedy_schedule_in(&mut arena, &final_table, &caps, opts.nmb, cur.knobs),
+    };
     let mut report = simulate_in(&mut arena, &final_table, &caps, &schedule, false)
         .expect("final pipeline must simulate");
     // OOM repair (Eq. 2): under a binding cap the list scheduler's
@@ -1093,24 +1241,68 @@ pub fn generate_with_cache(
     // an over-budget F when nothing else can make progress).  Tighten
     // the budget factor geometrically — F's are deferred earlier,
     // trading bubbles for memory — and keep the first feasible result.
+    // A block schedule has no budget factor; shrink its warmup depth
+    // (offsets, lag, fixed stash) instead — same trade, same knob
+    // direction, expressed in the block's own parameters.
     if report.oom && caps.bounded() {
-        let mut knobs = cur.knobs;
-        for _ in 0..8 {
-            knobs.mem_cap_factor *= 0.5;
-            let sch = greedy_schedule_in(&mut arena, &final_table, &caps, opts.nmb, knobs);
-            let rep = simulate_in(&mut arena, &final_table, &caps, &sch, false)
-                .expect("repaired pipeline must simulate");
-            if !rep.oom {
-                log.push(GenLogEntry {
-                    iter,
-                    phase: "repair",
-                    action: format!("tighten memory ×{:.4}", knobs.mem_cap_factor),
-                    total: rep.total,
-                });
-                schedule = sch;
-                report = rep;
-                cur.knobs = knobs;
-                break;
+        if let Some(block) = cur.block.as_deref() {
+            let mut block = block.clone();
+            for _ in 0..8 {
+                let saturated = block.offsets.iter().all(|&o| o == 0)
+                    && block.lag.iter().all(|&l| l == 0);
+                for o in &mut block.offsets {
+                    *o /= 2;
+                }
+                for l in &mut block.lag {
+                    *l /= 2;
+                }
+                if let StashRule::Fixed(k) = &mut block.stash {
+                    *k /= 2;
+                }
+                let Ok((sch, _)) =
+                    block.compile_on(&final_table.device, final_table.p, opts.nmb)
+                else {
+                    break;
+                };
+                let Ok(rep) = simulate_in(&mut arena, &final_table, &caps, &sch, false)
+                else {
+                    break;
+                };
+                if !rep.oom {
+                    log.push(GenLogEntry {
+                        iter,
+                        phase: "repair",
+                        action: "shrink block warmup".into(),
+                        total: rep.total,
+                    });
+                    schedule = sch;
+                    report = rep;
+                    break;
+                }
+                if saturated {
+                    break; // fully drained the block's memory knobs
+                }
+            }
+        } else {
+            let mut knobs = cur.knobs;
+            for _ in 0..8 {
+                knobs.mem_cap_factor *= 0.5;
+                let sch =
+                    greedy_schedule_in(&mut arena, &final_table, &caps, opts.nmb, knobs);
+                let rep = simulate_in(&mut arena, &final_table, &caps, &sch, false)
+                    .expect("repaired pipeline must simulate");
+                if !rep.oom {
+                    log.push(GenLogEntry {
+                        iter,
+                        phase: "repair",
+                        action: format!("tighten memory ×{:.4}", knobs.mem_cap_factor),
+                        total: rep.total,
+                    });
+                    schedule = sch;
+                    report = rep;
+                    cur.knobs = knobs;
+                    break;
+                }
             }
         }
     }
@@ -1129,6 +1321,8 @@ pub fn generate_with_cache(
         evals_pruned: ev.evals_pruned,
         evals_cached: ev.evals_cached,
         evals_collapsed: ev.evals_collapsed,
+        block_evals: ev.block_evals,
+        block_family,
         budget_exhausted,
         cancelled,
         cache: ev.cache.stats().since(&stats0),
@@ -1160,6 +1354,13 @@ fn phase_order(report: Option<&PerfReport>, opts: &GenOptions) -> Vec<&'static s
         if opts.phases.schedule {
             order.push(("schedule", bubble * 0.5));
         }
+        if opts.block_search {
+            // The fourth knob (§4.3 extension): swap the list scheduler
+            // for a synthesized building block.  Blamed slightly below
+            // the schedule phase so knob tuning gets first shot at a
+            // bubble, but block synthesis still runs every iteration.
+            order.push(("block", bubble * 0.45));
+        }
     }
     order.sort_by(|a, b| b.1.total_cmp(&a.1));
     order.into_iter().map(|(n, _)| n).collect()
@@ -1190,6 +1391,7 @@ fn partition_moves(
                         part: Arc::new(part),
                         plac: Arc::clone(&cur.plac),
                         knobs: cur.knobs,
+                        block: cur.block.clone(),
                     },
                     table,
                 });
@@ -1220,6 +1422,7 @@ fn partition_moves(
                             part: Arc::new(part),
                             plac: Arc::clone(&cur.plac),
                             knobs: cur.knobs,
+                            block: cur.block.clone(),
                         },
                     ));
                 }
@@ -1253,7 +1456,14 @@ fn placement_moves(
                 profile,
                 pool,
                 format!("{name} v={v}"),
-                Cand { part: Arc::new(part), plac: Arc::new(plac), knobs: cur.knobs },
+                // A layout change invalidates a block tuned to the old
+                // stage→device map — restart that knob from scratch.
+                Cand {
+                    part: Arc::new(part),
+                    plac: Arc::new(plac),
+                    knobs: cur.knobs,
+                    block: None,
+                },
             ));
             if v == 1 {
                 break; // wave(p,1) == interleaved(p,1) == sequential
@@ -1275,6 +1485,7 @@ fn placement_moves(
                         part: Arc::clone(&cur.part),
                         plac: Arc::new(plac),
                         knobs: cur.knobs,
+                        block: cur.block.clone(),
                     },
                 ));
             }
@@ -1311,10 +1522,13 @@ fn schedule_moves(pool: &mut PrepPool, cur: &Cand, cur_table: &StageTable) -> Ve
         .into_iter()
         .map(|(name, knobs)| Prepared {
             desc: name.to_string(),
+            // Knob moves propose *leaving* the block family for the
+            // greedy scheduler — the block phase proposes entering it.
             cand: Cand {
                 part: Arc::clone(&cur.part),
                 plac: Arc::clone(&cur.plac),
                 knobs,
+                block: None,
             },
             table: pool.take_like(cur_table),
         })
@@ -1490,6 +1704,72 @@ mod tests {
             assert_eq!(a.evals_cached, b.evals_cached, "{fam:?}");
             assert_eq!(a.iters, b.iters, "{fam:?}");
             assert_eq!(a.log.len(), b.log.len(), "{fam:?}");
+        }
+    }
+
+    /// Tentpole pin (ISSUE 9): the fourth knob is strictly additive.
+    /// With `block_search` off (the default) no block candidate is
+    /// ever constructed — `Cand::block` stays `None` everywhere, so
+    /// `CandKey::of_cand(.., None)` degenerates to the pre-refactor
+    /// key and the deterministic engines walk the pre-refactor
+    /// trajectory bit-for-bit.  Pinned across {Fast, Reference} ×
+    /// {collapse on, off} via run-to-run bit-identity plus a zero
+    /// block counter (one constructed block candidate would perturb
+    /// `evals` and the phase log).
+    #[test]
+    fn block_search_off_is_bit_identical() {
+        for engine in [EvalEngine::Fast, EvalEngine::Reference] {
+            for collapse in [false, true] {
+                let prof = profile(Family::Gemma, 4, 8);
+                let mut opts = GenOptions::new(4, 8);
+                opts.engine = engine;
+                opts.collapse = collapse;
+                opts.max_iters = 12;
+                let a = generate(&prof, &opts);
+                let b = generate(&prof, &opts);
+                let tag = format!("{engine:?}/collapse={collapse}");
+                assert_eq!(a.report.total, b.report.total, "{tag}");
+                assert_eq!(a.pipeline.partition, b.pipeline.partition, "{tag}");
+                assert_eq!(a.pipeline.placement, b.pipeline.placement, "{tag}");
+                assert_eq!(a.evals, b.evals, "{tag}");
+                assert_eq!(a.evals_pruned, b.evals_pruned, "{tag}");
+                assert_eq!(a.evals_cached, b.evals_cached, "{tag}");
+                assert_eq!(a.block_evals, 0, "{tag}: no block candidate with knob off");
+                assert_eq!(a.block_family, None, "{tag}");
+                assert!(
+                    a.log.iter().all(|e| e.phase != "block"),
+                    "{tag}: block phase must not be scheduled"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_search_evaluates_and_stays_deterministic() {
+        // Knob on: block candidates are actually evaluated (counter
+        // moves), the result is a valid pipeline, and the run is
+        // deterministic.  When the V family wins, the family label is
+        // surfaced.
+        let prof = profile(Family::Gemma, 4, 8);
+        let mut opts = GenOptions::new(4, 8).with_block_search();
+        opts.max_iters = 12;
+        let a = generate(&prof, &opts);
+        let b = generate(&prof, &opts);
+        assert!(a.block_evals > 0, "block candidates must be scored");
+        assert_eq!(a.report.total, b.report.total);
+        assert_eq!(a.block_evals, b.block_evals);
+        assert_eq!(a.block_family, b.block_family);
+        a.pipeline.schedule.validate(&a.pipeline.placement).unwrap();
+        simulate(
+            &prof,
+            &a.pipeline.partition,
+            &a.pipeline.placement,
+            &a.pipeline.schedule,
+            false,
+        )
+        .expect("chosen pipeline must run deadlock-free");
+        if let Some(fam) = &a.block_family {
+            assert!(!fam.is_empty());
         }
     }
 

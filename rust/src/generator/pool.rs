@@ -1,4 +1,4 @@
-//! Process-wide candidate-evaluation pool (DESIGN.md §4, §8).
+//! Process-wide candidate-evaluation pool (DESIGN.md §4, §9).
 //!
 //! PR 1 parallelised move batches with `std::thread::scope`, which
 //! spawns and joins a fresh set of OS threads for *every* batch.  PR 3
@@ -38,7 +38,7 @@
 //! are gone).  `Evaluator` and the planner service both hold the pool
 //! in an `Arc` that outlives every client.
 //!
-//! Fault containment (DESIGN.md §8, fault tolerance): a panic *inside*
+//! Fault containment (DESIGN.md §9, fault tolerance): a panic *inside*
 //! an evaluation is caught per-job and reported as a NaN sentinel.  A
 //! panic *outside* that catch kills the worker thread itself — for
 //! that case every worker carries a [`WorkerGuard`] whose unwind path
@@ -58,6 +58,7 @@ use crate::memory::MemCaps;
 use crate::perfmodel::{
     fits_lower_bound, fused_score, fused_score_collapsed, SimArena, StageTable,
 };
+use crate::schedule::block::BlockIr;
 use crate::schedule::greedy::SchedKnobs;
 
 /// Every sender for a client's completion channel is gone: the pool
@@ -90,12 +91,15 @@ fn lock_dispatch(shared: &Shared) -> MutexGuard<'_, Dispatch> {
     shared.m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// One candidate evaluation: score `table` under `knobs`.
+/// One candidate evaluation: score `table` under `knobs`, or — when
+/// `block` is set — under the compiled block schedule (the fourth
+/// search knob; `knobs` ride along but are not consulted).
 pub struct Job {
     /// Caller's batch index — results are merged back by this.
     pub idx: usize,
     pub table: StageTable,
     pub knobs: SchedKnobs,
+    pub block: Option<Arc<BlockIr>>,
 }
 
 /// A finished evaluation; `table` is returned for recycling.
@@ -336,6 +340,17 @@ fn worker(shared: Arc<Shared>) {
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 if !fits_lower_bound(&job.table, &ctx.caps) {
                     (f64::INFINITY, false)
+                } else if let Some(block) = &job.block {
+                    // Exactly the serial path's block scorer, so pooled
+                    // and serial block evaluations are bit-identical.
+                    super::block_score_in(
+                        &mut arena,
+                        &job.table,
+                        &ctx.caps,
+                        ctx.nmb,
+                        block,
+                        ctx.collapse,
+                    )
                 } else if ctx.collapse {
                     let (score, stats) = fused_score_collapsed(
                         &job.table,
@@ -444,7 +459,7 @@ mod tests {
         for (idx, (table, knobs)) in
             tables.into_iter().zip(knob_grid.iter()).enumerate()
         {
-            client.submit(Job { idx, table, knobs: *knobs });
+            client.submit(Job { idx, table, knobs: *knobs, block: None });
         }
         let mut pooled = vec![f64::NAN; knob_grid.len()];
         let mut returned = Vec::new();
@@ -465,7 +480,7 @@ mod tests {
         // survival between searches.
         let client = pool.client(EvalCtx { caps, nmb: 8, collapse: true });
         for (idx, table) in returned {
-            client.submit(Job { idx, table, knobs: knob_grid[idx] });
+            client.submit(Job { idx, table, knobs: knob_grid[idx], block: None });
         }
         let mut collapsed = vec![f64::NAN; knob_grid.len()];
         for _ in 0..knob_grid.len() {
@@ -487,8 +502,8 @@ mod tests {
         let b = pool.client(EvalCtx { caps, nmb: 8, collapse: true });
         let n = tables.len();
         for (idx, table) in tables.into_iter().enumerate() {
-            a.submit(Job { idx, table: table.clone(), knobs: knob_grid[idx] });
-            b.submit(Job { idx, table, knobs: knob_grid[idx] });
+            a.submit(Job { idx, table: table.clone(), knobs: knob_grid[idx], block: None });
+            b.submit(Job { idx, table, knobs: knob_grid[idx], block: None });
         }
         let (mut sa, mut sb) = (vec![f64::NAN; n], vec![f64::NAN; n]);
         for _ in 0..n {
@@ -515,7 +530,7 @@ mod tests {
         let client =
             pool.client(EvalCtx { caps: caps.clone(), nmb: 8, collapse: false });
         for (idx, table) in tables.iter().cloned().enumerate() {
-            client.submit(Job { idx, table, knobs: knob_grid[idx] });
+            client.submit(Job { idx, table, knobs: knob_grid[idx], block: None });
         }
         let mut scores = vec![f64::NAN; n];
         let mut lost = 0usize;
@@ -543,7 +558,7 @@ mod tests {
         // on the same pool completes with serial-identical scores.
         let client = pool.client(EvalCtx { caps, nmb: 8, collapse: false });
         for (idx, table) in tables.into_iter().enumerate() {
-            client.submit(Job { idx, table, knobs: knob_grid[idx] });
+            client.submit(Job { idx, table, knobs: knob_grid[idx], block: None });
         }
         let mut again = vec![f64::NAN; n];
         for _ in 0..n {

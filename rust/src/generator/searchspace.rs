@@ -4,6 +4,185 @@
 //!
 //! All counts are returned as log10 (the raw numbers overflow u128
 //! quickly, and the paper plots them on a log axis anyway).
+//!
+//! Since the schedule-synthesis refactor this module also hosts the
+//! Generator's **fourth search knob**: [`block_moves`], the move
+//! generator over [`BlockIr`] parameters.  Where the raw schedule
+//! space is doubly exponential ([`log10_schedules`]), the block IR
+//! parameterizes its structured slice with ~`4·P` small integers
+//! ([`log10_blocks`]) — small enough for the same hill climb that
+//! tunes partitions and placements.
+
+use std::sync::Arc;
+
+use crate::partition::{balanced, uniform};
+use crate::perfmodel::StageTable;
+use crate::placement::sequential;
+use crate::profile::ProfiledData;
+use crate::schedule::block::{v_mem, v_placement, BlockIr, Pattern, StashRule};
+
+use super::cache::PrepPool;
+use super::{Cand, GenOptions, Prepared};
+
+/// Block-phase moves.  With no incumbent block the batch *introduces*
+/// candidates: the memory-controllable V family over `wave(p, 2)`
+/// (shapes the greedy list scheduler cannot express — `v_mem(p, ·,
+/// 2p)` is exactly ZB-V) plus, on small pipelines, an ILP-synthesized
+/// block distilled from a provably optimal probe schedule.  With an
+/// incumbent block the batch proposes local parameter steps: warmup
+/// offsets (±1 jointly and per device), chunk lag, pattern, group,
+/// backward split, and stash budget.  Leaving the family back to the
+/// greedy scheduler is proposed by the schedule phase, never here.
+///
+/// Deterministic: move order is fixed, and every candidate is deduped
+/// against the incumbent by [`BlockIr::key_bits`].
+pub(super) fn block_moves(
+    profile: &ProfiledData,
+    pool: &mut PrepPool,
+    cur: &Cand,
+    cur_table: &StageTable,
+    opts: &GenOptions,
+) -> Vec<Prepared> {
+    let p = opts.p;
+    let nmb = opts.nmb;
+    let mut out = Vec::new();
+    match cur.block.as_deref() {
+        None => {
+            if 2 * p <= profile.n_layers() {
+                let part = Arc::new(balanced(profile, 2 * p));
+                let plac = Arc::new(v_placement(p));
+                let mut seen: Vec<Vec<u32>> = Vec::new();
+                let mut lifespans = vec![2 * p, 1, 2, p];
+                if let Some(k) = opts.block_stash {
+                    lifespans.push(k as usize);
+                }
+                for ls in lifespans {
+                    let block = v_mem(p, nmb, ls.max(1));
+                    let bits = block.key_bits();
+                    if seen.contains(&bits) {
+                        continue;
+                    }
+                    seen.push(bits);
+                    out.push(Prepared::fresh(
+                        profile,
+                        pool,
+                        format!("enter block {} (lifespan {ls})", block.family()),
+                        Cand {
+                            part: Arc::clone(&part),
+                            plac: Arc::clone(&plac),
+                            knobs: cur.knobs,
+                            block: Some(Arc::new(block)),
+                        },
+                    ));
+                }
+            }
+            // ILP-distilled block: only on pipelines small enough for
+            // the probe to *prove* optimality in (micro)seconds on any
+            // machine — an incomplete probe is discarded, and a probe
+            // whose completion straddled the wall-clock budget would
+            // make the move set machine- and run-dependent.  At p ≤ 2
+            // the probe tree is a few thousand nodes, so completion is
+            // unconditional in practice.
+            if p <= 2 && p <= profile.n_layers() {
+                if let Some(block) = crate::ilp::synthesize_block(profile, p, nmb, 0.25) {
+                    out.push(Prepared::fresh(
+                        profile,
+                        pool,
+                        format!("enter block {} (ilp)", block.family()),
+                        Cand {
+                            part: Arc::new(uniform(profile.n_layers(), p)),
+                            plac: Arc::new(sequential(p)),
+                            knobs: cur.knobs,
+                            block: Some(Arc::new(block)),
+                        },
+                    ));
+                }
+            }
+        }
+        Some(b) => {
+            let cur_bits = b.key_bits();
+            let mut push = |desc: String, block: BlockIr, pool: &mut PrepPool| {
+                if block.key_bits() == cur_bits {
+                    return;
+                }
+                out.push(Prepared {
+                    desc,
+                    cand: Cand {
+                        part: Arc::clone(&cur.part),
+                        plac: Arc::clone(&cur.plac),
+                        knobs: cur.knobs,
+                        block: Some(Arc::new(block)),
+                    },
+                    table: pool.take_like(cur_table),
+                });
+            };
+            // Warmup depth: joint ±1, then per-device ±1.
+            let mut deeper = b.clone();
+            for o in &mut deeper.offsets {
+                *o += 1;
+            }
+            push("block warmup +1".into(), deeper, pool);
+            let mut shallower = b.clone();
+            for o in &mut shallower.offsets {
+                *o = o.saturating_sub(1);
+            }
+            push("block warmup -1".into(), shallower, pool);
+            for d in 0..p {
+                let mut up = b.clone();
+                up.offsets[d] += 1;
+                push(format!("block dev{d} offset +1"), up, pool);
+                let mut down = b.clone();
+                down.offsets[d] = down.offsets[d].saturating_sub(1);
+                push(format!("block dev{d} offset -1"), down, pool);
+            }
+            // Chunk lag (the V-schedule shape knob): joint ±1.
+            let mut lagged = b.clone();
+            for l in &mut lagged.lag {
+                *l += 1;
+            }
+            push("block lag +1".into(), lagged, pool);
+            let mut unlagged = b.clone();
+            for l in &mut unlagged.lag {
+                *l = l.saturating_sub(1);
+            }
+            push("block lag -1".into(), unlagged, pool);
+            // Interleaving pattern and grouping.
+            let mut flipped = b.clone();
+            flipped.pattern = match b.pattern {
+                Pattern::FThenB => Pattern::BThenF,
+                Pattern::BThenF => Pattern::FThenB,
+            };
+            push("block pattern flip".into(), flipped, pool);
+            let mut regrouped = b.clone();
+            regrouped.group = if b.group == 1 { p.max(1) } else { 1 };
+            push(format!("block group {}", regrouped.group), regrouped, pool);
+            // Backward split + stash budget (memory-controllability).
+            let mut resplit = b.clone();
+            resplit.split_bw = !b.split_bw;
+            resplit.stash = StashRule::Warmup;
+            push("block split flip".into(), resplit, pool);
+            if b.split_bw {
+                let budget0 = opts.block_stash.unwrap_or((nmb as u32) / 2).max(1);
+                let steps: Vec<StashRule> = match b.stash {
+                    StashRule::Warmup => {
+                        vec![StashRule::Fixed(1), StashRule::Fixed(budget0)]
+                    }
+                    StashRule::Fixed(k) => vec![
+                        StashRule::Fixed(k + 1),
+                        StashRule::Fixed(k.saturating_sub(1).max(1)),
+                        StashRule::Warmup,
+                    ],
+                };
+                for stash in steps {
+                    let mut stashed = b.clone();
+                    stashed.stash = stash;
+                    push(format!("block stash {stash:?}"), stashed, pool);
+                }
+            }
+        }
+    }
+    out
+}
 
 /// log10 of C(n, k).
 pub fn log10_choose(n: u64, k: u64) -> f64 {
@@ -43,6 +222,22 @@ pub fn log10_schedules(nmb: u64, devices: u64) -> f64 {
     log10_factorial(3 * nmb) * devices as f64
 }
 
+/// Number of block-IR instances over `P` devices: 2 patterns × 2 split
+/// settings × `P` groups × warmup offsets in `[0, 2·nmb)` per device ×
+/// chunk lags in `[0, P)` per device × (`Warmup` + `nmb` fixed stash
+/// budgets).  Polynomially many parameters — the point of the IR: the
+/// structured slice of the doubly-exponential schedule space that the
+/// same hill climb that tunes partitions can walk.
+pub fn log10_blocks(nmb: u64, devices: u64) -> f64 {
+    let (p, n) = (devices as f64, nmb as f64);
+    (2.0f64).log10()
+        + (2.0f64).log10()
+        + p.log10()
+        + p * (2.0 * n).log10()
+        + p * p.log10()
+        + (n + 1.0).log10()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -67,5 +262,17 @@ mod tests {
         let scheds = log10_schedules(64, 8);
         assert!(parts < places && places < scheds);
         assert!(scheds > 100.0); // astronomically large
+    }
+
+    #[test]
+    fn block_space_is_a_tractable_slice() {
+        // The IR's reason to exist: its parameter space is tiny next
+        // to the raw schedule space it carves structure out of, yet
+        // big enough that enumeration stays off the table and local
+        // search is the right tool.
+        let blocks = log10_blocks(64, 8);
+        let scheds = log10_schedules(64, 8);
+        assert!(blocks < scheds / 10.0, "blocks {blocks} vs schedules {scheds}");
+        assert!(blocks > 6.0, "still far beyond exhaustive enumeration: {blocks}");
     }
 }

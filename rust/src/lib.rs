@@ -22,25 +22,25 @@
 //!   evaluation, and the retained reference oracle — DESIGN.md §3);
 //! - [`memory`]: the peak-memory model next to it — per-stage
 //!   footprints, per-device capacities, and the reference tracker
-//!   (DESIGN.md §5);
+//!   (DESIGN.md §6);
 //! - [`generator`]: §4.3 co-optimization loop — zero-alloc candidate
 //!   search over the fused evaluator, accelerated by analytic bound
 //!   pruning, score memoization and a persistent evaluation pool
 //!   (DESIGN.md §4);
 //! - [`executor`]: §4.4 instruction lowering + comm passes —
 //!   single-pass resumable deadlock repair, program well-formedness
-//!   validation (DESIGN.md §6);
+//!   validation (DESIGN.md §7);
 //! - [`cluster`]: simulated + real (threads & PJRT) clusters — the
 //!   timed SimCluster is a differential twin of [`perfmodel`]
-//!   (bitwise in matched-assumption mode, DESIGN.md §6); plus
+//!   (bitwise in matched-assumption mode, DESIGN.md §7); plus
 //!   deterministic fault/drift injection (`cluster::fault`);
 //! - [`adapt`]: the elastic re-planning loop — runtime monitor
 //!   (drift estimation, hysteresis, rollback), warm-started
-//!   re-generation, and the fault-scenario harness (DESIGN.md §7);
+//!   re-generation, and the fault-scenario harness (DESIGN.md §8);
 //! - [`service`]: planner-as-a-service — a long-running daemon with a
 //!   cross-request plan cache (exact + near-miss warm starts), a
 //!   shared evaluation pool, admission control and request
-//!   coalescing, fronted by `adaptis serve` (DESIGN.md §8);
+//!   coalescing, fronted by `adaptis serve` (DESIGN.md §9);
 //! - [`runtime`]: PJRT artifact loading/execution;
 //! - [`trainer`]: end-to-end pipeline training;
 //! - [`figures`]: one harness per paper table/figure.

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   figures <id|all> [--fast] [--out DIR] [--artifacts DIR]
-//!       regenerate a paper table/figure (see DESIGN.md §10)
+//!       regenerate a paper table/figure (see DESIGN.md §11)
 //!   generate --model <fam> --size <sz> --p N --nmb N [--t N] [--seq N]
 //!       run the Pipeline Generator and print the co-optimized pipeline
 //!   simulate --method <m> --model <fam> --size <sz> --p N --nmb N
@@ -391,7 +391,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     };
     install_sigterm();
     eprintln!(
-        "adaptis serve: {} search workers, {} eval threads, queue {}, plan cache {}, near-miss drift {} — one JSON request per stdin line (see DESIGN.md §8)",
+        "adaptis serve: {} search workers, {} eval threads, queue {}, plan cache {}, near-miss drift {} — one JSON request per stdin line (see DESIGN.md §9)",
         cfg.search_workers,
         service.pool_threads(),
         cfg.queue_capacity,

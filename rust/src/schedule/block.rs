@@ -1,0 +1,713 @@
+//! Schedule-synthesis block IR (ROADMAP item 1; "Pipeline Parallelism
+//! with Controllable Memory").
+//!
+//! A schedule is no longer four hand-written builders: it is one
+//! **repeated per-device building block** — an (F/B/W interleaving
+//! pattern, per-device offset, per-device chunk lag, lifespan/stash
+//! budget) parameterization — plus warmup/drain closures *derived*
+//! from the block.  A single [`BlockIr::compile`] lowers any instance
+//! to the existing [`Schedule`] type, so every downstream consumer
+//! (perfmodel kernels, collapse detector, memory tracker, executor
+//! lowering, service fingerprinting) is untouched at the type level
+//! but newly reachable by synthesized families.
+//!
+//! # IR grammar
+//!
+//! ```text
+//! block     := (pattern, split_bw, group, offsets[P], lag[P], stash)
+//! pattern   := FThenB               -- steady state emits F then B
+//!            | BThenF               -- steady state emits B then F (ZB)
+//! group     := g ≥ 1                -- consecutive micro-batches per
+//!                                      chunk visit (Megatron uses g=P)
+//! offsets   := per-device warmup depth (virtual micro-batch units)
+//! lag       := per-device chunk phase lag, in micro-batch rounds:
+//!              chunk c's F stream is delayed lag·c rounds, its B
+//!              stream lag·(v-1-c) rounds (the V-schedule lifespan)
+//! stash     := Warmup               -- W retired to hold in-flight ≤ offset
+//!            | Fixed(k)             -- W retired to hold in-flight ≤ k
+//! ```
+//!
+//! # Compile semantics
+//!
+//! Per device `d` owning chunks `c₀ < c₁ < … < c_{v-1}` (its stages in
+//! ascending order), the **unit streams** enumerate `total = nmb·v`
+//! virtual micro-batches: F-units walk micro-batch rounds in groups of
+//! `group` through chunks ascending, B-units through chunks
+//! *descending* (backward passes retire the deepest chunk first), with
+//! chunk `c`'s stream shifted by the device's `lag` as above — `lag =
+//! 0` reproduces the uniform interleave of the classic builders, while
+//! a positive lag phase-separates the chunks the way a V-schedule's
+//! up-and-down chains require.  The emission machine then derives
+//! warmup and drain from the block:
+//!
+//! 1. emit `eff[d]` warmup F-units (the *warmup closure*);
+//! 2. steady state: one B-unit per iteration, interleaved with the next
+//!    F-unit per `pattern`, retiring W-units per `stash` when
+//!    `split_bw`;
+//! 3. drain: leftover B-units (F exhausted) and all pending W-units
+//!    (the *drain closure*);
+//! 4. a **dependency-order repair pass** re-emits every device's
+//!    sequence in executable order (hoisting the earliest ready op of
+//!    the lowest device on a global stall), so *every* IR instance
+//!    compiles to a deadlock-free schedule.  The pass is a no-op
+//!    reorder for any already-feasible emission — in particular for
+//!    all four legacy builders, which stay bitwise — and is exactly
+//!    how the warmup closure of a V-schedule (chunk-0 F's first, the
+//!    lagged chunk staggered in) falls out of the block.
+//!
+//! `eff` is the **feasibility-clamped** offset vector: raised to the
+//! pattern's floor (a B-unit's colocated F-unit must precede it — the
+//! pull-forward invariant), capped at `total`, and made non-increasing
+//! along pipeline order (device of stage 0 first).  A downstream
+//! device that warms up *deeper* than its upstream neighbour starves
+//! it — the classic cross-device deadlock — so the clamp plus the
+//! repair pass is what makes every IR instance executable (pinned by
+//! the property grids in `tests/schedule_block.rs`).  A pull-forward
+//! guard in the steady loop additionally emits any not-yet-emitted
+//! colocated F before its B, so `Schedule::validate` holds for *every*
+//! compile.
+//!
+//! # The four legacy builders as IR instances
+//!
+//! | builder        | pattern | group | offsets[d]            | lag | stash  |
+//! |----------------|---------|-------|-----------------------|-----|--------|
+//! | GPipe          | FThenB  | 1     | `nmb`                 | 0   | Warmup |
+//! | S-1F1B         | FThenB  | 1     | `P-1-d`               | 0   | Warmup |
+//! | I-1F1B         | FThenB  | P     | `2(P-1-d) + (v-1)P`   | 0   | Warmup |
+//! | ZB-H1          | BThenF  | 1     | `P-d`                 | 0   | Warmup |
+//!
+//! Each reproduces the hand-written slot order **bitwise** (pinned by
+//! the differential suite against the retained legacy constructors in
+//! `tests/schedule_block.rs`).  [`zb_v`] and [`v_mem`] are the first
+//! *new* instances: V-shaped blocks over the wave placement, with
+//! [`v_mem`]'s lifespan knob trading bubbles for activation memory.
+
+use std::collections::VecDeque;
+
+use crate::placement::Placement;
+
+use super::{OpKind, Schedule, Slot};
+
+/// Steady-state interleaving pattern of the building block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    /// Emit the next F-unit, then the B-unit (1F1B-family blocks).
+    FThenB,
+    /// Emit the B-unit, then the next F-unit (ZB-family blocks).
+    BThenF,
+}
+
+/// W-retirement rule (the stash side of the parameterization; only
+/// meaningful when `split_bw`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StashRule {
+    /// Retire the oldest W once in-flight stashes exceed the device's
+    /// effective warmup offset (ZB-H1's rule: 1F1B-level memory).
+    Warmup,
+    /// Retire once in-flight stashes exceed a fixed budget of `k`
+    /// virtual micro-batches (the controllable-memory knob).
+    Fixed(u32),
+}
+
+/// A schedule as a repeated per-device building block; see module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockIr {
+    pub pattern: Pattern,
+    /// Lower B and W separately (ZB-style backward splitting).
+    pub split_bw: bool,
+    /// Consecutive micro-batches per chunk visit (≥ 1).
+    pub group: usize,
+    /// Requested per-device warmup depth, in virtual micro-batch
+    /// units.  [`BlockIr::compile`] clamps to a feasible `eff` vector.
+    pub offsets: Vec<usize>,
+    /// Per-device chunk phase lag in micro-batch rounds (0 for the
+    /// classic uniform interleave; ~`P-1-d` for V-schedules).
+    pub lag: Vec<usize>,
+    pub stash: StashRule,
+    /// Executor overlap hint, copied into the compiled [`Schedule`].
+    pub overlap_aware: bool,
+}
+
+/// What [`BlockIr::compile_with_stats`] actually emitted — the declared
+/// budgets the property tests hold the memory tracker against.
+#[derive(Clone, Debug, Default)]
+pub struct CompileStats {
+    /// Feasibility-clamped warmup offsets (per device).
+    pub eff_offsets: Vec<usize>,
+    /// Peak F-emitted − B-emitted per device: virtual micro-batches
+    /// whose activation stash is live simultaneously.
+    pub max_inflight: Vec<usize>,
+    /// Peak B-emitted − W-emitted per device (0 unless `split_bw`):
+    /// W-retained slices held simultaneously.
+    pub max_pending_w: Vec<usize>,
+}
+
+impl BlockIr {
+    /// Compile against a placement (chunks per device must be uniform).
+    pub fn compile(&self, placement: &Placement, nmb: usize) -> Result<Schedule, String> {
+        self.compile_with_stats(placement, nmb).map(|(s, _)| s)
+    }
+
+    /// [`BlockIr::compile`] plus the emission statistics.
+    pub fn compile_with_stats(
+        &self,
+        placement: &Placement,
+        nmb: usize,
+    ) -> Result<(Schedule, CompileStats), String> {
+        self.compile_on(&placement.device_of, placement.p, nmb)
+    }
+
+    /// Compile from a raw stage→device map (what a pool worker holds:
+    /// the [`crate::perfmodel::StageTable`] carries `device`, not a
+    /// [`Placement`]).
+    pub fn compile_on(
+        &self,
+        device_of: &[usize],
+        p: usize,
+        nmb: usize,
+    ) -> Result<(Schedule, CompileStats), String> {
+        if nmb == 0 || p == 0 {
+            return Err("empty pipeline".into());
+        }
+        if self.group == 0 {
+            return Err("group must be ≥ 1".into());
+        }
+        if self.offsets.len() != p {
+            return Err(format!("{} offsets for {} devices", self.offsets.len(), p));
+        }
+        if self.lag.len() != p {
+            return Err(format!("{} lags for {} devices", self.lag.len(), p));
+        }
+        // Chunks per device, ascending stage order.
+        let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for (s, &d) in device_of.iter().enumerate() {
+            if d >= p {
+                return Err(format!("stage {s} on device {d} ≥ p={p}"));
+            }
+            chunks[d].push(s);
+        }
+        let v = chunks[0].len();
+        if v == 0 || chunks.iter().any(|c| c.len() != v) {
+            return Err("block IR needs a uniform chunk count per device".into());
+        }
+        let total = nmb * v;
+
+        // Feasibility clamp: floor (pull-forward invariant for B-unit
+        // 0), cap at total, then non-increasing along pipeline order.
+        let g0 = self.group.min(nmb);
+        let floor = ((v - 1) * g0
+            + match self.pattern {
+                Pattern::FThenB => 0,
+                Pattern::BThenF => 1,
+            })
+        .min(total);
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_by_key(|&d| chunks[d][0]);
+        let mut eff = vec![0usize; p];
+        let mut prev = total;
+        for &d in &order {
+            let e = self.offsets[d].max(floor).min(total).min(prev);
+            eff[d] = e;
+            prev = e;
+        }
+
+        // Emission machine (warmup / steady / drain closures).
+        // Emit the next F-unit on `chunk`.
+        fn emit_f(f_units: &[(usize, usize)], chunk: &[usize], fi: &mut usize, out: &mut Vec<Slot>) {
+            let (m, c) = f_units[*fi];
+            out.push(Slot::new(OpKind::F, m, chunk[c]));
+            *fi += 1;
+        }
+        let mut per_device: Vec<Vec<Slot>> = Vec::with_capacity(p);
+        for d in 0..p {
+            let chunk = &chunks[d];
+            let lag = self.lag[d];
+            // Per-device unit streams: micro-batch rounds in groups of
+            // `group`, F through chunks ascending (chunk c delayed
+            // lag·c rounds), B through chunks descending (chunk c
+            // delayed lag·(v-1-c) rounds).  lag = 0 is the shared
+            // uniform interleave of the classic builders; with group =
+            // P and nmb % P == 0 it is exactly Megatron's virtual
+            // micro-batch enumeration.
+            let rmax = nmb + lag * (v - 1);
+            let mut f_units: Vec<(usize, usize)> = Vec::with_capacity(total);
+            let mut b_units: Vec<(usize, usize)> = Vec::with_capacity(total);
+            let mut base = 0usize;
+            while base < rmax {
+                let hi = (base + self.group).min(rmax);
+                for c in 0..v {
+                    for r in base..hi {
+                        let delay = lag * c;
+                        if r >= delay && r - delay < nmb {
+                            f_units.push((r - delay, c));
+                        }
+                    }
+                }
+                for c in (0..v).rev() {
+                    for r in base..hi {
+                        let delay = lag * (v - 1 - c);
+                        if r >= delay && r - delay < nmb {
+                            b_units.push((r - delay, c));
+                        }
+                    }
+                }
+                base = hi;
+            }
+            debug_assert_eq!(f_units.len(), total);
+            debug_assert_eq!(b_units.len(), total);
+            // F-unit index of each (mb, chunk) — the pull-forward table.
+            let mut fpos = vec![0usize; total];
+            for (i, &(m, c)) in f_units.iter().enumerate() {
+                fpos[m * v + c] = i;
+            }
+
+            let cap = if self.split_bw { 3 * total } else { 2 * total };
+            let mut out: Vec<Slot> = Vec::with_capacity(cap);
+            let budget = match self.stash {
+                StashRule::Warmup => eff[d],
+                StashRule::Fixed(k) => k as usize,
+            };
+            let mut fi = 0usize;
+            let mut wq: VecDeque<(usize, usize)> = VecDeque::new();
+            for _ in 0..eff[d] {
+                emit_f(&f_units, chunk, &mut fi, &mut out);
+            }
+            for (bi, &(bm, bc)) in b_units.iter().enumerate() {
+                let need = fpos[bm * v + bc];
+                match self.pattern {
+                    Pattern::FThenB => {
+                        if fi < total {
+                            emit_f(&f_units, chunk, &mut fi, &mut out);
+                        }
+                        // Pull-forward guard: keeps F(mb,s) ahead of
+                        // B(mb,s) on-device whatever the clamp and lag
+                        // produced.
+                        while fi <= need {
+                            emit_f(&f_units, chunk, &mut fi, &mut out);
+                        }
+                        out.push(Slot::new(OpKind::B, bm, chunk[bc]));
+                        if self.split_bw {
+                            wq.push_back((bm, bc));
+                            if fi >= total || fi - bi - 1 >= budget {
+                                let (wm, wc) = wq.pop_front().expect("just pushed");
+                                out.push(Slot::new(OpKind::W, wm, chunk[wc]));
+                            }
+                        }
+                    }
+                    Pattern::BThenF => {
+                        while fi <= need {
+                            emit_f(&f_units, chunk, &mut fi, &mut out);
+                        }
+                        out.push(Slot::new(OpKind::B, bm, chunk[bc]));
+                        if self.split_bw {
+                            wq.push_back((bm, bc));
+                        }
+                        if fi < total {
+                            emit_f(&f_units, chunk, &mut fi, &mut out);
+                            // Steady state: keep in-flight stashes ≤
+                            // budget by retiring the oldest W before
+                            // admitting more F's (ZB-H1's rule when
+                            // budget = warmup).
+                            if self.split_bw && fi - bi - 1 >= budget {
+                                let (wm, wc) = wq.pop_front().expect("pending W");
+                                out.push(Slot::new(OpKind::W, wm, chunk[wc]));
+                            }
+                        } else if self.split_bw {
+                            // Drain: one W between consecutive B's
+                            // fills the bubble ZB targets.
+                            if let Some((wm, wc)) = wq.pop_front() {
+                                out.push(Slot::new(OpKind::W, wm, chunk[wc]));
+                            }
+                        }
+                    }
+                }
+            }
+            for (wm, wc) in wq {
+                out.push(Slot::new(OpKind::W, wm, chunk[wc]));
+            }
+            per_device.push(out);
+        }
+
+        let per_device = repair(per_device, device_of, nmb)?;
+
+        // Emission statistics from the final (repaired) order.
+        let mut stats = CompileStats {
+            eff_offsets: eff,
+            max_inflight: vec![0; p],
+            max_pending_w: vec![0; p],
+        };
+        for d in 0..p {
+            let (mut fc, mut bc, mut wc) = (0usize, 0usize, 0usize);
+            for sl in &per_device[d] {
+                match sl.op {
+                    OpKind::F => {
+                        fc += 1;
+                        stats.max_inflight[d] = stats.max_inflight[d].max(fc - bc);
+                    }
+                    OpKind::B => {
+                        bc += 1;
+                        stats.max_pending_w[d] = stats.max_pending_w[d].max(bc - wc);
+                    }
+                    OpKind::W => wc += 1,
+                }
+            }
+        }
+        let schedule = Schedule {
+            p,
+            nmb,
+            n_stages: p * v,
+            split_bw: self.split_bw,
+            overlap_aware: self.overlap_aware,
+            per_device,
+        };
+        Ok((schedule, stats))
+    }
+
+    /// Compact human-readable family label (bench/service reporting).
+    pub fn family(&self) -> String {
+        let lmax = self.lag.iter().copied().max().unwrap_or(0);
+        format!(
+            "{}{}g{}{}{}",
+            match self.pattern {
+                Pattern::FThenB => "fb",
+                Pattern::BThenF => "bf",
+            },
+            if self.split_bw { "+w" } else { "" },
+            self.group,
+            if lmax > 0 { format!("v{lmax}") } else { String::new() },
+            match self.stash {
+                StashRule::Warmup => String::new(),
+                StashRule::Fixed(k) => format!("s{k}"),
+            }
+        )
+    }
+
+    /// Structural identity bits for `CandKey`/fingerprints: everything
+    /// [`BlockIr::compile`] reads, packed into `u32`s.  Injective: the
+    /// stash rule gets a discriminant word of its own, so no `Fixed`
+    /// budget (not even `u32::MAX`) can alias `Warmup`.
+    pub fn key_bits(&self) -> Vec<u32> {
+        let mut bits = Vec::with_capacity(5 + 2 * self.offsets.len());
+        bits.push(match self.pattern {
+            Pattern::FThenB => 0,
+            Pattern::BThenF => 1,
+        });
+        bits.push(u32::from(self.split_bw) | u32::from(self.overlap_aware) << 1);
+        bits.push(self.group as u32);
+        match self.stash {
+            StashRule::Warmup => bits.extend([0, 0]),
+            StashRule::Fixed(k) => bits.extend([1, k]),
+        }
+        bits.extend(self.offsets.iter().map(|&o| o as u32));
+        bits.extend(self.lag.iter().map(|&l| l as u32));
+        bits
+    }
+}
+
+/// Dependency-order re-emission: execute each device's queue head
+/// whenever its dependencies are met; on a global stall, hoist the
+/// earliest ready op of the lowest-indexed device.  A no-op reorder
+/// for feasible inputs (head execution never stalls), and guaranteed
+/// to terminate otherwise: a dependency-minimal unexecuted op is
+/// always ready wherever it sits.
+fn repair(
+    per_device: Vec<Vec<Slot>>,
+    device_of: &[usize],
+    nmb: usize,
+) -> Result<Vec<Vec<Slot>>, String> {
+    let s_n = device_of.len();
+    let p = per_device.len();
+    let idx_of = |op: OpKind, mb: u32, s: u32| -> usize {
+        let kind = match op {
+            OpKind::F => 0usize,
+            OpKind::B => 1,
+            OpKind::W => 2,
+        };
+        (kind * s_n + s as usize) * nmb + mb as usize
+    };
+    let mut done = vec![false; 3 * s_n * nmb];
+    let ready = |done: &[bool], sl: &Slot| -> bool {
+        match sl.op {
+            OpKind::F => sl.stage == 0 || done[idx_of(OpKind::F, sl.mb, sl.stage - 1)],
+            OpKind::B => {
+                done[idx_of(OpKind::F, sl.mb, sl.stage)]
+                    && (sl.stage as usize == s_n - 1
+                        || done[idx_of(OpKind::B, sl.mb, sl.stage + 1)])
+            }
+            OpKind::W => done[idx_of(OpKind::B, sl.mb, sl.stage)],
+        }
+    };
+    let mut remaining: usize = per_device.iter().map(Vec::len).sum();
+    let mut queues: Vec<VecDeque<Slot>> = per_device.into_iter().map(VecDeque::from).collect();
+    let mut out: Vec<Vec<Slot>> = queues.iter().map(|q| Vec::with_capacity(q.len())).collect();
+    while remaining > 0 {
+        let mut progress = false;
+        for d in 0..p {
+            while let Some(sl) = queues[d].front().copied() {
+                if !ready(&done, &sl) {
+                    break;
+                }
+                queues[d].pop_front();
+                done[idx_of(sl.op, sl.mb, sl.stage)] = true;
+                out[d].push(sl);
+                remaining -= 1;
+                progress = true;
+            }
+        }
+        if !progress {
+            let mut hoisted = false;
+            'hoist: for d in 0..p {
+                for i in 0..queues[d].len() {
+                    let sl = queues[d][i];
+                    if ready(&done, &sl) {
+                        queues[d].remove(i);
+                        done[idx_of(sl.op, sl.mb, sl.stage)] = true;
+                        out[d].push(sl);
+                        remaining -= 1;
+                        hoisted = true;
+                        break 'hoist;
+                    }
+                }
+            }
+            if !hoisted {
+                return Err("block IR repair: dependency cycle across devices".into());
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---- The four legacy builders as IR instances --------------------------
+
+/// GPipe as a block: all-warmup FThenB.
+pub fn gpipe_block(p: usize, nmb: usize) -> BlockIr {
+    BlockIr {
+        pattern: Pattern::FThenB,
+        split_bw: false,
+        group: 1,
+        offsets: vec![nmb; p],
+        lag: vec![0; p],
+        stash: StashRule::Warmup,
+        overlap_aware: false,
+    }
+}
+
+/// S-1F1B as a block: warmup `P-1-d`, strict 1F1B steady state.
+pub fn s1f1b_block(p: usize, nmb: usize) -> BlockIr {
+    let _ = nmb;
+    BlockIr {
+        pattern: Pattern::FThenB,
+        split_bw: false,
+        group: 1,
+        offsets: (0..p).map(|d| p - 1 - d).collect(),
+        lag: vec![0; p],
+        stash: StashRule::Warmup,
+        overlap_aware: false,
+    }
+}
+
+/// I-1F1B as a block: Megatron's interleaved schedule over
+/// `interleaved(p, v)` — group `P`, warmup `2(P-1-d) + (v-1)P`.
+pub fn i1f1b_block(p: usize, v: usize, nmb: usize) -> BlockIr {
+    let _ = nmb;
+    BlockIr {
+        pattern: Pattern::FThenB,
+        split_bw: false,
+        group: p,
+        offsets: (0..p).map(|d| (p - 1 - d) * 2 + (v - 1) * p).collect(),
+        lag: vec![0; p],
+        stash: StashRule::Warmup,
+        overlap_aware: false,
+    }
+}
+
+/// ZB-H1 as a block: BThenF with split backward, warmup `P-d`, W
+/// retired by the warmup rule (1F1B-level activation memory).
+pub fn zb_h1_block(p: usize, nmb: usize) -> BlockIr {
+    let _ = nmb;
+    BlockIr {
+        pattern: Pattern::BThenF,
+        split_bw: true,
+        group: 1,
+        offsets: (0..p).map(|d| p - d).collect(),
+        lag: vec![0; p],
+        stash: StashRule::Warmup,
+        overlap_aware: false,
+    }
+}
+
+// ---- New families (first instances beyond the legacy four) -------------
+
+/// ZB-V (controllable-memory paper): a V-shaped block over the
+/// [`crate::placement::wave`]`(p, 2)` placement — device `d` owns
+/// stages `d` and `2p-1-d`, so the deepest stage's F→B turnaround is
+/// device-local on the middle device.  A flat `2P-1` warmup with a
+/// `P-1-d` chunk lag phase-separates the down-going F chain from the
+/// up-coming one; split backward fills the ramp with W's.  Beats
+/// S-1F1B across the unit-cost grid (pinned in
+/// `tests/schedule_block.rs`).
+pub fn zb_v(p: usize, nmb: usize) -> BlockIr {
+    let _ = nmb;
+    BlockIr {
+        pattern: Pattern::FThenB,
+        split_bw: true,
+        group: 1,
+        offsets: vec![2 * p - 1; p],
+        lag: (0..p).map(|d| p - 1 - d).collect(),
+        stash: StashRule::Warmup,
+        overlap_aware: false,
+    }
+}
+
+/// Memory-controllable V-schedule: [`zb_v`] with warmup depth and
+/// chunk lag capped at `lifespan` virtual micro-batches — the paper's
+/// lifespan knob, trading bubbles for activation memory.  `lifespan ≥
+/// 2P-1` recovers [`zb_v`].
+pub fn v_mem(p: usize, nmb: usize, lifespan: usize) -> BlockIr {
+    let _ = nmb;
+    BlockIr {
+        pattern: Pattern::FThenB,
+        split_bw: true,
+        group: 1,
+        offsets: vec![(2 * p - 1).min(lifespan.max(1)); p],
+        lag: (0..p).map(|d| (p - 1 - d).min(lifespan)).collect(),
+        stash: StashRule::Warmup,
+        overlap_aware: false,
+    }
+}
+
+/// The placement the V-shaped families compile against.
+pub fn v_placement(p: usize) -> Placement {
+    crate::placement::wave(p, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{interleaved, sequential, wave};
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let ir = s1f1b_block(4, 8);
+        assert!(ir.compile(&sequential(4), 0).is_err());
+        let mut bad = ir.clone();
+        bad.group = 0;
+        assert!(bad.compile(&sequential(4), 8).is_err());
+        let mut bad = ir.clone();
+        bad.offsets.pop();
+        assert!(bad.compile(&sequential(4), 8).is_err());
+        let mut bad = ir.clone();
+        bad.lag.pop();
+        assert!(bad.compile(&sequential(4), 8).is_err());
+        // Irregular chunk counts (2 stages on device 0, 1 on device 1).
+        let plac = Placement { p: 2, device_of: vec![0, 0, 1] };
+        assert!(s1f1b_block(2, 4).compile(&plac, 4).is_err());
+    }
+
+    #[test]
+    fn compile_is_always_structurally_valid() {
+        // Even absurd offsets (huge, zero, increasing) and lags compile
+        // to a Schedule that passes validate() — clamp + pull-forward +
+        // repair.
+        for p in [1usize, 2, 4] {
+            for nmb in [1usize, 3, 8] {
+                for offs in [vec![0; p], vec![1000; p], (0..p).collect::<Vec<_>>()] {
+                    for lag in [vec![0; p], vec![3; p], (0..p).rev().collect::<Vec<_>>()] {
+                        for (pattern, split) in [(Pattern::FThenB, false), (Pattern::BThenF, true)]
+                        {
+                            let ir = BlockIr {
+                                pattern,
+                                split_bw: split,
+                                group: 1,
+                                offsets: offs.clone(),
+                                lag: lag.clone(),
+                                stash: StashRule::Warmup,
+                                overlap_aware: false,
+                            };
+                            let pl = sequential(p);
+                            let sch = ir.compile(&pl, nmb).unwrap();
+                            sch.validate(&pl).unwrap_or_else(|e| {
+                                panic!("p={p} nmb={nmb} offs={offs:?} lag={lag:?}: {e}")
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_is_non_increasing_along_pipeline_order() {
+        let ir = BlockIr {
+            pattern: Pattern::FThenB,
+            split_bw: false,
+            group: 1,
+            offsets: vec![0, 5, 2, 7],
+            lag: vec![0; 4],
+            stash: StashRule::Warmup,
+            overlap_aware: false,
+        };
+        let (_, stats) = ir.compile_with_stats(&sequential(4), 8).unwrap();
+        for w in stats.eff_offsets.windows(2) {
+            assert!(w[1] <= w[0], "clamped offsets must not increase: {stats:?}");
+        }
+    }
+
+    #[test]
+    fn interleaved_and_wave_chunking_compiles() {
+        for p in [2usize, 4] {
+            for v in [2usize, 3] {
+                let ir = i1f1b_block(p, v, p);
+                for pl in [interleaved(p, v), wave(p, v)] {
+                    let sch = ir.compile(&pl, p).unwrap();
+                    sch.validate(&pl).unwrap();
+                    assert_eq!(sch.n_stages, p * v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v_family_shapes() {
+        let (p, nmb) = (4usize, 12usize);
+        let pl = v_placement(p);
+        let sch = zb_v(p, nmb).compile(&pl, nmb).unwrap();
+        sch.validate(&pl).unwrap();
+        assert!(sch.split_bw);
+        assert_eq!(sch.n_stages, 2 * p);
+        // Lifespan knob: a tighter budget keeps fewer virtual
+        // micro-batches in flight on the first device.
+        let (_, tight) = v_mem(p, nmb, 1).compile_with_stats(&pl, nmb).unwrap();
+        let (_, loose) = v_mem(p, nmb, 2 * p).compile_with_stats(&pl, nmb).unwrap();
+        assert!(
+            tight.max_inflight[0] < loose.max_inflight[0],
+            "tight={tight:?} loose={loose:?}"
+        );
+    }
+
+    #[test]
+    fn family_labels_are_distinct() {
+        let a = s1f1b_block(4, 8).family();
+        let b = zb_h1_block(4, 8).family();
+        let c = zb_v(4, 8).family();
+        assert!(a != b && b != c && a != c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn key_bits_distinguish_every_parameter() {
+        let base = s1f1b_block(4, 8);
+        let bits = base.key_bits();
+        for other in [
+            BlockIr { pattern: Pattern::BThenF, ..base.clone() },
+            BlockIr { split_bw: true, ..base.clone() },
+            BlockIr { group: 4, ..base.clone() },
+            BlockIr { stash: StashRule::Fixed(3), ..base.clone() },
+            BlockIr { stash: StashRule::Fixed(u32::MAX), ..base.clone() },
+            BlockIr { offsets: vec![3, 2, 1, 1], ..base.clone() },
+            BlockIr { lag: vec![1, 1, 0, 0], ..base.clone() },
+            BlockIr { overlap_aware: true, ..base.clone() },
+        ] {
+            assert_ne!(bits, other.key_bits(), "{other:?}");
+        }
+    }
+}

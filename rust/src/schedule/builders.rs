@@ -1,60 +1,38 @@
 //! Fixed schedule builders — the baselines from the paper's evaluation
 //! (§5.1): GPipe, S-1F1B, interleaved I-1F1B, and ZB-H1.  These also
 //! seed the Pipeline Generator's search (§4.3).
+//!
+//! Since the schedule-synthesis refactor each builder is a thin
+//! [`super::block::BlockIr`] instance compiled through the one emission
+//! machine; the hand-written slot orders are reproduced **bitwise**
+//! (pinned by the differential suite in `tests/schedule_block.rs`,
+//! which retains the legacy constructors).
 
-use super::{OpKind, Schedule, Slot};
+use super::block::{gpipe_block, i1f1b_block, s1f1b_block, zb_h1_block};
+use super::Schedule;
+
+/// Sequential stage→device map (stage s on device s).
+fn seq_device_of(p: usize) -> Vec<usize> {
+    (0..p).collect()
+}
 
 /// GPipe: all forwards, then all backwards (fused B+W).
 /// Sequential placement, S == P.
 pub fn gpipe(p: usize, nmb: usize) -> Schedule {
-    let per_device = (0..p)
-        .map(|d| {
-            let mut v: Vec<Slot> =
-                (0..nmb).map(|mb| Slot::new(OpKind::F, mb, d)).collect();
-            v.extend((0..nmb).map(|mb| Slot::new(OpKind::B, mb, d)));
-            v
-        })
-        .collect();
-    Schedule {
-        p,
-        nmb,
-        n_stages: p,
-        split_bw: false,
-        overlap_aware: false,
-        per_device,
-    }
+    gpipe_block(p, nmb)
+        .compile_on(&seq_device_of(p), p, nmb)
+        .expect("gpipe block is well-formed")
+        .0
 }
 
 /// S-1F1B (Megatron / DAPPLE): warmup `P-1-rank` forwards, then strict
 /// 1F1B steady state, then drain.  Fused backward, sequential
 /// placement, S == P.
 pub fn one_f_one_b(p: usize, nmb: usize) -> Schedule {
-    let per_device = (0..p)
-        .map(|rank| {
-            let warmup = (p - 1 - rank).min(nmb);
-            let mut v = Vec::with_capacity(2 * nmb);
-            for mb in 0..warmup {
-                v.push(Slot::new(OpKind::F, mb, rank));
-            }
-            let mut fi = warmup;
-            for bi in 0..nmb {
-                if fi < nmb {
-                    v.push(Slot::new(OpKind::F, fi, rank));
-                    fi += 1;
-                }
-                v.push(Slot::new(OpKind::B, bi, rank));
-            }
-            v
-        })
-        .collect();
-    Schedule {
-        p,
-        nmb,
-        n_stages: p,
-        split_bw: false,
-        overlap_aware: false,
-        per_device,
-    }
+    s1f1b_block(p, nmb)
+        .compile_on(&seq_device_of(p), p, nmb)
+        .expect("s1f1b block is well-formed")
+        .0
 }
 
 /// I-1F1B (Megatron interleaved virtual-pipeline schedule) over an
@@ -63,105 +41,28 @@ pub fn one_f_one_b(p: usize, nmb: usize) -> Schedule {
 ///
 /// Virtual micro-batch `k` on device `rank` maps to:
 /// `chunk = (k % (p·v)) / p`, `mb = (k / (p·v))·p + k % p`, and the
-/// stage is `chunk·p + rank`.  Backwards walk chunks in reverse.
+/// stage is `chunk·p + rank` — the block IR's group-`P` unit order.
+/// The general warmup depth `2(P-1-rank) + (v-1)P` holds for every
+/// `nmb % p == 0` (no Megatron `nmb == p` all-warmup special case;
+/// pinned by `interleaved_nmb_eq_p_interleaves_instead_of_all_warmup`).
 pub fn interleaved_1f1b(p: usize, v: usize, nmb: usize) -> Schedule {
     assert!(nmb % p == 0, "interleaved 1F1B requires nmb % p == 0");
-    let total = nmb * v;
-    let f_slot = |rank: usize, k: usize| {
-        let within = k % (p * v);
-        let chunk = within / p;
-        let mb = (k / (p * v)) * p + within % p;
-        Slot::new(OpKind::F, mb, chunk * p + rank)
-    };
-    let b_slot = |rank: usize, k: usize| {
-        let within = k % (p * v);
-        let chunk = v - 1 - within / p;
-        let mb = (k / (p * v)) * p + within % p;
-        Slot::new(OpKind::B, mb, chunk * p + rank)
-    };
-    let per_device = (0..p)
-        .map(|rank| {
-            // Megatron-LM forces all-warmup when nmb == p, papering
-            // over its warmup depth; the general formula is valid and
-            // deadlock-free for every nmb % p == 0 (pinned by
-            // `builders_valid_and_deadlock_free_on_grid` over a wide
-            // (p, v, nmb) grid) and stashes strictly fewer in-flight
-            // activations, so the special case is gone.
-            let warmup = ((p - rank - 1) * 2 + (v - 1) * p).min(total);
-            let mut sched = Vec::with_capacity(2 * total);
-            for k in 0..warmup {
-                sched.push(f_slot(rank, k));
-            }
-            for k in warmup..total {
-                sched.push(f_slot(rank, k));
-                sched.push(b_slot(rank, k - warmup));
-            }
-            for k in (total - warmup)..total {
-                sched.push(b_slot(rank, k));
-            }
-            sched
-        })
-        .collect();
-    Schedule {
-        p,
-        nmb,
-        n_stages: p * v,
-        split_bw: false,
-        overlap_aware: false,
-        per_device,
-    }
+    let device_of = crate::placement::interleaved(p, v).device_of;
+    i1f1b_block(p, v, nmb)
+        .compile_on(&device_of, p, nmb)
+        .expect("i1f1b block is well-formed")
+        .0
 }
 
 /// ZB-H1 (Qi et al. 2024): 1F1B with the backward split into B and W;
 /// W is delayed to fill the drain bubble while keeping 1F1B-level
-/// activation memory (the in-flight rule below).  Sequential
+/// activation memory (the block's warmup stash rule).  Sequential
 /// placement, S == P.
 pub fn zb_h1(p: usize, nmb: usize) -> Schedule {
-    let per_device = (0..p)
-        .map(|rank| {
-            let warmup = (p - rank).min(nmb);
-            let mut v = Vec::with_capacity(3 * nmb);
-            for mb in 0..warmup {
-                v.push(Slot::new(OpKind::F, mb, rank));
-            }
-            let mut fi = warmup;
-            let mut pending_w: std::collections::VecDeque<usize> =
-                std::collections::VecDeque::new();
-            for bi in 0..nmb {
-                v.push(Slot::new(OpKind::B, bi, rank));
-                pending_w.push_back(bi);
-                if fi < nmb {
-                    v.push(Slot::new(OpKind::F, fi, rank));
-                    fi += 1;
-                    // Steady state: keep in-flight stashes ≤ warmup by
-                    // retiring the oldest W before admitting more F's.
-                    if fi - (bi + 1 - pending_w.len()) - pending_w.len() >= warmup {
-                        if let Some(w) = pending_w.pop_front() {
-                            v.push(Slot::new(OpKind::W, w, rank));
-                        }
-                    }
-                } else {
-                    // Drain: one W between consecutive B's fills the
-                    // bubble ZB-H1 targets.
-                    if let Some(w) = pending_w.pop_front() {
-                        v.push(Slot::new(OpKind::W, w, rank));
-                    }
-                }
-            }
-            for w in pending_w {
-                v.push(Slot::new(OpKind::W, w, rank));
-            }
-            v
-        })
-        .collect();
-    Schedule {
-        p,
-        nmb,
-        n_stages: p,
-        split_bw: true,
-        overlap_aware: false,
-        per_device,
-    }
+    zb_h1_block(p, nmb)
+        .compile_on(&seq_device_of(p), p, nmb)
+        .expect("zb-h1 block is well-formed")
+        .0
 }
 
 #[cfg(test)]
@@ -172,6 +73,7 @@ mod tests {
     use crate::perfmodel::simulate;
     use crate::placement::{interleaved, sequential};
     use crate::profile::ProfiledData;
+    use crate::schedule::OpKind;
 
     /// One synthetic layer per stage — builder grids test *structure*
     /// (validity, deadlock-freedom), not magnitudes.

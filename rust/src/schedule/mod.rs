@@ -1,10 +1,13 @@
 //! Workload scheduling (paper §2.4): the schedule IR — per-device
 //! ordered lists of F/B/W slots — plus structural validity checking.
 //!
-//! Sub-modules: [`builders`] (GPipe, S-1F1B, I-1F1B, ZB-H1 seeds) and
-//! [`greedy`] (the adaptive event-driven list scheduler that AdaPtis
+//! Sub-modules: [`block`] (the schedule-synthesis block IR every
+//! family compiles through), [`builders`] (GPipe, S-1F1B, I-1F1B,
+//! ZB-H1 seeds — thin [`block::BlockIr`] instances) and [`greedy`]
+//! (the adaptive event-driven list scheduler that AdaPtis
 //! workload-scheduling tuning drives).
 
+pub mod block;
 pub mod builders;
 pub mod greedy;
 

@@ -1,4 +1,4 @@
-//! The cross-request plan cache (DESIGN.md §8).
+//! The cross-request plan cache (DESIGN.md §9).
 //!
 //! [`PlanCache`] maps exact request identities ([`ReqKey`]) to
 //! completed search outcomes, with the same bounded-FIFO discipline as

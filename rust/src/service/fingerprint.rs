@@ -1,4 +1,4 @@
-//! Whole-request identity and the near-miss metric (DESIGN.md §8).
+//! Whole-request identity and the near-miss metric (DESIGN.md §9).
 //!
 //! The per-candidate transposition table keys on `CandKey` and scopes
 //! entries to one evaluation context via `search_fingerprint`
@@ -54,6 +54,11 @@ pub struct ReqKey {
     /// a deadlined request must not be answered from (or coalesced
     /// with) an un-deadlined one whose search it could not afford.
     deadline_bits: u64,
+    /// Block-search knob: `0` off, `1` on without a stash hint,
+    /// `2 + k` on with stash budget `k`.  Part of the exact identity —
+    /// requests differing only in the block knob search different
+    /// spaces and must never coalesce or share a cached plan.
+    block_bits: u64,
 }
 
 impl ReqKey {
@@ -78,6 +83,7 @@ impl ReqKey {
             max_iters: req.max_iters as u64,
             budget_bits: req.budget_s.map_or(u64::MAX, f64::to_bits),
             deadline_bits: req.deadline_s.map_or(u64::MAX, f64::to_bits),
+            block_bits: block_bits_of(req.block_search, req.block_stash),
         }
     }
 
@@ -114,6 +120,7 @@ impl ReqKey {
         mix(self.max_iters);
         mix(self.budget_bits);
         mix(self.deadline_bits);
+        mix(self.block_bits);
         h
     }
 
@@ -150,6 +157,7 @@ impl ReqKey {
         put_u64(&mut b, self.max_iters);
         put_u64(&mut b, self.budget_bits);
         put_u64(&mut b, self.deadline_bits);
+        put_u64(&mut b, self.block_bits);
         b
     }
 
@@ -196,6 +204,7 @@ impl ReqKey {
         let max_iters = r.u64()?;
         let budget_bits = r.u64()?;
         let deadline_bits = r.u64()?;
+        let block_bits = r.u64()?;
         if nmb == 0 || !r.done() {
             return None;
         }
@@ -209,6 +218,7 @@ impl ReqKey {
             max_iters,
             budget_bits,
             deadline_bits,
+            block_bits,
         })
     }
 
@@ -250,7 +260,22 @@ impl ReqKey {
             max_iters: self.max_iters as usize,
             deadline_s: (self.deadline_bits != u64::MAX)
                 .then(|| f64::from_bits(self.deadline_bits)),
+            block_search: self.block_bits >= 1,
+            block_stash: self.block_bits.checked_sub(2).map(|k| k as u32),
         }
+    }
+}
+
+/// Encode the block knob pair into one identity word: `0` off, `1` on
+/// without a stash hint, `2 + k` on with stash budget `k`.  Injective
+/// over the meaningful settings (`block_stash` is ignored by the
+/// generator when `block_search` is off, and `k` is well below the
+/// `u64` range).
+fn block_bits_of(block_search: bool, block_stash: Option<u32>) -> u64 {
+    match (block_search, block_stash) {
+        (false, _) => 0,
+        (true, None) => 1,
+        (true, Some(k)) => 2 + k as u64,
     }
 }
 
@@ -341,6 +366,11 @@ pub struct Sketch {
     /// carries none) so healthy and explicitly-rated requests stay
     /// comparable.
     pub rates: Vec<f64>,
+    /// Block-knob word (same encoding as the exact key): requests in
+    /// different block families search different plan spaces, so a
+    /// cached plan from one is a structurally wrong seed for the other
+    /// — never a near miss.
+    pub block: u64,
 }
 
 impl Sketch {
@@ -367,6 +397,7 @@ impl Sketch {
             link: [req.profile.link_latency, req.profile.link_bw, req.profile.mem_capacity],
             caps: req.cluster.devices.iter().map(|d| d.mem_bytes).collect(),
             rates,
+            block: block_bits_of(req.block_search, req.block_stash),
         }
     }
 }
@@ -392,6 +423,9 @@ fn rel(x: f64, y: f64) -> f64 {
 pub fn near_miss_distance(a: &Sketch, b: &Sketch) -> Option<f64> {
     if a.kinds != b.kinds || a.p != b.p || a.rates.len() != b.rates.len() {
         return None;
+    }
+    if a.block != b.block {
+        return None; // different block families: structurally incompatible
     }
     debug_assert_eq!(a.costs.len(), b.costs.len());
     debug_assert_eq!(a.caps.len(), b.caps.len());
@@ -452,6 +486,52 @@ mod tests {
         bytes[4] = 250; // unknown layer-kind tag
         assert!(ReqKey::from_bytes(&bytes).is_none(), "unknown tag");
         assert!(ReqKey::from_bytes(&[]).is_none(), "empty");
+    }
+
+    /// Satellite regression (ISSUE 9): the block knob is part of the
+    /// exact request identity AND the reuse geometry — requests
+    /// differing only in block parameters must get distinct keys,
+    /// distinct fingerprints, survive the wire round trip, and never
+    /// near-miss each other.
+    #[test]
+    fn block_knob_is_part_of_request_identity() {
+        let base = PlanRequest::table5(
+            Family::Gemma,
+            Size::Small,
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        );
+        let mut on = base.clone();
+        on.block_search = true;
+        let mut stashed = on.clone();
+        stashed.block_stash = Some(3);
+        let mut stashed4 = on.clone();
+        stashed4.block_stash = Some(4);
+
+        let keys = [base.key(), on.key(), stashed.key(), stashed4.key()];
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b, "block settings must yield distinct ReqKeys");
+                assert_ne!(a.fingerprint(), b.fingerprint());
+            }
+        }
+        for (key, req) in keys.iter().zip([&base, &on, &stashed, &stashed4]) {
+            let decoded = ReqKey::from_bytes(&key.to_bytes()).expect("decodes");
+            assert_eq!(&decoded, key, "wire round trip keeps the block word");
+            let back = key.materialize();
+            assert_eq!(back.block_search, req.block_search);
+            assert_eq!(back.block_stash.filter(|_| back.block_search), {
+                req.block_stash.filter(|_| req.block_search)
+            });
+            assert_eq!(&ReqKey::of(&back), key);
+        }
+
+        // Near-miss: identical geometry except the block family ⇒ no
+        // reuse at all, not merely a large distance.
+        assert_eq!(near_miss_distance(&base.sketch(), &base.sketch()), Some(0.0));
+        assert_eq!(near_miss_distance(&base.sketch(), &on.sketch()), None);
+        assert_eq!(near_miss_distance(&on.sketch(), &stashed.sketch()), None);
+        assert_eq!(near_miss_distance(&stashed.sketch(), &stashed4.sketch()), None);
+        assert_eq!(near_miss_distance(&on.sketch(), &on.sketch()), Some(0.0));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Crash-safe plan journal (DESIGN.md §8, "Fault tolerance").
+//! Crash-safe plan journal (DESIGN.md §9, "Fault tolerance").
 //!
 //! An append-only log of committed plan-cache entries.  Every cache
 //! insert appends one record; a restarted service replays the log and

@@ -1,4 +1,4 @@
-//! Planner-as-a-service (DESIGN.md §8).
+//! Planner-as-a-service (DESIGN.md §9).
 //!
 //! PRs 1–6 made one search fast; this subsystem makes *many* searches
 //! a long-running daemon.  A request is the full search input —
@@ -21,7 +21,7 @@
 //!   rejects with a retry-after estimate when full; a request
 //!   identical to one already in flight attaches to that search and
 //!   the result fans out to every waiter.
-//! - **fault tolerance** (DESIGN.md §8, "Fault tolerance") — requests
+//! - **fault tolerance** (DESIGN.md §9, "Fault tolerance") — requests
 //!   carry deadlines ([`PlanRequest::deadline_s`]) enforced by a
 //!   [`CancelToken`] at the generator's exact budget-check boundaries
 //!   (bitwise-identical prefix; best-so-far result); a deadline that
@@ -106,6 +106,13 @@ pub struct PlanRequest {
     /// deterministic fallback plan comes back as
     /// [`Provenance::Degraded`] — a deadline is never an error.
     pub deadline_s: Option<f64>,
+    /// Enable the Generator's block-synthesis knob
+    /// ([`GenOptions::block_search`]); off by default — an off request
+    /// searches exactly as before the knob existed.
+    pub block_search: bool,
+    /// Stash-budget hint for block moves
+    /// ([`GenOptions::block_stash`]).
+    pub block_stash: Option<u32>,
 }
 
 impl PlanRequest {
@@ -126,6 +133,8 @@ impl PlanRequest {
             budget_s: None,
             max_iters: 64,
             deadline_s: None,
+            block_search: false,
+            block_stash: None,
         }
     }
 
@@ -936,6 +945,8 @@ fn run_search(job: &QueuedReq, cfg: &ServiceCfg, pool: &Arc<EvalPool>) -> PlanOu
         opts.rates = Some(req.rates.clone());
     }
     opts.time_budget_s = req.budget_s.or(cfg.default_budget_s);
+    opts.block_search = req.block_search;
+    opts.block_stash = req.block_stash;
     opts.shared_pool = Some(Arc::clone(pool));
     opts.cancel = Some(job.cancel.clone());
     if let Some((inc, _)) = &job.warm {

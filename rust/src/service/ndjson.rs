@@ -1,5 +1,5 @@
 //! Newline-delimited-JSON front end for the planner service
-//! (DESIGN.md §8) — what `adaptis serve` speaks over
+//! (DESIGN.md §9) — what `adaptis serve` speaks over
 //! stdin/stdout.
 //!
 //! One request per input line, one response per output line (compact
@@ -183,6 +183,18 @@ pub fn parse_request(line: &str) -> Result<(String, PlanRequest), ParseErr> {
             return Err(fail(format!("\"iters\" must be ≤ {MAX_ITERS}")));
         }
         req.max_iters = iters;
+    }
+    if let Some(bs) = v.get("block_search") {
+        req.block_search = bs
+            .as_bool()
+            .ok_or_else(|| fail("\"block_search\" must be a boolean".into()))?;
+    }
+    if let Some(k) = v.get("block_stash") {
+        let k = k
+            .as_usize()
+            .filter(|&k| k >= 1 && k <= MAX_NMB)
+            .ok_or_else(|| fail(format!("\"block_stash\" must be in 1..={MAX_NMB}")))?;
+        req.block_stash = Some(k as u32);
     }
     if let Some(scales) = v.get("cost_scale") {
         let entries =

@@ -1,4 +1,4 @@
-//! Planner-service suite (DESIGN.md §8): request
+//! Planner-service suite (DESIGN.md §9): request
 //! fingerprinting, plan-cache/coalescing behavior, the warm-start
 //! guarantee, admission control, fault tolerance (deadlines, degraded
 //! fallback, worker loss, abandonment), and the NDJSON front end.
@@ -93,6 +93,40 @@ fn different_layer_kind_sequences_never_match() {
     // Same family, different device count: also incompatible.
     let c = PlanRequest::table5(Family::Gemma, Size::Small, &par(2, 8));
     assert_eq!(near_miss_distance(&a.sketch(), &c.sketch()), None);
+}
+
+#[test]
+fn block_search_requests_are_distinct_identities() {
+    // Same model, same geometry — only the fourth-knob setting
+    // differs.  A plan-cache hit or a coalesce across that boundary
+    // would hand a greedy-schedule plan to a block-search client (or
+    // vice versa), so the knob must be part of the exact key.
+    let base = small_req(8);
+    let mut on = small_req(8);
+    on.block_search = true;
+    let mut stashed = small_req(8);
+    stashed.block_search = true;
+    stashed.block_stash = Some(3);
+    assert_ne!(base.key(), on.key());
+    assert_ne!(on.key(), stashed.key());
+    assert_ne!(base.key().fingerprint(), on.key().fingerprint());
+    // No warm start across the knob either: a block-tuned incumbent is
+    // meaningless to a greedy-only search, and vice versa.
+    assert_eq!(near_miss_distance(&base.sketch(), &on.sketch()), None);
+    assert_eq!(near_miss_distance(&on.sketch(), &stashed.sketch()), None);
+
+    // Through the service: the off/on pair runs two searches — no
+    // coalescing, no cache sharing.
+    let svc = Service::new(test_cfg());
+    let tickets =
+        [svc.submit(base).expect("admitted"), svc.submit(on).expect("admitted")];
+    let provs: Vec<_> = {
+        svc.release();
+        tickets.into_iter().map(|t| t.wait().expect("response").provenance).collect()
+    };
+    svc.drain();
+    assert_eq!(provs, [Provenance::Cold, Provenance::Cold]);
+    assert_eq!(svc.stats().searches, 2, "the knob must not coalesce away");
 }
 
 // ------------------------------------------------------------- service
@@ -276,12 +310,22 @@ fn parse_request_round_trips_the_schema() {
     assert_eq!(req.profile.layers[0].f, plain.profile.layers[0].f * 1.5);
     assert_eq!(req.profile.layers[1].f, plain.profile.layers[1].f);
 
+    // The fourth-knob fields parse and reach the request.
+    let (_, bl) =
+        ndjson::parse_request(r#"{"model":"gemma","block_search":true,"block_stash":3}"#)
+            .expect("valid block-search request");
+    assert!(bl.block_search);
+    assert_eq!(bl.block_stash, Some(3));
+    assert!(!req.block_search, "absent means off");
+
     for bad in [
         "not json",
         r#"{"id":"x"}"#,                               // missing model
         r#"{"model":"warp-drive"}"#,                   // unknown family
         r#"{"model":"gemma","rates":[1,2]}"#,          // wrong arity
         r#"{"model":"gemma","cost_scale":[{"f":2}]}"#, // entry without layer
+        r#"{"model":"gemma","block_search":1}"#,       // knob must be boolean
+        r#"{"model":"gemma","block_stash":0}"#,        // stash must be >= 1
     ] {
         assert!(ndjson::parse_request(bad).is_err(), "must reject: {bad}");
     }

@@ -1,4 +1,4 @@
-//! NDJSON front-end robustness fuzz (ISSUE 8 satellite, DESIGN.md §8
+//! NDJSON front-end robustness fuzz (ISSUE 8 satellite, DESIGN.md §9
 //! fault tolerance).
 //!
 //! A deterministic, seeded corpus of hostile input lines — random

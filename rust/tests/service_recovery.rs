@@ -1,5 +1,5 @@
 //! Crash-safe journal recovery and graceful shutdown, end to end
-//! through [`Service`] and the NDJSON loop (ISSUE 8, DESIGN.md §8
+//! through [`Service`] and the NDJSON loop (ISSUE 8, DESIGN.md §9
 //! fault tolerance).
 //!
 //! The kill-and-restart story under test: a service journaling to disk

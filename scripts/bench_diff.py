@@ -38,7 +38,7 @@ CUR_DIR = os.path.join(REPO, "rust")
 BASE_DIR = os.path.join(REPO, "scripts", "bench_baseline")
 
 # Fields that identify a row rather than measure it.
-ID_FIELDS = ("size", "p", "nmb", "schedule", "kernel", "scenario", "steps")
+ID_FIELDS = ("size", "family", "p", "nmb", "schedule", "kernel", "scenario", "steps")
 
 
 def load(path):
@@ -111,10 +111,19 @@ def diff_artifact(name):
             continue
         ident = " ".join(f"{k}={v}" for k, v in key) or section
         for metric, val in sorted(row.items()):
-            if metric in ID_FIELDS or not isinstance(val, (int, float)):
+            if metric in ID_FIELDS:
                 continue
             bval = b.get(metric)
-            if not isinstance(bval, (int, float)):
+            # Categorical metrics (e.g. the block search's best_family)
+            # have no noise band — report any flip verbatim.
+            if isinstance(val, str) and isinstance(bval, str):
+                if val != bval:
+                    lines.append(
+                        f"| {section} | {ident} | {metric} | {bval} | {val} | changed |"
+                    )
+                    printed += 1
+                continue
+            if not isinstance(val, (int, float)) or not isinstance(bval, (int, float)):
                 continue
             band = noise_band(b, metric)
             lines.append(

@@ -18,6 +18,13 @@ cargo test -q
 echo "== fault tolerance: cargo test --test service_fuzz --test service_recovery =="
 cargo test -q --test service_fuzz --test service_recovery
 
+# Schedule-synthesis IR suite (ISSUE 9) by name: the legacy-builder
+# bitwise differential, the compile property grid, the collapse-lock
+# randomized tests and the ZB-V-beats-S-1F1B rows.  A regression here
+# means the IR no longer reproduces the hand-written builders.
+echo "== block IR: cargo test --test schedule_block =="
+cargo test -q --test schedule_block
+
 if cargo clippy --version >/dev/null 2>&1; then
   echo "== lint: cargo clippy --all-targets -- -D warnings =="
   cargo clippy --all-targets -- -D warnings
@@ -28,7 +35,7 @@ fi
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== perfmodel bench smoke (writes rust/BENCH_perfmodel.json) =="
   cargo bench --bench perfmodel -- --smoke
-  echo "== generator bench smoke (writes rust/BENCH_generator.json) =="
+  echo "== generator bench smoke incl. block-search phase (writes rust/BENCH_generator.json) =="
   cargo bench --bench generator -- --smoke
   echo "== executor bench smoke (writes rust/BENCH_executor.json) =="
   cargo bench --bench executor -- --smoke
