@@ -124,6 +124,128 @@ fn main() {
         ]));
     }
 
+    // ---- checkpointed mid-step recovery ------------------------------
+    // 5 physical devices, 1 held as a hot spare: a mid-step kill is
+    // absorbed by splicing a recovery program onto the spare instead of
+    // shrinking the plan and restarting the whole step.
+    let p5 = p + 1;
+    let pr5 = prof(p5, nmb);
+    let rsteps = if smoke { 40 } else { 120 };
+    println!("== checkpointed mid-step recovery (P={p} + 1 spare) ==");
+
+    // Gate: with recovery machinery enabled but no faults, the virtual
+    // trajectory must be bit-identical to the plain harness.
+    {
+        let healthy = Scenario { name: "healthy", fault: FaultPlan::healthy(p5), steps: 12 };
+        let base = run_scenario(&pr5, &healthy, nmb, Policy::Elastic, &cfg);
+        let mut rcfg = ElasticCfg::default();
+        rcfg.recovery.enabled = true; // no spares, no cadence
+        let with = run_scenario(&pr5, &healthy, nmb, Policy::Elastic, &rcfg);
+        assert_eq!(
+            base.virtual_time_s.to_bits(),
+            with.virtual_time_s.to_bits(),
+            "recovery-enabled no-fault run must be bit-identical"
+        );
+        assert_eq!(base.step_times.len(), with.step_times.len());
+        for (a, b) in base.step_times.iter().zip(&with.step_times) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    // Healthy step time on the spared plan — sets the capture cadence.
+    let dt0 = {
+        let mut rc = ElasticCfg::default();
+        rc.recovery.enabled = true;
+        rc.recovery.spares = 1;
+        let h = Scenario { name: "healthy", fault: FaultPlan::healthy(p5), steps: 3 };
+        run_scenario(&pr5, &h, nmb, Policy::Elastic, &rc).step_times[0]
+    };
+
+    // Probe victims with early/mid deterministic kill fractions so the
+    // kill always interrupts the step (devices 1 and 2 under the
+    // healthy seed).
+    let probes = [
+        (1usize, rsteps / 4, false),
+        (2usize, rsteps / 2, false),
+        (1usize, rsteps / 4, true),
+        (2usize, rsteps / 3, true),
+    ];
+    let mut rec_rows: Vec<Json> = Vec::new();
+    let mut rec_lat: Vec<f64> = Vec::new();
+    for (kd, ks, cadence) in probes {
+        let sc = Scenario::kill(p5, kd, ks, rsteps);
+        let mut rc = ElasticCfg::default();
+        rc.recovery.enabled = true;
+        rc.recovery.spares = 1;
+        let interval = if cadence { dt0 / 4.0 } else { 0.0 };
+        if cadence {
+            rc.recovery.checkpoint.interval_s = Some(interval);
+        }
+        // Baseline: same spared plan, recovery off — the kill falls
+        // back to shrink-and-restart (the whole step re-runs).
+        let mut restart_cfg = rc.clone();
+        restart_cfg.recovery.enabled = false;
+        restart_cfg.recovery.checkpoint.interval_s = None;
+
+        let el = run_scenario(&pr5, &sc, nmb, Policy::Elastic, &rc);
+        let or = run_scenario(&pr5, &sc, nmb, Policy::Oracle, &rc);
+        let rs = run_scenario(&pr5, &sc, nmb, Policy::Elastic, &restart_cfg);
+
+        assert_eq!(el.recoveries.len(), 1, "kill dev {kd}: exactly one recovery");
+        let ev = &el.recoveries[0];
+        assert!(
+            ev.restart_s > 0.0 && ev.replay_s < ev.restart_s,
+            "kill dev {kd} step {ks}: replay-set recovery ({:.4}s) must beat \
+             full-step restart ({:.4}s)",
+            ev.replay_s,
+            ev.restart_s
+        );
+        let ret = throughput_retained(&el, &or);
+        let ret_restart = throughput_retained(&rs, &or);
+        assert!(
+            ret > ret_restart,
+            "kill dev {kd} step {ks}: recovery goodput {ret:.4} must beat \
+             restart goodput {ret_restart:.4}"
+        );
+        let lat = ev.detect_s + ev.switch_s + ev.restore_s + ev.replay_s;
+        rec_lat.push(lat);
+        println!(
+            "  kill dev {kd} @ step {ks} cadence={cadence}: recovery {:.1} ms \
+             (detect {:.1} replay {:.1} vs restart {:.1}) replayed {} ops, \
+             {} resends, goodput {ret:.3} vs restart {ret_restart:.3}",
+            lat * 1e3,
+            ev.detect_s * 1e3,
+            ev.replay_s * 1e3,
+            ev.restart_s * 1e3,
+            ev.replayed_ops,
+            ev.resends,
+        );
+        rec_rows.push(obj(vec![
+            ("scenario", s("kill_recovery")),
+            ("kill_device", num(kd as f64)),
+            ("kill_step", num(ks as f64)),
+            ("cadence", num(interval)),
+            ("kill_at_s", num(ev.kill_at_s)),
+            ("detect_s", num(ev.detect_s)),
+            ("lost_s", num(ev.lost_s)),
+            ("switch_s", num(ev.switch_s)),
+            ("restore_s", num(ev.restore_s)),
+            ("replay_s", num(ev.replay_s)),
+            ("restart_s", num(ev.restart_s)),
+            ("recovery_latency_s", num(lat)),
+            ("replayed_ops", num(ev.replayed_ops as f64)),
+            ("resends", num(ev.resends as f64)),
+            ("restored_bytes", num(ev.restored_bytes)),
+            ("checkpoint_overhead_s", num(el.checkpoint_overhead_s)),
+            ("lost_work_frac", num(el.lost_work_s / el.virtual_time_s)),
+            ("goodput_retained", num(ret)),
+            ("goodput_retained_restart", num(ret_restart)),
+        ]));
+    }
+    rec_lat.sort_by(|a, b| a.total_cmp(b));
+    let (rp50, rp99) = (percentile(&rec_lat, 0.50), percentile(&rec_lat, 0.99));
+    println!("  recovery latency p50 {:.1} ms  p99 {:.1} ms", rp50 * 1e3, rp99 * 1e3);
+
     // ---- warm-start payoff in isolation ------------------------------
     println!("== warm vs cold re-plan ==");
     use adaptis::adapt::{ReplanCfg, Replanner};
@@ -157,6 +279,14 @@ fn main() {
         ("p", num(p as f64)),
         ("nmb", num(nmb as f64)),
         ("scenarios", arr(rows)),
+        (
+            "recovery",
+            obj(vec![
+                ("scenarios", arr(rec_rows)),
+                ("latency_p50_s", num(rp50)),
+                ("latency_p99_s", num(rp99)),
+            ]),
+        ),
         (
             "warm_vs_cold",
             obj(vec![

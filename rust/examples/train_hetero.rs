@@ -1,4 +1,4 @@
-//! End-to-end validation driver (DESIGN.md §12): train a ~100M-parameter
+//! End-to-end validation driver (DESIGN.md §13): train a ~100M-parameter
 //! heterogeneous transformer (large vocab + SA/FFN/Mamba/MLA/MoE mix)
 //! with an AdaPtis-generated pipeline on the RealCluster — real PJRT
 //! compute on P worker threads, python nowhere in sight.

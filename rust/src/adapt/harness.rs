@@ -37,20 +37,23 @@
 //! [`crate::cluster::sim::SimDeadlock`] stall path stays an
 //! exceptional diagnostic rather than a control-flow mechanism.
 
+use std::collections::HashSet;
 use std::time::Instant;
 
-use crate::cluster::fault::{FaultPlan, FaultView};
-use crate::cluster::sim::{run_timed_faulted, SimOptions};
+use crate::cluster::fault::{FaultPlan, FaultView, RetryPolicy, StepFaults};
+use crate::cluster::sim::{run_timed_faulted, run_timed_midstep, MidstepOutcome, SimOptions};
 use crate::executor::lower::{lower, LowerOptions};
+use crate::executor::recover::{self, CheckpointCfg, OpKey};
 use crate::executor::Program;
 use crate::generator::{GenResult, Incumbent, MigrationCfg};
 use crate::memory::model::layer_migration_bytes;
-use crate::memory::MemCaps;
+use crate::memory::{MemCaps, MemoryModel};
 use crate::partition::Partition;
 use crate::placement::{sequential, Placement};
 use crate::perfmodel::{simulate_in, SimArena, StageTable};
 use crate::profile::ProfiledData;
 use crate::schedule::greedy::{greedy_schedule_in, SchedKnobs};
+use crate::schedule::Schedule;
 
 use super::monitor::{Decision, Monitor, MonitorCfg};
 use super::replan::{ReplanCfg, Replanner};
@@ -135,6 +138,72 @@ pub struct ElasticCfg {
     /// result with a deliberately terrible (but valid) plan, so
     /// probation must fail and the monitor must restore the incumbent.
     pub sabotage_first_replan: bool,
+    /// Execution-layer fault tolerance (DESIGN.md §10).  Default-off:
+    /// with recovery disabled every scenario run is bit-identical to
+    /// the pre-recovery harness.
+    pub recovery: RecoveryCfg,
+}
+
+/// Checkpointed mid-step recovery knobs.
+#[derive(Clone, Debug)]
+pub struct RecoveryCfg {
+    /// Splice-and-complete recovery onto a spare instead of the
+    /// shrink-and-restart fallback (which stays available when no
+    /// spare is free).
+    pub enabled: bool,
+    /// Physical devices held out of the initial plan as hot spares:
+    /// plans are generated on `fault.p − spares` logical devices.
+    pub spares: usize,
+    /// Intra-step checkpoint cadence and capture/restore pricing.
+    pub checkpoint: CheckpointCfg,
+    /// Timeout/backoff transport policy — prices failure *detection*
+    /// and rides out transient link windows.
+    pub retry: RetryPolicy,
+}
+
+impl Default for RecoveryCfg {
+    fn default() -> RecoveryCfg {
+        RecoveryCfg {
+            enabled: false,
+            spares: 0,
+            checkpoint: CheckpointCfg::default(),
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// One checkpointed mid-step recovery (or optimizer-only rollback when
+/// the kill landed after the victim's last instruction of the step).
+#[derive(Clone, Debug)]
+pub struct RecoveryEvent {
+    pub step: usize,
+    /// Virtual time within the step the device froze.
+    pub kill_at_s: f64,
+    /// Timeout/retry-ladder detection charge (0 for the oracle).
+    pub detect_s: f64,
+    /// Virtual seconds discarded: work to the abort plus detection
+    /// (for an after-the-fact kill, the optimizer rollback instead).
+    pub lost_s: f64,
+    /// Capture pauses charged on this step's pre-kill prefix.
+    pub ckpt_overhead_s: f64,
+    /// Pause to install the dead stages' weights + optimizer on the
+    /// spare (0 for the oracle).
+    pub switch_s: f64,
+    /// Pause to restore checkpointed tensors onto the spare.
+    pub restore_s: f64,
+    /// Makespan of the spliced recovery program.
+    pub replay_s: f64,
+    /// Counterfactual: full-step restart makespan on the patched
+    /// cluster — what the shrink-and-restart baseline would re-run.
+    pub restart_s: f64,
+    /// |replay set| (ops re-executed on the spare).
+    pub replayed_ops: usize,
+    /// Retention-buffer resends spliced into the recovery program.
+    pub resends: usize,
+    /// Bytes restored from the checkpoint.
+    pub restored_bytes: f64,
+    /// Optimizer re-install charge (after-update kills only).
+    pub opt_rollback_s: f64,
 }
 
 /// One switch (or attempted switch) of the active plan.
@@ -167,6 +236,14 @@ pub struct RunStats {
     pub steps_to_recover: Option<usize>,
     /// Step at which a static run hit a dead device and froze.
     pub stalled_at: Option<usize>,
+    /// Checkpointed mid-step recoveries (empty unless
+    /// [`RecoveryCfg::enabled`]).
+    pub recoveries: Vec<RecoveryEvent>,
+    /// Virtual seconds discarded to faults: pre-abort work + detection
+    /// + optimizer rollbacks.
+    pub lost_work_s: f64,
+    /// Virtual seconds spent capturing checkpoints.
+    pub checkpoint_overhead_s: f64,
 }
 
 /// Throughput of `run` relative to the oracle, both measured over the
@@ -186,6 +263,9 @@ struct ActivePlan {
     part: Partition,
     plac: Placement,
     knobs: SchedKnobs,
+    /// The logical schedule the program was lowered from — kept so
+    /// [`recover::plan_recovery`] can splice a recovery program.
+    sched: Schedule,
     prog: Program,
     pred_total: f64,
     pred_busy: Vec<f64>,
@@ -203,6 +283,7 @@ impl ActivePlan {
             part: res.pipeline.partition.clone(),
             plac: res.pipeline.placement.clone(),
             knobs: res.knobs,
+            sched: res.pipeline.schedule.clone(),
             prog,
             pred_total: res.report.total,
             pred_busy: res.report.busy_d.clone(),
@@ -246,6 +327,27 @@ fn phys_owner(plan: &ActivePlan, n_layers: usize) -> Vec<usize> {
         }
     }
     out
+}
+
+/// Switch pause for a spare swap: the logical plan is unchanged, only
+/// the dead logical device's stages move — exactly the layers whose
+/// physical owner changes, so this equals [`switch_seconds`] between
+/// the old and patched phys maps.
+fn spare_switch_seconds(
+    profile: &ProfiledData,
+    plan: &ActivePlan,
+    dead_l: usize,
+    cfg: &ElasticCfg,
+) -> f64 {
+    let mut bytes = 0.0;
+    for s in 0..plan.part.n_stages() {
+        if plan.plac.device_of[s] == dead_l {
+            for l in plan.part.stage_range(s) {
+                bytes += layer_migration_bytes(profile, l);
+            }
+        }
+    }
+    bytes / cfg.replan.migration.bw
 }
 
 /// Virtual seconds the pipeline pauses to ship weights + optimizer
@@ -297,6 +399,7 @@ fn sabotage_plan(
         part,
         plac,
         knobs,
+        sched: schedule,
         prog,
         pred_total: report.total,
         pred_busy: report.busy_d,
@@ -315,12 +418,16 @@ pub fn run_scenario(
     cfg: &ElasticCfg,
 ) -> RunStats {
     let p0 = scenario.fault.p;
+    scenario.fault.validate().expect("scenario fault plan must be well-formed");
     let sim = SimOptions::matched();
     let mut replanner = Replanner::new(cfg.replan);
-    let unit = vec![1.0; p0];
-    let res0 = replanner.plan(profile, p0, nmb, &unit);
-    let mut plan = ActivePlan::from_gen(&res0, (0..p0).collect(), unit);
-    let mut monitor = Monitor::new(p0, cfg.monitor);
+    // Hot spares are held out of the logical plan; with `spares == 0`
+    // (the default) this is exactly the historical behavior.
+    let p_plan = p0 - cfg.recovery.spares.min(p0.saturating_sub(2));
+    let unit = vec![1.0; p_plan];
+    let res0 = replanner.plan(profile, p_plan, nmb, &unit);
+    let mut plan = ActivePlan::from_gen(&res0, (0..p_plan).collect(), unit);
+    let mut monitor = Monitor::new(p_plan, cfg.monitor);
     monitor.set_plan(plan.pred_total, plan.pred_busy.clone(), plan.plan_rates.clone());
 
     let mut stats = RunStats {
@@ -333,6 +440,9 @@ pub fn run_scenario(
         rollbacks: 0,
         steps_to_recover: None,
         stalled_at: None,
+        recoveries: Vec::new(),
+        lost_work_s: 0.0,
+        checkpoint_overhead_s: 0.0,
     };
     let mut rollback_to: Option<ActivePlan> = None;
     let mut sabotaged = false;
@@ -343,47 +453,241 @@ pub fn run_scenario(
         let pview = scenario.fault.view(step);
 
         // ---- Device loss ------------------------------------------------
-        if plan.phys.iter().any(|&d| !pview.alive[d]) {
+        let dead_l: Vec<usize> =
+            (0..plan.phys.len()).filter(|&l| !pview.alive[plan.phys[l]]).collect();
+        let mut step_executed = false;
+        if !dead_l.is_empty() {
             if policy == Policy::Static {
                 stats.stalled_at = Some(step);
                 break;
             }
-            let alive: Vec<usize> = (0..p0).filter(|&d| pview.alive[d]).collect();
-            let p_new = alive.len();
-            assert!(p_new >= 2, "scenario killed the cluster below a pipeline");
-            // Carry estimates across the remap where the physical
-            // device survives; the oracle reads the true scales.
-            let mut est = vec![1.0; p_new];
-            for (j, &pd) in alive.iter().enumerate() {
-                est[j] = if policy == Policy::Oracle {
-                    pview.compute_scale[pd]
-                } else if let Some(l) = plan.phys.iter().position(|&q| q == pd) {
-                    monitor.rates().get(l).copied().unwrap_or(1.0)
-                } else {
-                    1.0
-                };
+            // The kill lands *inside* the step at a deterministic
+            // fraction of its predicted makespan.  Replay the pre-kill
+            // timeline with the mid-step runner so the lost work and
+            // the timeout/retry detection latency are charged from the
+            // actual virtual time of the abort — never rounded to a
+            // step boundary.
+            let dl = dead_l[0];
+            let kill_at = scenario.fault.kill_frac(plan.phys[dl]) * plan.pred_total;
+            let mut lview_pre = remap_view(&pview, &plan.phys);
+            for &l in &dead_l {
+                lview_pre.alive[l] = true; // pre-kill world: still up
             }
-            let t = Instant::now();
-            let res = replanner.plan(profile, p_new, nmb, &est);
-            let latency = t.elapsed().as_secs_f64();
-            let rates_q = replanner.quantize(&est).unwrap_or_else(|| vec![1.0; p_new]);
-            let new_plan = ActivePlan::from_gen(&res, alive, rates_q);
-            let switch_s = switch_seconds(profile, &plan, &new_plan, cfg.replan.migration);
-            if policy == Policy::Elastic {
-                stats.virtual_time_s += switch_s;
+            let sf = StepFaults { kill: Some((dl, kill_at)), links: Vec::new() };
+            let out = run_timed_midstep(
+                profile,
+                &plan.part,
+                &plan.prog,
+                sim,
+                Some(&lview_pre),
+                &sf,
+                &cfg.recovery.retry,
+            )
+            .expect("pre-kill replay on an all-alive view cannot deadlock");
+            let spare =
+                (0..p0).find(|&d| pview.alive[d] && !plan.phys.contains(&d));
+
+            match out {
+                MidstepOutcome::Completed { run, .. } => {
+                    // The victim died after its last instruction: the
+                    // step lands, but the optimizer update it joined
+                    // must be rolled back and re-applied by whoever
+                    // inherits its stages.
+                    let mm = MemoryModel::build(profile, &plan.part, &plan.plac);
+                    let opt_s =
+                        recover::optimizer_rollback_s(&mm, dl, &cfg.recovery.checkpoint);
+                    stats.virtual_time_s += run.makespan;
+                    stats.step_times.push(run.makespan);
+                    stats.steps_done += 1;
+                    if policy == Policy::Elastic {
+                        stats.virtual_time_s += opt_s;
+                        stats.lost_work_s += opt_s;
+                    }
+                    step_executed = true;
+                    if cfg.recovery.enabled && dead_l.len() == 1 {
+                        if let Some(sp) = spare {
+                            let switch_s = spare_switch_seconds(profile, &plan, dl, cfg);
+                            if policy == Policy::Elastic {
+                                stats.virtual_time_s += switch_s;
+                            }
+                            stats.recoveries.push(RecoveryEvent {
+                                step,
+                                kill_at_s: kill_at,
+                                detect_s: 0.0,
+                                lost_s: opt_s,
+                                ckpt_overhead_s: 0.0,
+                                switch_s,
+                                restore_s: 0.0,
+                                replay_s: 0.0,
+                                restart_s: 0.0,
+                                replayed_ops: 0,
+                                resends: 0,
+                                restored_bytes: 0.0,
+                                opt_rollback_s: opt_s,
+                            });
+                            plan.phys[dl] = sp;
+                        }
+                    }
+                }
+                MidstepOutcome::Interrupted(si) => {
+                    // Lost work: everything to the abort.  The oracle
+                    // knows instantly; real policies pay detection.
+                    let lost =
+                        if policy == Policy::Oracle { si.kill_at } else { si.abort_at };
+                    stats.virtual_time_s += lost;
+                    stats.lost_work_s += lost;
+                    let mut step_total = lost;
+                    if cfg.recovery.enabled && dead_l.len() == 1 {
+                        if let Some(sp) = spare {
+                            // Capture pauses the pre-kill prefix paid.
+                            let mm =
+                                MemoryModel::build(profile, &plan.part, &plan.plac);
+                            let cks = recover::plan_checkpoints(
+                                &si.records,
+                                si.kill_at,
+                                &mm,
+                                nmb,
+                                plan.prog.split_bw,
+                                &cfg.recovery.checkpoint,
+                            );
+                            let pauses: f64 = cks.iter().map(|c| c.pause_s).sum();
+                            stats.virtual_time_s += pauses;
+                            stats.checkpoint_overhead_s += pauses;
+                            step_total += pauses;
+                            // Committed frontier per logical device.
+                            let mut done: Vec<HashSet<OpKey>> =
+                                vec![HashSet::new(); plan.phys.len()];
+                            for r in &si.records {
+                                done[r.device].insert((r.op, r.stage, r.mb));
+                            }
+                            let rec = recover::plan_recovery(
+                                &plan.sched,
+                                &plan.plac,
+                                dl,
+                                &done,
+                                cks.last(),
+                            )
+                            .expect("spliced recovery program must be sound");
+                            debug_assert_eq!(
+                                rec.final_ops,
+                                recover::schedule_ops(&plan.sched),
+                                "recovery must complete exactly the step's op set"
+                            );
+                            let switch_s = spare_switch_seconds(profile, &plan, dl, cfg);
+                            let restore_s = if rec.restore_bytes > 0.0 {
+                                cfg.recovery.checkpoint.latency_s
+                                    + rec.restore_bytes / cfg.recovery.checkpoint.restore_bw
+                            } else {
+                                0.0
+                            };
+                            if policy == Policy::Elastic {
+                                stats.virtual_time_s += switch_s + restore_s;
+                                step_total += switch_s + restore_s;
+                            }
+                            plan.phys[dl] = sp;
+                            let lview_post = remap_view(&pview, &plan.phys);
+                            let replay_s = run_timed_faulted(
+                                profile,
+                                &plan.part,
+                                &rec.prog,
+                                sim,
+                                Some(&lview_post),
+                            )
+                            .expect("validated recovery program may not stall")
+                            .makespan;
+                            stats.virtual_time_s += replay_s;
+                            step_total += replay_s;
+                            // Counterfactual the baseline would pay.
+                            let restart_s = run_timed_faulted(
+                                profile,
+                                &plan.part,
+                                &plan.prog,
+                                sim,
+                                Some(&lview_post),
+                            )
+                            .expect("full restart on live devices may not stall")
+                            .makespan;
+                            stats.recoveries.push(RecoveryEvent {
+                                step,
+                                kill_at_s: si.kill_at,
+                                detect_s: if policy == Policy::Oracle {
+                                    0.0
+                                } else {
+                                    si.detect_s
+                                },
+                                lost_s: lost,
+                                ckpt_overhead_s: pauses,
+                                switch_s: if policy == Policy::Elastic {
+                                    switch_s
+                                } else {
+                                    0.0
+                                },
+                                restore_s: if policy == Policy::Elastic {
+                                    restore_s
+                                } else {
+                                    0.0
+                                },
+                                replay_s,
+                                restart_s,
+                                replayed_ops: rec.replay.len(),
+                                resends: rec.resends,
+                                restored_bytes: rec.restore_bytes,
+                                opt_rollback_s: 0.0,
+                            });
+                            stats.step_times.push(step_total);
+                            stats.steps_done += 1;
+                            step_executed = true;
+                        }
+                    }
+                }
             }
-            stats.replans.push(ReplanEvent {
-                step,
-                latency_s: if policy == Policy::Oracle { 0.0 } else { latency },
-                switch_s,
-                kind: "kill",
-            });
-            plan = new_plan;
-            rollback_to = None;
-            monitor = Monitor::new(p_new, cfg.monitor);
-            monitor.set_plan(plan.pred_total, plan.pred_busy.clone(), plan.plan_rates.clone());
-            gap_onset.get_or_insert(step);
-            switched_since_gap = true;
+
+            // Shrink-and-restart fallback: no recovery (or no spare) —
+            // re-plan on the survivors; the step (if not already
+            // landed) re-runs from scratch on the new plan below.
+            if plan.phys.iter().any(|&d| !pview.alive[d]) {
+                let alive: Vec<usize> = (0..p0).filter(|&d| pview.alive[d]).collect();
+                let p_new = alive.len();
+                assert!(p_new >= 2, "scenario killed the cluster below a pipeline");
+                // Carry estimates across the remap where the physical
+                // device survives; the oracle reads the true scales.
+                let mut est = vec![1.0; p_new];
+                for (j, &pd) in alive.iter().enumerate() {
+                    est[j] = if policy == Policy::Oracle {
+                        pview.compute_scale[pd]
+                    } else if let Some(l) = plan.phys.iter().position(|&q| q == pd) {
+                        monitor.rates().get(l).copied().unwrap_or(1.0)
+                    } else {
+                        1.0
+                    };
+                }
+                let t = Instant::now();
+                let res = replanner.plan(profile, p_new, nmb, &est);
+                let latency = t.elapsed().as_secs_f64();
+                let rates_q = replanner.quantize(&est).unwrap_or_else(|| vec![1.0; p_new]);
+                let new_plan = ActivePlan::from_gen(&res, alive, rates_q);
+                let switch_s = switch_seconds(profile, &plan, &new_plan, cfg.replan.migration);
+                if policy == Policy::Elastic {
+                    stats.virtual_time_s += switch_s;
+                }
+                stats.replans.push(ReplanEvent {
+                    step,
+                    latency_s: if policy == Policy::Oracle { 0.0 } else { latency },
+                    switch_s,
+                    kind: "kill",
+                });
+                plan = new_plan;
+                rollback_to = None;
+                monitor = Monitor::new(p_new, cfg.monitor);
+                monitor.set_plan(plan.pred_total, plan.pred_busy.clone(), plan.plan_rates.clone());
+                gap_onset.get_or_insert(step);
+                switched_since_gap = true;
+            }
+            if step_executed {
+                // The step landed inside the recovery path; skip the
+                // normal execution and the monitor for this step.
+                continue;
+            }
         }
 
         // ---- Oracle: re-plan the moment true rates move -----------------
@@ -410,8 +714,42 @@ pub fn run_scenario(
 
         // ---- Execute the step -------------------------------------------
         let lview = remap_view(&pview, &plan.phys);
-        let run = run_timed_faulted(profile, &plan.part, &plan.prog, sim, Some(&lview))
+        let run = if cfg.recovery.enabled {
+            // Same arithmetic via the mid-step runner (bitwise-equal
+            // makespans, pinned in `cluster::sim` tests) — it also
+            // yields the op records that price checkpoint captures.
+            let out = run_timed_midstep(
+                profile,
+                &plan.part,
+                &plan.prog,
+                sim,
+                Some(&lview),
+                &StepFaults::none(),
+                &cfg.recovery.retry,
+            )
             .expect("no live plan may stall (kills are handled above)");
+            let MidstepOutcome::Completed { run, records } = out else {
+                unreachable!("no step faults and an all-alive view cannot interrupt")
+            };
+            if cfg.recovery.checkpoint.interval_s.is_some() {
+                let mm = MemoryModel::build(profile, &plan.part, &plan.plac);
+                let cks = recover::plan_checkpoints(
+                    &records,
+                    run.makespan,
+                    &mm,
+                    nmb,
+                    plan.prog.split_bw,
+                    &cfg.recovery.checkpoint,
+                );
+                let pauses: f64 = cks.iter().map(|c| c.pause_s).sum();
+                stats.virtual_time_s += pauses;
+                stats.checkpoint_overhead_s += pauses;
+            }
+            run
+        } else {
+            run_timed_faulted(profile, &plan.part, &plan.prog, sim, Some(&lview))
+                .expect("no live plan may stall (kills are handled above)")
+        };
         let dt = run.makespan;
         stats.virtual_time_s += dt;
         stats.step_times.push(dt);
@@ -533,6 +871,65 @@ mod tests {
         assert_eq!(throughput_retained(&el, &or), 1.0);
         // Matched-mode predictions are exact: zero healthy-state gap.
         assert_eq!(el.step_times[0], el.step_times[11]);
+    }
+
+    #[test]
+    fn recovery_enabled_healthy_run_is_bitwise_identical() {
+        // No faults + no cadence: routing execution through the
+        // mid-step runner must not move a single bit.
+        let pr = prof(4, 8);
+        let sc = Scenario { name: "healthy", fault: FaultPlan::healthy(4), steps: 10 };
+        let base = run_scenario(&pr, &sc, 8, Policy::Elastic, &ElasticCfg::default());
+        let mut cfg = ElasticCfg::default();
+        cfg.recovery.enabled = true; // spares: 0, cadence off
+        let rec = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+        assert_eq!(base.virtual_time_s, rec.virtual_time_s);
+        assert_eq!(base.step_times, rec.step_times);
+        assert_eq!(rec.checkpoint_overhead_s, 0.0);
+        assert!(rec.recoveries.is_empty() && rec.lost_work_s == 0.0);
+    }
+
+    #[test]
+    fn checkpoint_cadence_charges_overhead_without_touching_makespans() {
+        let pr = prof(4, 8);
+        let sc = Scenario { name: "healthy", fault: FaultPlan::healthy(4), steps: 6 };
+        let base = run_scenario(&pr, &sc, 8, Policy::Elastic, &ElasticCfg::default());
+        let mut cfg = ElasticCfg::default();
+        cfg.recovery.enabled = true;
+        cfg.recovery.checkpoint.interval_s = Some(base.step_times[0] / 3.0);
+        let rec = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+        // Captures pause the pipeline but never perturb step makespans.
+        assert_eq!(base.step_times, rec.step_times);
+        assert!(rec.checkpoint_overhead_s > 0.0);
+        let expect = base.virtual_time_s + rec.checkpoint_overhead_s;
+        assert!((rec.virtual_time_s - expect).abs() <= 1e-9 * expect);
+    }
+
+    #[test]
+    fn midstep_kill_recovers_onto_spare_and_beats_full_restart() {
+        // 5 physical devices, 1 held as a hot spare: a mid-step kill
+        // splices a recovery program instead of shrinking the plan.
+        let pr = prof(5, 8);
+        let sc = Scenario::kill(5, 1, 4, 16);
+        let mut cfg = ElasticCfg::default();
+        cfg.recovery.enabled = true;
+        cfg.recovery.spares = 1;
+        let el = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+        assert_eq!(el.steps_done, 16, "recovery completes every step");
+        assert_eq!(el.stalled_at, None);
+        assert_eq!(el.recoveries.len(), 1);
+        let ev = &el.recoveries[0];
+        assert_eq!(ev.step, 4);
+        assert!(ev.kill_at_s > 0.0 && ev.detect_s > 0.0 && ev.lost_s >= ev.kill_at_s);
+        assert!(ev.replay_s > 0.0 && ev.replay_s <= ev.restart_s);
+        assert!(el.lost_work_s > 0.0);
+        // The spare absorbed the loss: no shrink re-plan happened.
+        assert!(el.replans.iter().all(|r| r.kind != "kill"), "{:?}", el.replans);
+        // Deterministic: the whole trajectory replays bitwise.
+        let el2 = run_scenario(&pr, &sc, 8, Policy::Elastic, &cfg);
+        assert_eq!(el.virtual_time_s, el2.virtual_time_s);
+        assert_eq!(el.lost_work_s, el2.lost_work_s);
+        assert_eq!(el.recoveries[0].replay_s, el2.recoveries[0].replay_s);
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub mod harness;
 pub mod monitor;
 pub mod replan;
 
-pub use harness::{run_scenario, throughput_retained, ElasticCfg, Policy, RunStats, Scenario};
+pub use harness::{
+    run_scenario, throughput_retained, ElasticCfg, Policy, RecoveryCfg, RecoveryEvent, RunStats,
+    Scenario,
+};
 pub use monitor::{Decision, Monitor, MonitorCfg};
 pub use replan::{ReplanCfg, Replanner};

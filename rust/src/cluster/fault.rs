@@ -94,6 +94,118 @@ impl FaultView {
     }
 }
 
+/// Deterministic timeout + capped-exponential-backoff policy for the
+/// mid-step transport in [`crate::cluster::sim::run_timed_midstep`].
+///
+/// All randomness (per-attempt jitter) is a pure function of
+/// `(seed, device, attempt)` via the seeded [`crate::util::rng`] — never
+/// wall clock — so a faulted run replays bitwise from its seed.  The
+/// same policy prices *failure detection*: a peer that stops responding
+/// is declared dead only after the full timeout/retry ladder has been
+/// exhausted, which is exactly [`RetryPolicy::detect_latency`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Seconds before one send/recv attempt is abandoned.
+    pub timeout_s: f64,
+    /// First backoff interval; attempt `k` waits `base · 2^k`.
+    pub backoff_base_s: f64,
+    /// Cap on any single backoff interval.
+    pub backoff_cap_s: f64,
+    /// Attempts after the first before giving up (declaring the peer
+    /// dead, or — for transient link windows — forcing the transfer
+    /// through at its degraded duration).
+    pub max_retries: usize,
+    /// Relative jitter on each backoff interval, in `[0, 1)`.
+    pub jitter: f64,
+    /// Seed for the jitter stream (independent of the fault-plan seed).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            timeout_s: 10e-3,
+            backoff_base_s: 5e-3,
+            backoff_cap_s: 40e-3,
+            max_retries: 3,
+            jitter: 0.2,
+            seed: 0x5e7_2e7_12,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff slept after abandoned attempt `attempt` (0-based) on
+    /// `device` — capped exponential with seeded multiplicative jitter.
+    /// Pure in `(self, device, attempt)`.
+    pub fn backoff_s(&self, device: usize, attempt: usize) -> f64 {
+        let exp = self.backoff_base_s * (1u64 << attempt.min(40)) as f64;
+        let base = exp.min(self.backoff_cap_s);
+        if self.jitter == 0.0 {
+            return base;
+        }
+        let h = mix64(self.seed ^ mix64(device as u64) ^ (attempt as u64).wrapping_mul(0x9e37));
+        base * (1.0 + self.jitter * (2.0 * unit(h) - 1.0))
+    }
+
+    /// Virtual seconds from a peer's death until `device` declares it
+    /// dead: the initial timeout plus every backoff + re-timeout in the
+    /// retry ladder.  Deterministic, so detection cost replays bitwise.
+    pub fn detect_latency(&self, device: usize) -> f64 {
+        let mut t = self.timeout_s;
+        for k in 0..self.max_retries {
+            t += self.backoff_s(device, k) + self.timeout_s;
+        }
+        t
+    }
+}
+
+/// A transient slowdown window on the directed link `src → dst`,
+/// expressed in *virtual seconds within one step* (as opposed to
+/// [`FaultEvent::LinkDelay`]'s whole-step granularity).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkWindow {
+    pub src: usize,
+    pub dst: usize,
+    /// Transfer-duration multiplier while the window is active (> 1).
+    pub factor: f64,
+    /// Window `[from_s, until_s)` relative to step start.
+    pub from_s: f64,
+    pub until_s: f64,
+}
+
+/// Intra-step fault events consumed by
+/// [`crate::cluster::sim::run_timed_midstep`]: at most one device kill
+/// (at a virtual time within the step) plus transient link windows.
+/// [`StepFaults::none`] is the identity — the runner is then bitwise
+/// equal to [`crate::cluster::sim::run_timed_faulted`].
+#[derive(Clone, Debug, Default)]
+pub struct StepFaults {
+    /// `(device, kill_at_s)`: the device freezes at that virtual time;
+    /// any op that would complete after it is lost.
+    pub kill: Option<(usize, f64)>,
+    pub links: Vec<LinkWindow>,
+}
+
+impl StepFaults {
+    pub fn none() -> StepFaults {
+        StepFaults::default()
+    }
+
+    /// Duration multiplier for a transfer starting at `t` on `src→dst`
+    /// (product of active windows; exactly 1.0 when none apply, so the
+    /// unfaulted arithmetic is untouched).
+    pub fn link_factor(&self, src: usize, dst: usize, t: f64) -> f64 {
+        let mut f = 1.0;
+        for w in &self.links {
+            if w.src == src && w.dst == dst && t >= w.from_s && t < w.until_s {
+                f *= w.factor;
+            }
+        }
+        f
+    }
+}
+
 /// SplitMix64 finalizer — the same mixer [`crate::util::rng`] seeds
 /// with, used here as a counter hash so jitter at `(seed, step, device)`
 /// is stateless.
@@ -154,6 +266,109 @@ impl FaultPlan {
             .min()
     }
 
+    /// Where inside its kill step a device's death lands, as a fraction
+    /// of the step's predicted makespan in `(0.05, 0.95)` — a pure
+    /// counter-hash of `(seed, device)`, so mid-step kill times replay
+    /// bitwise from the seed.  Harnesses multiply this by the active
+    /// plan's predicted step time to get `kill_at_s`.
+    pub fn kill_frac(&self, device: usize) -> f64 {
+        let h = mix64(self.seed ^ 0x6b11_1_f2ac ^ mix64(device as u64 ^ 0x9e37));
+        0.05 + 0.9 * unit(h)
+    }
+
+    /// Structural sanity: indices in range, ranges non-empty, and — the
+    /// part last-writer-wins used to paper over — at most one `Kill`
+    /// per device.  Two kills on one device always meant a scenario
+    /// author error; the earlier one silently won in `view()`.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut kills: Vec<usize> = Vec::new();
+        for e in &self.events {
+            match *e {
+                FaultEvent::Straggler { device, factor, from, until } => {
+                    if device >= self.p {
+                        return Err(format!("straggler device {device} out of range (p={})", self.p));
+                    }
+                    if !(factor > 0.0) || from >= until {
+                        return Err(format!("straggler on {device}: bad factor/range"));
+                    }
+                }
+                FaultEvent::LinkDelay { src, dst, factor, from, until } => {
+                    if src >= self.p || dst >= self.p {
+                        return Err(format!("link delay {src}->{dst} out of range (p={})", self.p));
+                    }
+                    if !(factor > 0.0) || from >= until {
+                        return Err(format!("link delay {src}->{dst}: bad factor/range"));
+                    }
+                }
+                FaultEvent::Kill { device, .. } => {
+                    if device >= self.p {
+                        return Err(format!("kill device {device} out of range (p={})", self.p));
+                    }
+                    if kills.contains(&device) {
+                        return Err(format!(
+                            "overlapping Kill events for device {device}: a device dies once; \
+                             merge or drop the duplicate"
+                        ));
+                    }
+                    kills.push(device);
+                }
+            }
+        }
+        for d in &self.drift {
+            if d.device >= self.p {
+                return Err(format!("drift device {} out of range (p={})", d.device, self.p));
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable dump of the whole schedule — what a scenario
+    /// author reads to sanity-check a plan before a long run.
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "FaultPlan: p={} seed={:#x} jitter={}", self.p, self.seed, self.jitter);
+        for d in &self.drift {
+            let _ = writeln!(
+                s,
+                "  drift    dev {}: up to {:.0}% slower, period {} steps, phase {:.2}",
+                d.device,
+                d.amplitude * 100.0,
+                d.period,
+                d.phase
+            );
+        }
+        for e in &self.events {
+            match *e {
+                FaultEvent::Straggler { device, factor, from, until } => {
+                    let _ = writeln!(
+                        s,
+                        "  straggler dev {device}: {factor}x slower, steps [{from}, {})",
+                        RangeEnd(until)
+                    );
+                }
+                FaultEvent::LinkDelay { src, dst, factor, from, until } => {
+                    let _ = writeln!(
+                        s,
+                        "  link      {src} -> {dst}: {factor}x slower, steps [{from}, {})",
+                        RangeEnd(until)
+                    );
+                }
+                FaultEvent::Kill { device, step } => {
+                    let _ = writeln!(
+                        s,
+                        "  kill      dev {device}: dies at step {step} ({:.0}% into the step)",
+                        self.kill_frac(device) * 100.0
+                    );
+                }
+            }
+        }
+        if self.drift.is_empty() && self.events.is_empty() {
+            let _ = writeln!(s, "  (healthy: no events)");
+        }
+        s
+    }
+
     /// Materialize the fault state at `step` — pure in `(self, step)`.
     pub fn view(&self, step: usize) -> FaultView {
         let mut v = FaultView::healthy(self.p);
@@ -197,6 +412,19 @@ impl FaultPlan {
             *s = s.max(1e-3);
         }
         v
+    }
+}
+
+/// Displays `usize::MAX` step-range ends as `inf` in [`FaultPlan::describe`].
+struct RangeEnd(usize);
+
+impl std::fmt::Display for RangeEnd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0 == usize::MAX {
+            write!(f, "inf")
+        } else {
+            write!(f, "{}", self.0)
+        }
     }
 }
 
@@ -256,5 +484,74 @@ mod tests {
         let b = FaultPlan { seed: 2, ..FaultPlan::healthy(2) }.with_jitter(0.05);
         assert_ne!(a.view(3).compute_scale, b.view(3).compute_scale);
         assert!(FaultPlan::healthy(3).view(12).is_healthy());
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_kills_and_bad_indices() {
+        assert!(plan().validate().is_ok());
+        let dup = plan()
+            .with_event(FaultEvent::Kill { device: 3, step: 50 });
+        let err = dup.validate().unwrap_err();
+        assert!(err.contains("overlapping Kill"), "got: {err}");
+        let oob = FaultPlan::healthy(2).with_event(FaultEvent::Kill { device: 5, step: 1 });
+        assert!(oob.validate().is_err());
+        let bad = FaultPlan::healthy(2).with_event(FaultEvent::Straggler {
+            device: 0,
+            factor: 2.0,
+            from: 9,
+            until: 9,
+        });
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn describe_is_human_readable_and_complete() {
+        let s = plan().describe();
+        assert!(s.contains("p=4"), "{s}");
+        assert!(s.contains("straggler dev 2"), "{s}");
+        assert!(s.contains("0 -> 1"), "{s}");
+        assert!(s.contains("inf"), "open-ended range prints as inf: {s}");
+        assert!(s.contains("kill"), "{s}");
+        assert!(FaultPlan::healthy(2).describe().contains("healthy"));
+    }
+
+    #[test]
+    fn kill_frac_is_seeded_and_interior() {
+        let p = plan();
+        for d in 0..4 {
+            let f = p.kill_frac(d);
+            assert!(f > 0.05 - 1e-12 && f < 0.95, "{f}");
+            assert_eq!(f.to_bits(), p.kill_frac(d).to_bits(), "pure counter-hash");
+        }
+        let other = FaultPlan { seed: 99, ..plan() };
+        assert_ne!(p.kill_frac(1).to_bits(), other.kill_frac(1).to_bits());
+    }
+
+    #[test]
+    fn retry_policy_is_deterministic_and_monotone() {
+        let r = RetryPolicy::default();
+        let d0 = r.detect_latency(0);
+        assert_eq!(d0.to_bits(), r.detect_latency(0).to_bits(), "bitwise replay");
+        assert!(d0 > r.timeout_s, "ladder adds to the base timeout");
+        // Backoffs grow (up to the cap) and jitter stays bounded.
+        let b0 = r.backoff_s(0, 0);
+        let b2 = r.backoff_s(0, 2);
+        assert!(b0 > 0.0 && b2 > b0 * 1.5, "b0={b0} b2={b2}");
+        assert!(r.backoff_s(0, 20) <= r.backoff_cap_s * (1.0 + r.jitter));
+        let none = RetryPolicy { max_retries: 0, ..r };
+        assert_eq!(none.detect_latency(3).to_bits(), none.timeout_s.to_bits());
+    }
+
+    #[test]
+    fn step_faults_link_factor_windows() {
+        let sf = StepFaults {
+            kill: None,
+            links: vec![LinkWindow { src: 0, dst: 1, factor: 4.0, from_s: 1.0, until_s: 2.0 }],
+        };
+        assert_eq!(sf.link_factor(0, 1, 0.5), 1.0);
+        assert_eq!(sf.link_factor(0, 1, 1.5), 4.0);
+        assert_eq!(sf.link_factor(0, 1, 2.0), 1.0, "half-open window");
+        assert_eq!(sf.link_factor(1, 0, 1.5), 1.0, "directed");
+        assert!(StepFaults::none().kill.is_none());
     }
 }

@@ -16,5 +16,5 @@ pub mod real;
 pub mod sim;
 pub mod spec;
 
-pub use fault::{Drift, FaultEvent, FaultPlan, FaultView};
+pub use fault::{Drift, FaultEvent, FaultPlan, FaultView, LinkWindow, RetryPolicy, StepFaults};
 pub use spec::{ClusterSpec, DeviceSpec};

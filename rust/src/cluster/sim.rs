@@ -36,7 +36,7 @@
 
 use std::collections::HashMap;
 
-use crate::cluster::fault::FaultView;
+use crate::cluster::fault::{FaultView, RetryPolicy, StepFaults};
 use crate::executor::{Chan, Program, Step};
 use crate::partition::Partition;
 use crate::perfmodel::engine::ready_at;
@@ -157,34 +157,42 @@ impl std::fmt::Display for SimDeadlock {
 
 impl std::error::Error for SimDeadlock {}
 
+/// Device owning `stage` in `prog` (by scanning its computes).  Stall /
+/// interrupt paths only — O(instructions).
+fn dev_of_stage(prog: &Program, stage: u32) -> Option<usize> {
+    prog.per_device.iter().position(|list| {
+        list.iter().any(|i| matches!(i.step(), Step::Compute { stage: s, .. } if s == stage))
+    })
+}
+
+/// Channel of the instruction device `d` is parked at, if it is a comm.
+fn chan_at(prog: &Program, pc: &[usize], d: usize) -> Option<Chan> {
+    match prog.per_device[d][pc[d]].step() {
+        Step::Send(c) | Step::Recv(c) | Step::Wait(c) => Some(c),
+        Step::Compute { .. } => None,
+    }
+}
+
+/// The device on the far side of the channel `d` is blocked on.
+fn blocked_peer(prog: &Program, pc: &[usize], d: usize) -> Option<usize> {
+    let (_, from, to, _) = chan_at(prog, pc, d)?;
+    let a = dev_of_stage(prog, from);
+    let b = dev_of_stage(prog, to);
+    if a == Some(d) {
+        b
+    } else {
+        a
+    }
+}
+
 /// Build the actionable stall report: prefer a live blocked device
 /// (its instruction names the channel), fall back to a frozen dead one.
 /// Error path only — the O(instructions) stage→device scans don't touch
 /// successful runs.
 fn diagnose(prog: &Program, pc: &[usize], alive: &[bool]) -> SimDeadlock {
     let pending = |d: usize| pc[d] < prog.per_device[d].len();
-    let dev_of_stage = |stage: u32| -> Option<usize> {
-        prog.per_device.iter().position(|list| {
-            list.iter()
-                .any(|i| matches!(i.step(), Step::Compute { stage: s, .. } if s == stage))
-        })
-    };
-    let chan_of = |d: usize| -> Option<Chan> {
-        match prog.per_device[d][pc[d]].step() {
-            Step::Send(c) | Step::Recv(c) | Step::Wait(c) => Some(c),
-            Step::Compute { .. } => None,
-        }
-    };
-    let peer_of = |d: usize| -> Option<usize> {
-        let (_, from, to, _) = chan_of(d)?;
-        let a = dev_of_stage(from);
-        let b = dev_of_stage(to);
-        if a == Some(d) {
-            b
-        } else {
-            a
-        }
-    };
+    let chan_of = |d: usize| chan_at(prog, pc, d);
+    let peer_of = |d: usize| blocked_peer(prog, pc, d);
     // Prefer the live device blocked *directly* on a dead peer — the
     // root of a fault-induced stall — then any live blocked device,
     // then a frozen dead one.
@@ -397,6 +405,303 @@ pub fn run_timed_faulted(
         t_d: clock,
         busy_d: busy,
         events,
+    })
+}
+
+/// One executed compute, with its virtual-time span — the evidence
+/// stream [`crate::executor::recover`] builds checkpoint frontiers and
+/// replay sets from.
+#[derive(Clone, Copy, Debug)]
+pub struct OpRecord {
+    pub device: usize,
+    pub op: OpKind,
+    pub mb: u32,
+    pub stage: u32,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A mid-step kill observed by [`run_timed_midstep`]: the step did not
+/// complete, and this is everything recovery needs — what ran (and
+/// when), where every program counter stopped, and when the cluster
+/// collectively learned about the death.
+#[derive(Clone, Debug)]
+pub struct StepInterrupt {
+    pub kill_dev: usize,
+    /// Virtual time (within the step) the device froze.
+    pub kill_at: f64,
+    /// Every compute executed before the stall, all devices.
+    pub records: Vec<OpRecord>,
+    /// Per-device program counters at the stall.
+    pub pc: Vec<usize>,
+    /// Per-device clocks at the stall (the kill device's ≤ `kill_at`).
+    pub clock: Vec<f64>,
+    /// Seconds from `kill_at` until the last live device aborted —
+    /// timeout/retry-ladder detection ([`RetryPolicy::detect_latency`])
+    /// on the devices blocked *directly* on the dead one; everyone else
+    /// learns via the abort broadcast at no extra charge.
+    pub detect_s: f64,
+    /// `kill_at + detect_s` capped below by every live device's clock:
+    /// the virtual time at which recovery can begin.
+    pub abort_at: f64,
+}
+
+/// Outcome of a mid-step run: either the step completed (possibly after
+/// riding out transient link windows via retries — or the kill landed
+/// after the killed device's last instruction) or it was interrupted.
+#[derive(Debug)]
+pub enum MidstepOutcome {
+    Completed { run: SimRun, records: Vec<OpRecord> },
+    Interrupted(StepInterrupt),
+}
+
+/// [`run_timed_faulted`] with *intra-step* fault semantics: the
+/// [`StepFaults`] kill freezes its device at a virtual time inside the
+/// step (the in-flight op is lost — an instruction executes only if it
+/// would complete by `kill_at`), transient [`StepFaults::links`]
+/// windows stretch rendezvous transfers, and a stretched attempt that
+/// would trip `retry.timeout_s` is abandoned and retried after a seeded
+/// capped-exponential backoff — riding out windows that expire, and
+/// degrading to a blocking transfer when retries exhaust.  All jitter
+/// comes from [`RetryPolicy`]'s counter-hash, never wall clock, so
+/// faulted runs replay bitwise from their seeds.
+///
+/// With `step.kill == None` and no windows the arithmetic is exactly
+/// [`run_timed_faulted`]'s — `Completed` is then bitwise identical to
+/// that runner (pinned in tests), which is what keeps no-fault
+/// trajectories unchanged when callers switch to this entry point for
+/// the op records.
+///
+/// `Err` is reserved for genuine program deadlocks (no kill, no dead
+/// view device); every fault-induced stall returns
+/// [`MidstepOutcome::Interrupted`] with the recovery evidence.
+pub fn run_timed_midstep(
+    profile: &ProfiledData,
+    partition: &Partition,
+    prog: &Program,
+    opts: SimOptions,
+    faults: Option<&FaultView>,
+    step: &StepFaults,
+    retry: &RetryPolicy,
+) -> Result<MidstepOutcome, SimDeadlock> {
+    if let Some(f) = faults {
+        assert_eq!(f.compute_scale.len(), prog.p, "fault view must cover every device");
+    }
+    if let Some((kd, kat)) = step.kill {
+        assert!(kd < prog.p, "kill device {kd} out of range");
+        assert!(kat >= 0.0, "kill_at must be a nonnegative virtual time");
+    }
+    let s_n = partition.n_stages();
+    let costs: Vec<_> =
+        (0..s_n).map(|s| profile.stage_cost(partition.stage_range(s))).collect();
+    let cscale = |d: usize| faults.map_or(1.0, |f| f.compute_scale[d]);
+    let lscale =
+        |src: usize, dst: usize| faults.map_or(1.0, |f| f.link_scale[src * prog.p + dst]);
+    let dur = |op: OpKind, s: usize, cs: f64| match op {
+        OpKind::F => costs[s].f * cs,
+        OpKind::B => {
+            if prog.split_bw {
+                costs[s].b * cs
+            } else {
+                costs[s].b * cs + costs[s].w * cs
+            }
+        }
+        OpKind::W => costs[s].w * cs,
+    };
+    let comm_time = |chan: &Chan| -> f64 {
+        let (_, from, to, kind) = *chan;
+        match kind {
+            OpKind::F => profile.p2p(costs[from as usize].comm_bytes),
+            _ => profile.p2p(costs[to as usize].comm_bytes),
+        }
+    };
+
+    let alive: Vec<bool> = match faults {
+        Some(f) => f.alive.clone(),
+        None => vec![true; prog.p],
+    };
+    // `frozen[d]`: the step-kill stopped this device mid-program.
+    let mut frozen = vec![false; prog.p];
+    let mut pc = vec![0usize; prog.p];
+    let mut clock = vec![0.0f64; prog.p];
+    let mut busy = vec![0.0f64; prog.p];
+    let mut send_time: HashMap<Chan, (f64, usize)> = HashMap::new();
+    let mut recv_post: HashMap<Chan, (f64, usize)> = HashMap::new();
+    let mut arrival: HashMap<Chan, f64> = HashMap::new();
+    let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut records: Vec<OpRecord> = Vec::new();
+    let mut events = Vec::new();
+    loop {
+        let mut progressed = false;
+        for d in 0..prog.p {
+            if !alive[d] || frozen[d] {
+                continue;
+            }
+            let cs = cscale(d);
+            // The kill deadline for this device, if it is the victim.
+            let deadline = match step.kill {
+                Some((kd, kat)) if kd == d => Some(kat),
+                _ => None,
+            };
+            'ins: while let Some(ins) = prog.per_device[d].get(pc[d]) {
+                match ins.step() {
+                    Step::Compute { op, mb, stage } => {
+                        let t = dur(op, stage as usize, cs);
+                        let end = clock[d] + t;
+                        if deadline.is_some_and(|kat| end > kat) {
+                            frozen[d] = true; // in-flight op lost
+                            break 'ins;
+                        }
+                        if opts.collect_trace {
+                            events.push(TraceEvent {
+                                name: format!("{}{}@s{}", op.name(), mb, stage),
+                                cat: op.name().into(),
+                                ts_us: clock[d] * 1e6,
+                                dur_us: t * 1e6,
+                                pid: d,
+                                tid: 0,
+                            });
+                        }
+                        records.push(OpRecord { device: d, op, mb, stage, start: clock[d], end });
+                        clock[d] += t;
+                        busy[d] += t;
+                    }
+                    Step::Recv(chan) => {
+                        if !opts.matched {
+                            let posted = clock[d] + opts.recv_post_cost;
+                            if deadline.is_some_and(|kat| posted > kat) {
+                                frozen[d] = true;
+                                break 'ins;
+                            }
+                            recv_post.insert(chan, (posted, d));
+                            clock[d] = posted;
+                        }
+                    }
+                    Step::Send(chan) => {
+                        if opts.matched {
+                            // Eager transport: data departs at the
+                            // producer's clock, which is ≤ the deadline
+                            // by the invariant above — it outlives the
+                            // sender.
+                            send_time.insert(chan, (clock[d], d));
+                        } else {
+                            let Some(&(r, rd)) = recv_post.get(&chan) else { break 'ins };
+                            let handoff = clock[d].max(r) + opts.send_post_cost;
+                            if deadline.is_some_and(|kat| handoff > kat) {
+                                frozen[d] = true; // died before the handshake
+                                break 'ins;
+                            }
+                            let mut start = clock[d].max(r);
+                            if opts.link_contention {
+                                start = start.max(
+                                    link_free.get(&(d, rd)).copied().unwrap_or(0.0),
+                                );
+                            }
+                            // Transient-window retry ladder: an attempt
+                            // stretched past the timeout is abandoned;
+                            // backoff then re-samples the window.  No
+                            // window ⇒ factor is exactly 1.0 and the
+                            // unfaulted arithmetic is untouched.
+                            let base = comm_time(&chan) * lscale(d, rd);
+                            let mut t = base * step.link_factor(d, rd, start);
+                            let mut attempts = 0;
+                            while t > base && t > retry.timeout_s && attempts < retry.max_retries
+                            {
+                                start += retry.timeout_s + retry.backoff_s(d, attempts);
+                                attempts += 1;
+                                t = base * step.link_factor(d, rd, start);
+                            }
+                            arrival.insert(chan, start + t);
+                            if opts.link_contention {
+                                link_free.insert((d, rd), start + t);
+                            }
+                            if opts.collect_trace {
+                                events.push(TraceEvent {
+                                    name: format!(
+                                        "xfer{}{}@s{}->s{}",
+                                        chan.3.name(),
+                                        chan.0,
+                                        chan.1,
+                                        chan.2
+                                    ),
+                                    cat: "comm".into(),
+                                    ts_us: start * 1e6,
+                                    dur_us: t * 1e6,
+                                    pid: d,
+                                    tid: 1,
+                                });
+                            }
+                            clock[d] = handoff;
+                        }
+                    }
+                    Step::Wait(chan) => {
+                        let next = if opts.matched {
+                            let Some(&(dep, sd)) = send_time.get(&chan) else { break 'ins };
+                            let comm = comm_time(&chan) * lscale(sd, d);
+                            ready_at(dep, comm, clock[d], prog.overlap_aware)
+                        } else {
+                            let Some(&a) = arrival.get(&chan) else { break 'ins };
+                            clock[d].max(a)
+                        };
+                        if deadline.is_some_and(|kat| next > kat) {
+                            frozen[d] = true; // died while waiting
+                            break 'ins;
+                        }
+                        clock[d] = next;
+                    }
+                }
+                pc[d] += 1;
+                progressed = true;
+            }
+        }
+        if (0..prog.p).all(|d| pc[d] >= prog.per_device[d].len()) {
+            break;
+        }
+        if !progressed {
+            let fault_involved =
+                frozen.iter().any(|&f| f) || alive.iter().any(|&a| !a);
+            if !fault_involved {
+                return Err(diagnose(prog, &pc, &alive));
+            }
+            let (kill_dev, kill_at) = match step.kill {
+                Some((kd, kat)) if frozen[kd] => (kd, kat),
+                // Stall caused by a view-dead device (no intra-step
+                // kill): treat its freeze point as virtual time 0.
+                _ => ((0..prog.p).find(|&d| !alive[d]).unwrap_or(0), 0.0),
+            };
+            let down = |d: usize| !alive[d] || frozen[d];
+            // Recovery starts once every live device has either
+            // finished its program or timed out on the dead peer.
+            let mut abort_at = kill_at;
+            for d in 0..prog.p {
+                if down(d) {
+                    continue;
+                }
+                let pending = pc[d] < prog.per_device[d].len();
+                let direct =
+                    pending && blocked_peer(prog, &pc, d).is_some_and(down);
+                let t = clock[d] + if direct { retry.detect_latency(d) } else { 0.0 };
+                abort_at = abort_at.max(t);
+            }
+            return Ok(MidstepOutcome::Interrupted(StepInterrupt {
+                kill_dev,
+                kill_at,
+                records,
+                pc,
+                clock,
+                detect_s: abort_at - kill_at,
+                abort_at,
+            }));
+        }
+    }
+    Ok(MidstepOutcome::Completed {
+        run: SimRun {
+            makespan: clock.iter().cloned().fold(0.0, f64::max),
+            t_d: clock,
+            busy_d: busy,
+            events,
+        },
+        records,
     })
 }
 
@@ -668,6 +973,188 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn midstep_without_step_faults_is_bitwise_run_timed_faulted() {
+        // The anchor that lets callers switch to the midstep entry
+        // point (for op records) without perturbing no-fault runs.
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let retry = crate::cluster::fault::RetryPolicy::default();
+        for split in [false, true] {
+            let mut sch = if split { zb_h1(4, 8) } else { one_f_one_b(4, 8) };
+            sch.overlap_aware = true;
+            let prog = lower(&sch, &pl, LowerOptions::default());
+            for opts in [SimOptions::matched(), SimOptions::rendezvous()] {
+                let base = run_timed_faulted(&prof, &part, &prog, opts, None).unwrap();
+                let out = run_timed_midstep(
+                    &prof,
+                    &part,
+                    &prog,
+                    opts,
+                    None,
+                    &crate::cluster::fault::StepFaults::none(),
+                    &retry,
+                )
+                .unwrap();
+                let MidstepOutcome::Completed { run, records } = out else {
+                    panic!("no-fault midstep run must complete");
+                };
+                assert_eq!(run.makespan.to_bits(), base.makespan.to_bits());
+                assert_eq!(run.t_d, base.t_d);
+                assert_eq!(run.busy_d, base.busy_d);
+                let n_computes: usize = (0..4)
+                    .map(|d| {
+                        prog.per_device[d]
+                            .iter()
+                            .filter(|i| matches!(i.step(), Step::Compute { .. }))
+                            .count()
+                    })
+                    .sum();
+                assert_eq!(records.len(), n_computes, "one record per compute");
+                assert!(records.iter().all(|r| r.end <= run.makespan + 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn midstep_kill_interrupts_with_detection_charge() {
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let mut sch = one_f_one_b(4, 8);
+        sch.overlap_aware = true;
+        let prog = lower(&sch, &pl, LowerOptions::default());
+        let retry = crate::cluster::fault::RetryPolicy::default();
+        let base = run_timed_with(&prof, &part, &prog, SimOptions::matched()).unwrap();
+        let kat = 0.4 * base.makespan;
+        for opts in [SimOptions::matched(), SimOptions::rendezvous()] {
+            let sf = crate::cluster::fault::StepFaults {
+                kill: Some((1, kat)),
+                links: Vec::new(),
+            };
+            let out =
+                run_timed_midstep(&prof, &part, &prog, opts, None, &sf, &retry).unwrap();
+            let MidstepOutcome::Interrupted(si) = out else {
+                panic!("a mid-step kill must interrupt the run");
+            };
+            assert_eq!(si.kill_dev, 1);
+            assert_eq!(si.kill_at.to_bits(), kat.to_bits());
+            // Nothing on the dead device completes after the kill, and
+            // other devices did make progress before stalling.
+            assert!(si.records.iter().filter(|r| r.device == 1).all(|r| r.end <= kat));
+            assert!(si.records.iter().any(|r| r.device != 1));
+            assert!(si.abort_at >= kat, "recovery cannot start before the kill");
+            assert!(
+                si.detect_s > 0.0,
+                "some live device is directly blocked on the dead one and \
+                 pays the timeout/retry detection ladder"
+            );
+            // Bitwise replay from the same seed/config.
+            let again =
+                run_timed_midstep(&prof, &part, &prog, opts, None, &sf, &retry).unwrap();
+            let MidstepOutcome::Interrupted(si2) = again else { panic!() };
+            assert_eq!(si.abort_at.to_bits(), si2.abort_at.to_bits());
+            assert_eq!(si.records.len(), si2.records.len());
+        }
+    }
+
+    #[test]
+    fn link_window_retries_ride_out_transients_and_degrade_when_permanent() {
+        use crate::cluster::fault::{LinkWindow, RetryPolicy, StepFaults};
+        let (prof, part) = comm_heavy(4);
+        let mut sch = gpipe(4, 4);
+        sch.overlap_aware = true;
+        let prog = lower(&sch, &sequential(4), LowerOptions::default());
+        let retry = RetryPolicy {
+            timeout_s: 0.01,
+            backoff_base_s: 0.01,
+            backoff_cap_s: 0.08,
+            max_retries: 4,
+            jitter: 0.2,
+            seed: 42,
+        };
+        let base = run_timed_with(&prof, &part, &prog, SimOptions::rendezvous()).unwrap();
+        // Transient window on 0 → 1 around the first transfers (first F
+        // completes at t=1): attempts time out, backoffs carry the
+        // retry past `until_s`, and the run completes near baseline.
+        let transient = StepFaults {
+            kill: None,
+            links: vec![LinkWindow { src: 0, dst: 1, factor: 50.0, from_s: 0.0, until_s: 1.02 }],
+        };
+        let out = run_timed_midstep(
+            &prof,
+            &part,
+            &prog,
+            SimOptions::rendezvous(),
+            None,
+            &transient,
+            &retry,
+        )
+        .unwrap();
+        let MidstepOutcome::Completed { run, .. } = out else {
+            panic!("transient window must be ridden out, not stall the step");
+        };
+        assert!(run.makespan >= base.makespan, "retries cost virtual time");
+        assert!(
+            run.makespan < base.makespan + 1.0,
+            "rode out the window: {} vs base {}",
+            run.makespan,
+            base.makespan
+        );
+        // Permanent window: retries exhaust and the transfer degrades
+        // to a blocking send at the stretched duration — the step still
+        // completes, much slower.
+        let permanent = StepFaults {
+            kill: None,
+            links: vec![LinkWindow { src: 0, dst: 1, factor: 3.0, from_s: 0.0, until_s: 1e18 }],
+        };
+        let out2 = run_timed_midstep(
+            &prof,
+            &part,
+            &prog,
+            SimOptions::rendezvous(),
+            None,
+            &permanent,
+            &retry,
+        )
+        .unwrap();
+        let MidstepOutcome::Completed { run: run2, .. } = out2 else { panic!() };
+        assert!(
+            run2.makespan > base.makespan * 1.2,
+            "degraded transfers must slow the run ({} !> {})",
+            run2.makespan,
+            base.makespan
+        );
+        // Both faulted runs replay bitwise.
+        for sf in [&transient, &permanent] {
+            let a = run_timed_midstep(
+                &prof,
+                &part,
+                &prog,
+                SimOptions::rendezvous(),
+                None,
+                sf,
+                &retry,
+            )
+            .unwrap();
+            let b = run_timed_midstep(
+                &prof,
+                &part,
+                &prog,
+                SimOptions::rendezvous(),
+                None,
+                sf,
+                &retry,
+            )
+            .unwrap();
+            let (MidstepOutcome::Completed { run: ra, .. }, MidstepOutcome::Completed { run: rb, .. }) =
+                (a, b)
+            else {
+                panic!()
+            };
+            assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
         }
     }
 

@@ -107,8 +107,9 @@ pub fn lower(schedule: &Schedule, placement: &Placement, opts: LowerOptions) -> 
 
 /// Move each `Recv` up to `window` instructions earlier (receives have
 /// no data dependencies — only their `Wait` does), enabling transfer /
-/// compute overlap.
-fn hoist_receives(prog: &mut Program, window: usize) {
+/// compute overlap.  Crate-visible so [`super::recover`] applies the
+/// same pass to spliced recovery programs.
+pub(crate) fn hoist_receives(prog: &mut Program, window: usize) {
     for list in &mut prog.per_device {
         let mut i = 0;
         while i < list.len() {

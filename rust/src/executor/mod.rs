@@ -25,6 +25,7 @@
 //! asserted after every pass in the executor test suites.
 
 pub mod lower;
+pub mod recover;
 
 use std::collections::HashMap;
 

@@ -1,0 +1,598 @@
+//! Checkpointed mid-step recovery (DESIGN.md §10): turn a
+//! [`crate::cluster::sim::StepInterrupt`] into a *minimal* spliced
+//! recovery program that re-enters the step at the committed frontier.
+//!
+//! Three pieces:
+//!
+//! - [`StepCheckpoint`]: the per-device committed F/B/W microbatch
+//!   frontier plus every *live* tensor at the capture instant — the
+//!   activation stash (`Act`), the W-retained slice (`ActW`), and the
+//!   pending boundary tensors in both directions (`Bound`, `BoundB`) —
+//!   with byte cost and capture pause priced from
+//!   [`crate::memory::MemoryModel`].
+//!
+//! - [`plan_recovery`]: the replay-set closure.  Seeds are the
+//!   unexecuted computes (the remainder, a per-device *suffix* because
+//!   devices execute their lists in order); an already-executed op is
+//!   pulled into the replay set only when some remainder op needs state
+//!   that lived on the dead device and is not covered by the
+//!   checkpoint.  The closure guarantees **minimality**: every replayed
+//!   op postdates the checkpoint it recovers from (a
+//!   checkpoint-committed microbatch is never replayed) — the invariant
+//!   `tests/executor_recovery.rs` pins across a property grid.
+//!
+//! - Splicing: the recovery schedule (replay prefix on the dead
+//!   device's slot, remainder suffixes everywhere) is lowered with the
+//!   same comm-insertion rules as [`super::lower`], plus **bare
+//!   resends** for frontier-crossing edges whose producing compute
+//!   already ran: live producers re-send from their retention buffers,
+//!   and the spare re-sends boundary tensors restored from the
+//!   checkpoint.  The result is proven sound the same way lowering is —
+//!   [`Program::validate`] plus the resumable rendezvous deadlock check
+//!   — before it is handed to a cluster.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lower::{check_rendezvous, hoist_receives, repair_deadlocks};
+use super::{Instr, Program};
+use crate::cluster::sim::OpRecord;
+use crate::memory::MemoryModel;
+use crate::placement::Placement;
+use crate::schedule::{OpKind, Schedule};
+
+/// A compute identity: `(kind, stage, microbatch)` — unique within a
+/// step, so frontiers and replay sets are plain sets of these.
+pub type OpKey = (OpKind, u32, u32);
+
+fn op_rank(op: OpKind) -> u8 {
+    match op {
+        OpKind::F => 0,
+        OpKind::B => 1,
+        OpKind::W => 2,
+    }
+}
+
+/// One live tensor class at a capture instant (all keyed `(kind, stage,
+/// mb)`):
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CoverKind {
+    /// Activation stash of `(stage, mb)`: F done, B pending.
+    Act,
+    /// W-retained slice: B done, W pending (split backward only).
+    ActW,
+    /// Pending forward boundary input of `stage`: the producer's F is
+    /// done, this stage's F is not — the tensor sits in the producer's
+    /// send/retention buffer (or the consumer's inbox).
+    Bound,
+    /// Pending backward boundary (output-gradient) of `stage`.
+    BoundB,
+}
+
+pub type CoverKey = (CoverKind, u32, u32);
+
+/// Checkpoint cadence + pricing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointCfg {
+    /// Capture every this many virtual seconds within a step; `None`
+    /// disables checkpointing (recovery then replays from step start).
+    pub interval_s: Option<f64>,
+    /// Capture drain bandwidth (bytes/s) — prices the capture pause.
+    pub bw: f64,
+    /// Fixed coordination latency per capture.
+    pub latency_s: f64,
+    /// Restore bandwidth onto the spare.
+    pub restore_bw: f64,
+}
+
+impl Default for CheckpointCfg {
+    fn default() -> CheckpointCfg {
+        CheckpointCfg { interval_s: None, bw: 50e9, latency_s: 2e-3, restore_bw: 50e9 }
+    }
+}
+
+/// The per-device committed F/B/W microbatch frontier plus every live
+/// tensor at one capture instant, with its byte cost and capture pause.
+#[derive(Clone, Debug)]
+pub struct StepCheckpoint {
+    /// Capture instant (virtual seconds from step start).
+    pub t_s: f64,
+    /// Committed frontier: every compute whose record ended by `t_s`.
+    pub done: HashSet<OpKey>,
+    /// Live tensors at `t_s`, with per-item bytes.
+    pub covered: HashMap<CoverKey, f64>,
+    /// Total bytes drained by the capture.
+    pub bytes: f64,
+    /// Pipeline pause charged for the capture (`latency + bytes/bw`).
+    pub pause_s: f64,
+}
+
+impl StepCheckpoint {
+    pub fn covers(&self, k: &CoverKey) -> bool {
+        self.covered.contains_key(k)
+    }
+}
+
+/// Capture the pipeline state at virtual time `t_c`, reconstructed
+/// post-hoc from the step's op records (valid because the pre-fault
+/// timeline equals the unfaulted timeline — captures are priced
+/// *additively* by the harness and never perturb sim-internal clocks,
+/// which is what keeps no-fault trajectories bit-identical).
+pub fn capture(
+    records: &[OpRecord],
+    t_c: f64,
+    model: &MemoryModel,
+    nmb: usize,
+    split_bw: bool,
+    cfg: &CheckpointCfg,
+) -> StepCheckpoint {
+    let done: HashSet<OpKey> = records
+        .iter()
+        .filter(|r| r.end <= t_c)
+        .map(|r| (r.op, r.stage, r.mb))
+        .collect();
+    let s_n = model.n_stages();
+    let mut covered: HashMap<CoverKey, f64> = HashMap::new();
+    for s in 0..s_n {
+        let su = s as u32;
+        let fp = &model.stages[s];
+        for m in 0..nmb as u32 {
+            let f = done.contains(&(OpKind::F, su, m));
+            let b = done.contains(&(OpKind::B, su, m));
+            if f && !b {
+                covered.insert((CoverKind::Act, su, m), fp.act_per_mb);
+            }
+            if split_bw && b && !done.contains(&(OpKind::W, su, m)) {
+                covered.insert((CoverKind::ActW, su, m), fp.act_w_per_mb);
+            }
+            if s > 0 && done.contains(&(OpKind::F, su - 1, m)) && !f {
+                covered.insert((CoverKind::Bound, su, m), model.stages[s - 1].out_bytes);
+            }
+            if s + 1 < s_n && done.contains(&(OpKind::B, su + 1, m)) && !b {
+                covered.insert((CoverKind::BoundB, su, m), fp.out_bytes);
+            }
+        }
+    }
+    let bytes: f64 = covered.values().sum();
+    StepCheckpoint { t_s: t_c, done, covered, bytes, pause_s: cfg.latency_s + bytes / cfg.bw }
+}
+
+/// All captures a step of duration `horizon_s` takes under the cadence
+/// (`k · interval` for `k ≥ 1`, strictly inside the step).  Empty when
+/// the cadence is off.
+pub fn plan_checkpoints(
+    records: &[OpRecord],
+    horizon_s: f64,
+    model: &MemoryModel,
+    nmb: usize,
+    split_bw: bool,
+    cfg: &CheckpointCfg,
+) -> Vec<StepCheckpoint> {
+    let Some(iv) = cfg.interval_s else { return Vec::new() };
+    assert!(iv > 0.0, "checkpoint interval must be positive");
+    let mut out = Vec::new();
+    let mut t = iv;
+    while t < horizon_s {
+        out.push(capture(records, t, model, nmb, split_bw, cfg));
+        t += iv;
+    }
+    out
+}
+
+/// Result of [`plan_recovery`]: the spliced, soundness-checked program
+/// plus the accounting the harness charges.
+#[derive(Clone, Debug)]
+pub struct Recovery {
+    /// The recovery program (remainder suffixes + replay prefix + bare
+    /// resends), validated and deadlock-checked.
+    pub prog: Program,
+    /// Ops re-executed on the spare (⊆ the dead device's committed ops
+    /// that postdate the checkpoint).
+    pub replay: HashSet<OpKey>,
+    /// Checkpoint items restored onto the spare.
+    pub restored_items: usize,
+    /// Bytes restored onto the spare (priced at `restore_bw`).
+    pub restore_bytes: f64,
+    /// Bare resend sends spliced in (retention-buffer re-deliveries).
+    pub resends: usize,
+    /// Every compute the step has executed once recovery completes:
+    /// committed ∪ recovery-program computes.  Equals the full
+    /// schedule's op set — the differential the tests pin.
+    pub final_ops: HashSet<OpKey>,
+}
+
+/// Compute the minimal replay set for a kill on logical device `dead`
+/// and splice the recovery program (module docs describe the closure
+/// and its minimality invariant).  `done` is the per-logical-device
+/// committed frontier at the kill; `ckpt` the last usable checkpoint,
+/// if any.
+///
+/// Errors when the spliced program fails [`Program::validate`] or the
+/// rendezvous deadlock check — soundness is proven, not assumed.
+pub fn plan_recovery(
+    schedule: &Schedule,
+    placement: &Placement,
+    dead: usize,
+    done: &[HashSet<OpKey>],
+    ckpt: Option<&StepCheckpoint>,
+) -> Result<Recovery, String> {
+    assert_eq!(done.len(), schedule.p, "one frontier per device");
+    assert!(dead < schedule.p);
+    let s_last = schedule.n_stages - 1;
+    let dev_of = |s: usize| placement.device_of[s];
+    let covers = |k: CoverKey| ckpt.is_some_and(|c| c.covers(&k));
+
+    // Remainder: per-device unexecuted suffixes (devices execute their
+    // lists in order, so `done` is a prefix of each compute sequence).
+    let mut present: HashSet<OpKey> = HashSet::new();
+    let mut all_done: HashSet<OpKey> = HashSet::new();
+    for (d, slots) in schedule.per_device.iter().enumerate() {
+        for sl in slots {
+            let k = (sl.op, sl.stage, sl.mb);
+            if done[d].contains(&k) {
+                all_done.insert(k);
+            } else {
+                present.insert(k);
+            }
+        }
+    }
+
+    // Replay-set closure: worklist of committed dead-device ops whose
+    // outputs some recovery op needs and the checkpoint does not cover.
+    let mut replay: HashSet<OpKey> = HashSet::new();
+    let mut restored: HashSet<CoverKey> = HashSet::new();
+    let mut work: Vec<OpKey> = Vec::new();
+    // `need(op)`: op's outputs must exist during recovery.  Returns the
+    // replay candidates it forces (producer-side, dead device only).
+    macro_rules! need_replay {
+        ($op:expr, $s:expr, $m:expr) => {{
+            let k = ($op, ($s) as u32, ($m) as u32);
+            if !present.contains(&k) {
+                debug_assert!(all_done.contains(&k), "need for an op that never ran");
+                present.insert(k);
+                replay.insert(k);
+                work.push(k);
+            }
+        }};
+    }
+    // Input edge of F(s, m) when the producing F(s-1, m) is absent.
+    macro_rules! input_f {
+        ($s:expr, $m:expr) => {{
+            if dev_of(($s) - 1) == dead {
+                let bk = (CoverKind::Bound, ($s) as u32, ($m) as u32);
+                if covers(bk) {
+                    restored.insert(bk);
+                } else {
+                    need_replay!(OpKind::F, ($s) - 1, $m);
+                }
+            }
+            // Live producer: retained in its send buffer; the splice
+            // emits a bare resend.
+        }};
+    }
+    // Gradient input of B(s, m) when the producing B(s+1, m) is absent.
+    macro_rules! input_b {
+        ($s:expr, $m:expr) => {{
+            if dev_of(($s) + 1) == dead {
+                let bk = (CoverKind::BoundB, ($s) as u32, ($m) as u32);
+                if covers(bk) {
+                    restored.insert(bk);
+                } else {
+                    need_replay!(OpKind::B, ($s) + 1, $m);
+                }
+            }
+        }};
+    }
+
+    // Seed from every remainder op, then drain the worklist (replayed
+    // ops have the same needs as remainder ops).
+    let mut seeds: Vec<OpKey> = present.iter().copied().collect();
+    seeds.sort_by_key(|&(op, s, m)| (s, m, op_rank(op)));
+    let mut i = 0;
+    while i < seeds.len() || !work.is_empty() {
+        let (op, su, mu) = if let Some(k) = work.pop() { k } else { i += 1; seeds[i - 1] };
+        let (s, m) = (su as usize, mu as usize);
+        match op {
+            OpKind::F => {
+                if s > 0 && !present.contains(&(OpKind::F, su - 1, mu)) {
+                    input_f!(s, m);
+                }
+            }
+            OpKind::B => {
+                if !present.contains(&(OpKind::F, su, mu)) && dev_of(s) == dead {
+                    // The activation stash was lost with the device.
+                    let ak = (CoverKind::Act, su, mu);
+                    if covers(ak) {
+                        restored.insert(ak);
+                    } else {
+                        need_replay!(OpKind::F, s, m);
+                    }
+                }
+                if s < s_last && !present.contains(&(OpKind::B, su + 1, mu)) {
+                    input_b!(s, m);
+                }
+            }
+            OpKind::W => {
+                if !present.contains(&(OpKind::B, su, mu)) && dev_of(s) == dead {
+                    let wk = (CoverKind::ActW, su, mu);
+                    let ak = (CoverKind::Act, su, mu);
+                    if covers(wk) {
+                        restored.insert(wk);
+                    } else if covers(ak) {
+                        // The full stash subsumes the W slice, but the
+                        // param-grad inputs B computed are gone: re-run
+                        // B from the restored stash.
+                        restored.insert(ak);
+                        need_replay!(OpKind::B, s, m);
+                    } else {
+                        need_replay!(OpKind::B, s, m);
+                    }
+                }
+            }
+        }
+    }
+
+    // Recovery schedule: replay prefix (original order) + remainder
+    // suffix on the dead device's logical slot; remainder suffixes on
+    // live devices.
+    let mut per_slots: Vec<Vec<crate::schedule::Slot>> = vec![Vec::new(); schedule.p];
+    for (d, slots) in schedule.per_device.iter().enumerate() {
+        for sl in slots {
+            let k = (sl.op, sl.stage, sl.mb);
+            let in_remainder = !done[d].contains(&k);
+            if in_remainder || (d == dead && replay.contains(&k)) {
+                per_slots[d].push(*sl);
+            }
+        }
+    }
+    // The replay prefix must precede the remainder on the dead device:
+    // replay ⊆ the done-prefix, so stable-partitioning by replay
+    // membership restores a dataflow-consistent subsequence.
+    {
+        let (pre, post): (Vec<_>, Vec<_>) = per_slots[dead]
+            .iter()
+            .copied()
+            .partition(|sl| replay.contains(&(sl.op, sl.stage, sl.mb)));
+        per_slots[dead] = pre.into_iter().chain(post).collect();
+    }
+
+    // Lower with the §4.4 comm-insertion rules, adding bare resends
+    // where the producing compute already ran.  A comm pair is needed
+    // exactly when `Program::validate` will demand a Wait: the producer
+    // stage is on another device, or has no computes left at all (its
+    // retained/restored tensor is re-delivered — possibly to the same
+    // device, a self-channel priced as a local copy).
+    let stage_live: HashSet<u32> = present.iter().map(|&(_, s, _)| s).collect();
+    let mut per_device: Vec<Vec<Instr>> = vec![Vec::new(); schedule.p];
+    let mut resend_head: Vec<Vec<Instr>> = vec![Vec::new(); schedule.p];
+    let mut resends = 0usize;
+    for (d, slots) in per_slots.iter().enumerate() {
+        for sl in slots {
+            let (mb, s) = (sl.mb, sl.stage);
+            let su = s as usize;
+            match sl.op {
+                OpKind::F => {
+                    if su > 0 {
+                        let pd = dev_of(su - 1);
+                        if pd != d || !stage_live.contains(&(s - 1)) {
+                            per_device[d].push(Instr::RecvF { mb, stage: s, from_stage: s - 1 });
+                            per_device[d].push(Instr::WaitF { mb, stage: s });
+                            if !present.contains(&(OpKind::F, s - 1, mb)) {
+                                resend_head[pd].push(Instr::SendF {
+                                    mb,
+                                    stage: s - 1,
+                                    to_stage: s,
+                                });
+                                resends += 1;
+                            }
+                        }
+                    }
+                    per_device[d].push(Instr::Compute { op: OpKind::F, mb, stage: s });
+                    if su < s_last {
+                        let cd = dev_of(su + 1);
+                        let needed = present.contains(&(OpKind::F, s + 1, mb))
+                            && (cd != d || !stage_live.contains(&s));
+                        if needed {
+                            per_device[d].push(Instr::SendF { mb, stage: s, to_stage: s + 1 });
+                        }
+                    }
+                }
+                OpKind::B => {
+                    if su < s_last {
+                        let pd = dev_of(su + 1);
+                        if pd != d || !stage_live.contains(&(s + 1)) {
+                            per_device[d].push(Instr::RecvB { mb, stage: s, from_stage: s + 1 });
+                            per_device[d].push(Instr::WaitB { mb, stage: s });
+                            if !present.contains(&(OpKind::B, s + 1, mb)) {
+                                resend_head[pd].push(Instr::SendB {
+                                    mb,
+                                    stage: s + 1,
+                                    to_stage: s,
+                                });
+                                resends += 1;
+                            }
+                        }
+                    }
+                    per_device[d].push(Instr::Compute { op: OpKind::B, mb, stage: s });
+                    if su > 0 {
+                        let cd = dev_of(su - 1);
+                        let needed = present.contains(&(OpKind::B, s - 1, mb))
+                            && (cd != d || !stage_live.contains(&s));
+                        if needed {
+                            per_device[d].push(Instr::SendB { mb, stage: s, to_stage: s - 1 });
+                        }
+                    }
+                }
+                OpKind::W => {
+                    per_device[d].push(Instr::Compute { op: OpKind::W, mb, stage: s });
+                }
+            }
+        }
+    }
+    for (d, head) in resend_head.into_iter().enumerate() {
+        // Retention resends are ready immediately: prepend them so the
+        // producer device services them before its own remainder.
+        let tail = std::mem::take(&mut per_device[d]);
+        per_device[d] = head.into_iter().chain(tail).collect();
+    }
+
+    let mut prog = Program {
+        p: schedule.p,
+        nmb: schedule.nmb,
+        n_stages: schedule.n_stages,
+        split_bw: schedule.split_bw,
+        overlap_aware: schedule.overlap_aware,
+        per_device,
+    };
+    if schedule.overlap_aware {
+        hoist_receives(&mut prog, usize::MAX);
+    }
+    repair_deadlocks(&mut prog);
+    prog.validate().map_err(|e| format!("recovery program invalid: {e}"))?;
+    check_rendezvous(&prog).map_err(|(d, pc)| {
+        format!("recovery program deadlocks at device {d} pc {pc}")
+    })?;
+
+    // The self-consistency the whole construction promises: committed ∪
+    // recovery computes = the full schedule, each op exactly once
+    // (replayed ops were lost with the device, so they are not double-
+    // counted — their first execution's effects never escaped).
+    let mut final_ops = all_done.clone();
+    final_ops.extend(present.iter().copied());
+    let restore_bytes: f64 = restored
+        .iter()
+        .map(|k| ckpt.map_or(0.0, |c| c.covered.get(k).copied().unwrap_or(0.0)))
+        .sum();
+    Ok(Recovery {
+        prog,
+        replay,
+        restored_items: restored.len(),
+        restore_bytes,
+        resends,
+        final_ops,
+    })
+}
+
+/// Order-independent digest of a compute set — the "final pipeline
+/// state" the differential recovery tests compare (recover vs restart
+/// vs unfaulted must agree bitwise).  FNV-1a over the sorted keys.
+pub fn state_digest(ops: &HashSet<OpKey>) -> u64 {
+    let mut keys: Vec<(u32, u32, u8)> =
+        ops.iter().map(|&(op, s, m)| (s, m, op_rank(op))).collect();
+    keys.sort_unstable();
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (s, m, o) in keys {
+        for b in s.to_le_bytes().into_iter().chain(m.to_le_bytes()).chain([o]) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Every compute identity in a schedule (the unfaulted final state).
+pub fn schedule_ops(schedule: &Schedule) -> HashSet<OpKey> {
+    schedule
+        .per_device
+        .iter()
+        .flatten()
+        .map(|sl| (sl.op, sl.stage, sl.mb))
+        .collect()
+}
+
+/// Seconds to roll back / re-install the dead device's optimizer state
+/// on the spare — charged when a kill lands after the optimizer update
+/// began (the update is not transactional across devices).
+pub fn optimizer_rollback_s(model: &MemoryModel, dead: usize, cfg: &CheckpointCfg) -> f64 {
+    cfg.latency_s + model.optimizer_bytes(dead) / cfg.restore_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fault::{RetryPolicy, StepFaults};
+    use crate::cluster::sim::{run_timed_midstep, MidstepOutcome, SimOptions};
+    use crate::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+    use crate::executor::lower::{lower, LowerOptions};
+    use crate::model::build_model;
+    use crate::partition::uniform;
+    use crate::placement::sequential;
+    use crate::profile::ProfiledData;
+    use crate::schedule::builders::one_f_one_b;
+
+    fn setup() -> (ProfiledData, crate::partition::Partition) {
+        let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+        let prof = ProfiledData::analytical(
+            &spec,
+            &HardwareCfg::default(),
+            &ParallelCfg::new(4, 2, 8, 1, 4096),
+        );
+        let part = uniform(prof.n_layers(), 4);
+        (prof, part)
+    }
+
+    #[test]
+    fn capture_covers_exactly_the_live_tensors() {
+        let (prof, part) = setup();
+        let pl = sequential(4);
+        let mut sch = one_f_one_b(4, 8);
+        sch.overlap_aware = true;
+        let prog = lower(&sch, &pl, LowerOptions::default());
+        let out = run_timed_midstep(
+            &prof,
+            &part,
+            &prog,
+            SimOptions::matched(),
+            None,
+            &StepFaults::none(),
+            &RetryPolicy::default(),
+        )
+        .unwrap();
+        let MidstepOutcome::Completed { run, records } = out else { panic!() };
+        let mm = MemoryModel::build(&prof, &part, &pl);
+        let cfg = CheckpointCfg { interval_s: Some(run.makespan / 3.0), ..Default::default() };
+        let cks = plan_checkpoints(&records, run.makespan, &mm, 8, sch.split_bw, &cfg);
+        assert_eq!(cks.len(), 2, "two interior captures at makespan/3 cadence");
+        for ck in &cks {
+            assert!(ck.bytes > 0.0 && ck.pause_s > cfg.latency_s);
+            for (&(kind, s, m), _) in &ck.covered {
+                let f = ck.done.contains(&(OpKind::F, s, m));
+                let b = ck.done.contains(&(OpKind::B, s, m));
+                match kind {
+                    CoverKind::Act => assert!(f && !b),
+                    CoverKind::ActW => assert!(b && !ck.done.contains(&(OpKind::W, s, m))),
+                    CoverKind::Bound => {
+                        assert!(ck.done.contains(&(OpKind::F, s - 1, m)) && !f)
+                    }
+                    CoverKind::BoundB => {
+                        assert!(ck.done.contains(&(OpKind::B, s + 1, m)) && !b)
+                    }
+                }
+            }
+        }
+        // Later captures sit at a later frontier.
+        assert!(cks[1].done.len() > cks[0].done.len());
+        // An end-of-step capture has no live per-mb tensors left.
+        let fin = capture(&records, run.makespan + 1.0, &mm, 8, sch.split_bw, &cfg);
+        assert!(fin.covered.is_empty(), "{:?}", fin.covered);
+    }
+
+    #[test]
+    fn full_restart_recovery_covers_the_whole_schedule() {
+        // Degenerate splice: nothing done anywhere ⇒ the recovery
+        // program is the whole step again and must match plain lowering
+        // in compute content.
+        let (_, _) = setup();
+        let pl = sequential(4);
+        let sch = one_f_one_b(4, 8);
+        let done: Vec<HashSet<OpKey>> = vec![HashSet::new(); 4];
+        let rec = plan_recovery(&sch, &pl, 1, &done, None).unwrap();
+        assert!(rec.replay.is_empty());
+        assert_eq!(rec.resends, 0);
+        assert_eq!(rec.final_ops, schedule_ops(&sch));
+        assert_eq!(
+            state_digest(&rec.final_ops),
+            state_digest(&schedule_ops(&sch)),
+            "digest is content-addressed"
+        );
+    }
+}

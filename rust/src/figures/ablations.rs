@@ -1,4 +1,4 @@
-//! Design-choice ablations (DESIGN.md §13) — beyond the paper's own
+//! Design-choice ablations (DESIGN.md §14) — beyond the paper's own
 //! figures, these quantify the executor/generator mechanisms this repo
 //! implements:
 //!
@@ -28,7 +28,7 @@ use crate::schedule::block::{v_mem, v_placement, zb_v};
 use crate::schedule::greedy::{greedy_schedule, SchedKnobs};
 
 pub fn ablations(ctx: &Ctx) -> String {
-    let mut out = String::from("## Ablations (design choices, DESIGN.md §13)\n\n");
+    let mut out = String::from("## Ablations (design choices, DESIGN.md §14)\n\n");
     let par = ParallelCfg { p: 4, t: 2, d: 1, e: 1, nmb: 16, mbs: 1, seq: 4096 };
     let cfg = ModelCfg::table5(Family::NemotronH, Size::Small);
     let prof = ProfiledData::analytical(&build_model(&cfg), &ctx.hw, &par);

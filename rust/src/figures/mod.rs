@@ -1,4 +1,4 @@
-//! One harness per paper table/figure (DESIGN.md §11 experiment index).
+//! One harness per paper table/figure (DESIGN.md §12 experiment index).
 //!
 //! Each harness regenerates the rows/series of its figure from this
 //! repo's implementations and returns a markdown report; the CLI

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   figures <id|all> [--fast] [--out DIR] [--artifacts DIR]
-//!       regenerate a paper table/figure (see DESIGN.md §11)
+//!       regenerate a paper table/figure (see DESIGN.md §12)
 //!   generate --model <fam> --size <sz> --p N --nmb N [--t N] [--seq N]
 //!       run the Pipeline Generator and print the co-optimized pipeline
 //!   simulate --method <m> --model <fam> --size <sz> --p N --nmb N

@@ -41,6 +41,12 @@ pub struct StageFootprint {
     /// releases `act_per_mb − act_w_per_mb` at B and this part at W; a
     /// fused backward releases everything at B.
     pub act_w_per_mb: f64,
+    /// Bytes of the stage's boundary output tensor (what an F message
+    /// to the next stage carries; a B message carries the gradient of
+    /// the *consumer* stage's output, i.e. that stage's `out_bytes`).
+    /// Prices checkpointing pending boundary tensors in
+    /// [`crate::executor::recover`].
+    pub out_bytes: f64,
 }
 
 impl StageFootprint {
@@ -66,6 +72,7 @@ pub fn stage_footprint(profile: &ProfiledData, range: std::ops::Range<usize>) ->
         optimizer: c.mem_static * OPTIMIZER_FRAC,
         act_per_mb: c.mem_act,
         act_w_per_mb: c.mem_act_w,
+        out_bytes: c.comm_bytes,
     }
 }
 
@@ -123,6 +130,23 @@ impl MemoryModel {
         }
         out
     }
+
+    /// Optimizer-state bytes resident on `device` — what a rolled-back
+    /// or re-installed optimizer step must move/rewrite, pricing the
+    /// rollback charge in [`crate::executor::recover`].
+    pub fn optimizer_bytes(&self, device: usize) -> f64 {
+        self.stages
+            .iter()
+            .enumerate()
+            .filter(|(s, _)| self.device[*s] == device)
+            .map(|(_, fp)| fp.optimizer)
+            .sum()
+    }
+
+    /// Stage indices owned by `device`, ascending.
+    pub fn stages_of(&self, device: usize) -> Vec<usize> {
+        (0..self.stages.len()).filter(|&s| self.device[s] == device).collect()
+    }
 }
 
 #[cfg(test)]
@@ -166,4 +190,19 @@ mod tests {
         assert_eq!(mm.static_d(), table.static_d);
     }
 
+    #[test]
+    fn recovery_pricing_helpers() {
+        let p = prof();
+        let part = uniform(p.n_layers(), 4);
+        let pl = interleaved(4, 1);
+        let mm = MemoryModel::build(&p, &part, &pl);
+        for s in 0..4 {
+            assert!(mm.stages[s].out_bytes > 0.0, "boundary tensors have bytes");
+            assert_eq!(mm.stages[s].out_bytes, p.stage_cost(part.stage_range(s)).comm_bytes);
+        }
+        let total: f64 = (0..4).map(|d| mm.optimizer_bytes(d)).sum();
+        let expect: f64 = mm.stages.iter().map(|fp| fp.optimizer).sum();
+        assert_eq!(total, expect);
+        assert_eq!(mm.stages_of(2), vec![2]);
+    }
 }

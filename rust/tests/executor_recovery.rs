@@ -1,0 +1,315 @@
+//! Execution-layer fault tolerance: property grid over mid-step kills,
+//! checkpointed recovery, and the replay-set closure (ISSUE:
+//! robustness; DESIGN.md §10).
+//!
+//! For every (schedule family, placement, victim, kill fraction,
+//! checkpoint cadence, sim mode) cell the grid pins:
+//!
+//! 1. **Minimality** — the replay set is a subset of the dead device's
+//!    committed ops, never contains a checkpoint-committed op, and
+//!    every replayed op's record ends *after* the checkpoint instant.
+//! 2. **State equality** — committed ∪ recovery computes equals the
+//!    full schedule's op set: the recovered final state digests
+//!    bitwise-equal to the unfaulted run's (and to a full restart's).
+//! 3. **Soundness** — the spliced program re-validates and the
+//!    recovery execution completes without a stall, in no more time
+//!    than the full-step restart it replaces.
+//! 4. **Determinism** — interrupts (records, abort instants, detection
+//!    charges) and recovery makespans replay bitwise from the seeds.
+
+use std::collections::HashSet;
+
+use adaptis::cluster::fault::{RetryPolicy, StepFaults};
+use adaptis::cluster::sim::{run_timed_faulted, run_timed_midstep, MidstepOutcome, SimOptions};
+use adaptis::config::{Family, HardwareCfg, ModelCfg, ParallelCfg, Size};
+use adaptis::executor::lower::{lower, LowerOptions};
+use adaptis::executor::recover::{
+    capture, plan_checkpoints, plan_recovery, schedule_ops, state_digest, CheckpointCfg, OpKey,
+};
+use adaptis::memory::{MemCaps, MemoryModel};
+use adaptis::model::build_model;
+use adaptis::partition::{uniform, Partition};
+use adaptis::perfmodel::{SimArena, StageTable};
+use adaptis::placement::{interleaved, sequential, wave, Placement};
+use adaptis::profile::ProfiledData;
+use adaptis::schedule::builders::{gpipe, interleaved_1f1b, one_f_one_b, zb_h1};
+use adaptis::schedule::greedy::{greedy_schedule_in, SchedKnobs};
+use adaptis::schedule::Schedule;
+
+const P: usize = 4;
+const NMB: usize = 8;
+
+fn prof() -> ProfiledData {
+    let spec = build_model(&ModelCfg::table5(Family::Gemma, Size::Small));
+    ProfiledData::analytical(
+        &spec,
+        &HardwareCfg::default(),
+        &ParallelCfg::new(P, 2, NMB, 1, 4096),
+    )
+}
+
+/// The grid's schedule × placement cells: the four schedule families
+/// plus a greedy schedule over a *wave* placement — wave folds the
+/// stage chain back over the devices, so adjacent stages share a
+/// device and the splice's self-channel / stage-live rules get hit.
+fn cells(profile: &ProfiledData) -> Vec<(&'static str, Schedule, Placement)> {
+    let wv = wave(P, 2);
+    let part8 = uniform(profile.n_layers(), wv.n_stages());
+    let table = StageTable::build(profile, &part8, &wv);
+    let caps = MemCaps::unbounded(P);
+    let mut arena = SimArena::new();
+    let greedy_wave = greedy_schedule_in(&mut arena, &table, &caps, NMB, SchedKnobs::default());
+    vec![
+        ("1f1b/seq", one_f_one_b(P, NMB), sequential(P)),
+        ("gpipe/seq", gpipe(P, NMB), sequential(P)),
+        ("zb_h1/seq", zb_h1(P, NMB), sequential(P)),
+        ("int1f1b/interleaved", interleaved_1f1b(P, 2, NMB), interleaved(P, 2)),
+        ("greedy/wave", greedy_wave, wv),
+    ]
+}
+
+struct Cell {
+    name: &'static str,
+    sch: Schedule,
+    pl: Placement,
+    part: Partition,
+}
+
+fn grid(profile: &ProfiledData) -> Vec<Cell> {
+    cells(profile)
+        .into_iter()
+        .map(|(name, sch, pl)| {
+            let part = uniform(profile.n_layers(), sch.n_stages);
+            Cell { name, sch, pl, part }
+        })
+        .collect()
+}
+
+#[test]
+fn property_grid_minimal_replay_state_equality_and_determinism() {
+    let profile = prof();
+    let retry = RetryPolicy::default();
+    let mut interrupted_cases = 0usize;
+    let mut matched_cases = 0usize;
+    let mut strictly_faster = 0usize;
+
+    for cell in grid(&profile) {
+        let prog = lower(&cell.sch, &cell.pl, LowerOptions::default());
+        let mm = MemoryModel::build(&profile, &cell.part, &cell.pl);
+        for (mi, opts) in [SimOptions::matched(), SimOptions::rendezvous()]
+            .into_iter()
+            .enumerate()
+        {
+            // Unfaulted baseline: timeline + makespan for this mode.
+            let base = run_timed_midstep(
+                &profile, &cell.part, &prog, opts, None, &StepFaults::none(), &retry,
+            )
+            .unwrap();
+            let MidstepOutcome::Completed { run: base_run, records: base_records } = base
+            else {
+                panic!("{}: unfaulted step must complete", cell.name)
+            };
+            let full_ops = schedule_ops(&cell.sch);
+            let full_digest = state_digest(&full_ops);
+
+            for dead in [0usize, 2] {
+                // Only kill instants that interrupt a compute still
+                // owed by the victim are guaranteed to stall the step.
+                let last_compute = base_records
+                    .iter()
+                    .filter(|r| r.device == dead)
+                    .map(|r| r.end)
+                    .fold(0.0f64, f64::max);
+                for frac in [0.3, 0.6] {
+                    let kill_at = frac * base_run.makespan;
+                    if kill_at >= last_compute {
+                        continue;
+                    }
+                    let sf = StepFaults { kill: Some((dead, kill_at)), links: Vec::new() };
+                    let out = run_timed_midstep(
+                        &profile, &cell.part, &prog, opts, None, &sf, &retry,
+                    )
+                    .unwrap();
+                    let MidstepOutcome::Interrupted(si) = out else {
+                        panic!(
+                            "{} mode{} dead={} frac={}: kill before the victim's \
+                             last compute must interrupt",
+                            cell.name, mi, dead, frac
+                        )
+                    };
+                    interrupted_cases += 1;
+                    assert_eq!(si.kill_dev, dead);
+                    assert!(si.abort_at >= si.kill_at && si.detect_s >= 0.0);
+                    for r in si.records.iter().filter(|r| r.device == dead) {
+                        assert!(r.end <= si.kill_at, "no victim op survives the kill");
+                    }
+
+                    // Bitwise seed replay of the interrupt itself.
+                    let out2 = run_timed_midstep(
+                        &profile, &cell.part, &prog, opts, None, &sf, &retry,
+                    )
+                    .unwrap();
+                    let MidstepOutcome::Interrupted(si2) = out2 else { panic!() };
+                    assert_eq!(si.records.len(), si2.records.len());
+                    assert_eq!(si.abort_at.to_bits(), si2.abort_at.to_bits());
+                    assert_eq!(si.detect_s.to_bits(), si2.detect_s.to_bits());
+
+                    let mut done: Vec<HashSet<OpKey>> = vec![HashSet::new(); P];
+                    for r in &si.records {
+                        done[r.device].insert((r.op, r.stage, r.mb));
+                    }
+
+                    for cadence in [None, Some(base_run.makespan / 4.0)] {
+                        let cfg = CheckpointCfg { interval_s: cadence, ..Default::default() };
+                        let cks = plan_checkpoints(
+                            &si.records,
+                            si.kill_at,
+                            &mm,
+                            NMB,
+                            cell.sch.split_bw,
+                            &cfg,
+                        );
+                        let ckpt = cks.last();
+                        let rec = plan_recovery(&cell.sch, &cell.pl, dead, &done, ckpt)
+                            .unwrap_or_else(|e| {
+                                panic!("{} mode{} dead={dead} frac={frac}: {e}", cell.name, mi)
+                            });
+
+                        // (1) Minimality: replay ⊆ the victim's
+                        // committed ops; with a checkpoint, nothing
+                        // the checkpoint committed is ever replayed —
+                        // every replayed op's record postdates T_c.
+                        for op in &rec.replay {
+                            assert!(
+                                done[dead].contains(op),
+                                "replay of an op the victim never ran: {op:?}"
+                            );
+                            if let Some(ck) = ckpt {
+                                assert!(
+                                    !ck.done.contains(op),
+                                    "{}: replayed a checkpoint-committed op {op:?}",
+                                    cell.name
+                                );
+                                let rec_end = si
+                                    .records
+                                    .iter()
+                                    .find(|r| {
+                                        r.device == dead && (r.op, r.stage, r.mb) == *op
+                                    })
+                                    .map(|r| r.end)
+                                    .expect("replayed op must have a record");
+                                assert!(
+                                    rec_end > ck.t_s,
+                                    "replayed op committed before the checkpoint"
+                                );
+                            }
+                        }
+                        // A checkpoint can only shrink the replay set.
+                        if ckpt.is_some() {
+                            let bare =
+                                plan_recovery(&cell.sch, &cell.pl, dead, &done, None).unwrap();
+                            assert!(
+                                rec.replay.len() <= bare.replay.len(),
+                                "checkpoint grew the replay set"
+                            );
+                        }
+
+                        // (2) State equality: recover == restart ==
+                        // unfaulted, digested bitwise.
+                        assert_eq!(rec.final_ops, full_ops);
+                        assert_eq!(state_digest(&rec.final_ops), full_digest);
+
+                        // (3) Soundness + profit: the spliced program
+                        // executes to completion; in matched mode
+                        // (dependency-driven, no contention) a strict
+                        // subset of the work can never run longer than
+                        // the full-step restart it replaces.
+                        let rrun = run_timed_faulted(&profile, &cell.part, &rec.prog, opts, None)
+                            .unwrap_or_else(|d| {
+                                panic!("{} recovery stalled: {d:?}", cell.name)
+                            });
+                        if opts.matched {
+                            matched_cases += 1;
+                            assert!(
+                                rrun.makespan <= base_run.makespan,
+                                "{}: recovery ({}) slower than restart ({})",
+                                cell.name,
+                                rrun.makespan,
+                                base_run.makespan
+                            );
+                            if rrun.makespan < base_run.makespan {
+                                strictly_faster += 1;
+                            }
+                        }
+
+                        // (4) Recovery execution is deterministic too.
+                        let rrun2 =
+                            run_timed_faulted(&profile, &cell.part, &rec.prog, opts, None)
+                                .unwrap();
+                        assert_eq!(rrun.makespan.to_bits(), rrun2.makespan.to_bits());
+                    }
+                }
+            }
+        }
+    }
+    assert!(interrupted_cases >= 20, "grid degenerated: {interrupted_cases} interrupts");
+    assert!(
+        strictly_faster * 2 > matched_cases,
+        "replay-set recovery should usually beat restart ({strictly_faster}/{matched_cases})"
+    );
+}
+
+#[test]
+fn full_restart_equals_whole_schedule_on_every_cell() {
+    // Degenerate frontier (nothing done): the recovery program must be
+    // compute-equivalent to the original lowering on every grid cell.
+    let profile = prof();
+    for cell in grid(&profile) {
+        let done: Vec<HashSet<OpKey>> = vec![HashSet::new(); P];
+        for dead in 0..P {
+            let rec = plan_recovery(&cell.sch, &cell.pl, dead, &done, None)
+                .unwrap_or_else(|e| panic!("{} dead={dead}: {e}", cell.name));
+            assert!(rec.replay.is_empty() && rec.resends == 0);
+            assert_eq!(rec.final_ops, schedule_ops(&cell.sch));
+        }
+    }
+}
+
+#[test]
+fn end_of_step_capture_commits_everything_and_recovers_for_free() {
+    // A checkpoint taken after the last op has an all-done frontier and
+    // no live tensors; recovering against it replays nothing and the
+    // "recovery" is the empty remainder of the dead device.
+    let profile = prof();
+    let cs = grid(&profile);
+    let cell = &cs[0];
+    let prog = lower(&cell.sch, &cell.pl, LowerOptions::default());
+    let mm = MemoryModel::build(&profile, &cell.part, &cell.pl);
+    let out = run_timed_midstep(
+        &profile,
+        &cell.part,
+        &prog,
+        SimOptions::matched(),
+        None,
+        &StepFaults::none(),
+        &RetryPolicy::default(),
+    )
+    .unwrap();
+    let MidstepOutcome::Completed { run, records } = out else { panic!() };
+    let cfg = CheckpointCfg::default();
+    let ck = capture(&records, run.makespan, &mm, NMB, cell.sch.split_bw, &cfg);
+    assert_eq!(ck.done, schedule_ops(&cell.sch));
+    assert!(ck.covered.is_empty() && ck.bytes == 0.0);
+    let done: Vec<HashSet<OpKey>> = (0..P)
+        .map(|d| {
+            records
+                .iter()
+                .filter(|r| r.device == d)
+                .map(|r| (r.op, r.stage, r.mb))
+                .collect()
+        })
+        .collect();
+    let rec = plan_recovery(&cell.sch, &cell.pl, 1, &done, Some(&ck)).unwrap();
+    assert!(rec.replay.is_empty());
+    assert_eq!(rec.final_ops, schedule_ops(&cell.sch));
+}

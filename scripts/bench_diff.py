@@ -38,7 +38,19 @@ CUR_DIR = os.path.join(REPO, "rust")
 BASE_DIR = os.path.join(REPO, "scripts", "bench_baseline")
 
 # Fields that identify a row rather than measure it.
-ID_FIELDS = ("size", "family", "p", "nmb", "schedule", "kernel", "scenario", "steps")
+ID_FIELDS = (
+    "size",
+    "family",
+    "p",
+    "nmb",
+    "schedule",
+    "kernel",
+    "scenario",
+    "steps",
+    "kill_device",
+    "kill_step",
+    "cadence",
+)
 
 
 def load(path):
@@ -56,13 +68,27 @@ def row_key(row):
     return tuple((k, row[k]) for k in ID_FIELDS if k in row)
 
 
-def iter_rows(doc):
-    """Yield (section, key, row) for every row of every array section."""
+def iter_rows(doc, prefix=""):
+    """Yield (section, key, row) for every row of every array section.
+
+    Object-valued sections (e.g. replan's `recovery` block) are diffed
+    too: their scalar metrics form a one-row section, and any nested
+    row arrays (`recovery.scenarios`) are walked with a dotted section
+    name.
+    """
     for section, val in sorted(doc.items()):
+        name = prefix + section
         if isinstance(val, list):
             for row in val:
                 if isinstance(row, dict):
-                    yield section, row_key(row), row
+                    yield name, row_key(row), row
+        elif isinstance(val, dict):
+            scalars = {k: v for k, v in val.items() if not isinstance(v, (list, dict))}
+            if scalars:
+                yield name, row_key(scalars), scalars
+            nested = {k: v for k, v in val.items() if isinstance(v, (list, dict))}
+            if nested:
+                yield from iter_rows(nested, name + ".")
 
 
 # A `<stem>_stats` block describes exactly the seconds-valued headline

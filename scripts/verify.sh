@@ -18,6 +18,14 @@ cargo test -q
 echo "== fault tolerance: cargo test --test service_fuzz --test service_recovery =="
 cargo test -q --test service_fuzz --test service_recovery
 
+# Execution-layer fault-tolerance suite (ISSUE 10) by name: the
+# mid-step kill / checkpoint / replay-set property grid, the
+# full-restart-equals-whole-schedule check and the end-of-step
+# capture identity.  A hang here points at the recovery splice or
+# the rendezvous deadlock re-check.
+echo "== executor recovery: cargo test --test executor_recovery =="
+cargo test -q --test executor_recovery
+
 # Schedule-synthesis IR suite (ISSUE 9) by name: the legacy-builder
 # bitwise differential, the compile property grid, the collapse-lock
 # randomized tests and the ZB-V-beats-S-1F1B rows.  A regression here
